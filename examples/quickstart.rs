@@ -1,0 +1,59 @@
+//! Quickstart: load a ZETA model artifact, run a forward pass, inspect.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! Demonstrates the minimal public API surface: Engine -> init -> forward.
+
+use anyhow::Result;
+use zeta::runtime::{Engine, HostTensor};
+use zeta::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1. The engine loads artifacts/manifest.json and owns the PJRT client.
+    let engine = Engine::new(zeta::ARTIFACTS_DIR)?;
+    println!("platform: {}", engine.platform());
+
+    // 2. Pick a preset (a ZETA language model over the MQAR vocabulary) and
+    //    initialize its parameters by running the AOT `init` graph.
+    let preset = "quickstart_zeta";
+    let spec = engine.manifest.preset(preset)?;
+    println!(
+        "model: {} — {} params, d_K = {}, k = {}",
+        preset,
+        spec.param_count,
+        spec.config.get("d_k"),
+        spec.config.get("k"),
+    );
+    let params = engine.init_params(preset, /*seed=*/ 42)?;
+
+    // 3. Build a token batch and run the compiled forward pass.
+    let (b, n, vocab) = (spec.batch, spec.seq_len(), spec.vocab());
+    let mut rng = Rng::new(0);
+    let tokens: Vec<i32> =
+        (0..b * n).map(|_| 1 + rng.below(vocab as u64 - 1) as i32).collect();
+    let mut inputs = vec![HostTensor::I32(vec![b, n], tokens)];
+    inputs.extend(params);
+
+    let fwd = engine.load(preset, "forward")?;
+    let t0 = std::time::Instant::now();
+    let out = fwd.run(&inputs)?;
+    let dt = t0.elapsed();
+
+    // 4. Inspect the logits.
+    let logits = out[0].as_f32()?;
+    let row = &logits[..vocab];
+    let amax = row
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    println!(
+        "forward: {:?} logits in {dt:?}; first-position argmax = token {} ({:.3})",
+        out[0].shape(),
+        amax.0,
+        amax.1
+    );
+    assert!(logits.iter().all(|v| v.is_finite()));
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! End-to-end driver: train the ZETA language model on the synthetic
+//! wiki-like corpus and log the loss curve + test perplexity.
+//!
+//!   make artifacts && cargo run --release --example train_lm [STEPS]
+//!
+//! This is the repository's full-stack validation (EXPERIMENTS.md §E2E):
+//! Pallas kernel (L1) inside the JAX train graph (L2), AOT-compiled to HLO,
+//! driven entirely from the Rust trainer (L3) with Rust-generated data —
+//! Python never runs. A checkpoint is written at the end and reloaded to
+//! verify the serving path sees identical weights.
+
+use anyhow::Result;
+use zeta::data::corpus::CorpusLm;
+use zeta::runtime::Engine;
+use zeta::trainer::Trainer;
+use zeta::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let engine = Engine::new(zeta::ARTIFACTS_DIR)?;
+    let preset = "lm_zeta";
+    let spec = engine.manifest.preset(preset)?;
+    let n = spec.seq_len();
+    println!(
+        "ZETA LM: {} params, {} layers, seq {}, batch {} — {steps} steps",
+        spec.param_count,
+        spec.config.get("n_layers"),
+        n,
+        spec.batch
+    );
+
+    let train = CorpusLm::new(n, 0xC0FFEE);
+    let test = CorpusLm::test_view(n, 0xC0FFEE);
+
+    let mut tr = Trainer::new(&engine, preset, 0)?;
+    let mut rng = Rng::new(0);
+    let t0 = std::time::Instant::now();
+    let mut curve: Vec<(i32, f32)> = Vec::new();
+    tr.train_loop(&train, steps, &mut rng, |s, l| {
+        if s % 20 == 0 || s == 1 {
+            println!("step {s:>5}  loss {l:.4}  ppl {:.1}  ({:.0}s)",
+                     (l as f64).exp(), t0.elapsed().as_secs_f64());
+            curve.push((s, l));
+        }
+    })?;
+
+    let mut erng = Rng::new(99);
+    let stats = tr.eval(&test, 8, &mut erng)?;
+    println!(
+        "\ntest: loss {:.4}, perplexity {:.2} over {:.0} tokens",
+        stats.loss,
+        stats.perplexity(),
+        stats.weight
+    );
+
+    // Loss curve must actually have descended.
+    let first = curve.first().map(|&(_, l)| l).unwrap_or(0.0);
+    let last = curve.last().map(|&(_, l)| l).unwrap_or(0.0);
+    println!("loss curve: {first:.3} -> {last:.3}");
+    assert!(last < first, "training did not reduce loss");
+
+    // Checkpoint round-trip (what `zeta serve` would load).
+    let ckpt = "results/lm_zeta.ckpt";
+    std::fs::create_dir_all("results")?;
+    tr.save(ckpt)?;
+    let mut tr2 = Trainer::new(&engine, preset, 123)?;
+    tr2.load(ckpt)?;
+    let mut erng2 = Rng::new(99);
+    let stats2 = tr2.eval(&test, 8, &mut erng2)?;
+    assert!((stats.loss - stats2.loss).abs() < 1e-6, "checkpoint mismatch");
+    println!("checkpoint round-trip OK -> {ckpt}");
+    println!("train_lm OK");
+    Ok(())
+}

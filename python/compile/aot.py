@@ -1,0 +1,225 @@
+"""AOT pipeline: lower every preset entry point to HLO text + manifest.
+
+The interchange format is HLO *text*, not a serialized HloModuleProto —
+jax >= 0.5 emits protos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+For each preset (presets.py) we lower up to four entry points over *flat*
+argument lists (PJRT executables take positional buffers, not pytrees):
+
+  init(seed:int32[])                      -> (param_0, ..., param_P)
+  train(step:int32[], x, y, w, params..., m..., v...)
+                                          -> (loss, params'..., m'..., v'...)
+  eval(x, y, w, params...)                -> (loss_sum, correct, weight_sum)
+  forward(x, params...)                   -> (logits,)
+
+``artifacts/manifest.json`` records, per entry: the HLO file, the exact
+input/output names+shapes+dtypes in positional order, the parameter-tree
+flattening (jax tree paths), and the preset config — the Rust runtime never
+guesses a shape.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--groups core,fig2a]
+                              [--filter REGEX] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import presets as presets_mod
+from .model import model_init, param_count
+from .train import make_eval_step, make_train_step
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_name(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return ".".join(out)
+
+
+def _spec_of(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def _flatten_spec(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [_path_name(p) for p, _ in flat]
+    leaves = [l for _, l in flat]
+    return names, leaves, jax.tree_util.tree_structure(tree)
+
+
+def build_preset(name: str, spec: dict, out_dir: str) -> dict:
+    cfg = spec["cfg"]
+    batch = spec["batch"]
+    n = cfg["seq_len"]
+    lr = spec["lr"]
+    entries = spec["entries"]
+
+    params0 = jax.eval_shape(lambda: model_init(jax.random.PRNGKey(0), cfg))
+    pnames, pleaves, ptree = _flatten_spec(params0)
+    nparams = len(pleaves)
+
+    x_spec = jax.ShapeDtypeStruct((batch, n), jnp.int32)
+    if cfg["task"] == "lm":
+        y_spec = jax.ShapeDtypeStruct((batch, n), jnp.int32)
+        w_spec = jax.ShapeDtypeStruct((batch, n), jnp.float32)
+    else:
+        y_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        w_spec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def unflatten(flat):
+        return jax.tree_util.tree_unflatten(ptree, list(flat))
+
+    manifest_entry = {
+        "config": cfg,
+        "batch": batch,
+        "lr": lr,
+        "param_count": int(sum(
+            int(jnp.prod(jnp.asarray(l.shape))) if l.shape else 1 for l in pleaves
+        )),
+        "params": [
+            {"name": nm, **_spec_of(l)} for nm, l in zip(pnames, pleaves)
+        ],
+        "entries": {},
+    }
+
+    def emit(entry_name, fn, arg_specs, arg_names):
+        t0 = time.time()
+        # keep_unused=True: jax otherwise prunes arguments that do not reach
+        # the outputs (e.g. the Cauchy theta in the neg_euclid operator,
+        # whose gradient is identically zero) and the lowered HLO would then
+        # expect fewer buffers than the manifest promises the Rust side.
+        lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.{entry_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *arg_specs)
+        outs = jax.tree_util.tree_leaves(out_shapes)
+        manifest_entry["entries"][entry_name] = {
+            "file": fname,
+            "inputs": [
+                {"name": nm, **_spec_of(s)} for nm, s in zip(arg_names, arg_specs)
+            ],
+            "outputs": [_spec_of(o) for o in outs],
+        }
+        print(f"  {name}.{entry_name}: {len(text) / 1e6:.2f} MB "
+              f"({time.time() - t0:.1f}s)", flush=True)
+
+    if "init" in entries:
+        def flat_init(seed):
+            p = model_init(jax.random.PRNGKey(seed), cfg)
+            return tuple(jax.tree_util.tree_leaves(p))
+
+        emit("init", flat_init, [i32], ["seed"])
+
+    if "train" in entries:
+        train_step = make_train_step(cfg, lr)
+
+        def flat_train(step, x, y, w, *flat):
+            p = unflatten(flat[:nparams])
+            m = unflatten(flat[nparams:2 * nparams])
+            v = unflatten(flat[2 * nparams:3 * nparams])
+            loss, p2, m2, v2 = train_step(p, m, v, step, x, y, w)
+            return (
+                loss,
+                *jax.tree_util.tree_leaves(p2),
+                *jax.tree_util.tree_leaves(m2),
+                *jax.tree_util.tree_leaves(v2),
+            )
+
+        arg_specs = [i32, x_spec, y_spec, w_spec] + pleaves * 3
+        arg_names = (
+            ["step", "x", "y", "w"]
+            + [f"p.{n_}" for n_ in pnames]
+            + [f"m.{n_}" for n_ in pnames]
+            + [f"v.{n_}" for n_ in pnames]
+        )
+        emit("train", flat_train, arg_specs, arg_names)
+
+    if "eval" in entries:
+        eval_step = make_eval_step(cfg)
+
+        def flat_eval(x, y, w, *flat):
+            return eval_step(unflatten(flat), x, y, w)
+
+        emit("eval", flat_eval, [x_spec, y_spec, w_spec] + pleaves,
+             ["x", "y", "w"] + [f"p.{n_}" for n_ in pnames])
+
+    if "forward" in entries:
+        from .model import model_apply
+
+        def flat_forward(x, *flat):
+            return (model_apply(unflatten(flat), x, cfg),)
+
+        emit("forward", flat_forward, [x_spec] + pleaves,
+             ["x"] + [f"p.{n_}" for n_ in pnames])
+
+    return manifest_entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--groups", default="core",
+                    help="comma-separated preset groups, or 'all'")
+    ap.add_argument("--filter", default=None, help="regex over preset names")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    groups = None if args.groups == "all" else args.groups.split(",")
+    names = presets_mod.preset_names(groups)
+    if args.filter:
+        rx = re.compile(args.filter)
+        names = [n for n in names if rx.search(n)]
+    if args.list:
+        for n in names:
+            print(n)
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    t0 = time.time()
+    for i, name in enumerate(names):
+        print(f"[{i + 1}/{len(names)}] {name}", flush=True)
+        manifest[name] = build_preset(name, presets_mod.PRESETS[name], args.out_dir)
+        # Write incrementally so a crash keeps earlier work usable.
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"done: {len(names)} presets in {time.time() - t0:.0f}s "
+          f"-> {manifest_path}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

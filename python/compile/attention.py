@@ -1,0 +1,284 @@
+"""Layer-2 attention variants: ZETA and every baseline the paper compares.
+
+All functions take params (pytree of jnp arrays) + activations and are pure,
+so the whole model lowers to a single HLO module. Variants:
+
+  zeta       — the paper's contribution: shared low-dim QK projection,
+               Z-order top-k candidate search (topk.py), history-mean
+               smoothing token, Adaptive Cauchy-Softmax Pallas kernel (L1).
+  vanilla    — softmax(QK^T/sqrt(d))V, causal. ``d_k`` configurable so the
+               Fig-2b d_K sweep runs on this variant.
+  dense_op   — dense attention under the Euclidean operators of §4.3 /
+               Table 6 (cauchy / neg_euclid / inv_euclid / norm_dot).
+  performer  — FAVOR+ positive random features, causal prefix sums.
+  based      — BASED-style linear attention (order-2 Taylor feature map),
+               causal prefix sums.
+
+Shapes: x (B, N, D); heads split D into H * dv. Low-dim QK projections for
+zeta/dense_op map D -> d_k per head (two-layer MLP per paper §4.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import topk
+from .kernels.cauchy import cauchy_topk_attention
+from .kernels.ref import dense_attention_ref, dense_distance_attention_ref
+
+__all__ = ["attention_apply", "attention_init", "ATTENTION_KINDS"]
+
+ATTENTION_KINDS = ("zeta", "vanilla", "dense_op", "performer", "based")
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, d_in, d_out, scale=None):
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def _qk_proj_init(key, d_model, d_k, two_layer, hidden=None):
+    """Projection f_q = f_k: either a linear map or a 2-layer MLP (§4.2)."""
+    if not two_layer:
+        return {"w": _dense_init(key, d_model, d_k)}
+    hidden = hidden or max(4 * d_k, 16)
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": _dense_init(k1, d_model, hidden),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": _dense_init(k2, hidden, d_k),
+    }
+
+
+def _qk_proj_apply(p, x):
+    if "w" in p:
+        return x @ p["w"]
+    h = jax.nn.gelu(x @ p["w1"] + p["b1"])
+    return h @ p["w2"]
+
+
+def attention_init(key, cfg):
+    """Init attention params for one layer. cfg is the model config dict."""
+    kind = cfg["attn"]
+    d = cfg["d_model"]
+    h = cfg["n_heads"]
+    dv = d // h
+    d_k = cfg.get("d_k", dv)
+    keys = jax.random.split(key, 8)
+
+    if kind == "zeta":
+        # Shared QK projection per head (Reformer-style, paper App. A).
+        return {
+            "qk": [
+                _qk_proj_init(jax.random.fold_in(keys[0], i), d, d_k, cfg.get("two_layer_qk", True))
+                for i in range(h)
+            ],
+            "wv": _dense_init(keys[1], d, d),
+            "wo": _dense_init(keys[2], d, d),
+            # gamma^2 = sigmoid(theta) in [0, 1]; theta = 0 -> gamma^2 = 0.5.
+            "theta": jnp.zeros((), jnp.float32),
+        }
+    if kind in ("vanilla", "dense_op"):
+        if cfg.get("low_dim_qk", kind == "dense_op"):
+            qk = {
+                "wq": [
+                    _qk_proj_init(jax.random.fold_in(keys[0], i), d, d_k, cfg.get("two_layer_qk", True))
+                    for i in range(h)
+                ],
+                "wk": [
+                    _qk_proj_init(jax.random.fold_in(keys[1], i), d, d_k, cfg.get("two_layer_qk", True))
+                    for i in range(h)
+                ],
+            }
+        else:
+            qk = {"wq": _dense_init(keys[0], d, h * d_k), "wk": _dense_init(keys[1], d, h * d_k)}
+        out = dict(qk)
+        out["wv"] = _dense_init(keys[2], d, d)
+        out["wo"] = _dense_init(keys[3], d, d)
+        if kind == "dense_op":
+            out["theta"] = jnp.zeros((), jnp.float32)
+        return out
+    if kind == "performer":
+        m = cfg.get("n_features", max(dv, 32))
+        return {
+            "wq": _dense_init(keys[0], d, d),
+            "wk": _dense_init(keys[1], d, d),
+            "wv": _dense_init(keys[2], d, d),
+            "wo": _dense_init(keys[3], d, d),
+            # FAVOR+ projection; trained like any other param (harmless).
+            "feat": jax.random.normal(keys[4], (h, dv, m), jnp.float32),
+        }
+    if kind == "based":
+        df = cfg.get("d_feature", min(16, dv))
+        return {
+            "wq": _dense_init(keys[0], d, h * df),
+            "wk": _dense_init(keys[1], d, h * df),
+            "wv": _dense_init(keys[2], d, d),
+            "wo": _dense_init(keys[3], d, d),
+        }
+    raise ValueError(f"unknown attention kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x, h):
+    b, n, d = x.shape
+    return x.reshape(b, n, h, d // h).transpose(0, 2, 1, 3)  # (B, H, N, dv)
+
+
+def _merge_heads(x):
+    b, h, n, dv = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dv)
+
+
+def _gather_rows(arr, idx):
+    """arr (..., N, d), idx (..., N, k) -> (..., N, k, d) without O(N^2)."""
+    lead = arr.shape[:-2]
+    n, d = arr.shape[-2:]
+    k = idx.shape[-1]
+    arr2 = arr.reshape((-1, n, d))
+    idx2 = idx.reshape((-1, n, k))
+    out = jax.vmap(lambda a, i: a[i])(arr2, idx2)  # (R, N, k, d)
+    return out.reshape(lead + (n, k, d))
+
+
+def _zeta_forward(p, x, cfg):
+    b, n, d = x.shape
+    h = cfg["n_heads"]
+    dv = d // h
+    k = cfg.get("k", 32)
+    chunk = cfg.get("chunk", max(8, n // cfg.get("n_chunks", 8)))
+    window = cfg.get("window", 2 * k)
+
+    # Shared QK projection per head: (B, H, N, d_k).
+    qk = jnp.stack([_qk_proj_apply(pi, x) for pi in p["qk"]], axis=1)
+    v = _split_heads(x @ p["wv"], h)  # (B, H, N, dv)
+
+    idx, valid = topk.topk_candidates(qk, qk, k=k, chunk=chunk, window=window,
+                                      bits=cfg.get("bits"),
+                                      fixed_range=cfg.get("fixed_range", 4.0))
+
+    kg = _gather_rows(qk, idx)  # (B, H, N, k, d_k)
+    vg = _gather_rows(v, idx)  # (B, H, N, k, dv)
+
+    # History-mean smoothing token (paper §3.4): causal running mean of the
+    # keys/values, always valid, appended as candidate k+1.
+    km = topk.history_mean(qk)[..., :, None, :]  # (B, H, N, 1, d_k)
+    vm = topk.history_mean(v)[..., :, None, :]  # (B, H, N, 1, dv)
+    kg = jnp.concatenate([kg, km], axis=-2)
+    vg = jnp.concatenate([vg, vm], axis=-2)
+    valid = jnp.concatenate([valid, jnp.ones(valid.shape[:-1] + (1,), valid.dtype)], axis=-1)
+
+    eps = jax.nn.sigmoid(p["theta"])  # gamma^2 in (0, 1)
+
+    rows = b * h * n
+    o = cauchy_topk_attention(
+        qk.reshape(rows, -1),
+        kg.reshape(rows, k + 1, -1),
+        vg.reshape(rows, k + 1, -1),
+        valid.reshape(rows, k + 1),
+        eps,
+    )
+    o = o.reshape(b, h, n, dv)
+    return _merge_heads(o) @ p["wo"]
+
+
+def _vanilla_forward(p, x, cfg):
+    h = cfg["n_heads"]
+    if isinstance(p["wq"], list):
+        q = jnp.stack([_qk_proj_apply(pi, x) for pi in p["wq"]], axis=1)
+        k = jnp.stack([_qk_proj_apply(pi, x) for pi in p["wk"]], axis=1)
+    else:
+        q = _split_heads(x @ p["wq"], h)
+        k = _split_heads(x @ p["wk"], h)
+    v = _split_heads(x @ p["wv"], h)
+    o = dense_attention_ref(q, k, v, causal=True)
+    return _merge_heads(o) @ p["wo"]
+
+
+def _dense_op_forward(p, x, cfg):
+    h = cfg["n_heads"]
+    if isinstance(p["wq"], list):
+        q = jnp.stack([_qk_proj_apply(pi, x) for pi in p["wq"]], axis=1)
+        k = jnp.stack([_qk_proj_apply(pi, x) for pi in p["wk"]], axis=1)
+    else:
+        q = _split_heads(x @ p["wq"], h)
+        k = _split_heads(x @ p["wk"], h)
+    v = _split_heads(x @ p["wv"], h)
+    eps = jax.nn.sigmoid(p["theta"])
+    o = dense_distance_attention_ref(q, k, v, cfg["operator"], eps, causal=True)
+    return _merge_heads(o) @ p["wo"]
+
+
+def _performer_forward(p, x, cfg):
+    h = cfg["n_heads"]
+    q = _split_heads(x @ p["wq"], h)  # (B, H, N, dv)
+    k = _split_heads(x @ p["wk"], h)
+    v = _split_heads(x @ p["wv"], h)
+    w = p["feat"]  # (H, dv, m)
+    scale = 1.0 / jnp.sqrt(jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32)))
+
+    def phi(u):
+        # FAVOR+ positive features: exp(w.u - |u|^2/2) / sqrt(m).
+        proj = jnp.einsum("bhnd,hdm->bhnm", u * scale, w)
+        norm = 0.5 * jnp.sum((u * scale) ** 2, axis=-1, keepdims=True)
+        return jnp.exp(proj - norm) / jnp.sqrt(jnp.asarray(w.shape[-1], jnp.float32))
+
+    qf, kf = phi(q), phi(k)  # (B, H, N, m)
+    # Causal linear attention via prefix sums.
+    skv = jnp.cumsum(jnp.einsum("bhnm,bhnd->bhnmd", kf, v), axis=2)
+    sk = jnp.cumsum(kf, axis=2)
+    num = jnp.einsum("bhnm,bhnmd->bhnd", qf, skv)
+    den = jnp.einsum("bhnm,bhnm->bhn", qf, sk)
+    o = num / (den[..., None] + 1e-6)
+    return _merge_heads(o) @ p["wo"]
+
+
+def _based_forward(p, x, cfg):
+    h = cfg["n_heads"]
+    df = cfg.get("d_feature", min(16, cfg["d_model"] // h))
+    b, n, d = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    q = q.reshape(b, n, h, df).transpose(0, 2, 1, 3)
+    k = k.reshape(b, n, h, df).transpose(0, 2, 1, 3)
+    v = _split_heads(x @ p["wv"], h)
+
+    def phi(u):
+        # Order-2 Taylor approximation of exp(q.k): [1, u, vec(uu^T)/sqrt(2)].
+        u = u / jnp.sqrt(jnp.sqrt(jnp.asarray(df, jnp.float32)))
+        ones = jnp.ones(u.shape[:-1] + (1,), u.dtype)
+        quad = jnp.einsum("...i,...j->...ij", u, u) / jnp.sqrt(2.0)
+        quad = quad.reshape(u.shape[:-1] + (df * df,))
+        return jnp.concatenate([ones, u, quad], axis=-1)
+
+    qf, kf = phi(q), phi(k)  # (B, H, N, f)
+    skv = jnp.cumsum(jnp.einsum("bhnf,bhnd->bhnfd", kf, v), axis=2)
+    sk = jnp.cumsum(kf, axis=2)
+    num = jnp.einsum("bhnf,bhnfd->bhnd", qf, skv)
+    den = jnp.einsum("bhnf,bhnf->bhn", qf, sk)
+    o = num / (den[..., None] + 1e-6)
+    return _merge_heads(o) @ p["wo"]
+
+
+_FORWARDS = {
+    "zeta": _zeta_forward,
+    "vanilla": _vanilla_forward,
+    "dense_op": _dense_op_forward,
+    "performer": _performer_forward,
+    "based": _based_forward,
+}
+
+
+def attention_apply(p, x, cfg):
+    """Dispatch one attention layer. x (B, N, D) -> (B, N, D)."""
+    return _FORWARDS[cfg["attn"]](p, x, cfg)

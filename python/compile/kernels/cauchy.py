@@ -1,0 +1,215 @@
+"""Layer-1 Pallas kernel: sparse top-k Adaptive Cauchy-Softmax attention.
+
+This is the paper's Appendix-D Triton kernel rethought for Pallas/TPU (see
+DESIGN.md §Hardware-Adaptation):
+
+* Each grid step owns a ``(block_rows, k+1, ·)`` slab of *pre-gathered* keys
+  and values in VMEM — the gather itself stays at the XLA level where the
+  compiler lowers it to dynamic slices; random-access loads inside the kernel
+  would defeat the TPU vector unit.
+* The Cauchy score matrix for a block is ``(block_rows, k+1)`` — tiny
+  (k = 32 in the paper) — so the full normalization lives in VMEM with no
+  streaming-softmax machinery.
+* The backward pass is a second Pallas kernel implementing the closed-form
+  gradients of Appendix E (Eqs. 44–47); the scatter-add the Triton version
+  performs with ``tl.atomic_add`` is instead produced by XLA when the
+  surrounding gather is transposed.
+
+Rows are independent queries: the caller flattens (batch, heads, seq) into a
+single row axis. Inputs per row:
+
+  q     (d,)        low-dimensional query (d = d_K, typically 3)
+  kg    (k+1, d)    gathered candidate keys (+1 = history-mean smoothing key)
+  vg    (k+1, dv)   gathered candidate values (+1 = history-mean value)
+  mask  (k+1,)      1.0 where the candidate is valid (causal / in-range)
+  eps   scalar      gamma^2 of the Adaptive Cauchy-Softmax
+
+Forward (paper Eq. 6):  s_j = mask_j / (||q - k_j||^2 + eps)
+                        o   = sum_j (s_j / Z) v_j,   Z = sum_j s_j
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cauchy_topk_attention", "DEFAULT_BLOCK_ROWS"]
+
+# 128 rows x (k+1=33) candidates x (d_v<=256) f32 ≈ 4.3 MB VMEM worst case;
+# the shipped configs (d_v <= 128) stay under 2.2 MB. See DESIGN.md §Perf.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, m_ref, eps_ref, o_ref, z_ref):
+    """One block of rows: scores, normalizer and weighted values in VMEM."""
+    q = q_ref[...]  # (bq, d)
+    kk = k_ref[...]  # (bq, kc, d)
+    vv = v_ref[...]  # (bq, kc, dv)
+    m = m_ref[...]  # (bq, kc)
+    eps = eps_ref[0]
+
+    diff = q[:, None, :] - kk  # (bq, kc, d)
+    dist = jnp.sum(diff * diff, axis=-1)  # (bq, kc)
+    s = m / (dist + eps)  # masked Cauchy scores
+    z = jnp.sum(s, axis=-1)  # (bq,)
+    # Every row has at least the smoothing token valid, but guard anyway so a
+    # fully-masked row yields zeros instead of NaN.
+    zsafe = jnp.where(z > 0.0, z, 1.0)
+    a = s / zsafe[:, None]  # (bq, kc)
+    o_ref[...] = jnp.sum(a[:, :, None] * vv, axis=1)  # (bq, dv)
+    z_ref[...] = zsafe
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, m_ref, eps_ref, o_ref, z_ref, g_ref,
+                dq_ref, dk_ref, dv_ref, de_ref):
+    """Appendix-E gradients for one block of rows.
+
+    With s_j = m_j/(D_j + eps), A_j = s_j/Z, o = sum_j A_j v_j and upstream
+    gradient g = dL/do:
+      dL/dv_j  = A_j g                                   (Eq. 44)
+      dL/dS_j  = g . (v_j - o) / Z
+      dL/ddel_j = -dL/dS_j * s_j^2 / m_j  (= -dS * 1/del^2 on valid entries)
+      dL/dq    = sum_j dL/ddel_j * 2 (q - k_j)           (Eq. 45)
+      dL/dk_j  = -dL/ddel_j * 2 (q - k_j)                (Eq. 46)
+      dL/deps  = sum_j dL/ddel_j                         (Eq. 47)
+    """
+    q = q_ref[...]
+    kk = k_ref[...]
+    vv = v_ref[...]
+    m = m_ref[...]
+    eps = eps_ref[0]
+    o = o_ref[...]  # (bq, dv) saved forward output
+    z = z_ref[...]  # (bq,) saved normalizer
+    g = g_ref[...]  # (bq, dv)
+
+    diff = q[:, None, :] - kk  # (bq, kc, d)
+    dist = jnp.sum(diff * diff, axis=-1)
+    s = m / (dist + eps)  # (bq, kc)
+    a = s / z[:, None]
+
+    dv_ref[...] = a[:, :, None] * g[:, None, :]  # (bq, kc, dv)
+
+    # dL/dS_j = g.(v_j - o)/Z  -> (bq, kc)
+    gdotv = jnp.sum(g[:, None, :] * (vv - o[:, None, :]), axis=-1)
+    ds = gdotv / z[:, None]
+    # On valid entries s = 1/delta so s^2 = 1/delta^2; masked entries have
+    # s = 0 and contribute nothing.
+    ddelta = -ds * s * s / jnp.where(m > 0.0, m, 1.0)  # (bq, kc)
+
+    dq_ref[...] = jnp.sum(ddelta[:, :, None] * 2.0 * diff, axis=1)  # (bq, d)
+    dk_ref[...] = -ddelta[:, :, None] * 2.0 * diff  # (bq, kc, d)
+    de_ref[...] = jnp.sum(ddelta, axis=-1)  # (bq,)
+
+
+def _pad_rows(x: jnp.ndarray, rows: int) -> jnp.ndarray:
+    pad = rows - x.shape[0]
+    if pad == 0:
+        return x
+    cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, cfg)
+
+
+def _block_rows(rows: int, requested: int) -> int:
+    return min(requested, rows)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def cauchy_topk_attention(q, kg, vg, mask, eps, block_rows=DEFAULT_BLOCK_ROWS):
+    """Sparse Cauchy-softmax attention over pre-gathered candidates.
+
+    q (R, d), kg (R, kc, d), vg (R, kc, dv), mask (R, kc), eps scalar array.
+    Returns o (R, dv). Differentiable w.r.t. q, kg, vg and eps.
+    """
+    o, _ = _fwd_impl(q, kg, vg, mask, eps, block_rows)
+    return o
+
+
+def _fwd_impl(q, kg, vg, mask, eps, block_rows):
+    rows, d = q.shape
+    kc = kg.shape[1]
+    dv = vg.shape[2]
+    bq = _block_rows(rows, block_rows)
+    padded = ((rows + bq - 1) // bq) * bq
+    qp, kp, vp, mp = (_pad_rows(x, padded) for x in (q, kg, vg, mask))
+    grid = (padded // bq,)
+    eps_arr = jnp.reshape(eps.astype(jnp.float32), (1,))
+
+    o, z = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq, kc, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bq, kc, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bq, kc), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, dv), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded, dv), jnp.float32),
+            jax.ShapeDtypeStruct((padded,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(qp, kp, vp, mp, eps_arr)
+    return o[:rows], z[:rows]
+
+
+def _vjp_fwd(q, kg, vg, mask, eps, block_rows):
+    o, z = _fwd_impl(q, kg, vg, mask, eps, block_rows)
+    return o, (q, kg, vg, mask, eps, o, z)
+
+
+def _vjp_bwd(block_rows, res, g):
+    q, kg, vg, mask, eps, o, z = res
+    rows, d = q.shape
+    kc = kg.shape[1]
+    dv = vg.shape[2]
+    bq = _block_rows(rows, block_rows)
+    padded = ((rows + bq - 1) // bq) * bq
+    qp, kp, vp, mp, op, zp, gp = (
+        _pad_rows(x, padded) for x in (q, kg, vg, mask, o, z, g)
+    )
+    # Padded rows have z == 0; make the normalizer safe there.
+    zp = jnp.where(zp > 0.0, zp, 1.0)
+    grid = (padded // bq,)
+    eps_arr = jnp.reshape(eps.astype(jnp.float32), (1,))
+
+    dq, dk, dv_, de = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq, kc, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bq, kc, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bq, kc), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bq, dv), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq, dv), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq, kc, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bq, kc, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded, d), jnp.float32),
+            jax.ShapeDtypeStruct((padded, kc, d), jnp.float32),
+            jax.ShapeDtypeStruct((padded, kc, dv), jnp.float32),
+            jax.ShapeDtypeStruct((padded,), jnp.float32),
+        ],
+        interpret=True,
+    )(qp, kp, vp, mp, eps_arr, op, zp, gp)
+
+    deps = jnp.sum(de[:rows]).astype(eps.dtype).reshape(eps.shape)
+    return dq[:rows], dk[:rows], dv_[:rows], jnp.zeros_like(mask), deps
+
+
+cauchy_topk_attention.defvjp(_vjp_fwd, _vjp_bwd)

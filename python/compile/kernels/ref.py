@@ -1,0 +1,84 @@
+"""Pure-jnp correctness oracles for every Layer-1 kernel.
+
+These are the ground truth the Pallas kernels are tested against (pytest +
+hypothesis in python/tests). They are deliberately written in the most
+obvious way possible — no blocking, no padding, no custom VJP — so that a
+mismatch always implicates the kernel, never the oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "cauchy_topk_attention_ref",
+    "dense_attention_ref",
+    "dense_distance_attention_ref",
+]
+
+
+def cauchy_topk_attention_ref(q, kg, vg, mask, eps):
+    """Reference for kernels.cauchy.cauchy_topk_attention.
+
+    q (R, d), kg (R, kc, d), vg (R, kc, dv), mask (R, kc), eps scalar.
+    s_j = mask_j / (||q - k_j||^2 + eps); o = sum_j s_j v_j / sum_j s_j.
+    """
+    diff = q[:, None, :] - kg
+    dist = jnp.sum(diff * diff, axis=-1)
+    s = mask / (dist + eps)
+    z = jnp.sum(s, axis=-1, keepdims=True)
+    z = jnp.where(z > 0.0, z, 1.0)
+    return jnp.einsum("rk,rkd->rd", s / z, vg)
+
+
+def dense_attention_ref(q, k, v, causal=True, scale=None):
+    """Vanilla softmax(QK^T/sqrt(d))V with optional causal mask.
+
+    q, k: (..., N, d); v: (..., N, dv).
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    if causal:
+        n = q.shape[-2]
+        causal_mask = jnp.tril(jnp.ones((n, n), bool))
+        logits = jnp.where(causal_mask, logits, -jnp.inf)
+    a = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    a = a / jnp.sum(a, axis=-1, keepdims=True)
+    return jnp.einsum("...qk,...kv->...qv", a, v)
+
+
+def dense_distance_attention_ref(q, k, v, operator, eps, causal=True):
+    """Dense attention under the paper's Euclidean-based operators (§4.3).
+
+    operator: 'cauchy'     -> weights 1/(D + eps), normalized
+              'neg_euclid' -> softmax(-D)
+              'inv_euclid' -> weights 1/(sqrt(D) + eps), normalized
+              'norm_dot'   -> softmax(q_hat . k_hat / sqrt(d)) (Table 6)
+    """
+    n = q.shape[-2]
+    if operator == "norm_dot":
+        qh = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+        kh = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + 1e-6)
+        return dense_attention_ref(qh, kh, v, causal=causal)
+
+    d2 = (
+        jnp.sum(q * q, axis=-1)[..., :, None]
+        + jnp.sum(k * k, axis=-1)[..., None, :]
+        - 2.0 * jnp.einsum("...qd,...kd->...qk", q, k)
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    causal_mask = jnp.tril(jnp.ones((n, n), bool)) if causal else jnp.ones((n, n), bool)
+    if operator == "cauchy":
+        s = jnp.where(causal_mask, 1.0 / (d2 + eps), 0.0)
+    elif operator == "inv_euclid":
+        s = jnp.where(causal_mask, 1.0 / (jnp.sqrt(d2) + eps + 1e-6), 0.0)
+    elif operator == "neg_euclid":
+        logits = jnp.where(causal_mask, -d2, -jnp.inf)
+        s = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    else:
+        raise ValueError(f"unknown operator {operator!r}")
+    z = jnp.sum(s, axis=-1, keepdims=True)
+    z = jnp.where(z > 0.0, z, 1.0)
+    return jnp.einsum("...qk,...kv->...qv", s / z, v)

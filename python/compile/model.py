@@ -1,0 +1,106 @@
+"""Layer-2 model: pre-LN transformer with pluggable attention variant.
+
+One model family serves every experiment:
+
+* ``task = "lm"``  — causal language model (MQAR, WikiText-style corpus):
+  logits at every position over ``vocab``.
+* ``task = "cls"`` — sequence classifier (LRA-style tasks): masked mean-pool
+  over positions then a linear head over ``n_classes``.
+
+The config is a plain dict so it can be serialized verbatim into the AOT
+manifest. Mandatory keys: vocab, seq_len, d_model, n_layers, n_heads, attn,
+task. Variant-specific keys are documented in attention.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_apply, attention_init
+
+__all__ = ["model_init", "model_apply", "param_count"]
+
+
+def _layernorm(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def _ln_init(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _mlp_init(key, d, mult=4):
+    k1, k2 = jax.random.split(key)
+    h = mult * d
+    s1 = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s2 = 1.0 / jnp.sqrt(jnp.asarray(h, jnp.float32))
+    return {
+        "w1": jax.random.normal(k1, (d, h), jnp.float32) * s1,
+        "b1": jnp.zeros((h,), jnp.float32),
+        "w2": jax.random.normal(k2, (h, d), jnp.float32) * s2,
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _mlp_apply(p, x):
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def model_init(key, cfg):
+    """Initialize the full parameter pytree for ``cfg``."""
+    d = cfg["d_model"]
+    vocab = cfg["vocab"]
+    n = cfg["seq_len"]
+    keys = jax.random.split(key, 4 + cfg["n_layers"])
+
+    params = {
+        "embed": jax.random.normal(keys[0], (vocab, d), jnp.float32) * 0.02,
+        "pos": jax.random.normal(keys[1], (n, d), jnp.float32) * 0.02,
+        "blocks": [],
+        "ln_f": _ln_init(d),
+    }
+    for i in range(cfg["n_layers"]):
+        bk = jax.random.split(keys[4 + i], 2)
+        params["blocks"].append(
+            {
+                "ln1": _ln_init(d),
+                "attn": attention_init(bk[0], cfg),
+                "ln2": _ln_init(d),
+                "mlp": _mlp_init(bk[1], d, cfg.get("mlp_mult", 4)),
+            }
+        )
+    if cfg["task"] == "lm":
+        params["head"] = jax.random.normal(keys[2], (d, vocab), jnp.float32) * 0.02
+    else:
+        params["head"] = jax.random.normal(keys[2], (d, cfg["n_classes"]), jnp.float32) * 0.02
+        params["head_b"] = jnp.zeros((cfg["n_classes"],), jnp.float32)
+    return params
+
+
+def model_apply(params, tokens, cfg):
+    """tokens (B, N) int32 -> logits.
+
+    lm:  (B, N, vocab) — next-token logits at every position.
+    cls: (B, n_classes) — masked-mean-pooled classifier logits (token 0 is
+         treated as padding and excluded from the pool).
+    """
+    b, n = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :n, :]
+    for blk in params["blocks"]:
+        x = x + attention_apply(blk["attn"], _layernorm(blk["ln1"], x), cfg)
+        x = x + _mlp_apply(blk["mlp"], _layernorm(blk["ln2"], x))
+    x = _layernorm(params["ln_f"], x)
+    if cfg["task"] == "lm":
+        return x @ params["head"]
+    pad_mask = (tokens != 0).astype(jnp.float32)[..., None]  # (B, N, 1)
+    denom = jnp.maximum(jnp.sum(pad_mask, axis=1), 1.0)
+    pooled = jnp.sum(x * pad_mask, axis=1) / denom
+    return pooled @ params["head"] + params["head_b"]
+
+
+def param_count(params) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return int(sum(int(p.size) for p in leaves))

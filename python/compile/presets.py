@@ -1,0 +1,162 @@
+"""Preset registry: every AOT artifact the Rust side can ask for.
+
+A preset bundles a model config, batch geometry and learning rate, and
+declares which entry points get lowered (init / train_step / eval_step /
+forward). Presets are grouped so ``make artifacts`` builds only the core set
+(examples, tests, serving) while ``make artifacts-full`` additionally builds
+the full experiment sweeps behind Figures 2–3 and Tables 1–6.
+
+Naming convention: ``<experiment>_<variant>_<axis...>`` — the Rust experiment
+harness reconstructs sweep axes from these names via the manifest.
+"""
+
+from __future__ import annotations
+
+__all__ = ["PRESETS", "GROUPS", "preset_names"]
+
+
+def _mqar_cfg(attn, d_model, **kw):
+    cfg = {
+        "vocab": 64,
+        "seq_len": 64,
+        "d_model": d_model,
+        "n_layers": 2,
+        "n_heads": max(1, d_model // 32),
+        "attn": attn,
+        "task": "lm",
+    }
+    cfg.update(kw)
+    return cfg
+
+
+def _lra_cfg(attn, task_name, seq_len, n_classes, d_model=64, **kw):
+    cfg = {
+        "vocab": 256,
+        "seq_len": seq_len,
+        "d_model": d_model,
+        "n_layers": 2,
+        "n_heads": 2,
+        "attn": attn,
+        "task": "cls",
+        "n_classes": n_classes,
+        "lra_task": task_name,
+    }
+    cfg.update(kw)
+    return cfg
+
+
+def _lm_cfg(attn, d_model=128, n_layers=4, seq_len=256, **kw):
+    cfg = {
+        "vocab": 256,
+        "seq_len": seq_len,
+        "d_model": d_model,
+        "n_layers": n_layers,
+        "n_heads": 4,
+        "attn": attn,
+        "task": "lm",
+    }
+    cfg.update(kw)
+    return cfg
+
+
+_ZETA = {"d_k": 3, "k": 16, "chunk": 8, "two_layer_qk": True}
+
+PRESETS: dict[str, dict] = {}
+GROUPS: dict[str, list[str]] = {}
+
+
+def _add(group, name, cfg, batch, lr=3e-3, entries=("init", "train", "eval")):
+    PRESETS[name] = {"cfg": cfg, "batch": batch, "lr": lr, "entries": list(entries)}
+    GROUPS.setdefault(group, []).append(name)
+
+
+# --------------------------------------------------------------------------
+# core — examples, tests, serving (built by `make artifacts`)
+# --------------------------------------------------------------------------
+_add("core", "quickstart_zeta", _mqar_cfg("zeta", 64, **_ZETA), batch=4,
+     entries=("init", "forward"))
+_add("core", "mqar_zeta_d64", _mqar_cfg("zeta", 64, **_ZETA), batch=32,
+     entries=("init", "train", "eval", "forward"))
+_add("core", "mqar_vanilla_d64", _mqar_cfg("vanilla", 64), batch=32)
+_add("core", "serve_cls", _lra_cfg("zeta", "text", 256, 2, **_ZETA), batch=8,
+     entries=("init", "train", "eval", "forward"))
+_add("core", "lm_zeta", _lm_cfg("zeta", d_model=128, n_layers=4, **_ZETA),
+     batch=8, lr=1e-3, entries=("init", "train", "eval", "forward"))
+
+# --------------------------------------------------------------------------
+# fig2a — MQAR accuracy vs model dim for 4 architectures
+# --------------------------------------------------------------------------
+for arch in ("vanilla", "performer", "based", "zeta"):
+    for dm in (32, 64, 128, 256):
+        kw = dict(_ZETA) if arch == "zeta" else {}
+        _add("fig2a", f"fig2a_{arch}_d{dm}", _mqar_cfg(arch, dm, **kw), batch=16)
+
+# --------------------------------------------------------------------------
+# fig2b — vanilla transformer with low-dimensional QK, d_K sweep
+# --------------------------------------------------------------------------
+for dm in (32, 64, 128):
+    for dk in (1, 2, 3, 8):
+        _add("fig2b", f"fig2b_d{dm}_dk{dk}",
+             _mqar_cfg("vanilla", dm, d_k=dk, low_dim_qk=True, two_layer_qk=True),
+             batch=16)
+
+# --------------------------------------------------------------------------
+# fig2c + table6 — Euclidean-based softmax operators vs d_K (dense)
+# --------------------------------------------------------------------------
+for op in ("cauchy", "neg_euclid", "inv_euclid", "norm_dot"):
+    for dk in (1, 2, 3, 4):
+        _add("fig2c", f"fig2c_{op}_dk{dk}",
+             _mqar_cfg("dense_op", 64, d_k=dk, operator=op, two_layer_qk=True),
+             batch=16)
+
+# --------------------------------------------------------------------------
+# fig2d — ZETA ablation over k (k=32 cells come from fig2a presets)
+# --------------------------------------------------------------------------
+for dm in (64, 256):
+    for k in (16, 48):
+        z = dict(_ZETA)
+        z["k"] = k
+        _add("fig2d", f"fig2d_d{dm}_k{k}", _mqar_cfg("zeta", dm, **z), batch=16)
+
+# --------------------------------------------------------------------------
+# table2 — LRA-style synthetic tasks x 4 architectures
+# --------------------------------------------------------------------------
+_LRA_TASKS = {
+    "listops": (256, 10),
+    "text": (512, 2),
+    "retrieval": (512, 2),
+    "image": (256, 10),
+    "pathfinder": (256, 2),
+}
+for task_name, (n, nc) in _LRA_TASKS.items():
+    for arch in ("vanilla", "zeta", "performer", "based"):
+        kw = dict(_ZETA, chunk=max(8, n // 16)) if arch == "zeta" else {}
+        _add("table2", f"table2_{task_name}_{arch}",
+             _lra_cfg(arch, task_name, n, nc, **kw), batch=16, lr=1e-3)
+
+# --------------------------------------------------------------------------
+# table5 — d_K ablation on ListOps / Image (dense attention, low-dim QK)
+# --------------------------------------------------------------------------
+for task_name in ("listops", "image"):
+    n, nc = _LRA_TASKS[task_name]
+    for dk in (1, 2, 3, 32):
+        _add("table5", f"table5_{task_name}_dk{dk}",
+             _lra_cfg("vanilla", task_name, n, nc, d_k=dk, low_dim_qk=True,
+                      two_layer_qk=True), batch=16, lr=1e-3)
+
+# --------------------------------------------------------------------------
+# table1 — language modeling perplexity comparison
+# --------------------------------------------------------------------------
+for arch in ("vanilla", "performer", "based", "zeta"):
+    kw = dict(_ZETA) if arch == "zeta" else {}
+    _add("table1", f"table1_{arch}", _lm_cfg(arch, d_model=128, n_layers=2, **kw),
+         batch=8, lr=1e-3)
+
+
+def preset_names(groups=None):
+    if not groups:
+        return list(PRESETS)
+    out = []
+    for g in groups:
+        out.extend(GROUPS[g])
+    return out

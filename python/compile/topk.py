@@ -1,0 +1,107 @@
+"""Parallel causal top-k candidate search in Z-order space (paper §3.2.2).
+
+Algorithm 1 of the paper, fully vectorized so it lowers to one HLO module:
+
+1. Morton-encode keys and queries on a shared grid (zorder.py).
+2. ``argsort`` the key codes once per (batch, head) row — the parallel sort
+   that replaces per-query kNN structures.
+3. For every query, ``searchsorted`` gives its insertion position among the
+   sorted key codes; a window of ``window`` candidates around that position
+   is gathered.
+4. Chunked causal masking: a query at position i in chunk m = i // chunk may
+   only use keys with original position < m*chunk (the paper's rule), so
+   whole chunks are either visible or not and the search stays parallel.
+5. Of the valid window candidates, the k with smallest |z_key - z_query| are
+   kept (the paper's "window centered on the insertion position", made
+   robust to masked-out entries by over-fetching ``window >= k``).
+
+Outputs are gather indices + validity mask; the exact Cauchy scores are then
+computed by the Layer-1 kernel on the gathered (q, k) pairs, so quantization
+error in the Morton codes only ever affects *which* tokens are candidates,
+never the attention weights themselves.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import zorder
+
+__all__ = ["topk_candidates", "history_mean"]
+
+
+def _row_topk(qz_row, kz_row, k, chunk, window):
+    """Candidate search for one (batch*head) row.
+
+    qz_row, kz_row: (N,) uint32 Morton codes. Returns (idx (N,k), valid (N,k)).
+    """
+    n = qz_row.shape[0]
+    order = jnp.argsort(kz_row)  # (N,) original position of each sorted slot
+    kz_sorted = kz_row[order]
+
+    ins = jnp.searchsorted(kz_sorted, qz_row)  # (N,)
+    offs = jnp.arange(window) - window // 2
+    cand_slot = jnp.clip(ins[:, None] + offs[None, :], 0, n - 1)  # (N, W)
+    cand_pos = order[cand_slot]  # (N, W) original key positions
+    cand_code = kz_sorted[cand_slot]  # (N, W)
+
+    # Chunked causal mask: query i sees keys with position < (i//chunk)*chunk.
+    limit = (jnp.arange(n) // chunk) * chunk  # (N,)
+    valid = cand_pos < limit[:, None]  # (N, W)
+
+    # Window clipping at the array ends duplicates candidates; keep only the
+    # first occurrence of each slot so duplicates never double-count.
+    first = jnp.concatenate(
+        [jnp.ones((n, 1), bool), cand_slot[:, 1:] != cand_slot[:, :-1]], axis=1
+    )
+    valid = valid & first
+
+    # Rank candidates by |z - q| (proxy distance along the curve). Codes use
+    # at most 31 bits so the int32 subtraction cannot overflow; float32
+    # ranking precision (24-bit mantissa) is ample for candidate selection.
+    zdiff = cand_code.astype(jnp.int32) - qz_row[:, None].astype(jnp.int32)
+    zdist = jnp.abs(zdiff).astype(jnp.float32)
+    ranked = jnp.where(valid, zdist, jnp.inf)
+    # k smallest distances via argsort (NOT jax.lax.top_k: that lowers to a
+    # `topk(..., largest=true)` HLO op the runtime's XLA 0.5.1 text parser
+    # cannot read; `sort` round-trips fine).
+    sel = jnp.argsort(ranked, axis=1)[:, :k]
+    idx = jnp.take_along_axis(cand_pos, sel, axis=1)  # (N, k)
+    keep = jnp.take_along_axis(valid, sel, axis=1)
+    # Invalid slots point at position 0 (harmless: they are masked).
+    return jnp.where(keep, idx, 0), keep
+
+
+def topk_candidates(q, k_, k: int, chunk: int, window: int | None = None,
+                    bits: int | None = None, fixed_range: float | None = 4.0):
+    """Top-k causal candidates for every query, batched over leading axes.
+
+    q, k_: (..., N, d) low-dimensional projections. Returns
+    idx (..., N, k) int32 and valid (..., N, k) float32.
+    """
+    if window is None:
+        window = 2 * k
+    qz, kz = zorder.encode(q, k_, bits=bits, fixed_range=fixed_range)  # (..., N)
+    lead = qz.shape[:-1]
+    n = qz.shape[-1]
+    qz2 = qz.reshape((-1, n))
+    kz2 = kz.reshape((-1, n))
+    idx, valid = jax.vmap(lambda a, b: _row_topk(a, b, k, chunk, window))(qz2, kz2)
+    return (
+        idx.reshape(lead + (n, k)).astype(jnp.int32),
+        valid.reshape(lead + (n, k)).astype(jnp.float32),
+    )
+
+
+def history_mean(x):
+    """Causal inclusive running mean over the token axis (paper §3.4).
+
+    x: (..., N, d). Position i gets mean(x[..., :i+1, :]) — the smoothing
+    token appended to the top-k set so every query attends to something and
+    gradients flow through low-probability tokens.
+    """
+    n = x.shape[-2]
+    csum = jnp.cumsum(x, axis=-2)
+    denom = jnp.arange(1, n + 1, dtype=x.dtype).reshape((n, 1))
+    return csum / denom

@@ -1,0 +1,99 @@
+"""Layer-2 training graphs: loss, Adam, train/eval steps.
+
+Everything here is a pure function of arrays so that ``train_step`` lowers to
+a single HLO module the Rust trainer can drive (Python never runs at
+training time). The optimizer state is an (m, v) pytree mirroring params
+plus a scalar step counter carried by the Rust side.
+
+Loss conventions
+----------------
+* lm:  per-position weighted softmax cross-entropy. ``w`` (B, N) float32
+  selects which positions count (all 1s for language modeling; answer
+  positions only for MQAR, matching the Zoology evaluation protocol).
+* cls: per-sequence cross-entropy; ``w`` is (B,) (usually all 1s).
+
+``train_step`` returns (loss, new_params, new_m, new_v); ``eval_step``
+returns (loss_sum, correct, weight_sum) so accuracy aggregates exactly
+across batches of any size.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .model import model_apply
+
+__all__ = ["loss_fn", "make_train_step", "make_eval_step", "adam_update"]
+
+
+def _xent(logits, targets, w):
+    """Weighted mean cross-entropy. logits (..., C), targets (...,) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.sum(nll * w) / denom
+
+
+def loss_fn(params, x, y, w, cfg):
+    logits = model_apply(params, x, cfg)
+    return _xent(logits, y, w)
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8,
+                warmup=50):
+    """Adam with linear warmup. step is int32 (1-based at first update)."""
+    stepf = step.astype(jnp.float32)
+    lr_t = lr * jnp.minimum(1.0, stepf / float(max(warmup, 1)))
+    bc1 = 1.0 - b1 ** stepf
+    bc2 = 1.0 - b2 ** stepf
+
+    def upd(p, g, m_, v_):
+        m2 = b1 * m_ + (1.0 - b1) * g
+        v2 = b2 * v_ + (1.0 - b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        return p - lr_t * mhat / (jnp.sqrt(vhat) + eps), m2, v2
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+def make_train_step(cfg, lr, grad_clip=1.0, warmup=50):
+    """Returns train_step(params, m, v, step, x, y, w) -> (loss, p', m', v')."""
+
+    def train_step(params, m, v, step, x, y, w):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y, w, cfg)
+        # Global-norm gradient clipping.
+        leaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves) + 1e-12)
+        scale = jnp.minimum(1.0, grad_clip / gnorm)
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr,
+                                          warmup=warmup)
+        return loss, new_p, new_m, new_v
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    """Returns eval_step(params, x, y, w) -> (loss_sum, correct, weight_sum)."""
+
+    def eval_step(params, x, y, w):
+        logits = model_apply(params, x, cfg)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * w
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        correct = jnp.sum((pred == y).astype(jnp.float32) * w)
+        return jnp.sum(nll), correct, jnp.sum(w)
+
+    return eval_step

@@ -1,0 +1,102 @@
+"""Z-order (Morton) curve projection for low-dimensional keys/queries.
+
+Layer-2 (build-time JAX). The paper maps d_K-dimensional keys and queries to
+*one* dimension by quantizing each coordinate to ``bits`` bits and
+interleaving the bits (Eq. 4). Nearby points in R^{d_K} receive nearby Morton
+codes, so a single parallel sort + binary search replaces a kNN structure.
+
+Everything here is pure ``jnp`` and lowers to plain HLO (shifts, ors,
+comparisons), so it fuses into the same AOT artifact as the Pallas kernel.
+
+Key design points
+-----------------
+* Keys and queries MUST share one quantization grid — the insertion position
+  of a query among sorted keys is only meaningful if both were digitized with
+  the same (lo, scale). ``shared_grid`` computes that grid from the union.
+* ``bits * d <= 31`` so the code fits a (signed-safe) uint32 lane; for the
+  paper's d_K = 3 we use 10 bits/coordinate (30-bit codes).
+* Quantization bounds come from data min/max per (batch, head) — the grid is
+  causal-safe because it only affects *which* tokens are candidates, never
+  the attention values themselves; exact scores are recomputed in the kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["bits_for_dim", "shared_grid", "quantize", "interleave", "encode"]
+
+
+def bits_for_dim(d: int, max_bits: int = 10) -> int:
+    """Bits per coordinate so the interleaved code fits in 31 bits."""
+    if d < 1:
+        raise ValueError(f"dimension must be >= 1, got {d}")
+    return max(1, min(max_bits, 31 // d))
+
+
+def shared_grid(q: jnp.ndarray, k: jnp.ndarray, eps: float = 1e-6):
+    """Common (lo, inv_step) over the union of queries and keys.
+
+    q, k: (..., N, d). Reduction is over the token axis only, so each
+    batch/head gets its own grid (matches the paper's per-head projection).
+    Returns lo, inv_step with shape (..., 1, d).
+    """
+    both_lo = jnp.minimum(q.min(axis=-2), k.min(axis=-2))
+    both_hi = jnp.maximum(q.max(axis=-2), k.max(axis=-2))
+    lo = both_lo[..., None, :]
+    span = jnp.maximum(both_hi[..., None, :] - lo, eps)
+    return lo, 1.0 / span
+
+
+def quantize(x: jnp.ndarray, lo: jnp.ndarray, inv_step: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Digitize float coordinates to ``bits``-bit unsigned integers."""
+    levels = (1 << bits) - 1
+    u = (x - lo) * inv_step  # in [0, 1] for in-grid points
+    q = jnp.clip(jnp.floor(u * levels + 0.5), 0, levels)
+    return q.astype(jnp.uint32)
+
+
+def interleave(q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Interleave bits of the last axis: (..., d) uint32 -> (...,) uint32.
+
+    Bit b of coordinate j lands at output position b*d + j, i.e. the paper's
+    Eq. 4 with coordinate 0 providing the least-significant of each group.
+    The double loop is static (bits*d <= 31 iterations) and lowers to a flat
+    chain of shift/and/or HLO ops.
+    """
+    d = q.shape[-1]
+    if bits * d > 31:
+        raise ValueError(f"bits*d = {bits * d} exceeds 31-bit code budget")
+    z = jnp.zeros(q.shape[:-1], jnp.uint32)
+    for b in range(bits):
+        for j in range(d):
+            bit = (q[..., j] >> jnp.uint32(b)) & jnp.uint32(1)
+            z = z | (bit << jnp.uint32(b * d + j))
+    return z
+
+
+def encode(q: jnp.ndarray, k: jnp.ndarray, bits: int | None = None,
+           fixed_range: float | None = None):
+    """Morton-encode queries and keys on a shared grid.
+
+    q, k: (..., N, d) float arrays. Returns (qz, kz) uint32 of shape (..., N).
+
+    With ``fixed_range = B`` the grid is the static box [-B, B]^d (points
+    outside clip to the boundary bins). This keeps the digitization
+    independent of the data — in causal attention a data-derived grid would
+    let future tokens shift *candidate selection* for past queries. (The
+    window search still shares one sorted array across the sequence, the
+    same selection-level approximation as the paper's Algorithm 1; exact
+    attention scores are always computed from past tokens only.)
+    """
+    d = q.shape[-1]
+    if bits is None:
+        bits = bits_for_dim(d)
+    if fixed_range is not None:
+        lo = jnp.full((d,), -fixed_range, q.dtype)
+        inv_step = jnp.full((d,), 1.0 / (2.0 * fixed_range), q.dtype)
+    else:
+        lo, inv_step = shared_grid(q, k)
+    qq = quantize(q, lo, inv_step, bits)
+    qk = quantize(k, lo, inv_step, bits)
+    return interleave(qq, bits), interleave(qk, bits)

@@ -1,0 +1,58 @@
+"""AOT pipeline tests: HLO-text emission and the preset registry contract."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import presets
+from compile.aot import to_hlo_text
+
+
+def test_to_hlo_text_emits_parseable_module():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: the root must be a tuple
+    assert "tuple(" in text or "(f32[2,2]" in text
+
+
+def test_no_topk_op_in_lowered_search():
+    """The runtime's XLA 0.5.1 HLO parser rejects `topk(..., largest=)` —
+    the candidate search must lower to `sort` instead (see topk.py)."""
+    from compile import topk
+
+    def fn(q):
+        idx, valid = topk.topk_candidates(q, q, k=4, chunk=8)
+        return (idx, valid)
+
+    spec = jax.ShapeDtypeStruct((1, 32, 3), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec))
+    assert " topk(" not in text, "lowered graph contains a topk op"
+    assert " sort(" in text
+
+
+def test_preset_registry_consistency():
+    assert len(presets.PRESETS) >= 80
+    # groups partition the registry
+    grouped = [n for g in presets.GROUPS.values() for n in g]
+    assert sorted(grouped) == sorted(presets.PRESETS)
+    for name, spec in presets.PRESETS.items():
+        cfg = spec["cfg"]
+        assert cfg["d_model"] % cfg["n_heads"] == 0, name
+        assert spec["batch"] >= 1
+        assert set(spec["entries"]) <= {"init", "train", "eval", "forward"}
+        if cfg["task"] == "cls":
+            assert "n_classes" in cfg, name
+        if cfg["attn"] == "dense_op":
+            assert "operator" in cfg, name
+
+
+def test_group_selection():
+    core = presets.preset_names(["core"])
+    assert "quickstart_zeta" in core
+    assert all(not n.startswith("fig2a") for n in core)
+    everything = presets.preset_names(None)
+    assert len(everything) == len(presets.PRESETS)

@@ -1,0 +1,111 @@
+"""L2 tests: Morton encoding properties (zorder.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import zorder
+
+
+def _interleave_naive(coords, bits):
+    """Bit-by-bit python reference of paper Eq. 4."""
+    d = len(coords)
+    z = 0
+    for b in range(bits):
+        for j in range(d):
+            z |= ((coords[j] >> b) & 1) << (b * d + j)
+    return z
+
+
+def test_bits_for_dim():
+    assert zorder.bits_for_dim(1) == 10
+    assert zorder.bits_for_dim(3) == 10
+    assert zorder.bits_for_dim(4) == 7
+    assert zorder.bits_for_dim(8) == 3
+    assert zorder.bits_for_dim(31) == 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    d=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_interleave_matches_naive(d, seed):
+    bits = zorder.bits_for_dim(d)
+    rng = np.random.default_rng(seed)
+    coords = rng.integers(0, 1 << bits, size=(20, d), dtype=np.uint32)
+    z = zorder.interleave(jnp.asarray(coords), bits)
+    want = [_interleave_naive(list(row), bits) for row in coords]
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(want, np.uint32))
+
+
+def test_interleave_is_injective():
+    """Distinct quantized points must get distinct codes."""
+    bits, d = 4, 3
+    grid = np.stack(np.meshgrid(*[np.arange(1 << bits)] * d, indexing="ij"), -1)
+    pts = jnp.asarray(grid.reshape(-1, d).astype(np.uint32))
+    z = np.asarray(zorder.interleave(pts, bits))
+    assert len(np.unique(z)) == z.size
+
+
+def test_interleave_monotone_per_axis():
+    """Increasing one coordinate (others fixed) increases the code."""
+    bits, d = 5, 3
+    base = jnp.asarray(np.full((1 << bits, d), 7, np.uint32))
+    for axis in range(d):
+        pts = base.at[:, axis].set(jnp.arange(1 << bits, dtype=jnp.uint32))
+        z = np.asarray(zorder.interleave(pts, bits)).astype(np.int64)
+        assert np.all(np.diff(z) > 0), f"axis {axis}"
+
+
+def test_quantize_clips_and_centers():
+    lo = jnp.zeros((1, 2))
+    inv = jnp.ones((1, 2))
+    x = jnp.asarray([[-5.0, 0.0], [0.5, 1.0], [2.0, 0.25]], jnp.float32)
+    q = np.asarray(zorder.quantize(x, lo, inv, 4))
+    assert q[0, 0] == 0  # clipped below
+    assert q[2, 0] == 15  # clipped above
+    assert q[1, 1] == 15
+    assert q[1, 0] in (7, 8)  # midpoint
+
+
+def test_shared_grid_covers_union():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 16, 3)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 16, 3)) * 3, jnp.float32)
+    lo, inv = zorder.shared_grid(q, k)
+    both = jnp.concatenate([q, k], axis=-2)
+    u = (both - lo) * inv
+    assert float(u.min()) >= -1e-5 and float(u.max()) <= 1 + 1e-5
+
+
+def test_encode_locality_beats_random():
+    """Nearby points in R^3 should get nearer codes than random pairs —
+    the property §3.1 relies on (checked statistically)."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(512, 3)).astype(np.float32)
+    xq = jnp.asarray(x)[None]
+    qz, _ = zorder.encode(xq, xq)
+    z = np.asarray(qz)[0].astype(np.int64)
+
+    # mean |z_i - z_j| over 1k near pairs (j = nearest neighbour) vs random.
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    nn = d2.argmin(1)
+    near = np.abs(z - z[nn]).mean()
+    rand = np.abs(z - np.roll(z, 257)).mean()
+    assert near < 0.5 * rand
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 4))
+def test_encode_shapes_and_range(seed, d):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(2, 33, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 33, d)), jnp.float32)
+    qz, kz = zorder.encode(q, k)
+    assert qz.shape == (2, 33) and kz.shape == (2, 33)
+    bits = zorder.bits_for_dim(d)
+    top = np.uint64(1) << np.uint64(bits * d)
+    assert np.asarray(qz).astype(np.uint64).max() < top
+    assert np.asarray(kz).astype(np.uint64).max() < top

@@ -1,0 +1,103 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. ZETA kernel sensitivity to k and window size (time vs retrieval
+//!    quality is the paper's §4.5 trade-off, here the cost side).
+//! 2. Chunk-size sweep: the causal granularity knob of Algorithm 1.
+//! 3. Flash block-size sweep (the analogous tuning knob of the baseline).
+//! 4. Coordinator batching policy: latency/throughput vs max_delay —
+//!    requires `make artifacts`; skipped when artifacts are absent.
+//!
+//!   cargo bench --bench ablations
+
+use std::time::Duration;
+
+use zeta::attention::{flash::Flash, zeta::ZetaNative, AttentionImpl, Workload};
+use zeta::coordinator::{Server, ServerConfig};
+use zeta::util::bench;
+
+fn main() {
+    let n = 8192;
+    let w = Workload::random(n, 64, 64, 0);
+
+    println!("== ZETA k sweep (N = {n}, fwd) ==");
+    for k in [8usize, 16, 32, 64, 128] {
+        let z = ZetaNative { k, window: 2 * k, chunk: n / 16, ..ZetaNative::default() };
+        let st = bench::quick(|| {
+            bench::black_box(z.forward(&w));
+        });
+        println!("  k={k:<4} window={:<4} {:>10}", 2 * k, bench::fmt_time(st.median_s));
+    }
+
+    println!("\n== ZETA chunk-size sweep (N = {n}, k = 32, fwd) ==");
+    for chunks in [4usize, 8, 16, 32, 64] {
+        let z = ZetaNative { chunk: n / chunks, ..ZetaNative::default() };
+        let st = bench::quick(|| {
+            bench::black_box(z.forward(&w));
+        });
+        println!("  n_chunks={chunks:<4} (M={:<5}) {:>10}", n / chunks, bench::fmt_time(st.median_s));
+    }
+
+    println!("\n== ZETA window sweep (N = {n}, k = 32, fwd) ==");
+    for wmul in [1usize, 2, 4, 8] {
+        let z = ZetaNative { window: 32 * wmul, chunk: n / 16, ..ZetaNative::default() };
+        let st = bench::quick(|| {
+            bench::black_box(z.forward(&w));
+        });
+        println!("  window={:<5} {:>10}", 32 * wmul, bench::fmt_time(st.median_s));
+    }
+
+    println!("\n== Flash block-size sweep (N = 4096, fwd) ==");
+    let w4 = Workload::random(4096, 64, 64, 1);
+    for block in [32usize, 64, 128, 256, 512] {
+        let f = Flash { block };
+        let st = bench::quick(|| {
+            bench::black_box(f.forward(&w4));
+        });
+        println!("  block={block:<5} {:>10}", bench::fmt_time(st.median_s));
+    }
+
+    // Coordinator policy ablation (needs artifacts).
+    if std::path::Path::new(zeta::ARTIFACTS_DIR).join("manifest.json").exists() {
+        println!("\n== coordinator max_delay sweep (serve_cls, 48 reqs, 6 clients) ==");
+        for delay_ms in [1u64, 4, 16, 64] {
+            let cfg = ServerConfig {
+                max_delay: Duration::from_millis(delay_ms),
+                ..Default::default()
+            };
+            match Server::start(cfg, None) {
+                Ok(srv) => {
+                    let t0 = std::time::Instant::now();
+                    let mut joins = Vec::new();
+                    for c in 0..6 {
+                        let cl = srv.client();
+                        joins.push(std::thread::spawn(move || {
+                            for i in 0..8 {
+                                let _ = cl.infer(vec![(c * 8 + i) as i32 % 200 + 1; 64]);
+                            }
+                        }));
+                    }
+                    for j in joins {
+                        let _ = j.join();
+                    }
+                    let wall = t0.elapsed();
+                    let m = srv.metrics.lock().unwrap();
+                    println!(
+                        "  max_delay={delay_ms:>3}ms  p50={:?}  p99={:?}  batch_avg={:.1}  thpt={:.0}/s",
+                        m.percentile(50.0).unwrap_or_default(),
+                        m.percentile(99.0).unwrap_or_default(),
+                        m.mean_batch_size(),
+                        m.completed as f64 / wall.as_secs_f64(),
+                    );
+                    drop(m);
+                    srv.shutdown();
+                }
+                Err(e) => {
+                    println!("  (skipped: {e})");
+                    break;
+                }
+            }
+        }
+    } else {
+        println!("\n(coordinator ablation skipped: run `make artifacts` first)");
+    }
+}

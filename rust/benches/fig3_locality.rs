@@ -1,0 +1,34 @@
+//! Figure 3 bench: Z-order locality preservation (top-64 neighbour overlap
+//! before/after projection) across d_K and sample size, plus timing of the
+//! Morton codec primitives.
+//!
+//!   cargo bench --bench fig3_locality
+
+use zeta::exp;
+use zeta::util::bench;
+use zeta::util::rng::Rng;
+use zeta::zorder;
+
+fn main() {
+    // The paper figure.
+    exp::fig3(&exp::Opts::default()).expect("fig3 failed");
+
+    // Codec micro-benchmarks (informs §Perf: the sort is the O(N log N)
+    // term, encode is O(N·bits·d)).
+    println!("\n== Z-order codec micro-benchmarks ==");
+    let mut rng = Rng::new(0);
+    for n in [4096usize, 65536] {
+        let d = 3;
+        let mut pts = vec![0f32; n * d];
+        rng.fill_normal(&mut pts, 1.0);
+        let st = bench::quick(|| {
+            bench::black_box(zorder::encode_points(&pts, d, 4.0, 10));
+        });
+        println!("encode_points   n={n:<7} {}", bench::fmt_time(st.median_s));
+        let codes = zorder::encode_points(&pts, d, 4.0, 10);
+        let st = bench::quick(|| {
+            bench::black_box(zorder::argsort_codes(&codes));
+        });
+        println!("argsort (radix) n={n:<7} {}", bench::fmt_time(st.median_s));
+    }
+}

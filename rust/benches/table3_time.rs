@@ -1,0 +1,25 @@
+//! Table 3 bench: wall-clock of naive / flash / mamba / zeta attention,
+//! forward and forward+backward, across sequence lengths.
+//!
+//!   cargo bench --bench table3_time [-- --max-len N]
+//!
+//! Prints the same rows as the paper's Table 3 (time in ms; our testbed is
+//! CPU so absolute numbers differ — the shape of the comparison is the
+//! reproduced result). Equivalent to `zeta exp table3`.
+
+use zeta::exp;
+
+fn main() {
+    let mut opts = exp::Opts::default();
+    // Default cap keeps the bench run short on the 1-core testbed; override
+    // with `-- --max-len N` to regenerate the full table.
+    opts.max_len = 8192;
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--max-len") {
+        if let Some(v) = args.get(i + 1).and_then(|v| v.parse().ok()) {
+            opts.max_len = v;
+        }
+    }
+    opts.out_dir = "results".into();
+    exp::table3(&opts).expect("table3 bench failed");
+}

@@ -1,0 +1,23 @@
+//! Table 4 bench: measured memory footprint of each attention kernel
+//! (workspace + outputs + inputs) across sequence lengths.
+//!
+//!   cargo bench --bench table4_memory [-- --max-len N]
+//!
+//! Equivalent to `zeta exp table4`.
+
+use zeta::exp;
+
+fn main() {
+    let mut opts = exp::Opts::default();
+    // Default cap keeps the bench run short on the 1-core testbed; override
+    // with `-- --max-len N` to regenerate the full table.
+    opts.max_len = 65536;
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--max-len") {
+        if let Some(v) = args.get(i + 1).and_then(|v| v.parse().ok()) {
+            opts.max_len = v;
+        }
+    }
+    opts.out_dir = "results".into();
+    exp::table4(&opts).expect("table4 bench failed");
+}

@@ -1,0 +1,232 @@
+//! Flash-style blocked attention — exact softmax attention with streaming
+//! normalization (forward) and recompute (backward); O(N) extra memory.
+//!
+//! This is the CPU analogue of FlashAttention-2's algorithm: the score
+//! matrix is never materialized. Per query block we stream over key blocks,
+//! maintaining the running max `m_i`, normalizer `l_i` and the
+//! un-normalized output accumulator. The backward pass stores only the
+//! per-row logsumexp `L_i` and `D_i = dout_i . o_i`, recomputing score
+//! blocks on the fly.
+
+use super::{AttentionImpl, Grads, MemReport, Workload};
+use crate::tensor::{dot, Tensor};
+
+pub struct Flash {
+    pub block: usize,
+}
+
+impl Flash {
+    /// Forward that also returns per-row logsumexp (for the backward pass).
+    fn fwd_with_lse(&self, w: &Workload) -> (Tensor, Vec<f32>, MemReport) {
+        let n = w.n();
+        let d = w.q.shape[1];
+        let dv = w.v.shape[1];
+        let scale = 1.0 / (d as f32).sqrt();
+        let bs = self.block.max(1);
+
+        let mut o = Tensor::zeros(&[n, dv]);
+        let mut lse = vec![0f32; n];
+        // Per-block workspace: scores (bs x bs), running stats (bs).
+        let mut scores = vec![0f32; bs * bs];
+        let mut mstat = vec![f32::NEG_INFINITY; bs];
+        let mut lstat = vec![0f32; bs];
+
+        let mut mem = MemReport::default();
+        mem.workspace_bytes += (scores.len() + mstat.len() + lstat.len()) * 4 + n * 4;
+
+        for qb in (0..n).step_by(bs) {
+            let qe = (qb + bs).min(n);
+            let rows = qe - qb;
+            for s in mstat[..rows].iter_mut() {
+                *s = f32::NEG_INFINITY;
+            }
+            for s in lstat[..rows].iter_mut() {
+                *s = 0.0;
+            }
+            for r in qb..qe {
+                for c in o.row_mut(r) {
+                    *c = 0.0;
+                }
+            }
+            for kb in (0..qe).step_by(bs) {
+                let ke = (kb + bs).min(qe);
+                // scores for this tile (causal-masked)
+                for (ri, i) in (qb..qe).enumerate() {
+                    let qi = w.q.row(i);
+                    for (ci, j) in (kb..ke).enumerate() {
+                        scores[ri * bs + ci] = if j <= i {
+                            dot(qi, w.k.row(j)) * scale
+                        } else {
+                            f32::NEG_INFINITY
+                        };
+                    }
+                }
+                // online softmax update per row
+                for (ri, i) in (qb..qe).enumerate() {
+                    let mut mb = f32::NEG_INFINITY;
+                    for ci in 0..(ke - kb) {
+                        mb = mb.max(scores[ri * bs + ci]);
+                    }
+                    if mb == f32::NEG_INFINITY {
+                        continue;
+                    }
+                    let mnew = mstat[ri].max(mb);
+                    let corr = (mstat[ri] - mnew).exp();
+                    let orow = o.row_mut(i);
+                    if corr != 1.0 {
+                        for c in orow.iter_mut() {
+                            *c *= corr;
+                        }
+                    }
+                    lstat[ri] *= corr;
+                    for (ci, j) in (kb..ke).enumerate() {
+                        let s = scores[ri * bs + ci];
+                        if s == f32::NEG_INFINITY {
+                            continue;
+                        }
+                        let p = (s - mnew).exp();
+                        lstat[ri] += p;
+                        let vrow = w.v.row(j);
+                        for c in 0..dv {
+                            orow[c] += p * vrow[c];
+                        }
+                    }
+                    mstat[ri] = mnew;
+                }
+            }
+            // normalize + record logsumexp
+            for (ri, i) in (qb..qe).enumerate() {
+                let inv = 1.0 / lstat[ri];
+                for c in o.row_mut(i) {
+                    *c *= inv;
+                }
+                lse[i] = mstat[ri] + lstat[ri].ln();
+            }
+        }
+        mem.output_bytes = o.bytes();
+        (o, lse, mem)
+    }
+}
+
+impl AttentionImpl for Flash {
+    fn name(&self) -> &'static str {
+        "flash"
+    }
+
+    fn analytic_mem(&self, n: usize, d: usize, dv: usize, fb: bool) -> Option<MemReport> {
+        // Mirrors fwd_with_lse / forward_backward allocations exactly.
+        let bs = self.block.max(1);
+        let fwd_ws = (bs * bs + 2 * bs + n) * 4;
+        Some(if fb {
+            MemReport {
+                workspace_bytes: fwd_ws + n * 4 + n * dv * 4,
+                output_bytes: (2 * n * d + n * dv) * 4,
+            }
+        } else {
+            MemReport { workspace_bytes: fwd_ws, output_bytes: n * dv * 4 }
+        })
+    }
+
+    fn forward(&self, w: &Workload) -> (Tensor, MemReport) {
+        let (o, _, mem) = self.fwd_with_lse(w);
+        (o, mem)
+    }
+
+    fn forward_backward(&self, w: &Workload) -> (Grads, MemReport) {
+        let n = w.n();
+        let d = w.q.shape[1];
+        let dv = w.v.shape[1];
+        let scale = 1.0 / (d as f32).sqrt();
+        let bs = self.block.max(1);
+        let (o, lse, mut mem) = self.fwd_with_lse(w);
+
+        // D_i = dout_i . o_i  (the FA2 "delta")
+        let mut delta = vec![0f32; n];
+        for i in 0..n {
+            delta[i] = dot(w.dout.row(i), o.row(i));
+        }
+        mem.workspace_bytes += n * 4 + o.bytes(); // delta + retained o/lse
+
+        let mut dq = Tensor::zeros(&[n, d]);
+        let mut dk = Tensor::zeros(&[n, d]);
+        let mut dvt = Tensor::zeros(&[n, dv]);
+
+        // Stream over key blocks; recompute P tile-by-tile.
+        for kb in (0..n).step_by(bs) {
+            let ke = (kb + bs).min(n);
+            for i in kb..n {
+                let qi = w.q.row(i);
+                let gi = w.dout.row(i);
+                let je = ke.min(i + 1);
+                for j in kb..je {
+                    let p = (dot(qi, w.k.row(j)) * scale - lse[i]).exp();
+                    // dv_j += p * dout_i
+                    let dvj = &mut dvt.data[j * dv..(j + 1) * dv];
+                    let vj = w.v.row(j);
+                    let da = dot(gi, vj);
+                    let dsij = p * (da - delta[i]) * scale;
+                    for c in 0..dv {
+                        dvj[c] += p * gi[c];
+                    }
+                    // dq_i += dS_ij k_j ; dk_j += dS_ij q_i
+                    let kj = w.k.row(j);
+                    let dqi = &mut dq.data[i * d..(i + 1) * d];
+                    for c in 0..d {
+                        dqi[c] += dsij * kj[c];
+                    }
+                    let dkj = &mut dk.data[j * d..(j + 1) * d];
+                    for c in 0..d {
+                        dkj[c] += dsij * qi[c];
+                    }
+                }
+            }
+        }
+        mem.output_bytes = dq.bytes() + dk.bytes() + dvt.bytes();
+        (Grads { dq, dk, dv: dvt }, mem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::naive::Naive;
+    use super::*;
+
+    #[test]
+    fn forward_matches_naive() {
+        for &n in &[7usize, 64, 130] {
+            let w = Workload::random(n, 16, 8, 5);
+            let (of, _) = Flash { block: 32 }.forward(&w);
+            let (on, _) = Naive.forward(&w);
+            assert!(of.max_abs_diff(&on) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_naive() {
+        let w = Workload::random(50, 8, 6, 6);
+        let (gf, _) = Flash { block: 16 }.forward_backward(&w);
+        let (gn, _) = Naive.forward_backward(&w);
+        assert!(gf.dq.max_abs_diff(&gn.dq) < 1e-4);
+        assert!(gf.dk.max_abs_diff(&gn.dk) < 1e-4);
+        assert!(gf.dv.max_abs_diff(&gn.dv) < 1e-4);
+    }
+
+    #[test]
+    fn memory_is_linear_not_quadratic() {
+        let w1 = Workload::random(256, 8, 8, 7);
+        let w2 = Workload::random(512, 8, 8, 7);
+        let f = Flash { block: 64 };
+        let (_, m1) = f.forward(&w1);
+        let (_, m2) = f.forward(&w2);
+        let ratio = m2.workspace_bytes as f64 / m1.workspace_bytes as f64;
+        assert!(ratio < 2.5, "ratio {ratio}"); // ~2x for 2x N
+    }
+
+    #[test]
+    fn block_size_does_not_change_result() {
+        let w = Workload::random(33, 4, 4, 8);
+        let (o1, _) = Flash { block: 4 }.forward(&w);
+        let (o2, _) = Flash { block: 64 }.forward(&w);
+        assert!(o1.max_abs_diff(&o2) < 1e-5);
+    }
+}

@@ -1,0 +1,233 @@
+//! Mamba-lite: selective state-space scan baseline for Tables 3–4.
+//!
+//! A faithful *shape* stand-in for Mamba's selective SSM (DESIGN.md §5):
+//! input-dependent (delta, B, C) computed from the value stream, then a
+//! linear recurrence per (channel, state) pair:
+//!
+//!   h_t = exp(-softplus(dt_t) * A) h_{t-1} + dt_t * B_t * x_t
+//!   y_t = C_t . h_t
+//!
+//! O(N * dv * n_state) time, O(dv * n_state) live state — the O(N) curve
+//! the paper's Tables 3–4 compare against. The backward pass recomputes the
+//! recurrence in reverse (storing only the forward h trajectory, which is
+//! what gives Mamba-style implementations their small-but-not-tiny memory).
+
+use super::{AttentionImpl, Grads, MemReport, Workload};
+use crate::tensor::Tensor;
+
+pub struct MambaLite {
+    pub n_state: usize,
+}
+
+impl Default for MambaLite {
+    fn default() -> Self {
+        MambaLite { n_state: 16 }
+    }
+}
+
+#[inline]
+fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+impl MambaLite {
+    /// Derive (dt, b, c) deterministically from q/k rows — stand-ins for the
+    /// learned projections; keeps the workload interface shared.
+    fn gates(&self, w: &Workload, t: usize) -> (f32, Vec<f32>, Vec<f32>) {
+        let d = w.q.shape[1];
+        let qr = w.q.row(t);
+        let kr = w.k.row(t);
+        let dt = softplus(qr[0]);
+        let ns = self.n_state;
+        let mut b = vec![0f32; ns];
+        let mut c = vec![0f32; ns];
+        for s in 0..ns {
+            b[s] = kr[s % d] * 0.5;
+            c[s] = qr[s % d] * 0.5;
+        }
+        (dt, b, c)
+    }
+
+    /// Forward storing the full h trajectory (needed by bwd).
+    fn fwd_traj(&self, w: &Workload) -> (Tensor, Vec<f32>, MemReport) {
+        let n = w.n();
+        let dv = w.v.shape[1];
+        let ns = self.n_state;
+        let mut y = Tensor::zeros(&[n, dv]);
+        // h trajectory: (N, dv, ns)
+        let mut htraj = vec![0f32; n * dv * ns];
+        let mut h = vec![0f32; dv * ns];
+        // A_s = (s+1)/ns: a spread of decay rates, as in S4/Mamba inits.
+        for t in 0..n {
+            let (dt, b, c) = self.gates(w, t);
+            let vr = w.v.row(t);
+            let yr = y.row_mut(t);
+            for ch in 0..dv {
+                let x = vr[ch];
+                let hrow = &mut h[ch * ns..(ch + 1) * ns];
+                let mut acc = 0.0;
+                for s in 0..ns {
+                    let a = (s + 1) as f32 / ns as f32;
+                    let decay = (-dt * a).exp();
+                    hrow[s] = decay * hrow[s] + dt * b[s] * x;
+                    acc += c[s] * hrow[s];
+                }
+                yr[ch] = acc;
+            }
+            htraj[t * dv * ns..(t + 1) * dv * ns].copy_from_slice(&h);
+        }
+        let mem = MemReport {
+            workspace_bytes: (htraj.len() + h.len()) * 4,
+            output_bytes: y.bytes(),
+        };
+        (y, htraj, mem)
+    }
+}
+
+impl AttentionImpl for MambaLite {
+    fn name(&self) -> &'static str {
+        "mamba"
+    }
+
+    fn forward(&self, w: &Workload) -> (Tensor, MemReport) {
+        // Forward-only does not need the trajectory: O(dv*ns) live state.
+        let n = w.n();
+        let dv = w.v.shape[1];
+        let ns = self.n_state;
+        let mut y = Tensor::zeros(&[n, dv]);
+        let mut h = vec![0f32; dv * ns];
+        for t in 0..n {
+            let (dt, b, c) = self.gates(w, t);
+            let vr = w.v.row(t);
+            let yr = y.row_mut(t);
+            for ch in 0..dv {
+                let x = vr[ch];
+                let hrow = &mut h[ch * ns..(ch + 1) * ns];
+                let mut acc = 0.0;
+                for s in 0..ns {
+                    let a = (s + 1) as f32 / ns as f32;
+                    hrow[s] = (-dt * a).exp() * hrow[s] + dt * b[s] * x;
+                    acc += c[s] * hrow[s];
+                }
+                yr[ch] = acc;
+            }
+        }
+        let mem = MemReport { workspace_bytes: h.len() * 4, output_bytes: y.bytes() };
+        (y, mem)
+    }
+
+    fn forward_backward(&self, w: &Workload) -> (Grads, MemReport) {
+        let n = w.n();
+        let dv = w.v.shape[1];
+        let d = w.q.shape[1];
+        let ns = self.n_state;
+        let (_, htraj, mut mem) = self.fwd_traj(w);
+
+        // Only d/dv is propagated exactly (the gates derive from q/k through
+        // fixed stand-in projections; their gradients flow in the real model
+        // at L2). dv_t = sum over s of adjoint paths.
+        let mut dvt = Tensor::zeros(&[n, dv]);
+        let dq = Tensor::zeros(&[n, d]);
+        let dk = Tensor::zeros(&[n, d]);
+
+        // Adjoint of h, swept in reverse.
+        let mut dh = vec![0f32; dv * ns];
+        for t in (0..n).rev() {
+            let (dt, b, c) = self.gates(w, t);
+            let g = w.dout.row(t);
+            for ch in 0..dv {
+                let dhrow = &mut dh[ch * ns..(ch + 1) * ns];
+                let mut dx = 0.0;
+                for s in 0..ns {
+                    let a = (s + 1) as f32 / ns as f32;
+                    // y_t contributes c_s to dh_t
+                    dhrow[s] += c[s] * g[ch];
+                    // x enters h via dt*b_s
+                    dx += dhrow[s] * dt * b[s];
+                    // pass adjoint to h_{t-1}
+                    dhrow[s] *= (-dt * a).exp();
+                }
+                dvt.row_mut(t)[ch] = dx;
+            }
+        }
+        let _ = htraj; // trajectory retained to model real memory behaviour
+        mem.workspace_bytes += dh.len() * 4;
+        mem.output_bytes = dq.bytes() + dk.bytes() + dvt.bytes();
+        (Grads { dq, dk, dv: dvt }, mem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_is_causal() {
+        let mut w = Workload::random(32, 8, 4, 0);
+        let (y1, _) = MambaLite::default().forward(&w);
+        // poison the tail; prefix outputs unchanged
+        for i in 16..32 {
+            for c in 0..4 {
+                w.v.row_mut(i)[c] = 1e5;
+            }
+        }
+        let (y2, _) = MambaLite::default().forward(&w);
+        for i in 0..16 {
+            for c in 0..4 {
+                assert!((y1.row(i)[c] - y2.row(i)[c]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn state_decays() {
+        // An impulse at t=0 should fade: |y_t| decreasing for a lone input.
+        let n = 64;
+        let mut w = Workload::random(n, 8, 1, 1);
+        for i in 0..n {
+            w.v.row_mut(i)[0] = if i == 0 { 1.0 } else { 0.0 };
+            // constant gates
+            for c in 0..8 {
+                w.q.row_mut(i)[c] = 0.5;
+                w.k.row_mut(i)[c] = 0.5;
+            }
+        }
+        let (y, _) = MambaLite::default().forward(&w);
+        let early = y.row(1)[0].abs();
+        let late = y.row(40)[0].abs();
+        assert!(late < early, "late {late} !< early {early}");
+    }
+
+    #[test]
+    fn dv_grad_matches_fd() {
+        let n = 10;
+        let dv = 2;
+        let m = MambaLite { n_state: 4 };
+        let w = Workload::random(n, 4, dv, 2);
+        let (g, _) = m.forward_backward(&w);
+        let loss = |vdata: &[f32]| {
+            let w2 = Workload {
+                q: w.q.clone(),
+                k: w.k.clone(),
+                v: Tensor::from_vec(&[n, dv], vdata.to_vec()),
+                dout: w.dout.clone(),
+            };
+            let (y, _) = m.forward(&w2);
+            y.data.iter().zip(&w2.dout.data).map(|(a, b)| a * b).sum::<f32>()
+        };
+        let mut v0 = w.v.data.clone();
+        super::super::numeric_grad_check(loss, &mut v0, &g.dv.data, 1e-3);
+    }
+
+    #[test]
+    fn forward_memory_is_constant_in_n() {
+        let m = MambaLite::default();
+        let (_, m1) = m.forward(&Workload::random(256, 8, 8, 3));
+        let (_, m2) = m.forward(&Workload::random(2048, 8, 8, 3));
+        assert_eq!(m1.workspace_bytes, m2.workspace_bytes);
+    }
+}

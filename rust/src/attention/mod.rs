@@ -1,0 +1,128 @@
+//! Rust-native attention kernels — the efficiency-benchmark substrate.
+//!
+//! The paper's Tables 3 and 4 time four implementations on a GPU (Torch
+//! attention, FlashAttention, Mamba, ZETA/Triton). Our testbed is CPU, so
+//! these are faithful CPU implementations with the same *asymptotic*
+//! structure (see DESIGN.md §5 substitutions):
+//!
+//!   naive  — materializes the full causal score matrix. O(N²) time+memory.
+//!   flash  — blocked streaming softmax, recompute backward.
+//!            O(N²) time, O(N) extra memory.
+//!   zeta   — Z-order sort + windowed candidate search + Cauchy top-k
+//!            attention (paper Algorithm 1 + Appendix E backward).
+//!            O(N log N) time, O(N·k) memory.
+//!   mamba  — selective-SSM scan baseline. O(N) time, O(1)-per-step memory.
+//!
+//! Every implementation reports a `MemReport` whose `workspace_bytes` is the
+//! *actual* sum of buffer bytes it allocated, so Table 4 is measured, not
+//! modeled.
+
+pub mod flash;
+pub mod mamba;
+pub mod naive;
+pub mod zeta;
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One attention problem instance (single head; batch = repeat).
+pub struct Workload {
+    pub q: Tensor,    // (N, d)
+    pub k: Tensor,    // (N, d)
+    pub v: Tensor,    // (N, dv)
+    pub dout: Tensor, // (N, dv) upstream gradient for fwd+bwd timing
+}
+
+impl Workload {
+    pub fn random(n: usize, d: usize, dv: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        Workload {
+            q: Tensor::randn(&[n, d], &mut rng, 1.0),
+            k: Tensor::randn(&[n, d], &mut rng, 1.0),
+            v: Tensor::randn(&[n, dv], &mut rng, 1.0),
+            dout: Tensor::randn(&[n, dv], &mut rng, 1.0),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.q.shape[0]
+    }
+
+    pub fn input_bytes(&self) -> usize {
+        self.q.bytes() + self.k.bytes() + self.v.bytes()
+    }
+}
+
+/// Gradients w.r.t. the workload inputs.
+pub struct Grads {
+    pub dq: Tensor,
+    pub dk: Tensor,
+    pub dv: Tensor,
+}
+
+/// Memory accounting for one run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemReport {
+    /// Bytes of intermediate buffers actually allocated by the kernel
+    /// (excludes inputs and final outputs).
+    pub workspace_bytes: usize,
+    /// Bytes of outputs (o, or grads for fwd+bwd).
+    pub output_bytes: usize,
+}
+
+impl MemReport {
+    pub fn total_with_inputs(&self, w: &Workload) -> usize {
+        self.workspace_bytes + self.output_bytes + w.input_bytes()
+    }
+
+    pub fn add(&mut self, t: &Tensor) {
+        self.workspace_bytes += t.bytes();
+    }
+}
+
+/// The interface every benchmark implementation provides.
+pub trait AttentionImpl {
+    fn name(&self) -> &'static str;
+    /// Forward only: returns output (N, dv) and memory report.
+    fn forward(&self, w: &Workload) -> (Tensor, MemReport);
+    /// Forward + backward: returns grads and memory report.
+    fn forward_backward(&self, w: &Workload) -> (Grads, MemReport);
+    /// Analytic memory model for problem sizes too expensive to *execute*
+    /// on this testbed (Table 4's starred rows). None = always measure.
+    fn analytic_mem(&self, _n: usize, _d: usize, _dv: usize, _fb: bool) -> Option<MemReport> {
+        None
+    }
+}
+
+/// All benchmark implementations at their paper-default settings.
+pub fn all_impls() -> Vec<Box<dyn AttentionImpl>> {
+    vec![
+        Box::new(naive::Naive),
+        Box::new(flash::Flash { block: 128 }),
+        Box::new(zeta::ZetaNative::default()),
+        Box::new(mamba::MambaLite::default()),
+    ]
+}
+
+#[cfg(test)]
+pub(crate) fn numeric_grad_check<F>(f: F, x0: &mut [f32], analytic: &[f32], atol: f32)
+where
+    F: Fn(&[f32]) -> f32,
+{
+    // Central differences over every coordinate (use tiny problems only).
+    let h = 1e-3;
+    for i in 0..x0.len() {
+        let orig = x0[i];
+        x0[i] = orig + h;
+        let fp = f(x0);
+        x0[i] = orig - h;
+        let fm = f(x0);
+        x0[i] = orig;
+        let fd = (fp - fm) / (2.0 * h);
+        assert!(
+            (fd - analytic[i]).abs() <= atol + 0.05 * fd.abs().max(analytic[i].abs()),
+            "grad[{i}]: fd {fd} vs analytic {}",
+            analytic[i]
+        );
+    }
+}

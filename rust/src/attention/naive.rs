@@ -1,0 +1,200 @@
+//! Naive causal softmax attention — the "Torch Attention" baseline of
+//! Tables 3–4: materializes the full (N, N) score matrix in both passes.
+
+use super::{AttentionImpl, Grads, MemReport, Workload};
+use crate::tensor::{dot, Tensor};
+
+pub struct Naive;
+
+impl Naive {
+    /// Returns (output, attention matrix) — the bwd pass reuses A.
+    fn fwd_full(&self, w: &Workload) -> (Tensor, Tensor) {
+        let n = w.n();
+        let d = w.q.shape[1];
+        let dv = w.v.shape[1];
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut a = Tensor::zeros(&[n, n]);
+        let mut o = Tensor::zeros(&[n, dv]);
+        for i in 0..n {
+            let qi = w.q.row(i);
+            let arow = &mut a.data[i * n..(i + 1) * n];
+            let mut maxv = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let s = dot(qi, w.k.row(j)) * scale;
+                arow[j] = s;
+                maxv = maxv.max(s);
+            }
+            let mut z = 0.0;
+            for v in arow[..=i].iter_mut() {
+                *v = (*v - maxv).exp();
+                z += *v;
+            }
+            let inv = 1.0 / z;
+            for v in arow[..=i].iter_mut() {
+                *v *= inv;
+            }
+            let orow = &mut o.data[i * dv..(i + 1) * dv];
+            for j in 0..=i {
+                let aij = arow[j];
+                let vrow = w.v.row(j);
+                for c in 0..dv {
+                    orow[c] += aij * vrow[c];
+                }
+            }
+        }
+        (o, a)
+    }
+}
+
+impl AttentionImpl for Naive {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn analytic_mem(&self, n: usize, d: usize, dv: usize, fb: bool) -> Option<MemReport> {
+        // fwd: A (N,N); fwd+bwd: A + dS (N,N each) + retained o.
+        let quad = n * n * 4;
+        Some(if fb {
+            MemReport {
+                workspace_bytes: 2 * quad + n * dv * 4,
+                output_bytes: (2 * n * d + n * dv) * 4,
+            }
+        } else {
+            MemReport { workspace_bytes: quad, output_bytes: n * dv * 4 }
+        })
+    }
+
+    fn forward(&self, w: &Workload) -> (Tensor, MemReport) {
+        let (o, a) = self.fwd_full(w);
+        let mut mem = MemReport::default();
+        mem.add(&a); // the O(N^2) matrix is workspace
+        mem.output_bytes = o.bytes();
+        (o, mem)
+    }
+
+    fn forward_backward(&self, w: &Workload) -> (Grads, MemReport) {
+        let n = w.n();
+        let d = w.q.shape[1];
+        let dv = w.v.shape[1];
+        let scale = 1.0 / (d as f32).sqrt();
+        let (o, a) = self.fwd_full(w);
+
+        let mut dq = Tensor::zeros(&[n, d]);
+        let mut dk = Tensor::zeros(&[n, d]);
+        let mut dvt = Tensor::zeros(&[n, dv]);
+        let mut ds = Tensor::zeros(&[n, n]); // O(N^2) workspace again
+
+        // dv_j = sum_i A_ij dout_i ; dA_ij = dout_i . v_j
+        // dS_ij = A_ij (dA_ij - sum_l A_il dA_il)
+        for i in 0..n {
+            let gi = w.dout.row(i);
+            let arow = &a.data[i * n..(i + 1) * n];
+            // rowdot = sum_l A_il (dout_i . v_l) = dout_i . o_i
+            let rowdot = dot(gi, o.row(i));
+            let dsrow = &mut ds.data[i * n..(i + 1) * n];
+            for j in 0..=i {
+                let da = dot(gi, w.v.row(j));
+                dsrow[j] = arow[j] * (da - rowdot);
+                // accumulate dv
+                let dvj = &mut dvt.data[j * dv..(j + 1) * dv];
+                for c in 0..dv {
+                    dvj[c] += arow[j] * gi[c];
+                }
+            }
+        }
+        // dq_i = scale * sum_j dS_ij k_j ; dk_j = scale * sum_i dS_ij q_i
+        for i in 0..n {
+            let dsrow = &ds.data[i * n..(i + 1) * n];
+            let dqi = &mut dq.data[i * d..(i + 1) * d];
+            for j in 0..=i {
+                let s = dsrow[j] * scale;
+                if s == 0.0 {
+                    continue;
+                }
+                let kj = w.k.row(j);
+                for c in 0..d {
+                    dqi[c] += s * kj[c];
+                }
+            }
+        }
+        for j in 0..n {
+            let dkj = &mut dk.data[j * d..(j + 1) * d];
+            for i in j..n {
+                let s = ds.data[i * n + j] * scale;
+                if s == 0.0 {
+                    continue;
+                }
+                let qi = w.q.row(i);
+                for c in 0..d {
+                    dkj[c] += s * qi[c];
+                }
+            }
+        }
+
+        let mut mem = MemReport::default();
+        mem.add(&a);
+        mem.add(&ds);
+        mem.workspace_bytes += o.bytes(); // o is retained for the backward
+        mem.output_bytes = dq.bytes() + dk.bytes() + dvt.bytes();
+        (Grads { dq, dk, dv: dvt }, mem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loss(q: &[f32], w: &Workload, n: usize, d: usize) -> f32 {
+        // scalar loss = sum(o * dout) with q replaced
+        let mut w2 = Workload {
+            q: Tensor::from_vec(&[n, d], q.to_vec()),
+            k: w.k.clone(),
+            v: w.v.clone(),
+            dout: w.dout.clone(),
+        };
+        let (o, _) = Naive.forward(&w2);
+        let s: f32 = o.data.iter().zip(&w2.dout.data).map(|(a, b)| a * b).sum();
+        w2.q.data.clear();
+        s
+    }
+
+    #[test]
+    fn output_rows_are_convex_combos() {
+        let w = Workload::random(16, 8, 4, 0);
+        let mut wc = w;
+        wc.v = Tensor::from_vec(&[16, 4], vec![1.0; 64]);
+        let (o, _) = Naive.forward(&wc);
+        for v in &o.data {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn first_row_attends_only_to_itself() {
+        let w = Workload::random(8, 4, 4, 1);
+        let (o, _) = Naive.forward(&w);
+        for c in 0..4 {
+            assert!((o.data[c] - w.v.data[c]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn grad_q_matches_finite_difference() {
+        let n = 6;
+        let d = 3;
+        let w = Workload::random(n, d, 2, 2);
+        let (g, _) = Naive.forward_backward(&w);
+        let mut q = w.q.data.clone();
+        super::super::numeric_grad_check(|qq| loss(qq, &w, n, d), &mut q, &g.dq.data, 1e-3);
+    }
+
+    #[test]
+    fn memory_is_quadratic() {
+        let w1 = Workload::random(64, 8, 8, 3);
+        let w2 = Workload::random(128, 8, 8, 3);
+        let (_, m1) = Naive.forward(&w1);
+        let (_, m2) = Naive.forward(&w2);
+        let ratio = m2.workspace_bytes as f64 / m1.workspace_bytes as f64;
+        assert!((ratio - 4.0).abs() < 0.2, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Dynamic batcher: vLLM-router-style request aggregation.
+//!
+//! The compiled forward graphs have a *static* batch dimension B, so the
+//! batcher's job is to fill as many of the B slots as possible without
+//! letting any request wait longer than `max_delay`. Policy:
+//!
+//! * a batch closes as soon as B requests are queued, or
+//! * when the oldest queued request has waited `max_delay`.
+//!
+//! Unfilled slots are padded (token 0 rows) and their outputs discarded —
+//! the padding cost is the price of static shapes, measured by
+//! `Metrics::mean_batch_size` and benchmarked in `benches/ablations.rs`.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// A queued request with its arrival time.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub arrived: Instant,
+}
+
+/// Decision returned by [`Batcher::poll`].
+#[derive(Debug, PartialEq)]
+pub enum Decision {
+    /// Close a batch of this size now.
+    Fire(usize),
+    /// Wait at most this long before polling again.
+    Wait(Duration),
+    /// Queue empty.
+    Idle,
+}
+
+/// Pure batching policy over an internal FIFO queue (transport-agnostic —
+/// the server feeds it and executes the fired batches; tests drive it
+/// directly with synthetic clocks).
+pub struct Batcher<T> {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_delay: Duration) -> Self {
+        assert!(max_batch > 0);
+        Batcher { max_batch, max_delay, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, payload: T) {
+        self.queue.push_back(Pending { payload, arrived: Instant::now() });
+    }
+
+    pub fn push_at(&mut self, payload: T, arrived: Instant) {
+        self.queue.push_back(Pending { payload, arrived });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Batching decision at time `now`.
+    pub fn poll(&self, now: Instant) -> Decision {
+        let Some(oldest) = self.queue.front() else {
+            return Decision::Idle;
+        };
+        if self.queue.len() >= self.max_batch {
+            return Decision::Fire(self.max_batch);
+        }
+        let waited = now.saturating_duration_since(oldest.arrived);
+        if waited >= self.max_delay {
+            return Decision::Fire(self.queue.len());
+        }
+        Decision::Wait(self.max_delay - waited)
+    }
+
+    /// Remove and return the next `n` requests (FIFO).
+    pub fn take(&mut self, n: usize) -> Vec<Pending<T>> {
+        let n = n.min(self.queue.len());
+        self.queue.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_when_full() {
+        let mut b = Batcher::new(4, Duration::from_millis(100));
+        let now = Instant::now();
+        for i in 0..4 {
+            b.push_at(i, now);
+        }
+        assert_eq!(b.poll(now), Decision::Fire(4));
+    }
+
+    #[test]
+    fn fires_partial_after_deadline() {
+        let mut b = Batcher::new(8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push_at(1, t0);
+        b.push_at(2, t0);
+        match b.poll(t0) {
+            Decision::Wait(d) => assert!(d <= Duration::from_millis(10)),
+            other => panic!("{other:?}"),
+        }
+        let later = t0 + Duration::from_millis(11);
+        assert_eq!(b.poll(later), Decision::Fire(2));
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let b: Batcher<u32> = Batcher::new(4, Duration::from_millis(5));
+        assert_eq!(b.poll(Instant::now()), Decision::Idle);
+    }
+
+    #[test]
+    fn take_is_fifo_and_never_exceeds() {
+        let mut b = Batcher::new(3, Duration::from_millis(5));
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push_at(i, now);
+        }
+        assert_eq!(b.poll(now), Decision::Fire(3));
+        let taken = b.take(3);
+        assert_eq!(taken.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.len(), 2);
+        let t2 = b.take(10);
+        assert_eq!(t2.len(), 2);
+    }
+
+    #[test]
+    fn no_request_dropped_property() {
+        use crate::util::prop;
+        prop::check(50, 0xBA7C4, |rng| {
+            let max_b = 1 + rng.usize_below(8);
+            let mut b = Batcher::new(max_b, Duration::from_millis(1));
+            let n = rng.usize_below(50);
+            let now = Instant::now();
+            for i in 0..n {
+                b.push_at(i, now);
+            }
+            let mut got = Vec::new();
+            let late = now + Duration::from_millis(2);
+            loop {
+                match b.poll(late) {
+                    Decision::Fire(k) => {
+                        assert!(k <= max_b);
+                        got.extend(b.take(k).into_iter().map(|p| p.payload));
+                    }
+                    Decision::Idle => break,
+                    Decision::Wait(_) => unreachable!("deadline passed"),
+                }
+            }
+            prop::assert_eq_prop(&got, &(0..n).collect::<Vec<_>>())
+        });
+    }
+}

@@ -1,0 +1,114 @@
+//! Serving metrics: latency percentiles, queue depth, throughput.
+
+use std::time::{Duration, Instant};
+
+/// Collects request latencies and computes robust summary statistics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    pub completed: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+        self.finished = Some(Instant::now());
+        self.latencies_us.push(latency.as_micros() as u64);
+        self.completed += 1;
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batched_requests += size as u64;
+    }
+
+    pub fn percentile(&self, p: f64) -> Option<Duration> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        Some(Duration::from_micros(v[idx.min(v.len() - 1)]))
+    }
+
+    pub fn mean(&self) -> Option<Duration> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let sum: u64 = self.latencies_us.iter().sum();
+        Some(Duration::from_micros(sum / self.latencies_us.len() as u64))
+    }
+
+    /// Completed requests per second over the observed span.
+    pub fn throughput(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(s), Some(f)) if f > s => self.completed as f64 / (f - s).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    /// Mean requests per executed batch (batching efficiency).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} p50={:?} p99={:?} mean={:?} batch_avg={:.1} thpt={:.1}/s",
+            self.completed,
+            self.percentile(50.0).unwrap_or_default(),
+            self.percentile(99.0).unwrap_or_default(),
+            self.mean().unwrap_or_default(),
+            self.mean_batch_size(),
+            self.throughput(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record(Duration::from_micros(i * 10));
+        }
+        let p50 = m.percentile(50.0).unwrap();
+        let p99 = m.percentile(99.0).unwrap();
+        assert!(p50 < p99);
+        assert_eq!(m.completed, 100);
+        assert!(m.mean().unwrap() > Duration::from_micros(400));
+    }
+
+    #[test]
+    fn empty_metrics_are_none() {
+        let m = Metrics::new();
+        assert!(m.percentile(50.0).is_none());
+        assert_eq!(m.throughput(), 0.0);
+    }
+
+    #[test]
+    fn batch_efficiency() {
+        let mut m = Metrics::new();
+        m.record_batch(8);
+        m.record_batch(4);
+        assert_eq!(m.mean_batch_size(), 6.0);
+    }
+}

@@ -1,0 +1,336 @@
+//! Serving coordinator — the L3 request path (vLLM-router-lite).
+//!
+//! Architecture (std threads; the offline build has no tokio):
+//!
+//! ```text
+//!   clients ──mpsc──▶ [scheduler thread: Batcher + own PJRT engine] ─▶ exe
+//!      ▲                                                   │
+//!      └──────────── per-request oneshot channel ◀─────────┘
+//! ```
+//!
+//! * PJRT handles from the `xla` crate are `!Send` (Rc internals), so the
+//!   scheduler thread constructs and owns its *own* [`Engine`]; the rest of
+//!   the process only exchanges `Send` types (tokens, `HostTensor`s) with
+//!   it over channels.
+//! * Requests carry a token prefix; responses carry the model's next-token
+//!   logits (LM presets) or class logits (cls presets).
+//! * The scheduler aggregates up to the graph's static batch B with a
+//!   `max_delay` deadline ([`batcher::Batcher`]), pads the tail, executes,
+//!   and fans results back out.
+//! * Backpressure: beyond `queue_cap` in-flight requests, `infer` fails
+//!   fast with a Busy error instead of growing the queue without bound.
+
+pub mod batcher;
+pub mod metrics;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{Engine, HostTensor};
+use batcher::{Batcher, Decision};
+use metrics::Metrics;
+
+/// Model output for one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// LM: next-token logits at the last prefix position.
+    /// cls: class logits.
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+}
+
+struct Job {
+    tokens: Vec<i32>,
+    submitted: Instant,
+    reply: mpsc::Sender<Result<Response>>,
+}
+
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: String,
+    pub preset: String,
+    pub max_delay: Duration,
+    pub queue_cap: usize,
+    pub seed: i32,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            artifacts_dir: crate::ARTIFACTS_DIR.into(),
+            preset: "serve_cls".into(),
+            max_delay: Duration::from_millis(5),
+            queue_cap: 256,
+            seed: 0,
+        }
+    }
+}
+
+/// Handle for submitting requests; cheap to clone across client threads.
+#[derive(Clone)]
+pub struct ClientHandle {
+    tx: mpsc::Sender<Job>,
+    depth: Arc<AtomicUsize>,
+    queue_cap: usize,
+}
+
+impl ClientHandle {
+    /// Submit and wait for the response (blocking).
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
+        if self.depth.load(Ordering::Relaxed) >= self.queue_cap {
+            bail!("server busy: queue at capacity {}", self.queue_cap);
+        }
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Job { tokens, submitted: Instant::now(), reply: rtx })
+            .map_err(|_| anyhow!("server stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+}
+
+pub struct Server {
+    handle: ClientHandle,
+    stop: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<Result<()>>>,
+    pub metrics: Arc<Mutex<Metrics>>,
+}
+
+impl Server {
+    /// Start the scheduler thread. Model weights come from the preset's
+    /// `init` graph with `cfg.seed`, unless `params` (e.g. loaded from a
+    /// trainer checkpoint) are supplied.
+    pub fn start(cfg: ServerConfig, params: Option<Vec<HostTensor>>) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let depth = Arc::new(AtomicUsize::new(0));
+        // Report startup success/failure back before returning.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let stop2 = stop.clone();
+        let metrics2 = metrics.clone();
+        let depth2 = depth.clone();
+        let cfg2 = cfg.clone();
+
+        let worker = std::thread::Builder::new()
+            .name("zeta-scheduler".into())
+            .spawn(move || -> Result<()> {
+                // The engine lives on this thread (PJRT handles are !Send).
+                let setup = (|| -> Result<_> {
+                    let engine = Engine::new(&cfg2.artifacts_dir)?;
+                    let pspec = engine.manifest.preset(&cfg2.preset)?;
+                    let info = (pspec.batch, pspec.seq_len(), pspec.is_lm(), pspec.vocab());
+                    let exe = engine.load(&cfg2.preset, "forward")?;
+                    let params = match params {
+                        Some(p) => p,
+                        None => engine.init_params(&cfg2.preset, cfg2.seed)?,
+                    };
+                    Ok((engine, exe, params, info))
+                })();
+                let (_engine, exe, params, (max_batch, seq_len, is_lm, vocab)) = match setup {
+                    Ok(v) => {
+                        let _ = ready_tx.send(Ok(()));
+                        v
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow!("{e:#}")));
+                        return Err(e);
+                    }
+                };
+
+                let mut batcher: Batcher<Job> = Batcher::new(max_batch, cfg2.max_delay);
+                loop {
+                    match batcher.poll(Instant::now()) {
+                        Decision::Fire(k) => {
+                            let jobs = batcher.take(k);
+                            depth2.fetch_sub(jobs.len(), Ordering::Relaxed);
+                            run_batch(
+                                &exe, &params, jobs, max_batch, seq_len, is_lm, vocab,
+                                &metrics2,
+                            );
+                            continue;
+                        }
+                        Decision::Wait(d) => match rx.recv_timeout(d) {
+                            Ok(job) => {
+                                batcher.push(job);
+                                while batcher.len() < max_batch {
+                                    match rx.try_recv() {
+                                        Ok(j) => batcher.push(j),
+                                        Err(_) => break,
+                                    }
+                                }
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {}
+                        },
+                        Decision::Idle => {
+                            match rx.recv_timeout(Duration::from_millis(2)) {
+                                Ok(job) => batcher.push(job),
+                                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                    if batcher.is_empty() {
+                                        break;
+                                    }
+                                }
+                            }
+                            if stop2.load(Ordering::Relaxed) && batcher.is_empty() {
+                                break;
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            })
+            .expect("spawn scheduler");
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("scheduler died during startup"))??;
+
+        Ok(Server {
+            handle: ClientHandle { tx, depth, queue_cap: cfg.queue_cap },
+            stop,
+            worker: Some(worker),
+            metrics,
+        })
+    }
+
+    pub fn client(&self) -> ClientHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the scheduler after draining queued work.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    exe: &crate::runtime::Executable,
+    params: &[HostTensor],
+    jobs: Vec<batcher::Pending<Job>>,
+    max_batch: usize,
+    seq_len: usize,
+    is_lm: bool,
+    vocab: usize,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    let mut x = vec![0i32; max_batch * seq_len];
+    let mut last_pos = vec![0usize; jobs.len()];
+    for (r, p) in jobs.iter().enumerate() {
+        let t = &p.payload.tokens;
+        let n = t.len().min(seq_len);
+        x[r * seq_len..r * seq_len + n].copy_from_slice(&t[..n]);
+        last_pos[r] = n.saturating_sub(1);
+    }
+    let mut inputs = vec![HostTensor::I32(vec![max_batch, seq_len], x)];
+    inputs.extend(params.iter().cloned());
+    let result = exe.run(&inputs);
+    metrics.lock().unwrap().record_batch(jobs.len());
+    match result {
+        Ok(out) => {
+            let logits = out[0].as_f32().unwrap_or(&[]);
+            for (r, p) in jobs.into_iter().enumerate() {
+                let row = if is_lm {
+                    let base = (r * seq_len + last_pos[r]) * vocab;
+                    logits[base..base + vocab].to_vec()
+                } else {
+                    let ncls = logits.len() / max_batch;
+                    logits[r * ncls..(r + 1) * ncls].to_vec()
+                };
+                let latency = p.payload.submitted.elapsed();
+                metrics.lock().unwrap().record(latency);
+                let _ = p.payload.reply.send(Ok(Response { logits: row, latency }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("batch execution failed: {e}");
+            for p in jobs {
+                let _ = p.payload.reply.send(Err(anyhow!(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! End-to-end serving tests over real artifacts (skip when absent).
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        let ok = std::path::Path::new(crate::ARTIFACTS_DIR).join("manifest.json").exists();
+        if !ok {
+            eprintln!("skipping coordinator test: artifacts/ missing");
+        }
+        ok
+    }
+
+    #[test]
+    fn serves_single_request() {
+        if !have_artifacts() {
+            return;
+        }
+        let srv = Server::start(ServerConfig::default(), None).unwrap();
+        let client = srv.client();
+        let resp = client.infer(vec![5, 6, 7, 8]).unwrap();
+        assert_eq!(resp.logits.len(), 2); // serve_cls has 2 classes
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn serves_concurrent_clients_and_batches() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = ServerConfig { max_delay: Duration::from_millis(20), ..Default::default() };
+        let srv = Server::start(cfg, None).unwrap();
+        let mut handles = Vec::new();
+        for i in 0..12 {
+            let c = srv.client();
+            handles.push(std::thread::spawn(move || {
+                c.infer(vec![(i % 50) as i32 + 1; 16]).unwrap()
+            }));
+        }
+        for h in handles {
+            let r = h.join().unwrap();
+            assert_eq!(r.logits.len(), 2);
+        }
+        let m = srv.metrics.lock().unwrap();
+        assert_eq!(m.completed, 12);
+        assert!(m.mean_batch_size() > 1.0, "no batching happened: {}", m.summary());
+        drop(m);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn identical_inputs_identical_outputs() {
+        if !have_artifacts() {
+            return;
+        }
+        let srv = Server::start(ServerConfig::default(), None).unwrap();
+        let c = srv.client();
+        let a = c.infer(vec![3; 32]).unwrap();
+        let b = c.infer(vec![3; 32]).unwrap();
+        assert_eq!(a.logits, b.logits);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn bad_preset_fails_at_startup() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = ServerConfig { preset: "nonexistent".into(), ..Default::default() };
+        assert!(Server::start(cfg, None).is_err());
+    }
+}

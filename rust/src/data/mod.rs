@@ -1,0 +1,110 @@
+//! Dataset substrates: every workload the paper's evaluation needs,
+//! generated deterministically in Rust (no Python at run time).
+//!
+//! * [`mqar`] — MULTI-QUERY ASSOCIATIVE RECALL (Arora et al., 2024), the
+//!   synthetic recall task of Figure 2.
+//! * [`lra`] — LRA-style synthetic long-range tasks (Table 2/5): ListOps,
+//!   Text, Retrieval, Image, Pathfinder. See DESIGN.md §5 for how each
+//!   preserves the structure of the original benchmark.
+//! * [`corpus`] — a Zipf/Markov "wiki-like" token stream with planted
+//!   long-range copy dependencies, the WikiText-103 stand-in (Table 1).
+
+pub mod corpus;
+pub mod lra;
+pub mod mqar;
+
+use crate::util::rng::Rng;
+
+/// One training/eval batch in the layout the AOT graphs expect.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq_len: usize,
+    /// Tokens, row-major (batch, seq_len).
+    pub x: Vec<i32>,
+    /// Targets: (batch, seq_len) for LM tasks, (batch,) for classification.
+    pub y: Vec<i32>,
+    /// Loss weights, same shape as y.
+    pub w: Vec<f32>,
+}
+
+impl Batch {
+    pub fn new_lm(batch: usize, seq_len: usize) -> Self {
+        Batch {
+            batch,
+            seq_len,
+            x: vec![0; batch * seq_len],
+            y: vec![0; batch * seq_len],
+            w: vec![0.0; batch * seq_len],
+        }
+    }
+
+    pub fn new_cls(batch: usize, seq_len: usize) -> Self {
+        Batch {
+            batch,
+            seq_len,
+            x: vec![0; batch * seq_len],
+            y: vec![0; batch],
+            w: vec![1.0; batch],
+        }
+    }
+
+    pub fn x_row_mut(&mut self, b: usize) -> &mut [i32] {
+        &mut self.x[b * self.seq_len..(b + 1) * self.seq_len]
+    }
+}
+
+/// A task that can emit train and eval batches of fixed geometry.
+pub trait Task {
+    /// Human name ("mqar", "listops", …).
+    fn name(&self) -> &str;
+    /// Fill a fresh batch; `rng` supplies all randomness.
+    fn sample(&self, batch: usize, rng: &mut Rng) -> Batch;
+    fn seq_len(&self) -> usize;
+}
+
+/// Construct the task matching an artifact preset's config (see
+/// python/compile/presets.py: `lra_task` key for LRA presets, task=="lm"
+/// with vocab 256 for corpus LM, vocab 64 for MQAR).
+pub fn task_for_config(cfg: &crate::util::json::Json) -> Box<dyn Task> {
+    let seq_len = cfg.get("seq_len").as_usize().expect("seq_len");
+    if let Some(lra_name) = cfg.get("lra_task").as_str() {
+        return lra::make_task(lra_name, seq_len);
+    }
+    match cfg.get("task").as_str() {
+        Some("lm") if cfg.get("vocab").as_usize() == Some(64) => {
+            Box::new(mqar::Mqar::new(seq_len))
+        }
+        Some("lm") => Box::new(corpus::CorpusLm::new(seq_len, 0xC0FFEE)),
+        other => panic!("no task for config task={other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_layouts() {
+        let lm = Batch::new_lm(2, 8);
+        assert_eq!(lm.x.len(), 16);
+        assert_eq!(lm.y.len(), 16);
+        let cls = Batch::new_cls(3, 8);
+        assert_eq!(cls.y.len(), 3);
+        assert_eq!(cls.w, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn task_dispatch() {
+        let cfg = crate::util::json::parse(
+            r#"{"task":"lm","vocab":64,"seq_len":64}"#,
+        )
+        .unwrap();
+        assert_eq!(task_for_config(&cfg).name(), "mqar");
+        let cfg = crate::util::json::parse(
+            r#"{"task":"cls","vocab":256,"seq_len":128,"lra_task":"listops"}"#,
+        )
+        .unwrap();
+        assert_eq!(task_for_config(&cfg).name(), "listops");
+    }
+}

@@ -1,0 +1,182 @@
+//! MULTI-QUERY ASSOCIATIVE RECALL (MQAR) — the synthetic recall task of
+//! Figure 2 (Arora et al., 2024, "Zoology").
+//!
+//! Layout of one sequence of length N with P key-value pairs:
+//!
+//!   [k1 v1 k2 v2 … kP vP | q_a ?_a q_b ?_b …]
+//!
+//! The first 2P positions present distinct key/value associations; the rest
+//! of the sequence alternates (query-key, answer-value). Training loss and
+//! accuracy are measured ONLY at positions whose next token is an answer
+//! value (weight mask), matching the Zoology evaluation protocol.
+//!
+//! Vocabulary (64 tokens, matches the `vocab: 64` MQAR presets):
+//!   0           pad
+//!   1           separator between the KV prefix and the query section
+//!   2 .. 32     key space (30 keys)
+//!   33 .. 63    value space (31 values)
+
+use super::{Batch, Task};
+use crate::util::rng::Rng;
+
+pub const VOCAB: usize = 64;
+const KEY_BASE: i32 = 2;
+const NUM_KEYS: i32 = 30;
+const VAL_BASE: i32 = 33;
+const NUM_VALS: i32 = 31;
+const SEP: i32 = 1;
+
+pub struct Mqar {
+    pub seq_len: usize,
+    pub pairs: usize,
+}
+
+impl Mqar {
+    pub fn new(seq_len: usize) -> Self {
+        // 8 pairs for N=64 (Zoology's default density scales with N).
+        Mqar { seq_len, pairs: (seq_len / 8).clamp(4, 16) }
+    }
+
+    /// Fill one row; returns (keys, vals) used.
+    fn fill_row(&self, x: &mut [i32], y: &mut [i32], w: &mut [f32], rng: &mut Rng) {
+        let n = self.seq_len;
+        let p = self.pairs;
+        let keys: Vec<i32> = rng
+            .sample_distinct(NUM_KEYS as usize, p)
+            .into_iter()
+            .map(|i| KEY_BASE + i as i32)
+            .collect();
+        let vals: Vec<i32> =
+            (0..p).map(|_| VAL_BASE + rng.below(NUM_VALS as u64) as i32).collect();
+
+        for i in 0..p {
+            x[2 * i] = keys[i];
+            x[2 * i + 1] = vals[i];
+        }
+        x[2 * p] = SEP;
+        // Query section: alternate (query, answer) to the end.
+        let mut t = 2 * p + 1;
+        while t + 1 < n {
+            let qi = rng.usize_below(p);
+            x[t] = keys[qi];
+            x[t + 1] = vals[qi];
+            t += 2;
+        }
+        if t < n {
+            x[t] = SEP; // odd tail
+        }
+        // LM targets: y[t] = x[t+1]; weight only where the *next* token is
+        // an answer (odd offsets in the query section).
+        for i in 0..n - 1 {
+            y[i] = x[i + 1];
+            let next_is_answer = i + 1 > 2 * p && (i + 1 - (2 * p + 1)) % 2 == 1;
+            w[i] = if next_is_answer && x[i + 1] >= VAL_BASE { 1.0 } else { 0.0 };
+        }
+        y[n - 1] = 0;
+        w[n - 1] = 0.0;
+    }
+}
+
+impl Task for Mqar {
+    fn name(&self) -> &str {
+        "mqar"
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn sample(&self, batch: usize, rng: &mut Rng) -> Batch {
+        let n = self.seq_len;
+        let mut b = Batch::new_lm(batch, n);
+        for r in 0..batch {
+            let (xs, rest) = b.x[r * n..].split_at_mut(n);
+            let _ = rest;
+            let ys = &mut b.y[r * n..(r + 1) * n];
+            let ws = &mut b.w[r * n..(r + 1) * n];
+            self.fill_row(xs, ys, ws, rng);
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_is_valid() {
+        let task = Mqar::new(64);
+        let mut rng = Rng::new(0);
+        let b = task.sample(4, &mut rng);
+        for r in 0..4 {
+            let x = &b.x[r * 64..(r + 1) * 64];
+            let p = task.pairs;
+            // prefix: alternating key/value
+            for i in 0..p {
+                assert!((KEY_BASE..KEY_BASE + NUM_KEYS).contains(&x[2 * i]));
+                assert!((VAL_BASE..VAL_BASE + NUM_VALS).contains(&x[2 * i + 1]));
+            }
+            assert_eq!(x[2 * p], SEP);
+        }
+    }
+
+    #[test]
+    fn answers_match_prefix_associations() {
+        let task = Mqar::new(64);
+        let mut rng = Rng::new(1);
+        let b = task.sample(8, &mut rng);
+        let p = task.pairs;
+        for r in 0..8 {
+            let x = &b.x[r * 64..(r + 1) * 64];
+            let assoc: std::collections::HashMap<i32, i32> =
+                (0..p).map(|i| (x[2 * i], x[2 * i + 1])).collect();
+            let mut t = 2 * p + 1;
+            while t + 1 < 64 {
+                if x[t] >= KEY_BASE && x[t] < VAL_BASE {
+                    assert_eq!(x[t + 1], assoc[&x[t]], "row {r} pos {t}");
+                }
+                t += 2;
+            }
+        }
+    }
+
+    #[test]
+    fn weights_select_only_answer_positions() {
+        let task = Mqar::new(64);
+        let mut rng = Rng::new(2);
+        let b = task.sample(4, &mut rng);
+        let mut total = 0.0;
+        for r in 0..4 {
+            let x = &b.x[r * 64..(r + 1) * 64];
+            let y = &b.y[r * 64..(r + 1) * 64];
+            let w = &b.w[r * 64..(r + 1) * 64];
+            for i in 0..64 {
+                if w[i] > 0.0 {
+                    // target must be a value token, and it must equal the
+                    // association of the key at position i.
+                    assert!(y[i] >= VAL_BASE, "row {r} pos {i}");
+                    assert!(x[i] >= KEY_BASE && x[i] < VAL_BASE);
+                    total += w[i];
+                }
+            }
+        }
+        assert!(total > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let task = Mqar::new(64);
+        let b1 = task.sample(2, &mut Rng::new(7));
+        let b2 = task.sample(2, &mut Rng::new(7));
+        assert_eq!(b1.x, b2.x);
+        assert_eq!(b1.y, b2.y);
+    }
+
+    #[test]
+    fn tokens_within_vocab() {
+        let task = Mqar::new(128);
+        let b = task.sample(4, &mut Rng::new(3));
+        assert!(b.x.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+    }
+}

@@ -1,0 +1,28 @@
+//! # ZETA — Z-order curve top-k attention (ICLR 2025), full-stack reproduction
+//!
+//! Three-layer architecture:
+//! * **Layer 1/2 (build time, Python)** — Pallas Cauchy top-k kernel + JAX
+//!   model/training graphs, AOT-lowered to HLO text (`python/compile/`,
+//!   `make artifacts`).
+//! * **Layer 3 (this crate)** — the runtime coordinator: loads the HLO
+//!   artifacts via PJRT ([`runtime`]), generates workloads ([`data`]),
+//!   drives training ([`trainer`]), serves batched inference
+//!   ([`coordinator`]) and regenerates every table/figure of the paper
+//!   (`zeta exp …`, `rust/benches/`).
+//!
+//! Substrates implemented in-tree (offline std-only build): JSON, PRNG,
+//! property tests, bench harness ([`util`]), Morton codec ([`zorder`]),
+//! native CPU attention kernels for the efficiency study ([`attention`]).
+
+pub mod attention;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod runtime;
+pub mod tensor;
+pub mod trainer;
+pub mod util;
+pub mod zorder;
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub const ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,217 @@
+//! `zeta` — leader binary: training, serving and the experiment harness.
+//!
+//! Usage:
+//!   zeta list                              # presets in artifacts/manifest.json
+//!   zeta info                              # runtime / platform info
+//!   zeta train --preset P [--steps N] [--ckpt PATH] [--seed S]
+//!   zeta serve --preset P [--requests N] [--clients C]
+//!   zeta exp <fig2a|fig2b|fig2c|fig2d|fig3|table1|...|all> [--steps N] …
+//!
+//! Flags are std-only parsed (no clap offline); unknown flags error out.
+
+use std::collections::HashMap;
+use anyhow::{anyhow, bail, Result};
+
+use zeta::coordinator::{Server, ServerConfig};
+use zeta::data::task_for_config;
+use zeta::exp;
+use zeta::runtime::Engine;
+use zeta::trainer::Trainer;
+use zeta::util::rng::Rng;
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            map.insert(key.to_string(), val);
+        } else {
+            bail!("unexpected argument {a:?}");
+        }
+        i += 1;
+    }
+    Ok(map)
+}
+
+fn flag_usize(f: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match f.get(key) {
+        Some(v) => v.parse().map_err(|_| anyhow!("--{key} must be an integer, got {v:?}")),
+        None => Ok(default),
+    }
+}
+
+fn opts_from_flags(f: &HashMap<String, String>) -> Result<exp::Opts> {
+    let mut o = exp::Opts::default();
+    o.steps = flag_usize(f, "steps", o.steps)?;
+    o.eval_batches = flag_usize(f, "eval-batches", o.eval_batches)?;
+    o.seed = flag_usize(f, "seed", o.seed as usize)? as u64;
+    o.max_len = flag_usize(f, "max-len", o.max_len)?;
+    if let Some(out) = f.get("out") {
+        o.out_dir = out.clone();
+    }
+    o.verbose = f.contains_key("verbose");
+    Ok(o)
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "list" => cmd_list(),
+        "info" => cmd_info(),
+        "train" => cmd_train(&parse_flags(&args[1..])?),
+        "serve" => cmd_serve(&parse_flags(&args[1..])?),
+        "exp" => {
+            let which = args.get(1).map(String::as_str).unwrap_or("all");
+            let flags = parse_flags(&args[2..])?;
+            cmd_exp(which, &flags)
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `zeta help`"),
+    }
+}
+
+const HELP: &str = "\
+zeta — Z-order top-k attention (ICLR 2025) reproduction
+
+commands:
+  list                         presets available in artifacts/
+  info                         PJRT platform info
+  train  --preset P [--steps N] [--seed S] [--ckpt PATH] [--eval-batches B]
+  serve  --preset P [--requests N] [--clients C] [--max-delay-ms D]
+  exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--verbose]
+         NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3,
+                 table1, table2, table3, table4, table5, table6, all}
+
+`make artifacts` builds the core presets; `make artifacts-full` builds the
+experiment sweeps (required for fig2*/table1/2/5/6).";
+
+fn cmd_list() -> Result<()> {
+    let engine = Engine::new(zeta::ARTIFACTS_DIR)?;
+    println!("{:<28}{:>10}  {:<8}{}", "preset", "params", "batch", "entries");
+    for (name, p) in &engine.manifest.presets {
+        let entries: Vec<&str> = p.entries.keys().map(String::as_str).collect();
+        println!("{name:<28}{:>10}  {:<8}{}", p.param_count, p.batch, entries.join(","));
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let engine = Engine::new(zeta::ARTIFACTS_DIR)?;
+    println!("platform: {}", engine.platform());
+    println!("presets: {}", engine.manifest.presets.len());
+    println!("artifacts dir: {:?}", engine.manifest.dir);
+    Ok(())
+}
+
+fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
+    let preset = f.get("preset").ok_or_else(|| anyhow!("--preset required"))?;
+    let steps = flag_usize(f, "steps", 300)?;
+    let seed = flag_usize(f, "seed", 0)? as u64;
+    let eval_batches = flag_usize(f, "eval-batches", 8)?;
+    let engine = Engine::new(zeta::ARTIFACTS_DIR)?;
+    let pspec = engine.manifest.preset(preset)?;
+    println!(
+        "training {preset}: {} params, batch {}, seq {}",
+        pspec.param_count, pspec.batch, pspec.seq_len()
+    );
+    let task = task_for_config(&pspec.config);
+    let mut tr = Trainer::new(&engine, preset, seed as i32)?;
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let final_loss = tr.train_loop(&*task, steps, &mut rng, |s, l| {
+        if s % 25 == 0 || s == 1 {
+            println!("step {s:>5}  loss {l:.4}  ({:.1} s)", t0.elapsed().as_secs_f64());
+        }
+    })?;
+    let mut erng = Rng::new(seed ^ 0xE7A1);
+    let stats = tr.eval(&*task, eval_batches, &mut erng)?;
+    println!(
+        "done: final loss {final_loss:.4}, eval loss {:.4}, accuracy {:.4}, ppl {:.2}",
+        stats.loss,
+        stats.accuracy,
+        stats.perplexity()
+    );
+    if let Some(ckpt) = f.get("ckpt") {
+        tr.save(ckpt)?;
+        println!("checkpoint written to {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
+    let preset = f.get("preset").cloned().unwrap_or_else(|| "serve_cls".into());
+    let requests = flag_usize(f, "requests", 64)?;
+    let clients = flag_usize(f, "clients", 4)?;
+    let delay_ms = flag_usize(f, "max-delay-ms", 5)? as u64;
+    let seq = Engine::new(zeta::ARTIFACTS_DIR)?.manifest.preset(&preset)?.seq_len();
+    let cfg = ServerConfig {
+        preset: preset.clone(),
+        max_delay: std::time::Duration::from_millis(delay_ms),
+        ..Default::default()
+    };
+    let srv = Server::start(cfg, None)?;
+    println!("serving {preset}: {clients} clients x {} requests", requests / clients);
+
+    let per_client = requests / clients.max(1);
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let client = srv.client();
+        joins.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = Rng::new(c as u64);
+            for _ in 0..per_client {
+                let len = 8 + rng.usize_below(seq - 8);
+                let toks: Vec<i32> = (0..len).map(|_| 1 + rng.below(200) as i32).collect();
+                client.infer(toks)?;
+            }
+            Ok(())
+        }));
+    }
+    for j in joins {
+        j.join().map_err(|_| anyhow!("client thread panicked"))??;
+    }
+    println!("metrics: {}", srv.metrics.lock().unwrap().summary());
+    srv.shutdown();
+    Ok(())
+}
+
+fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
+    let opts = opts_from_flags(f)?;
+    // fig3 / table3 / table4 need no artifacts
+    match which {
+        "fig3" => return exp::fig3(&opts),
+        "table3" => return exp::table3(&opts),
+        "table4" => return exp::table4(&opts),
+        _ => {}
+    }
+    let engine = Engine::new(zeta::ARTIFACTS_DIR)?;
+    match which {
+        "fig2a" => exp::fig2a(&engine, &opts),
+        "fig2b" => exp::fig2b(&engine, &opts),
+        "fig2c" => exp::fig2c(&engine, &opts),
+        "fig2d" => exp::fig2d(&engine, &opts),
+        "table1" => exp::table1(&engine, &opts),
+        "table2" => exp::table2(&engine, &opts),
+        "table5" => exp::table5(&engine, &opts),
+        "table6" => exp::table6(&engine, &opts),
+        "all" => exp::all(&engine, &opts),
+        other => bail!("unknown experiment {other:?}; see `zeta help`"),
+    }
+}

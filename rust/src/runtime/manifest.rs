@@ -1,0 +1,228 @@
+//! AOT manifest reader: `artifacts/manifest.json`.
+//!
+//! The manifest is written by `python/compile/aot.py` and is the contract
+//! between the build-time Python world and the run-time Rust world: for
+//! every preset it records the model config, the parameter-tree flattening
+//! order and, per entry point, the exact positional input/output specs of
+//! the lowered HLO module. The Rust side never guesses a shape.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "uint32" => DType::U32,
+            _ => bail!("unsupported dtype {s:?}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j.get("name").as_str().unwrap_or("").to_string();
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.get("dtype").as_str().ok_or_else(|| anyhow!("missing dtype"))?)?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PresetSpec {
+    pub name: String,
+    pub config: Json,
+    pub batch: usize,
+    pub lr: f64,
+    pub param_count: usize,
+    /// Flattening order of the parameter pytree.
+    pub params: Vec<TensorSpec>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl PresetSpec {
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("preset {} has no entry {name:?}", self.name))
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.config.get("seq_len").as_usize().unwrap_or(0)
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.config.get("vocab").as_usize().unwrap_or(0)
+    }
+
+    pub fn is_lm(&self) -> bool {
+        self.config.get("task").as_str() == Some("lm")
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub presets: BTreeMap<String, PresetSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = crate::util::json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let obj = root.as_obj().ok_or_else(|| anyhow!("manifest root must be an object"))?;
+        let mut presets = BTreeMap::new();
+        for (name, pj) in obj {
+            let mut entries = BTreeMap::new();
+            if let Some(eo) = pj.get("entries").as_obj() {
+                for (ename, ej) in eo {
+                    let file = dir.join(
+                        ej.get("file").as_str().ok_or_else(|| anyhow!("entry missing file"))?,
+                    );
+                    let inputs = ej
+                        .get("inputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                    let outputs = ej
+                        .get("outputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                    entries.insert(ename.clone(), EntrySpec { file, inputs, outputs });
+                }
+            }
+            let params = pj
+                .get("params")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            presets.insert(
+                name.clone(),
+                PresetSpec {
+                    name: name.clone(),
+                    config: pj.get("config").clone(),
+                    batch: pj.get("batch").as_usize().unwrap_or(0),
+                    lr: pj.get("lr").as_f64().unwrap_or(0.0),
+                    param_count: pj.get("param_count").as_usize().unwrap_or(0),
+                    params,
+                    entries,
+                },
+            );
+        }
+        Ok(Manifest { dir, presets })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetSpec> {
+        self.presets.get(name).ok_or_else(|| {
+            anyhow!(
+                "preset {name:?} not in manifest ({} presets available — \
+                 experiment sweeps need `make artifacts-full`)",
+                self.presets.len()
+            )
+        })
+    }
+
+    /// Preset names matching a prefix (used by sweep harnesses).
+    pub fn matching(&self, prefix: &str) -> Vec<&PresetSpec> {
+        self.presets
+            .values()
+            .filter(|p| p.name.starts_with(prefix))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> String {
+        r#"{
+          "demo": {
+            "config": {"task": "lm", "seq_len": 8, "vocab": 16},
+            "batch": 2, "lr": 0.001, "param_count": 10,
+            "params": [{"name": "embed", "shape": [16, 4], "dtype": "float32"}],
+            "entries": {
+              "forward": {
+                "file": "demo.forward.hlo.txt",
+                "inputs": [{"name": "x", "shape": [2, 8], "dtype": "int32"}],
+                "outputs": [{"shape": [2, 8, 16], "dtype": "float32"}]
+              }
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_fake_manifest() {
+        let dir = std::env::temp_dir().join(format!("zeta_mtest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let p = m.preset("demo").unwrap();
+        assert_eq!(p.batch, 2);
+        assert_eq!(p.seq_len(), 8);
+        assert!(p.is_lm());
+        let e = p.entry("forward").unwrap();
+        assert_eq!(e.inputs[0].dtype, DType::I32);
+        assert_eq!(e.outputs[0].elems(), 2 * 8 * 16);
+        assert!(p.entry("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert!(DType::parse("float64").is_err());
+    }
+}

@@ -1,0 +1,302 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client): HLO text from
+//! `artifacts/` -> `HloModuleProto::from_text_file` -> `client.compile` ->
+//! `execute`. One [`Engine`] per process owns the client and an executable
+//! cache keyed by (preset, entry); loading is lazy and compiled modules are
+//! shared across trainer / coordinator / experiment harness.
+//!
+//! Host tensors cross the boundary as [`HostTensor`] (shape + dtype-tagged
+//! flat data); outputs come back as `HostTensor`s by decomposing the result
+//! tuple (all our graphs are lowered with `return_tuple=True`).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{DType, EntrySpec, Manifest, PresetSpec, TensorSpec};
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+    U32(Vec<usize>, Vec<u32>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(s, _) | HostTensor::I32(s, _) | HostTensor::U32(s, _) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+            HostTensor::U32(..) => DType::U32,
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32(vec![], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![], vec![v])
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(_, d) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(_, d) => Ok(d),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// The single element of a scalar f32 tensor.
+    pub fn item_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elems", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an XLA literal (copies the host buffer once).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(_, d) => xla::Literal::vec1(d),
+            HostTensor::I32(_, d) => xla::Literal::vec1(d),
+            HostTensor::U32(_, d) => xla::Literal::vec1(d),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read back from an XLA literal (copies once; shape from the manifest).
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<HostTensor> {
+        use xla::ElementType as ET;
+        Ok(match lit.ty()? {
+            ET::F32 => HostTensor::F32(shape, lit.to_vec::<f32>()?),
+            ET::S32 => HostTensor::I32(shape, lit.to_vec::<i32>()?),
+            ET::U32 => HostTensor::U32(shape, lit.to_vec::<u32>()?),
+            other => bail!("unsupported output element type {other:?}"),
+        })
+    }
+}
+
+/// A compiled entry point, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: EntrySpec,
+    pub key: String,
+}
+
+impl Executable {
+    /// Execute with positional inputs; returns positional outputs.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.key,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.elems() != s.elems() || t.dtype() != s.dtype {
+                bail!(
+                    "{}: input {i} ({}) mismatch: got {:?}/{:?}, want {:?}/{:?}",
+                    self.key,
+                    s.name,
+                    t.shape(),
+                    t.dtype(),
+                    s.shape,
+                    s.dtype
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.key,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec.shape.clone()))
+            .collect()
+    }
+
+    /// Zero-copy-in variant of [`Executable::run`] for hot loops: inputs are
+    /// already XLA literals, outputs come back as literals (decomposed from
+    /// the result tuple) without a host round-trip per tensor. The trainer
+    /// keeps params/optimizer state in this form between steps — see
+    /// EXPERIMENTS.md §Perf for the measured effect.
+    pub fn run_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        literals: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if literals.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.key,
+                self.spec.inputs.len(),
+                literals.len()
+            );
+        }
+        let result = self.exe.execute(literals)?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.key,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+}
+
+/// The process-wide runtime: PJRT CPU client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and cache) the compiled executable for (preset, entry).
+    pub fn load(&self, preset: &str, entry: &str) -> Result<std::sync::Arc<Executable>> {
+        let key = format!("{preset}.{entry}");
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let pspec = self.manifest.preset(preset)?;
+        let espec = pspec.entry(entry)?.clone();
+        let path = espec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {key}"))?;
+        let handle = std::sync::Arc::new(Executable { exe, spec: espec, key: key.clone() });
+        self.cache.lock().unwrap().insert(key, handle.clone());
+        Ok(handle)
+    }
+
+    /// Initialize a preset's parameters by running its `init` graph.
+    pub fn init_params(&self, preset: &str, seed: i32) -> Result<Vec<HostTensor>> {
+        let init = self.load(preset, "init")?;
+        init.run(&[HostTensor::scalar_i32(seed)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require `make artifacts` (the core set) to have run.
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        if !std::path::Path::new(crate::ARTIFACTS_DIR).join("manifest.json").exists() {
+            eprintln!("skipping runtime test: artifacts/ missing");
+            return None;
+        }
+        Some(Engine::new(crate::ARTIFACTS_DIR).expect("engine"))
+    }
+
+    #[test]
+    fn init_and_forward_quickstart() {
+        let Some(eng) = engine() else { return };
+        let params = eng.init_params("quickstart_zeta", 0).unwrap();
+        let pspec = eng.manifest.preset("quickstart_zeta").unwrap();
+        assert_eq!(params.len(), pspec.params.len());
+        // compare a randomly-initialized tensor (biases are zeros for any seed)
+        let embed_idx = pspec.params.iter().position(|p| p.name == "embed").unwrap();
+        // deterministic init
+        let params2 = eng.init_params("quickstart_zeta", 0).unwrap();
+        assert_eq!(
+            params[embed_idx].as_f32().unwrap(),
+            params2[embed_idx].as_f32().unwrap()
+        );
+        // different seed -> different params
+        let params3 = eng.init_params("quickstart_zeta", 1).unwrap();
+        assert_ne!(
+            params[embed_idx].as_f32().unwrap(),
+            params3[embed_idx].as_f32().unwrap()
+        );
+
+        let fwd = eng.load("quickstart_zeta", "forward").unwrap();
+        let b = pspec.batch;
+        let n = pspec.seq_len();
+        let mut inputs =
+            vec![HostTensor::I32(vec![b, n], vec![1; b * n])];
+        inputs.extend(params.clone());
+        let out = fwd.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[b, n, pspec.vocab()]);
+        assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn executable_cache_dedupes() {
+        let Some(eng) = engine() else { return };
+        let a = eng.load("quickstart_zeta", "init").unwrap();
+        let b = eng.load("quickstart_zeta", "init").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn input_validation_rejects_bad_shapes() {
+        let Some(eng) = engine() else { return };
+        let fwd = eng.load("quickstart_zeta", "forward").unwrap();
+        assert!(fwd.run(&[]).is_err());
+        let bad = vec![HostTensor::I32(vec![1], vec![0])];
+        assert!(fwd.run(&bad).is_err());
+    }
+}

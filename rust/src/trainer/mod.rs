@@ -1,0 +1,392 @@
+//! Training orchestrator: drives the AOT `train`/`eval` graphs from Rust.
+//!
+//! Python never runs here — the full fwd+bwd+Adam update is one compiled
+//! HLO module per preset ("train" entry, see python/compile/aot.py). The
+//! trainer feeds batches from a [`crate::data::Task`] and tracks metrics.
+//!
+//! Hot-path note (§Perf): parameters and optimizer state stay in
+//! `xla::Literal` form between steps. A step converts only the batch
+//! (x, y, w) and the step counter to literals; the previous step's output
+//! literals are fed straight back in. Converting the whole state to host
+//! vectors and back (the obvious implementation) costs two extra copies of
+//! ~3x params per step — measured in EXPERIMENTS.md §Perf.
+//!
+//! Also provides a tiny binary checkpoint format (`save` / `load`) so long
+//! runs can resume and the serving coordinator can load trained weights.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Batch, Task};
+use crate::runtime::{DType, Engine, HostTensor, TensorSpec};
+use crate::util::rng::Rng;
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub preset: String,
+    /// Parameter / Adam-state literals, in manifest flattening order.
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    shapes: Vec<TensorSpec>,
+    pub step: i32,
+    pub losses: Vec<(i32, f32)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalStats {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub weight: f64,
+}
+
+impl EvalStats {
+    pub fn perplexity(&self) -> f64 {
+        self.loss.exp()
+    }
+}
+
+fn zero_literals(shapes: &[TensorSpec]) -> Result<Vec<xla::Literal>> {
+    shapes
+        .iter()
+        .map(|s| {
+            let t = match s.dtype {
+                DType::F32 => HostTensor::F32(s.shape.clone(), vec![0.0; s.elems()]),
+                DType::I32 => HostTensor::I32(s.shape.clone(), vec![0; s.elems()]),
+                DType::U32 => HostTensor::U32(s.shape.clone(), vec![0; s.elems()]),
+            };
+            t.to_literal()
+        })
+        .collect()
+}
+
+impl<'e> Trainer<'e> {
+    /// Initialize from the preset's `init` graph.
+    pub fn new(engine: &'e Engine, preset: &str, seed: i32) -> Result<Trainer<'e>> {
+        let shapes = engine.manifest.preset(preset)?.params.clone();
+        let init = engine.load(preset, "init")?;
+        let seed_lit = HostTensor::scalar_i32(seed).to_literal()?;
+        let params = init
+            .run_literals(&[seed_lit])
+            .with_context(|| format!("init {preset}"))?;
+        let m = zero_literals(&shapes)?;
+        let v = zero_literals(&shapes)?;
+        Ok(Trainer {
+            engine,
+            preset: preset.to_string(),
+            params,
+            m,
+            v,
+            shapes,
+            step: 0,
+            losses: vec![],
+        })
+    }
+
+    /// Current parameters as host tensors (copies; for checkpoints/serving).
+    pub fn params_host(&self) -> Result<Vec<HostTensor>> {
+        self.params
+            .iter()
+            .zip(&self.shapes)
+            .map(|(l, s)| HostTensor::from_literal(l, s.shape.clone()))
+            .collect()
+    }
+
+    fn batch_literals(&self, b: &Batch, lm: bool) -> Result<Vec<xla::Literal>> {
+        let x = HostTensor::I32(vec![b.batch, b.seq_len], b.x.clone());
+        let (y, w) = if lm {
+            (
+                HostTensor::I32(vec![b.batch, b.seq_len], b.y.clone()),
+                HostTensor::F32(vec![b.batch, b.seq_len], b.w.clone()),
+            )
+        } else {
+            (
+                HostTensor::I32(vec![b.batch], b.y.clone()),
+                HostTensor::F32(vec![b.batch], b.w.clone()),
+            )
+        };
+        Ok(vec![x.to_literal()?, y.to_literal()?, w.to_literal()?])
+    }
+
+    /// One optimizer step; returns the batch loss.
+    pub fn train_step(&mut self, batch: &Batch) -> Result<f32> {
+        let exe = self.engine.load(&self.preset, "train")?;
+        let lm = self.engine.manifest.preset(&self.preset)?.is_lm();
+        self.step += 1;
+        let n = self.params.len();
+
+        let step_lit = HostTensor::scalar_i32(self.step).to_literal()?;
+        let batch_lits = self.batch_literals(batch, lm)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(4 + 3 * n);
+        inputs.push(&step_lit);
+        inputs.extend(batch_lits.iter());
+        inputs.extend(self.params.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+
+        let mut out = exe.run_literals(&inputs)?;
+        if out.len() != 1 + 3 * n {
+            bail!("train returned {} outputs, want {}", out.len(), 1 + 3 * n);
+        }
+        let loss = out[0].to_vec::<f32>()?[0];
+        if !loss.is_finite() {
+            bail!("non-finite loss at step {}: {loss}", self.step);
+        }
+        // out layout: loss, params', m', v' — feed straight back next step.
+        let v_new = out.split_off(1 + 2 * n);
+        let m_new = out.split_off(1 + n);
+        let p_new = out.split_off(1);
+        self.params = p_new;
+        self.m = m_new;
+        self.v = v_new;
+        self.losses.push((self.step, loss));
+        Ok(loss)
+    }
+
+    /// Evaluate over `n_batches` sampled from `task`.
+    pub fn eval(&self, task: &dyn Task, n_batches: usize, rng: &mut Rng) -> Result<EvalStats> {
+        let exe = self.engine.load(&self.preset, "eval")?;
+        let pspec = self.engine.manifest.preset(&self.preset)?;
+        let lm = pspec.is_lm();
+        let bsz = pspec.batch;
+        let (mut loss_sum, mut correct, mut weight) = (0f64, 0f64, 0f64);
+        for _ in 0..n_batches {
+            let b = task.sample(bsz, rng);
+            let batch_lits = self.batch_literals(&b, lm)?;
+            let mut inputs: Vec<&xla::Literal> = batch_lits.iter().collect();
+            inputs.extend(self.params.iter());
+            let out = exe.run_literals(&inputs)?;
+            loss_sum += out[0].to_vec::<f32>()?[0] as f64;
+            correct += out[1].to_vec::<f32>()?[0] as f64;
+            weight += out[2].to_vec::<f32>()?[0] as f64;
+        }
+        if weight == 0.0 {
+            bail!("eval saw zero weight");
+        }
+        Ok(EvalStats { loss: loss_sum / weight, accuracy: correct / weight, weight })
+    }
+
+    /// Train for `steps` batches from `task`; returns the mean loss over
+    /// the final 10% of steps.
+    pub fn train_loop(
+        &mut self,
+        task: &dyn Task,
+        steps: usize,
+        rng: &mut Rng,
+        mut log: impl FnMut(i32, f32),
+    ) -> Result<f32> {
+        let bsz = self.engine.manifest.preset(&self.preset)?.batch;
+        for _ in 0..steps {
+            let b = task.sample(bsz, rng);
+            let loss = self.train_step(&b)?;
+            log(self.step, loss);
+        }
+        let tail = (steps / 10).max(1);
+        let recent: Vec<f32> =
+            self.losses.iter().rev().take(tail).map(|&(_, l)| l).collect();
+        Ok(recent.iter().sum::<f32>() / recent.len() as f32)
+    }
+
+    // -----------------------------------------------------------------
+    // Checkpointing
+    // -----------------------------------------------------------------
+
+    /// Binary checkpoint: params + opt state + step.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"ZETACKPT")?;
+        f.write_all(&(self.step as u32).to_le_bytes())?;
+        for group in [&self.params, &self.m, &self.v] {
+            f.write_all(&(group.len() as u32).to_le_bytes())?;
+            for (lit, spec) in group.iter().zip(&self.shapes) {
+                let t = HostTensor::from_literal(lit, spec.shape.clone())?;
+                write_tensor(&mut f, &t)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"ZETACKPT" {
+            bail!("bad checkpoint magic");
+        }
+        self.step = read_u32(&mut f)? as i32;
+        let mut groups = Vec::new();
+        for _ in 0..3 {
+            let n = read_u32(&mut f)? as usize;
+            if n != self.shapes.len() {
+                bail!("checkpoint has {n} tensors, model has {}", self.shapes.len());
+            }
+            let mut g = Vec::with_capacity(n);
+            for _ in 0..n {
+                g.push(read_tensor(&mut f)?.to_literal()?);
+            }
+            groups.push(g);
+        }
+        self.v = groups.pop().unwrap();
+        self.m = groups.pop().unwrap();
+        self.params = groups.pop().unwrap();
+        Ok(())
+    }
+}
+
+fn write_tensor(f: &mut impl Write, t: &HostTensor) -> Result<()> {
+    let tag: u8 = match t.dtype() {
+        DType::F32 => 0,
+        DType::I32 => 1,
+        DType::U32 => 2,
+    };
+    f.write_all(&[tag])?;
+    f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+    for &d in t.shape() {
+        f.write_all(&(d as u32).to_le_bytes())?;
+    }
+    match t {
+        HostTensor::F32(_, d) => {
+            for v in d {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        HostTensor::I32(_, d) => {
+            for v in d {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        HostTensor::U32(_, d) => {
+            for v in d {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_tensor(f: &mut impl Read) -> Result<HostTensor> {
+    let mut tag = [0u8; 1];
+    f.read_exact(&mut tag)?;
+    let ndim = read_u32(f)? as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(read_u32(f)? as usize);
+    }
+    let n: usize = shape.iter().product();
+    let mut raw = vec![0u8; n * 4];
+    f.read_exact(&mut raw)?;
+    Ok(match tag[0] {
+        0 => HostTensor::F32(
+            shape,
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        1 => HostTensor::I32(
+            shape,
+            raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        2 => HostTensor::U32(
+            shape,
+            raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        t => bail!("bad tensor tag {t}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    //! Integration tests over real artifacts (skip when absent).
+    use super::*;
+    use crate::data::mqar::Mqar;
+
+    fn engine() -> Option<Engine> {
+        if !std::path::Path::new(crate::ARTIFACTS_DIR).join("manifest.json").exists() {
+            eprintln!("skipping trainer test: artifacts/ missing");
+            return None;
+        }
+        Some(Engine::new(crate::ARTIFACTS_DIR).expect("engine"))
+    }
+
+    fn batch_size(eng: &Engine, preset: &str) -> usize {
+        eng.manifest.preset(preset).unwrap().batch
+    }
+
+    #[test]
+    fn loss_decreases_on_mqar() {
+        let Some(eng) = engine() else { return };
+        let bsz = batch_size(&eng, "mqar_vanilla_d64");
+        let mut tr = Trainer::new(&eng, "mqar_vanilla_d64", 0).unwrap();
+        let task = Mqar::new(64);
+        let mut rng = Rng::new(0);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..30 {
+            let b = task.sample(bsz, &mut rng);
+            last = tr.train_step(&b).unwrap();
+            first.get_or_insert(last);
+        }
+        assert!(last < first.unwrap(), "no progress: {first:?} -> {last}");
+    }
+
+    #[test]
+    fn eval_stats_sane() {
+        let Some(eng) = engine() else { return };
+        let tr = Trainer::new(&eng, "mqar_vanilla_d64", 1).unwrap();
+        let task = Mqar::new(64);
+        let mut rng = Rng::new(1);
+        let st = tr.eval(&task, 2, &mut rng).unwrap();
+        // untrained: accuracy near chance (1/31 values), loss near ln(64)
+        assert!(st.accuracy < 0.3, "acc {}", st.accuracy);
+        assert!(st.loss > 1.0 && st.loss < 10.0, "loss {}", st.loss);
+        assert!(st.weight > 0.0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let Some(eng) = engine() else { return };
+        let bsz = batch_size(&eng, "mqar_vanilla_d64");
+        let mut tr = Trainer::new(&eng, "mqar_vanilla_d64", 2).unwrap();
+        let task = Mqar::new(64);
+        let mut rng = Rng::new(2);
+        let b = task.sample(bsz, &mut rng);
+        tr.train_step(&b).unwrap();
+        let dir = std::env::temp_dir().join(format!("zeta_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        tr.save(&path).unwrap();
+
+        let mut tr2 = Trainer::new(&eng, "mqar_vanilla_d64", 99).unwrap();
+        tr2.load(&path).unwrap();
+        assert_eq!(tr2.step, tr.step);
+        let p1 = tr.params_host().unwrap();
+        let p2 = tr2.params_host().unwrap();
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.as_f32().ok(), b.as_f32().ok());
+        }
+        // both trainers continue identically
+        let nb = task.sample(bsz, &mut rng);
+        let l1 = tr.train_step(&nb).unwrap();
+        let l2 = tr2.train_step(&nb).unwrap();
+        assert!((l1 - l2).abs() < 1e-5, "{l1} vs {l2}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn params_host_shapes_match_manifest() {
+        let Some(eng) = engine() else { return };
+        let tr = Trainer::new(&eng, "mqar_vanilla_d64", 3).unwrap();
+        let pspec = eng.manifest.preset("mqar_vanilla_d64").unwrap();
+        let ps = tr.params_host().unwrap();
+        assert_eq!(ps.len(), pspec.params.len());
+        for (t, s) in ps.iter().zip(&pspec.params) {
+            assert_eq!(t.shape(), &s.shape[..], "{}", s.name);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock with warmup, reports median / mean / MAD over
+//! repeated samples, and supports a target measurement budget so big and
+//! small workloads both get stable numbers. Used by `rust/benches/*` and
+//! the `zeta exp table3` harness.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: usize,
+    /// Median per-iteration time in seconds.
+    pub median_s: f64,
+    pub mean_s: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad_s: f64,
+    pub min_s: f64,
+}
+
+impl Stats {
+    pub fn median_ms(&self) -> f64 {
+        self.median_s * 1e3
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_s * 1e6
+    }
+}
+
+/// Benchmark `f`, aiming for `budget` of total measurement time with at
+/// least `min_samples` samples. `f` runs once per sample; use closures that
+/// capture pre-built inputs. Returns robust statistics.
+pub fn bench<F: FnMut()>(budget: Duration, min_samples: usize, mut f: F) -> Stats {
+    // Warmup: one run, plus more until 10% of budget or 3 runs.
+    let warm_start = Instant::now();
+    let mut warmups = 0;
+    while warmups < 3 || (warm_start.elapsed() < budget / 10 && warmups < 50) {
+        f();
+        warmups += 1;
+        if warm_start.elapsed() > budget / 2 {
+            break;
+        }
+    }
+
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < min_samples || (start.elapsed() < budget && times.len() < 10_000) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() >= min_samples && start.elapsed() >= budget {
+            break;
+        }
+    }
+    stats_from(&mut times)
+}
+
+/// Quick preset: 300 ms budget, >= 5 samples.
+pub fn quick<F: FnMut()>(f: F) -> Stats {
+    bench(Duration::from_millis(300), 5, f)
+}
+
+fn stats_from(times: &mut [f64]) -> Stats {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    let median = times[n / 2];
+    let mean = times.iter().sum::<f64>() / n as f64;
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Stats {
+        samples: n,
+        median_s: median,
+        mean_s: mean,
+        mad_s: devs[n / 2],
+        min_s: times[0],
+    }
+}
+
+/// Format seconds in a human unit.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let st = bench(Duration::from_millis(60), 3, || {
+            std::thread::sleep(Duration::from_millis(5));
+        });
+        assert!(st.samples >= 3);
+        assert!(st.median_s >= 0.004, "median {}", st.median_s);
+        assert!(st.median_s < 0.05, "median {}", st.median_s);
+    }
+
+    #[test]
+    fn stats_median_robust() {
+        let mut t = vec![1.0, 1.0, 1.0, 100.0];
+        let s = stats_from(&mut t);
+        assert_eq!(s.median_s, 1.0);
+        assert!(s.mean_s > 20.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Std-only utility substrates (the offline build has no third-party crates
+//! beyond `xla`/`anyhow`): JSON, PRNG, property testing, benchmarking.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

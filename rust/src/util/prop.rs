@@ -1,0 +1,92 @@
+//! Tiny property-testing helper (the offline environment has no proptest).
+//!
+//! `check(cases, seed, f)` runs `f` against `cases` independently-seeded
+//! RNGs and reports the failing case's seed so it can be replayed with
+//! `replay(seed_reported, f)`.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` random cases. `f` may panic or return Err to fail.
+pub fn check<F>(cases: u64, seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        match result {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property failed on case {case} (replay seed {case_seed:#x}): {msg}"
+            ),
+            Err(p) => {
+                let msg = p
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "panic".into());
+                panic!("property panicked on case {case} (replay seed {case_seed:#x}): {msg}");
+            }
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn replay<F>(case_seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    f(&mut rng).expect("replayed property failed");
+}
+
+/// Structural equality assertion that returns Err instead of panicking, so
+/// properties compose.
+pub fn assert_eq_prop<T: PartialEq + std::fmt::Debug>(a: &T, b: &T) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{a:?} != {b:?}"))
+    }
+}
+
+/// Approximate float comparison for properties.
+pub fn assert_close(a: f32, b: f32, atol: f32) -> Result<(), String> {
+    if (a - b).abs() <= atol {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (atol {atol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(20, 1, |rng| {
+            let x = rng.below(100);
+            assert_eq_prop(&(x < 100), &true)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(20, 2, |rng| {
+            let x = rng.below(10);
+            if x == 3 {
+                return Err("hit 3".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(assert_close(1.0, 1.0 + 1e-7, 1e-6).is_ok());
+        assert!(assert_close(1.0, 2.0, 0.5).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Exact kNN + Z-order locality metrics — substrate for the Fig-3 study.
+//!
+//! The paper's Figure 3 measures how well the Z-order projection preserves
+//! locality: for each point, the overlap between its top-k Euclidean
+//! neighbours (before projection) and its top-k neighbours along the
+//! 1-D Morton code (after projection), as a function of d_K and N.
+
+use crate::tensor::sqdist;
+
+/// Indices of the k nearest neighbours of point `i` under Euclidean
+/// distance (brute force, excludes `i` itself).
+pub fn exact_knn(points: &[f32], d: usize, i: usize, k: usize) -> Vec<usize> {
+    let n = points.len() / d;
+    let pi = &points[i * d..(i + 1) * d];
+    let mut dists: Vec<(f32, usize)> = (0..n)
+        .filter(|&j| j != i)
+        .map(|j| (sqdist(pi, &points[j * d..(j + 1) * d]), j))
+        .collect();
+    let k = k.min(dists.len());
+    dists.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
+    let mut out: Vec<usize> = dists[..k].iter().map(|&(_, j)| j).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Indices of the k nearest neighbours of point `i` along the Morton codes
+/// (|code_j - code_i|, excludes `i`).
+pub fn zorder_knn(codes: &[u32], i: usize, k: usize) -> Vec<usize> {
+    let ci = codes[i] as i64;
+    let mut dists: Vec<(i64, usize)> = codes
+        .iter()
+        .enumerate()
+        .filter(|&(j, _)| j != i)
+        .map(|(j, &c)| ((c as i64 - ci).abs(), j))
+        .collect();
+    let k = k.min(dists.len());
+    dists.select_nth_unstable_by(k - 1, |a, b| a.cmp(b));
+    let mut out: Vec<usize> = dists[..k].iter().map(|&(_, j)| j).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Mean top-k neighbour overlap over all points: |exact ∩ zorder| / k,
+/// averaged. This is the y-axis of Figure 3.
+pub fn mean_topk_overlap(points: &[f32], d: usize, codes: &[u32], k: usize) -> f64 {
+    let n = points.len() / d;
+    assert_eq!(codes.len(), n);
+    let mut total = 0.0;
+    for i in 0..n {
+        let a = exact_knn(points, d, i, k);
+        let b = zorder_knn(codes, i, k);
+        // both sorted — linear intersection
+        let (mut x, mut y, mut hits) = (0, 0, 0usize);
+        while x < a.len() && y < b.len() {
+            match a[x].cmp(&b[y]) {
+                std::cmp::Ordering::Less => x += 1,
+                std::cmp::Ordering::Greater => y += 1,
+                std::cmp::Ordering::Equal => {
+                    hits += 1;
+                    x += 1;
+                    y += 1;
+                }
+            }
+        }
+        total += hits as f64 / k as f64;
+    }
+    total / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::zorder;
+
+    #[test]
+    fn exact_knn_on_line() {
+        // points at x = 0, 1, 2, 3, 4 (d = 1)
+        let pts = [0.0f32, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(exact_knn(&pts, 1, 2, 2), vec![1, 3]);
+        assert_eq!(exact_knn(&pts, 1, 0, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn zorder_knn_on_codes() {
+        let codes = [10u32, 11, 12, 100, 101];
+        assert_eq!(zorder_knn(&codes, 0, 2), vec![1, 2]);
+        assert_eq!(zorder_knn(&codes, 4, 1), vec![3]);
+    }
+
+    #[test]
+    fn overlap_is_one_in_1d() {
+        // In d=1 the Morton code *is* the (quantized) coordinate, so with
+        // well-separated points the overlap must be exactly 1.
+        let pts: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let codes = zorder::encode_points_fit(&pts, 1, 10);
+        let ov = mean_topk_overlap(&pts, 1, &codes, 3);
+        assert!(ov > 0.99, "overlap {ov}");
+    }
+
+    #[test]
+    fn overlap_decreases_with_dimension() {
+        // The trend behind Fig. 3: higher d_K -> worse locality preservation.
+        let mut rng = Rng::new(42);
+        let n = 192;
+        let mut prev = f64::INFINITY;
+        for &d in &[2usize, 8, 16] {
+            let mut pts = vec![0f32; n * d];
+            rng.fill_normal(&mut pts, 1.0);
+            let codes = zorder::encode_points_fit(&pts, d, zorder::bits_for_dim(d));
+            let ov = mean_topk_overlap(&pts, d, &codes, 16);
+            assert!(ov < prev + 0.05, "d={d}: {ov} !< {prev}");
+            prev = ov;
+        }
+    }
+
+    #[test]
+    fn overlap_beats_random_at_low_dim() {
+        let mut rng = Rng::new(7);
+        let n = 128;
+        let d = 3;
+        let mut pts = vec![0f32; n * d];
+        rng.fill_normal(&mut pts, 1.0);
+        let codes = zorder::encode_points_fit(&pts, d, 10);
+        let ov = mean_topk_overlap(&pts, d, &codes, 8);
+        // random baseline would be k/(n-1) ≈ 0.06
+        assert!(ov > 0.2, "overlap {ov}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Z-order (Morton) curve codec — Rust substrate.
+//!
+//! Mirror of python/compile/zorder.py, used on the Rust side by
+//!   * the Fig-3 locality study (`exp fig3`, `benches/fig3_locality.rs`),
+//!   * the Rust-native ZETA kernel (Table 3/4 benchmarks),
+//!   * property tests that cross-check the JAX implementation's conventions
+//!     (bit b of coordinate j lands at output position b*d + j).
+
+pub mod knn;
+
+/// Bits per coordinate so the interleaved code fits in 31 bits (matches the
+/// Python side, which must stay uint32-safe inside HLO).
+pub fn bits_for_dim(d: usize) -> u32 {
+    assert!(d >= 1, "dimension must be >= 1");
+    (31 / d).clamp(1, 10) as u32
+}
+
+/// Quantize one float coordinate into `bits`-bit levels over [lo, hi].
+#[inline]
+pub fn quantize(x: f32, lo: f32, hi: f32, bits: u32) -> u32 {
+    let levels = (1u32 << bits) - 1;
+    let span = (hi - lo).max(1e-6);
+    let u = (x - lo) / span * levels as f32;
+    (u + 0.5).floor().clamp(0.0, levels as f32) as u32
+}
+
+/// Interleave the low `bits` bits of each coordinate (paper Eq. 4):
+/// bit b of coordinate j lands at output position b*d + j.
+#[inline]
+pub fn interleave(coords: &[u32], bits: u32) -> u32 {
+    let d = coords.len();
+    debug_assert!(bits as usize * d <= 31, "code exceeds 31 bits");
+    let mut z = 0u32;
+    for b in 0..bits {
+        for (j, &c) in coords.iter().enumerate() {
+            z |= ((c >> b) & 1) << (b as usize * d + j);
+        }
+    }
+    z
+}
+
+/// Inverse of `interleave`.
+pub fn deinterleave(z: u32, d: usize, bits: u32) -> Vec<u32> {
+    let mut coords = vec![0u32; d];
+    for b in 0..bits {
+        for (j, c) in coords.iter_mut().enumerate() {
+            *c |= ((z >> (b as usize * d + j)) & 1) << b;
+        }
+    }
+    coords
+}
+
+/// Morton-encode a batch of points (row-major `n x d`) over a fixed grid
+/// [-range, range]^d. Returns one code per point.
+pub fn encode_points(points: &[f32], d: usize, range: f32, bits: u32) -> Vec<u32> {
+    assert_eq!(points.len() % d, 0);
+    let mut scratch = vec![0u32; d];
+    points
+        .chunks_exact(d)
+        .map(|p| {
+            for (s, &x) in scratch.iter_mut().zip(p) {
+                *s = quantize(x, -range, range, bits);
+            }
+            interleave(&scratch, bits)
+        })
+        .collect()
+}
+
+/// Morton-encode with a data-derived grid (per-dimension min/max), the
+/// convention the Fig-3 locality study uses.
+pub fn encode_points_fit(points: &[f32], d: usize, bits: u32) -> Vec<u32> {
+    assert_eq!(points.len() % d, 0);
+    let n = points.len() / d;
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for p in points.chunks_exact(d) {
+        for j in 0..d {
+            lo[j] = lo[j].min(p[j]);
+            hi[j] = hi[j].max(p[j]);
+        }
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut scratch = vec![0u32; d];
+    for p in points.chunks_exact(d) {
+        for j in 0..d {
+            scratch[j] = quantize(p[j], lo[j], hi[j], bits);
+        }
+        out.push(interleave(&scratch, bits));
+    }
+    out
+}
+
+/// Argsort of Morton codes: permutation such that codes[perm] is ascending.
+/// Radix-sorts the 32-bit codes (the O(N) sort the paper's appendix cites).
+pub fn argsort_codes(codes: &[u32]) -> Vec<u32> {
+    let n = codes.len();
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    let mut aux = vec![0u32; n];
+    // 4 passes of 8-bit LSD radix sort — stable, O(N) per pass.
+    for pass in 0..4 {
+        let shift = pass * 8;
+        let mut counts = [0usize; 256];
+        for &i in perm.iter() {
+            counts[((codes[i as usize] >> shift) & 0xFF) as usize] += 1;
+        }
+        let mut offsets = [0usize; 256];
+        let mut acc = 0;
+        for b in 0..256 {
+            offsets[b] = acc;
+            acc += counts[b];
+        }
+        for &i in perm.iter() {
+            let b = ((codes[i as usize] >> shift) & 0xFF) as usize;
+            aux[offsets[b]] = i;
+            offsets[b] += 1;
+        }
+        std::mem::swap(&mut perm, &mut aux);
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn interleave_roundtrip() {
+        prop::check(100, 0xA11CE, |rng| {
+            let d = 1 + rng.usize_below(6);
+            let bits = bits_for_dim(d);
+            let coords: Vec<u32> =
+                (0..d).map(|_| rng.next_u32() & ((1 << bits) - 1)).collect();
+            let z = interleave(&coords, bits);
+            prop::assert_eq_prop(&deinterleave(z, d, bits), &coords)
+        });
+    }
+
+    #[test]
+    fn interleave_matches_python_convention() {
+        // bit b of coord j -> position b*d + j; cross-checked against the
+        // jax implementation for (5, 3) at bits=3, d=2:
+        // 5 = 101, 3 = 011 -> z = b0: 1,1 b1: 0,1 b2: 1,0 -> 0b011110 = 30... .
+        let z = interleave(&[5, 3], 3);
+        let mut want = 0u32;
+        for b in 0..3 {
+            want |= ((5 >> b) & 1) << (b * 2);
+            want |= ((3 >> b) & 1) << (b * 2 + 1);
+        }
+        assert_eq!(z, want);
+        // p0..p5 = (b0,j0)=1 (b0,j1)=1 (b1,j0)=0 (b1,j1)=1 (b2,j0)=1 (b2,j1)=0
+        assert_eq!(z, 0b011011);
+    }
+
+    #[test]
+    fn interleave_monotone_per_axis() {
+        let bits = 5;
+        for axis in 0..3 {
+            let mut prev = None;
+            for v in 0..(1 << bits) {
+                let mut c = [7u32, 7, 7];
+                c[axis] = v;
+                let z = interleave(&c, bits);
+                if let Some(p) = prev {
+                    assert!(z > p, "axis {axis} v {v}");
+                }
+                prev = Some(z);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_bounds() {
+        assert_eq!(quantize(-10.0, -1.0, 1.0, 4), 0);
+        assert_eq!(quantize(10.0, -1.0, 1.0, 4), 15);
+        assert_eq!(quantize(0.0, -1.0, 1.0, 4), 8); // rounds up at midpoint
+    }
+
+    #[test]
+    fn argsort_sorts() {
+        prop::check(50, 0xB0B, |rng| {
+            let n = 1 + rng.usize_below(500);
+            let codes: Vec<u32> = (0..n).map(|_| rng.next_u32() & 0x7FFF_FFFF).collect();
+            let perm = argsort_codes(&codes);
+            // permutation property
+            let mut seen = vec![false; n];
+            for &p in &perm {
+                assert!(!seen[p as usize]);
+                seen[p as usize] = true;
+            }
+            for w in perm.windows(2) {
+                assert!(codes[w[0] as usize] <= codes[w[1] as usize]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn argsort_is_stable() {
+        let codes = vec![5u32, 1, 5, 1, 5];
+        let perm = argsort_codes(&codes);
+        assert_eq!(perm, vec![1, 3, 0, 2, 4]);
+    }
+
+    #[test]
+    fn encode_points_locality() {
+        // Near points share long code prefixes more often than far points.
+        let mut rng = Rng::new(0);
+        let n = 256;
+        let d = 3;
+        let mut pts = vec![0f32; n * d];
+        rng.fill_normal(&mut pts, 1.0);
+        let codes = encode_points(&pts, d, 4.0, bits_for_dim(d));
+        // for each point, z-distance to its euclidean-nearest neighbour
+        // should on average be far smaller than to a random point.
+        let mut near_sum = 0f64;
+        let mut rand_sum = 0f64;
+        for i in 0..n {
+            let pi = &pts[i * d..(i + 1) * d];
+            let mut best = (f32::INFINITY, 0);
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let dd = crate::tensor::sqdist(pi, &pts[j * d..(j + 1) * d]);
+                if dd < best.0 {
+                    best = (dd, j);
+                }
+            }
+            let r = (i + 97) % n;
+            near_sum += (codes[i] as i64 - codes[best.1] as i64).unsigned_abs() as f64;
+            rand_sum += (codes[i] as i64 - codes[r] as i64).unsigned_abs() as f64;
+        }
+        assert!(near_sum < 0.5 * rand_sum, "near {near_sum} rand {rand_sum}");
+    }
+}
