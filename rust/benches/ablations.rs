@@ -14,12 +14,40 @@ use std::time::Duration;
 use zeta::attention::{flash::Flash, zeta::ZetaNative, AttentionImpl, Workload};
 use zeta::coordinator::{Server, ServerConfig};
 use zeta::util::bench;
+use zeta::util::pool::Pool;
 
 fn main() {
     let n = 8192;
     let w = Workload::random(n, 64, 64, 0);
 
-    println!("== ZETA k sweep (N = {n}, fwd) ==");
+    println!("== ZETA thread-scaling sweep (N = {n}, fwd / fwd+bwd) ==");
+    {
+        let z = ZetaNative { chunk: n / 16, ..ZetaNative::default() };
+        let mut serial_f = 0.0f64;
+        let mut serial_fb = 0.0f64;
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let stf = bench::quick(|| {
+                bench::black_box(z.forward_with(&w, &pool));
+            });
+            let stfb = bench::quick(|| {
+                bench::black_box(z.forward_backward_with(&w, &pool));
+            });
+            if threads == 1 {
+                serial_f = stf.median_s;
+                serial_fb = stfb.median_s;
+            }
+            println!(
+                "  threads={threads:<3} fwd {:>10} ({:.2}x)   fwd+bwd {:>10} ({:.2}x)",
+                bench::fmt_time(stf.median_s),
+                serial_f / stf.median_s,
+                bench::fmt_time(stfb.median_s),
+                serial_fb / stfb.median_s,
+            );
+        }
+    }
+
+    println!("\n== ZETA k sweep (N = {n}, fwd) ==");
     for k in [8usize, 16, 32, 64, 128] {
         let z = ZetaNative { k, window: 2 * k, chunk: n / 16, ..ZetaNative::default() };
         let st = bench::quick(|| {

@@ -6,6 +6,7 @@
 
 use zeta::exp;
 use zeta::util::bench;
+use zeta::util::pool::Pool;
 use zeta::util::rng::Rng;
 use zeta::zorder;
 
@@ -14,9 +15,10 @@ fn main() {
     exp::fig3(&exp::Opts::default()).expect("fig3 failed");
 
     // Codec micro-benchmarks (informs §Perf: the sort is the O(N log N)
-    // term, encode is O(N·bits·d)).
+    // term, encode is O(N·bits·d) and embarrassingly parallel).
     println!("\n== Z-order codec micro-benchmarks ==");
     let mut rng = Rng::new(0);
+    let pool = *Pool::global();
     for n in [4096usize, 65536] {
         let d = 3;
         let mut pts = vec![0f32; n * d];
@@ -24,7 +26,15 @@ fn main() {
         let st = bench::quick(|| {
             bench::black_box(zorder::encode_points(&pts, d, 4.0, 10));
         });
-        println!("encode_points   n={n:<7} {}", bench::fmt_time(st.median_s));
+        println!("encode serial   n={n:<7} {}", bench::fmt_time(st.median_s));
+        let st = bench::quick(|| {
+            bench::black_box(zorder::encode_points_pool(&pts, d, 4.0, 10, &pool));
+        });
+        println!(
+            "encode pool({}) n={n:<7} {}",
+            pool.threads(),
+            bench::fmt_time(st.median_s)
+        );
         let codes = zorder::encode_points(&pts, d, 4.0, 10);
         let st = bench::quick(|| {
             bench::black_box(zorder::argsort_codes(&codes));

@@ -1,23 +1,31 @@
 //! Table 3 bench: wall-clock of naive / flash / mamba / zeta attention,
-//! forward and forward+backward, across sequence lengths.
+//! forward and forward+backward, across sequence lengths and worker-pool
+//! sizes (every row is timed at threads=1 and at the pool size).
 //!
-//!   cargo bench --bench table3_time [-- --max-len N]
+//!   cargo bench --bench table3_time [-- --max-len N] [-- --threads T]
 //!
 //! Prints the same rows as the paper's Table 3 (time in ms; our testbed is
 //! CPU so absolute numbers differ — the shape of the comparison is the
-//! reproduced result). Equivalent to `zeta exp table3`.
+//! reproduced result) plus the parallel-speedup summary, and writes the
+//! machine-readable BENCH_table3.json. Equivalent to `zeta exp table3`.
+//! Pool size defaults to ZETA_THREADS / auto-detect.
 
 use zeta::exp;
 
 fn main() {
     let mut opts = exp::Opts::default();
-    // Default cap keeps the bench run short on the 1-core testbed; override
+    // Default cap keeps the bench run short on small testbeds; override
     // with `-- --max-len N` to regenerate the full table.
     opts.max_len = 8192;
     let args: Vec<String> = std::env::args().collect();
     if let Some(i) = args.iter().position(|a| a == "--max-len") {
         if let Some(v) = args.get(i + 1).and_then(|v| v.parse().ok()) {
             opts.max_len = v;
+        }
+    }
+    if let Some(i) = args.iter().position(|a| a == "--threads") {
+        if let Some(v) = args.get(i + 1).and_then(|v| v.parse().ok()) {
+            opts.threads = v;
         }
     }
     opts.out_dir = "results".into();

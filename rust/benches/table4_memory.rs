@@ -1,21 +1,28 @@
 //! Table 4 bench: measured memory footprint of each attention kernel
-//! (workspace + outputs + inputs) across sequence lengths.
+//! (workspace + outputs + inputs, including per-thread pool scratch) across
+//! sequence lengths and worker-pool sizes.
 //!
-//!   cargo bench --bench table4_memory [-- --max-len N]
+//!   cargo bench --bench table4_memory [-- --max-len N] [-- --threads T]
 //!
-//! Equivalent to `zeta exp table4`.
+//! Equivalent to `zeta exp table4`. Pool size defaults to ZETA_THREADS /
+//! auto-detect.
 
 use zeta::exp;
 
 fn main() {
     let mut opts = exp::Opts::default();
-    // Default cap keeps the bench run short on the 1-core testbed; override
+    // Default cap keeps the bench run short on small testbeds; override
     // with `-- --max-len N` to regenerate the full table.
     opts.max_len = 65536;
     let args: Vec<String> = std::env::args().collect();
     if let Some(i) = args.iter().position(|a| a == "--max-len") {
         if let Some(v) = args.get(i + 1).and_then(|v| v.parse().ok()) {
             opts.max_len = v;
+        }
+    }
+    if let Some(i) = args.iter().position(|a| a == "--threads") {
+        if let Some(v) = args.get(i + 1).and_then(|v| v.parse().ok()) {
+            opts.threads = v;
         }
     }
     opts.out_dir = "results".into();

@@ -7,9 +7,15 @@
 //! un-normalized output accumulator. The backward pass stores only the
 //! per-row logsumexp `L_i` and `D_i = dout_i . o_i`, recomputing score
 //! blocks on the fly.
+//!
+//! Parallel decomposition: query blocks are independent in the forward pass
+//! (each worker owns a private score/stat scratch and writes disjoint rows
+//! of O and lse). The backward is row-parallel over queries with dq rows
+//! disjoint and per-thread dk/dv accumulators merged after the join.
 
 use super::{AttentionImpl, Grads, MemReport, Workload};
 use crate::tensor::{dot, Tensor};
+use crate::util::pool::{merge_partials, Pool, SharedSlice};
 
 pub struct Flash {
     pub block: usize,
@@ -17,7 +23,7 @@ pub struct Flash {
 
 impl Flash {
     /// Forward that also returns per-row logsumexp (for the backward pass).
-    fn fwd_with_lse(&self, w: &Workload) -> (Tensor, Vec<f32>, MemReport) {
+    fn fwd_with_lse(&self, w: &Workload, pool: &Pool) -> (Tensor, Vec<f32>, MemReport) {
         let n = w.n();
         let d = w.q.shape[1];
         let dv = w.v.shape[1];
@@ -26,82 +32,98 @@ impl Flash {
 
         let mut o = Tensor::zeros(&[n, dv]);
         let mut lse = vec![0f32; n];
-        // Per-block workspace: scores (bs x bs), running stats (bs).
-        let mut scores = vec![0f32; bs * bs];
-        let mut mstat = vec![f32::NEG_INFINITY; bs];
-        let mut lstat = vec![0f32; bs];
+        let nblocks = (n + bs - 1) / bs;
 
         let mut mem = MemReport::default();
-        mem.workspace_bytes += (scores.len() + mstat.len() + lstat.len()) * 4 + n * 4;
+        mem.workspace_bytes += n * 4; // lse
 
-        for qb in (0..n).step_by(bs) {
-            let qe = (qb + bs).min(n);
-            let rows = qe - qb;
-            for s in mstat[..rows].iter_mut() {
-                *s = f32::NEG_INFINITY;
-            }
-            for s in lstat[..rows].iter_mut() {
-                *s = 0.0;
-            }
-            for r in qb..qe {
-                for c in o.row_mut(r) {
-                    *c = 0.0;
-                }
-            }
-            for kb in (0..qe).step_by(bs) {
-                let ke = (kb + bs).min(qe);
-                // scores for this tile (causal-masked)
-                for (ri, i) in (qb..qe).enumerate() {
-                    let qi = w.q.row(i);
-                    for (ci, j) in (kb..ke).enumerate() {
-                        scores[ri * bs + ci] = if j <= i {
-                            dot(qi, w.k.row(j)) * scale
-                        } else {
-                            f32::NEG_INFINITY
-                        };
-                    }
-                }
-                // online softmax update per row
-                for (ri, i) in (qb..qe).enumerate() {
-                    let mut mb = f32::NEG_INFINITY;
-                    for ci in 0..(ke - kb) {
-                        mb = mb.max(scores[ri * bs + ci]);
-                    }
-                    if mb == f32::NEG_INFINITY {
-                        continue;
-                    }
-                    let mnew = mstat[ri].max(mb);
-                    let corr = (mstat[ri] - mnew).exp();
-                    let orow = o.row_mut(i);
-                    if corr != 1.0 {
-                        for c in orow.iter_mut() {
-                            *c *= corr;
+        // Query blocks are claimed dynamically; each worker allocates its
+        // scratch (scores tile + running stats) once and reports the bytes.
+        {
+            let osh = SharedSlice::new(&mut o.data);
+            let lsh = SharedSlice::new(&mut lse);
+            let scratch_bytes: Vec<usize> = pool.run_chunked(nblocks, 1, |queue| {
+                // Per-worker scratch: score tile + running stats, allocated
+                // once and reused across the blocks this worker claims.
+                let mut scores = vec![0f32; bs * bs];
+                let mut mstat = vec![f32::NEG_INFINITY; bs];
+                let mut lstat = vec![0f32; bs];
+                while let Some(blocks) = queue.next_chunk() {
+                    for bi in blocks {
+                        let qb = bi * bs;
+                        let qe = (qb + bs).min(n);
+                        let rows = qe - qb;
+                        // Safety: rows [qb, qe) belong to this block only.
+                        let oblk = unsafe { osh.range_mut(qb * dv..qe * dv) };
+                        let lblk = unsafe { lsh.range_mut(qb..qe) };
+                        for s in mstat[..rows].iter_mut() {
+                            *s = f32::NEG_INFINITY;
+                        }
+                        for s in lstat[..rows].iter_mut() {
+                            *s = 0.0;
+                        }
+                        for c in oblk.iter_mut() {
+                            *c = 0.0;
+                        }
+                        for kb in (0..qe).step_by(bs) {
+                            let ke = (kb + bs).min(qe);
+                            // scores for this tile (causal-masked)
+                            for (ri, i) in (qb..qe).enumerate() {
+                                let qi = w.q.row(i);
+                                for (ci, j) in (kb..ke).enumerate() {
+                                    scores[ri * bs + ci] = if j <= i {
+                                        dot(qi, w.k.row(j)) * scale
+                                    } else {
+                                        f32::NEG_INFINITY
+                                    };
+                                }
+                            }
+                            // online softmax update per row
+                            for ri in 0..rows {
+                                let mut mb = f32::NEG_INFINITY;
+                                for ci in 0..(ke - kb) {
+                                    mb = mb.max(scores[ri * bs + ci]);
+                                }
+                                if mb == f32::NEG_INFINITY {
+                                    continue;
+                                }
+                                let mnew = mstat[ri].max(mb);
+                                let corr = (mstat[ri] - mnew).exp();
+                                let orow = &mut oblk[ri * dv..(ri + 1) * dv];
+                                if corr != 1.0 {
+                                    for c in orow.iter_mut() {
+                                        *c *= corr;
+                                    }
+                                }
+                                lstat[ri] *= corr;
+                                for (ci, j) in (kb..ke).enumerate() {
+                                    let s = scores[ri * bs + ci];
+                                    if s == f32::NEG_INFINITY {
+                                        continue;
+                                    }
+                                    let p = (s - mnew).exp();
+                                    lstat[ri] += p;
+                                    let vrow = w.v.row(j);
+                                    for c in 0..dv {
+                                        orow[c] += p * vrow[c];
+                                    }
+                                }
+                                mstat[ri] = mnew;
+                            }
+                        }
+                        // normalize + record logsumexp
+                        for ri in 0..rows {
+                            let inv = 1.0 / lstat[ri];
+                            for c in oblk[ri * dv..(ri + 1) * dv].iter_mut() {
+                                *c *= inv;
+                            }
+                            lblk[ri] = mstat[ri] + lstat[ri].ln();
                         }
                     }
-                    lstat[ri] *= corr;
-                    for (ci, j) in (kb..ke).enumerate() {
-                        let s = scores[ri * bs + ci];
-                        if s == f32::NEG_INFINITY {
-                            continue;
-                        }
-                        let p = (s - mnew).exp();
-                        lstat[ri] += p;
-                        let vrow = w.v.row(j);
-                        for c in 0..dv {
-                            orow[c] += p * vrow[c];
-                        }
-                    }
-                    mstat[ri] = mnew;
                 }
-            }
-            // normalize + record logsumexp
-            for (ri, i) in (qb..qe).enumerate() {
-                let inv = 1.0 / lstat[ri];
-                for c in o.row_mut(i) {
-                    *c *= inv;
-                }
-                lse[i] = mstat[ri] + lstat[ri].ln();
-            }
+                (scores.len() + mstat.len() + lstat.len()) * 4
+            });
+            mem.workspace_bytes += scratch_bytes.iter().sum::<usize>();
         }
         mem.output_bytes = o.bytes();
         (o, lse, mem)
@@ -113,13 +135,22 @@ impl AttentionImpl for Flash {
         "flash"
     }
 
-    fn analytic_mem(&self, n: usize, d: usize, dv: usize, fb: bool) -> Option<MemReport> {
-        // Mirrors fwd_with_lse / forward_backward allocations exactly.
+    fn analytic_mem(
+        &self,
+        n: usize,
+        d: usize,
+        dv: usize,
+        fb: bool,
+        threads: usize,
+    ) -> Option<MemReport> {
+        // Mirrors fwd_with_lse / forward_backward allocations: one score
+        // tile + stats per worker, lse, and for the backward the delta
+        // vector, retained o and per-thread dk/dv accumulators.
         let bs = self.block.max(1);
-        let fwd_ws = (bs * bs + 2 * bs + n) * 4;
+        let fwd_ws = threads * (bs * bs + 2 * bs) * 4 + n * 4;
         Some(if fb {
             MemReport {
-                workspace_bytes: fwd_ws + n * 4 + n * dv * 4,
+                workspace_bytes: fwd_ws + n * 4 + n * dv * 4 + threads * (n * d + n * dv) * 4,
                 output_bytes: (2 * n * d + n * dv) * 4,
             }
         } else {
@@ -127,23 +158,28 @@ impl AttentionImpl for Flash {
         })
     }
 
-    fn forward(&self, w: &Workload) -> (Tensor, MemReport) {
-        let (o, _, mem) = self.fwd_with_lse(w);
+    fn forward_with(&self, w: &Workload, pool: &Pool) -> (Tensor, MemReport) {
+        let (o, _, mem) = self.fwd_with_lse(w, pool);
         (o, mem)
     }
 
-    fn forward_backward(&self, w: &Workload) -> (Grads, MemReport) {
+    fn forward_backward_with(&self, w: &Workload, pool: &Pool) -> (Grads, MemReport) {
         let n = w.n();
         let d = w.q.shape[1];
         let dv = w.v.shape[1];
         let scale = 1.0 / (d as f32).sqrt();
-        let bs = self.block.max(1);
-        let (o, lse, mut mem) = self.fwd_with_lse(w);
+        let (o, lse, mut mem) = self.fwd_with_lse(w, pool);
 
         // D_i = dout_i . o_i  (the FA2 "delta")
         let mut delta = vec![0f32; n];
-        for i in 0..n {
-            delta[i] = dot(w.dout.row(i), o.row(i));
+        {
+            let dsh = SharedSlice::new(&mut delta);
+            pool.parallel_for(n, pool.grain(n, 64), |rows| {
+                for i in rows {
+                    // Safety: index i claimed by exactly one chunk.
+                    unsafe { dsh.write(i, dot(w.dout.row(i), o.row(i))) };
+                }
+            });
         }
         mem.workspace_bytes += n * 4 + o.bytes(); // delta + retained o/lse
 
@@ -151,36 +187,56 @@ impl AttentionImpl for Flash {
         let mut dk = Tensor::zeros(&[n, d]);
         let mut dvt = Tensor::zeros(&[n, dv]);
 
-        // Stream over key blocks; recompute P tile-by-tile.
-        for kb in (0..n).step_by(bs) {
-            let ke = (kb + bs).min(n);
-            for i in kb..n {
-                let qi = w.q.row(i);
-                let gi = w.dout.row(i);
-                let je = ke.min(i + 1);
-                for j in kb..je {
-                    let p = (dot(qi, w.k.row(j)) * scale - lse[i]).exp();
-                    // dv_j += p * dout_i
-                    let dvj = &mut dvt.data[j * dv..(j + 1) * dv];
-                    let vj = w.v.row(j);
-                    let da = dot(gi, vj);
-                    let dsij = p * (da - delta[i]) * scale;
-                    for c in 0..dv {
-                        dvj[c] += p * gi[c];
-                    }
-                    // dq_i += dS_ij k_j ; dk_j += dS_ij q_i
-                    let kj = w.k.row(j);
-                    let dqi = &mut dq.data[i * d..(i + 1) * d];
-                    for c in 0..d {
-                        dqi[c] += dsij * kj[c];
-                    }
-                    let dkj = &mut dk.data[j * d..(j + 1) * d];
-                    for c in 0..d {
-                        dkj[c] += dsij * qi[c];
+        // Row-parallel over queries, recomputing P tile-by-tile: dq rows
+        // are disjoint; dk/dv scatter over keys, so workers accumulate into
+        // private buffers merged after the join. The key-block tiling of
+        // the serial kernel is kept inside each claimed row chunk so K/V
+        // tiles stay cache-resident.
+        let bs = self.block.max(1);
+        let grain = pool.grain(n, 16);
+        let parts: Vec<(Vec<f32>, Vec<f32>)> = {
+            let dqsh = SharedSlice::new(&mut dq.data);
+            pool.run_chunked(n, grain, |queue| {
+                let mut dk_local = vec![0f32; n * d];
+                let mut dv_local = vec![0f32; n * dv];
+                while let Some(rows) = queue.next_chunk() {
+                    for kb in (0..rows.end).step_by(bs) {
+                        let ke = (kb + bs).min(rows.end);
+                        for i in rows.start.max(kb)..rows.end {
+                            let qi = w.q.row(i);
+                            let gi = w.dout.row(i);
+                            // Safety: row i claimed by exactly one chunk.
+                            let dqi = unsafe { dqsh.range_mut(i * d..(i + 1) * d) };
+                            let je = ke.min(i + 1);
+                            for j in kb..je {
+                                let p = (dot(qi, w.k.row(j)) * scale - lse[i]).exp();
+                                let vj = w.v.row(j);
+                                let da = dot(gi, vj);
+                                let dsij = p * (da - delta[i]) * scale;
+                                // dv_j += p * dout_i
+                                let dvj = &mut dv_local[j * dv..(j + 1) * dv];
+                                for c in 0..dv {
+                                    dvj[c] += p * gi[c];
+                                }
+                                // dq_i += dS_ij k_j ; dk_j += dS_ij q_i
+                                let kj = w.k.row(j);
+                                for c in 0..d {
+                                    dqi[c] += dsij * kj[c];
+                                }
+                                let dkj = &mut dk_local[j * d..(j + 1) * d];
+                                for c in 0..d {
+                                    dkj[c] += dsij * qi[c];
+                                }
+                            }
+                        }
                     }
                 }
-            }
-        }
+                (dk_local, dv_local)
+            })
+        };
+        merge_partials(&mut dk.data, parts.iter().map(|(dk_p, _)| dk_p.as_slice()));
+        merge_partials(&mut dvt.data, parts.iter().map(|(_, dv_p)| dv_p.as_slice()));
+        mem.workspace_bytes += parts.len() * (n * d + n * dv) * 4;
         mem.output_bytes = dq.bytes() + dk.bytes() + dvt.bytes();
         (Grads { dq, dk, dv: dvt }, mem)
     }
@@ -228,5 +284,19 @@ mod tests {
         let (o1, _) = Flash { block: 4 }.forward(&w);
         let (o2, _) = Flash { block: 64 }.forward(&w);
         assert!(o1.max_abs_diff(&o2) < 1e-5);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let w = Workload::random(129, 8, 8, 12);
+        let f = Flash { block: 16 };
+        let (os, _) = f.forward_with(&w, &Pool::serial());
+        let (op, _) = f.forward_with(&w, &Pool::new(4));
+        assert!(os.max_abs_diff(&op) < 1e-5);
+        let (gs, _) = f.forward_backward_with(&w, &Pool::serial());
+        let (gp, _) = f.forward_backward_with(&w, &Pool::new(4));
+        assert!(gs.dq.max_abs_diff(&gp.dq) < 1e-4);
+        assert!(gs.dk.max_abs_diff(&gp.dk) < 1e-4);
+        assert!(gs.dv.max_abs_diff(&gp.dv) < 1e-4);
     }
 }

@@ -1,4 +1,5 @@
-//! Rust-native attention kernels — the efficiency-benchmark substrate.
+//! Rust-native attention kernels — the parallel efficiency-benchmark
+//! substrate.
 //!
 //! The paper's Tables 3 and 4 time four implementations on a GPU (Torch
 //! attention, FlashAttention, Mamba, ZETA/Triton). Our testbed is CPU, so
@@ -13,9 +14,34 @@
 //!            O(N log N) time, O(N·k) memory.
 //!   mamba  — selective-SSM scan baseline. O(N) time, O(1)-per-step memory.
 //!
-//! Every implementation reports a `MemReport` whose `workspace_bytes` is the
-//! *actual* sum of buffer bytes it allocated, so Table 4 is measured, not
-//! modeled.
+//! ## Execution model
+//!
+//! Every kernel runs on the shared worker pool ([`crate::util::pool::Pool`],
+//! `ZETA_THREADS` knob). The paper's central systems claim — Z-order
+//! sorting makes top-k selection *parallel*, all queries searched
+//! simultaneously — is realized here as:
+//!
+//! * **row-parallel forwards**: queries (flash: query blocks, mamba: value
+//!   channels) are split into chunks claimed dynamically off a lock-free
+//!   queue, each worker writing disjoint output rows;
+//! * **chunk-parallel backwards**: gradients that scatter across keys
+//!   (`dk`, `dv`) accumulate into per-thread buffers merged once after the
+//!   scope joins, so there is no locking on the hot path;
+//! * **`threads = 1` degrades to the old serial loops** — the determinism
+//!   gate in `rust/tests/parallel_determinism.rs` pins parallel output to
+//!   serial output within 1e-4 for all four kernels.
+//!
+//! The [`AttentionImpl`] trait carries both the single-problem path
+//! (`forward_with` / `forward_backward_with`, explicit pool) and a batched
+//! multi-head path ([`MultiWorkload`], `forward_batch` /
+//! `forward_backward_batch`) whose default implementations loop the
+//! single-head kernels so every implementation stays correct by
+//! construction.
+//!
+//! Every implementation reports a [`MemReport`] whose `workspace_bytes` is
+//! the *actual* sum of buffer bytes it allocated — including the per-thread
+//! scratch and gradient accumulators — so Table 4 stays measured, not
+//! modeled, under the pool.
 
 pub mod flash;
 pub mod mamba;
@@ -23,6 +49,7 @@ pub mod naive;
 pub mod zeta;
 
 use crate::tensor::Tensor;
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
 /// One attention problem instance (single head; batch = repeat).
@@ -53,6 +80,68 @@ impl Workload {
     }
 }
 
+/// A batched multi-head attention workload: `batch × heads` independent
+/// single-head problems stored head-major, row block `p` of each tensor
+/// holding problem `p`'s `(N, ·)` matrix.
+///
+/// This is the serving/training shape: the coordinator batches requests and
+/// every layer runs all heads of all sequences through one kernel call.
+pub struct MultiWorkload {
+    pub batch: usize,
+    pub heads: usize,
+    pub q: Tensor,    // (batch*heads*N, d)
+    pub k: Tensor,    // (batch*heads*N, d)
+    pub v: Tensor,    // (batch*heads*N, dv)
+    pub dout: Tensor, // (batch*heads*N, dv)
+}
+
+impl MultiWorkload {
+    pub fn random(batch: usize, heads: usize, n: usize, d: usize, dv: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let rows = batch * heads * n;
+        MultiWorkload {
+            batch,
+            heads,
+            q: Tensor::randn(&[rows, d], &mut rng, 1.0),
+            k: Tensor::randn(&[rows, d], &mut rng, 1.0),
+            v: Tensor::randn(&[rows, dv], &mut rng, 1.0),
+            dout: Tensor::randn(&[rows, dv], &mut rng, 1.0),
+        }
+    }
+
+    /// Independent single-head problems in this workload.
+    pub fn num_problems(&self) -> usize {
+        self.batch * self.heads
+    }
+
+    /// Sequence length N of each problem.
+    pub fn seq_len(&self) -> usize {
+        let p = self.num_problems().max(1);
+        self.q.shape[0] / p
+    }
+
+    pub fn input_bytes(&self) -> usize {
+        self.q.bytes() + self.k.bytes() + self.v.bytes()
+    }
+
+    /// Materialize problem `idx` as a standalone [`Workload`] (copies the
+    /// four row blocks; the single-head kernels own their inputs).
+    pub fn problem(&self, idx: usize) -> Workload {
+        assert!(idx < self.num_problems());
+        let n = self.seq_len();
+        let slice_rows = |t: &Tensor| -> Tensor {
+            let w = t.shape[1];
+            Tensor::from_vec(&[n, w], t.data[idx * n * w..(idx + 1) * n * w].to_vec())
+        };
+        Workload {
+            q: slice_rows(&self.q),
+            k: slice_rows(&self.k),
+            v: slice_rows(&self.v),
+            dout: slice_rows(&self.dout),
+        }
+    }
+}
+
 /// Gradients w.r.t. the workload inputs.
 pub struct Grads {
     pub dq: Tensor,
@@ -64,7 +153,8 @@ pub struct Grads {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MemReport {
     /// Bytes of intermediate buffers actually allocated by the kernel
-    /// (excludes inputs and final outputs).
+    /// (excludes inputs and final outputs). Under the pool this includes
+    /// every worker's scratch and per-thread gradient accumulators.
     pub workspace_bytes: usize,
     /// Bytes of outputs (o, or grads for fwd+bwd).
     pub output_bytes: usize,
@@ -81,16 +171,88 @@ impl MemReport {
 }
 
 /// The interface every benchmark implementation provides.
+///
+/// Implementations supply the pool-aware `*_with` methods; the pool-free
+/// `forward` / `forward_backward` wrappers run on the process-global pool
+/// ([`Pool::global`], `ZETA_THREADS`). The batched multi-head entry points
+/// default to looping the single-head path, so a new kernel is correct on
+/// batched workloads before it is ever specialized.
 pub trait AttentionImpl {
     fn name(&self) -> &'static str;
-    /// Forward only: returns output (N, dv) and memory report.
-    fn forward(&self, w: &Workload) -> (Tensor, MemReport);
-    /// Forward + backward: returns grads and memory report.
-    fn forward_backward(&self, w: &Workload) -> (Grads, MemReport);
+
+    /// Forward only on an explicit pool: returns output (N, dv) + memory.
+    fn forward_with(&self, w: &Workload, pool: &Pool) -> (Tensor, MemReport);
+
+    /// Forward + backward on an explicit pool: returns grads + memory.
+    fn forward_backward_with(&self, w: &Workload, pool: &Pool) -> (Grads, MemReport);
+
+    /// Forward on the process-global pool.
+    fn forward(&self, w: &Workload) -> (Tensor, MemReport) {
+        self.forward_with(w, Pool::global())
+    }
+
+    /// Forward + backward on the process-global pool.
+    fn forward_backward(&self, w: &Workload) -> (Grads, MemReport) {
+        self.forward_backward_with(w, Pool::global())
+    }
+
     /// Analytic memory model for problem sizes too expensive to *execute*
-    /// on this testbed (Table 4's starred rows). None = always measure.
-    fn analytic_mem(&self, _n: usize, _d: usize, _dv: usize, _fb: bool) -> Option<MemReport> {
+    /// on this testbed (Table 4's starred rows). `threads` is the pool size
+    /// whose per-worker scratch should be modeled. None = always measure.
+    fn analytic_mem(
+        &self,
+        _n: usize,
+        _d: usize,
+        _dv: usize,
+        _fb: bool,
+        _threads: usize,
+    ) -> Option<MemReport> {
         None
+    }
+
+    /// Batched multi-head forward: output is `(batch*heads*N, dv)` with the
+    /// same head-major row-block layout as the inputs. Default: loop the
+    /// single-head path; `workspace_bytes` reports the peak across problems
+    /// (buffers are freed between heads), `output_bytes` the sum.
+    fn forward_batch(&self, mw: &MultiWorkload, pool: &Pool) -> (Tensor, MemReport) {
+        let p = mw.num_problems();
+        let n = mw.seq_len();
+        let dv = mw.v.shape[1];
+        let mut o = Tensor::zeros(&[p * n, dv]);
+        let mut mem = MemReport::default();
+        for idx in 0..p {
+            let wl = mw.problem(idx);
+            let head_copy = wl.input_bytes() + wl.dout.bytes();
+            let (oh, mh) = self.forward_with(&wl, pool);
+            o.data[idx * n * dv..(idx + 1) * n * dv].copy_from_slice(&oh.data);
+            mem.workspace_bytes = mem.workspace_bytes.max(mh.workspace_bytes + head_copy);
+            mem.output_bytes += mh.output_bytes;
+        }
+        (o, mem)
+    }
+
+    /// Batched multi-head forward + backward; grads share the inputs'
+    /// head-major layout. Default: loop the single-head path.
+    fn forward_backward_batch(&self, mw: &MultiWorkload, pool: &Pool) -> (Grads, MemReport) {
+        let p = mw.num_problems();
+        let n = mw.seq_len();
+        let d = mw.q.shape[1];
+        let dv = mw.v.shape[1];
+        let mut dq = Tensor::zeros(&[p * n, d]);
+        let mut dk = Tensor::zeros(&[p * n, d]);
+        let mut dvt = Tensor::zeros(&[p * n, dv]);
+        let mut mem = MemReport::default();
+        for idx in 0..p {
+            let wl = mw.problem(idx);
+            let head_copy = wl.input_bytes() + wl.dout.bytes();
+            let (g, mh) = self.forward_backward_with(&wl, pool);
+            dq.data[idx * n * d..(idx + 1) * n * d].copy_from_slice(&g.dq.data);
+            dk.data[idx * n * d..(idx + 1) * n * d].copy_from_slice(&g.dk.data);
+            dvt.data[idx * n * dv..(idx + 1) * n * dv].copy_from_slice(&g.dv.data);
+            mem.workspace_bytes = mem.workspace_bytes.max(mh.workspace_bytes + head_copy);
+            mem.output_bytes += mh.output_bytes;
+        }
+        (Grads { dq, dk, dv: dvt }, mem)
     }
 }
 
@@ -124,5 +286,48 @@ where
             "grad[{i}]: fd {fd} vs analytic {}",
             analytic[i]
         );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multi_workload_problem_extracts_row_blocks() {
+        let mw = MultiWorkload::random(2, 3, 8, 4, 5, 7);
+        assert_eq!(mw.num_problems(), 6);
+        assert_eq!(mw.seq_len(), 8);
+        let w2 = mw.problem(2);
+        assert_eq!(w2.q.shape, vec![8, 4]);
+        assert_eq!(w2.v.shape, vec![8, 5]);
+        assert_eq!(w2.q.data[..], mw.q.data[2 * 8 * 4..3 * 8 * 4]);
+        assert_eq!(w2.dout.data[..], mw.dout.data[2 * 8 * 5..3 * 8 * 5]);
+    }
+
+    #[test]
+    fn default_batch_matches_per_head_forward() {
+        let mw = MultiWorkload::random(2, 2, 16, 8, 4, 3);
+        let pool = Pool::serial();
+        let imp = naive::Naive;
+        let (o, _) = imp.forward_batch(&mw, &pool);
+        assert_eq!(o.shape, vec![4 * 16, 4]);
+        for idx in 0..mw.num_problems() {
+            let (oh, _) = imp.forward_with(&mw.problem(idx), &pool);
+            let got = &o.data[idx * 16 * 4..(idx + 1) * 16 * 4];
+            assert_eq!(got, &oh.data[..]);
+        }
+    }
+
+    #[test]
+    fn default_batch_backward_shapes_and_agreement() {
+        let mw = MultiWorkload::random(1, 3, 12, 6, 4, 5);
+        let pool = Pool::serial();
+        let imp = flash::Flash { block: 8 };
+        let (g, _) = imp.forward_backward_batch(&mw, &pool);
+        assert_eq!(g.dq.shape, vec![3 * 12, 6]);
+        assert_eq!(g.dv.shape, vec![3 * 12, 4]);
+        let (g0, _) = imp.forward_backward_with(&mw.problem(0), &pool);
+        assert_eq!(&g.dq.data[..12 * 6], &g0.dq.data[..]);
     }
 }

@@ -1,46 +1,59 @@
 //! Naive causal softmax attention — the "Torch Attention" baseline of
 //! Tables 3–4: materializes the full (N, N) score matrix in both passes.
+//!
+//! Parallel decomposition: every query row is independent in the forward
+//! pass (disjoint rows of A and O), and the backward splits into a
+//! row-parallel dS/dV phase (per-thread dV accumulators merged at the end),
+//! a row-parallel dQ phase and a column-parallel dK phase.
 
 use super::{AttentionImpl, Grads, MemReport, Workload};
 use crate::tensor::{dot, Tensor};
+use crate::util::pool::{merge_partials, Pool, SharedSlice};
 
 pub struct Naive;
 
 impl Naive {
     /// Returns (output, attention matrix) — the bwd pass reuses A.
-    fn fwd_full(&self, w: &Workload) -> (Tensor, Tensor) {
+    fn fwd_full(&self, w: &Workload, pool: &Pool) -> (Tensor, Tensor) {
         let n = w.n();
         let d = w.q.shape[1];
         let dv = w.v.shape[1];
         let scale = 1.0 / (d as f32).sqrt();
         let mut a = Tensor::zeros(&[n, n]);
         let mut o = Tensor::zeros(&[n, dv]);
-        for i in 0..n {
-            let qi = w.q.row(i);
-            let arow = &mut a.data[i * n..(i + 1) * n];
-            let mut maxv = f32::NEG_INFINITY;
-            for j in 0..=i {
-                let s = dot(qi, w.k.row(j)) * scale;
-                arow[j] = s;
-                maxv = maxv.max(s);
-            }
-            let mut z = 0.0;
-            for v in arow[..=i].iter_mut() {
-                *v = (*v - maxv).exp();
-                z += *v;
-            }
-            let inv = 1.0 / z;
-            for v in arow[..=i].iter_mut() {
-                *v *= inv;
-            }
-            let orow = &mut o.data[i * dv..(i + 1) * dv];
-            for j in 0..=i {
-                let aij = arow[j];
-                let vrow = w.v.row(j);
-                for c in 0..dv {
-                    orow[c] += aij * vrow[c];
+        {
+            let ash = SharedSlice::new(&mut a.data);
+            let osh = SharedSlice::new(&mut o.data);
+            pool.parallel_for(n, pool.grain(n, 8), |rows| {
+                for i in rows {
+                    let qi = w.q.row(i);
+                    // Safety: row i is claimed by exactly one chunk.
+                    let arow = unsafe { ash.range_mut(i * n..(i + 1) * n) };
+                    let orow = unsafe { osh.range_mut(i * dv..(i + 1) * dv) };
+                    let mut maxv = f32::NEG_INFINITY;
+                    for j in 0..=i {
+                        let s = dot(qi, w.k.row(j)) * scale;
+                        arow[j] = s;
+                        maxv = maxv.max(s);
+                    }
+                    let mut z = 0.0;
+                    for v in arow[..=i].iter_mut() {
+                        *v = (*v - maxv).exp();
+                        z += *v;
+                    }
+                    let inv = 1.0 / z;
+                    for v in arow[..=i].iter_mut() {
+                        *v *= inv;
+                    }
+                    for j in 0..=i {
+                        let aij = arow[j];
+                        let vrow = w.v.row(j);
+                        for c in 0..dv {
+                            orow[c] += aij * vrow[c];
+                        }
+                    }
                 }
-            }
+            });
         }
         (o, a)
     }
@@ -51,12 +64,20 @@ impl AttentionImpl for Naive {
         "naive"
     }
 
-    fn analytic_mem(&self, n: usize, d: usize, dv: usize, fb: bool) -> Option<MemReport> {
-        // fwd: A (N,N); fwd+bwd: A + dS (N,N each) + retained o.
+    fn analytic_mem(
+        &self,
+        n: usize,
+        d: usize,
+        dv: usize,
+        fb: bool,
+        threads: usize,
+    ) -> Option<MemReport> {
+        // fwd: A (N,N); fwd+bwd: A + dS (N,N each) + retained o + the
+        // per-thread dV accumulators of the parallel backward.
         let quad = n * n * 4;
         Some(if fb {
             MemReport {
-                workspace_bytes: 2 * quad + n * dv * 4,
+                workspace_bytes: 2 * quad + n * dv * 4 + threads * n * dv * 4,
                 output_bytes: (2 * n * d + n * dv) * 4,
             }
         } else {
@@ -64,77 +85,106 @@ impl AttentionImpl for Naive {
         })
     }
 
-    fn forward(&self, w: &Workload) -> (Tensor, MemReport) {
-        let (o, a) = self.fwd_full(w);
+    fn forward_with(&self, w: &Workload, pool: &Pool) -> (Tensor, MemReport) {
+        let (o, a) = self.fwd_full(w, pool);
         let mut mem = MemReport::default();
         mem.add(&a); // the O(N^2) matrix is workspace
         mem.output_bytes = o.bytes();
         (o, mem)
     }
 
-    fn forward_backward(&self, w: &Workload) -> (Grads, MemReport) {
+    fn forward_backward_with(&self, w: &Workload, pool: &Pool) -> (Grads, MemReport) {
         let n = w.n();
         let d = w.q.shape[1];
         let dv = w.v.shape[1];
         let scale = 1.0 / (d as f32).sqrt();
-        let (o, a) = self.fwd_full(w);
+        let (o, a) = self.fwd_full(w, pool);
 
         let mut dq = Tensor::zeros(&[n, d]);
         let mut dk = Tensor::zeros(&[n, d]);
         let mut dvt = Tensor::zeros(&[n, dv]);
         let mut ds = Tensor::zeros(&[n, n]); // O(N^2) workspace again
+        let grain = pool.grain(n, 8);
 
+        // Phase 1 (row-parallel over i): dS rows are disjoint; dv_j scatters
+        // across j, so each worker accumulates into a private buffer.
         // dv_j = sum_i A_ij dout_i ; dA_ij = dout_i . v_j
         // dS_ij = A_ij (dA_ij - sum_l A_il dA_il)
-        for i in 0..n {
-            let gi = w.dout.row(i);
-            let arow = &a.data[i * n..(i + 1) * n];
-            // rowdot = sum_l A_il (dout_i . v_l) = dout_i . o_i
-            let rowdot = dot(gi, o.row(i));
-            let dsrow = &mut ds.data[i * n..(i + 1) * n];
-            for j in 0..=i {
-                let da = dot(gi, w.v.row(j));
-                dsrow[j] = arow[j] * (da - rowdot);
-                // accumulate dv
-                let dvj = &mut dvt.data[j * dv..(j + 1) * dv];
-                for c in 0..dv {
-                    dvj[c] += arow[j] * gi[c];
+        let dv_parts: Vec<Vec<f32>> = {
+            let dssh = SharedSlice::new(&mut ds.data);
+            pool.run_chunked(n, grain, |queue| {
+                let mut dv_local = vec![0f32; n * dv];
+                while let Some(rows) = queue.next_chunk() {
+                    for i in rows {
+                        let gi = w.dout.row(i);
+                        let arow = &a.data[i * n..(i + 1) * n];
+                        // rowdot = sum_l A_il (dout_i . v_l) = dout_i . o_i
+                        let rowdot = dot(gi, o.row(i));
+                        // Safety: row i claimed by exactly one chunk.
+                        let dsrow = unsafe { dssh.range_mut(i * n..(i + 1) * n) };
+                        for j in 0..=i {
+                            let da = dot(gi, w.v.row(j));
+                            dsrow[j] = arow[j] * (da - rowdot);
+                            let dvj = &mut dv_local[j * dv..(j + 1) * dv];
+                            for c in 0..dv {
+                                dvj[c] += arow[j] * gi[c];
+                            }
+                        }
+                    }
                 }
-            }
+                dv_local
+            })
+        };
+        merge_partials(&mut dvt.data, dv_parts.iter().map(|p| p.as_slice()));
+
+        // Phase 2 (row-parallel): dq_i = scale * sum_j dS_ij k_j.
+        {
+            let dqsh = SharedSlice::new(&mut dq.data);
+            pool.parallel_for(n, grain, |rows| {
+                for i in rows {
+                    let dsrow = &ds.data[i * n..(i + 1) * n];
+                    // Safety: row i claimed by exactly one chunk.
+                    let dqi = unsafe { dqsh.range_mut(i * d..(i + 1) * d) };
+                    for j in 0..=i {
+                        let s = dsrow[j] * scale;
+                        if s == 0.0 {
+                            continue;
+                        }
+                        let kj = w.k.row(j);
+                        for c in 0..d {
+                            dqi[c] += s * kj[c];
+                        }
+                    }
+                }
+            });
         }
-        // dq_i = scale * sum_j dS_ij k_j ; dk_j = scale * sum_i dS_ij q_i
-        for i in 0..n {
-            let dsrow = &ds.data[i * n..(i + 1) * n];
-            let dqi = &mut dq.data[i * d..(i + 1) * d];
-            for j in 0..=i {
-                let s = dsrow[j] * scale;
-                if s == 0.0 {
-                    continue;
+
+        // Phase 3 (column-parallel): dk_j = scale * sum_i dS_ij q_i.
+        {
+            let dksh = SharedSlice::new(&mut dk.data);
+            pool.parallel_for(n, grain, |cols| {
+                for j in cols {
+                    // Safety: column j claimed by exactly one chunk.
+                    let dkj = unsafe { dksh.range_mut(j * d..(j + 1) * d) };
+                    for i in j..n {
+                        let s = ds.data[i * n + j] * scale;
+                        if s == 0.0 {
+                            continue;
+                        }
+                        let qi = w.q.row(i);
+                        for c in 0..d {
+                            dkj[c] += s * qi[c];
+                        }
+                    }
                 }
-                let kj = w.k.row(j);
-                for c in 0..d {
-                    dqi[c] += s * kj[c];
-                }
-            }
-        }
-        for j in 0..n {
-            let dkj = &mut dk.data[j * d..(j + 1) * d];
-            for i in j..n {
-                let s = ds.data[i * n + j] * scale;
-                if s == 0.0 {
-                    continue;
-                }
-                let qi = w.q.row(i);
-                for c in 0..d {
-                    dkj[c] += s * qi[c];
-                }
-            }
+            });
         }
 
         let mut mem = MemReport::default();
         mem.add(&a);
         mem.add(&ds);
         mem.workspace_bytes += o.bytes(); // o is retained for the backward
+        mem.workspace_bytes += dv_parts.iter().map(|p| p.len() * 4).sum::<usize>();
         mem.output_bytes = dq.bytes() + dk.bytes() + dvt.bytes();
         (Grads { dq, dk, dv: dvt }, mem)
     }
@@ -196,5 +246,18 @@ mod tests {
         let (_, m2) = Naive.forward(&w2);
         let ratio = m2.workspace_bytes as f64 / m1.workspace_bytes as f64;
         assert!((ratio - 4.0).abs() < 0.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let w = Workload::random(97, 8, 6, 11);
+        let (os, _) = Naive.forward_with(&w, &Pool::serial());
+        let (op, _) = Naive.forward_with(&w, &Pool::new(4));
+        assert!(os.max_abs_diff(&op) < 1e-5);
+        let (gs, _) = Naive.forward_backward_with(&w, &Pool::serial());
+        let (gp, _) = Naive.forward_backward_with(&w, &Pool::new(4));
+        assert!(gs.dq.max_abs_diff(&gp.dq) < 1e-4);
+        assert!(gs.dk.max_abs_diff(&gp.dk) < 1e-4);
+        assert!(gs.dv.max_abs_diff(&gp.dv) < 1e-4);
     }
 }

@@ -6,9 +6,19 @@
 //! mask -> Adaptive Cauchy-Softmax over the k candidates + the history-mean
 //! smoothing token. O(N log N) time (the sort; everything else is O(N·k)),
 //! O(N·k) memory.
+//!
+//! Parallel decomposition (the paper's claim that Z-order sorting makes
+//! top-k selection parallel — "all queries searched simultaneously"):
+//! Morton encoding, the per-query binary search + window scan, and the
+//! Cauchy-softmax accumulation are all split by query chunks over the
+//! shared pool; every worker writes disjoint candidate/output rows. Only
+//! the O(N) radix sort and the O(N·d) history-mean prefix scans stay
+//! serial. The backward is query-parallel with per-thread dK/dV
+//! accumulators merged once after the join.
 
 use super::{AttentionImpl, Grads, MemReport, Workload};
 use crate::tensor::{sqdist, Tensor};
+use crate::util::pool::{merge_partials, Pool, SharedSlice};
 use crate::zorder;
 
 pub struct ZetaNative {
@@ -42,62 +52,88 @@ impl ZetaNative {
     /// Slice the first d_k dims of q/k as the low-dimensional projection.
     /// (In the full system the projection is learned at L2; for the kernel
     /// benchmark a fixed projection is the honest equivalent.)
-    fn project(&self, x: &Tensor) -> Vec<f32> {
+    fn project(&self, x: &Tensor, pool: &Pool) -> Vec<f32> {
         let n = x.shape[0];
         let d = x.shape[1];
         let dk = self.d_k.min(d);
         let mut out = vec![0f32; n * self.d_k];
-        for i in 0..n {
-            out[i * self.d_k..i * self.d_k + dk].copy_from_slice(&x.row(i)[..dk]);
+        let wdk = self.d_k;
+        {
+            let osh = SharedSlice::new(&mut out);
+            pool.parallel_for(n, pool.grain(n, 256), |rows| {
+                for i in rows {
+                    // Safety: row i claimed by exactly one chunk.
+                    let orow = unsafe { osh.range_mut(i * wdk..(i + 1) * wdk) };
+                    orow[..dk].copy_from_slice(&x.row(i)[..dk]);
+                }
+            });
         }
         out
     }
 
-    fn search(&self, ql: &[f32], kl: &[f32], n: usize) -> (Candidates, usize) {
+    fn search(&self, ql: &[f32], kl: &[f32], n: usize, pool: &Pool) -> (Candidates, usize) {
         let bits = zorder::bits_for_dim(self.d_k);
-        let qc = zorder::encode_points(ql, self.d_k, self.range, bits);
-        let kc = zorder::encode_points(kl, self.d_k, self.range, bits);
-        let perm = zorder::argsort_codes(&kc); // O(N) radix sort
+        let qc = zorder::encode_points_pool(ql, self.d_k, self.range, bits, pool);
+        let kc = zorder::encode_points_pool(kl, self.d_k, self.range, bits, pool);
+        let perm = zorder::argsort_codes(&kc); // O(N) radix sort (serial)
         let sorted: Vec<u32> = perm.iter().map(|&p| kc[p as usize]).collect();
 
         let mut idx = vec![u32::MAX; n * self.k];
         let half = self.window / 2;
-        let mut cand: Vec<(u32, u32)> = Vec::with_capacity(self.window);
-        for i in 0..n {
-            let limit = (i / self.chunk) * self.chunk; // causal bound
-            if limit == 0 {
-                continue;
-            }
-            // binary search for insertion position of q's code
-            let ins = sorted.partition_point(|&c| c < qc[i]);
-            let lo = ins.saturating_sub(half);
-            let hi = (ins + half).min(n);
-            cand.clear();
-            for s in lo..hi {
-                let pos = perm[s];
-                if (pos as usize) < limit {
-                    let dz = (sorted[s] as i64 - qc[i] as i64).unsigned_abs() as u32;
-                    cand.push((dz, pos));
+        let kk_cap = self.k;
+        // Query-parallel search: each worker owns a private candidate
+        // scratch and writes disjoint rows of the index table.
+        let grain = pool.grain(n, 32);
+        let cand_ws: usize = {
+            let ish = SharedSlice::new(&mut idx);
+            let ws: Vec<usize> = pool.run_chunked(n, grain, |queue| {
+                let mut cand: Vec<(u32, u32)> = Vec::with_capacity(self.window);
+                while let Some(rows) = queue.next_chunk() {
+                    for i in rows {
+                        let limit = (i / self.chunk) * self.chunk; // causal bound
+                        if limit == 0 {
+                            continue;
+                        }
+                        // binary search for insertion position of q's code
+                        let ins = sorted.partition_point(|&c| c < qc[i]);
+                        let lo = ins.saturating_sub(half);
+                        let hi = (ins + half).min(n);
+                        cand.clear();
+                        for s in lo..hi {
+                            let pos = perm[s];
+                            if (pos as usize) < limit {
+                                let dz =
+                                    (sorted[s] as i64 - qc[i] as i64).unsigned_abs() as u32;
+                                cand.push((dz, pos));
+                            }
+                        }
+                        // keep the k candidates nearest along the curve
+                        let kk = kk_cap.min(cand.len());
+                        if kk > 0 {
+                            if cand.len() > kk {
+                                cand.select_nth_unstable(kk - 1);
+                            }
+                            // Safety: row i claimed by exactly one chunk.
+                            let irow =
+                                unsafe { ish.range_mut(i * kk_cap..(i + 1) * kk_cap) };
+                            for (slot, &(_, pos)) in cand[..kk].iter().enumerate() {
+                                irow[slot] = pos;
+                            }
+                        }
+                    }
                 }
-            }
-            // keep the k candidates nearest along the curve
-            let kk = self.k.min(cand.len());
-            if kk > 0 {
-                if cand.len() > kk {
-                    cand.select_nth_unstable(kk - 1);
-                }
-                for (slot, &(_, pos)) in cand[..kk].iter().enumerate() {
-                    idx[i * self.k + slot] = pos;
-                }
-            }
-        }
-        let ws = (qc.len() + kc.len() + perm.len() + sorted.len()) * 4
-            + cand.capacity() * 8;
+                cand.capacity() * 8
+            });
+            ws.iter().sum()
+        };
+        let ws =
+            (qc.len() + kc.len() + perm.len() + sorted.len()) * 4 + cand_ws;
         (Candidates { idx, k: self.k }, ws)
     }
 
     /// Causal inclusive running means of the low-dim keys and values
-    /// (the smoothing token of paper §3.4).
+    /// (the smoothing token of paper §3.4). Prefix scans stay serial —
+    /// O(N·d), negligible next to the O(N·k·d) attention phases.
     fn history_means(&self, kl: &[f32], v: &Tensor, n: usize) -> (Vec<f32>, Vec<f32>) {
         let dk = self.d_k;
         let dv = v.shape[1];
@@ -124,57 +160,74 @@ impl ZetaNative {
     fn fwd_full(
         &self,
         w: &Workload,
+        pool: &Pool,
     ) -> (Tensor, Candidates, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, usize) {
         let n = w.n();
         let dv = w.v.shape[1];
         let dk = self.d_k;
-        let ql = self.project(&w.q);
-        let kl = self.project(&w.k);
-        let (cands, search_ws) = self.search(&ql, &kl, n);
+        let ql = self.project(&w.q, pool);
+        let kl = self.project(&w.k, pool);
+        let (cands, search_ws) = self.search(&ql, &kl, n, pool);
         let (km, vm) = self.history_means(&kl, &w.v, n);
 
         let mut o = Tensor::zeros(&[n, dv]);
         let mut zsum = vec![0f32; n]; // normalizers, kept for bwd
-        for i in 0..n {
-            let qi = &ql[i * dk..(i + 1) * dk];
-            // scores over candidates + smoothing token
-            let mut z = 0.0f32;
-            let base = i * cands.k;
-            for slot in 0..cands.k {
-                let j = cands.idx[base + slot];
-                if j == u32::MAX {
-                    break;
+        // Query-parallel Cauchy-softmax accumulation: o rows and zsum
+        // entries are disjoint per query. Each worker caches its candidate
+        // scores so every Cauchy score is computed exactly once.
+        let score_ws: usize = {
+            let osh = SharedSlice::new(&mut o.data);
+            let zsh = SharedSlice::new(&mut zsum);
+            let ws: Vec<usize> = pool.run_chunked(n, pool.grain(n, 32), |queue| {
+                let mut scores = vec![0f32; cands.k];
+                while let Some(rows) = queue.next_chunk() {
+                    for i in rows {
+                        let qi = &ql[i * dk..(i + 1) * dk];
+                        // scores over candidates + smoothing token
+                        let mut z = 0.0f32;
+                        let base = i * cands.k;
+                        let mut nc = 0;
+                        for slot in 0..cands.k {
+                            let j = cands.idx[base + slot];
+                            if j == u32::MAX {
+                                break;
+                            }
+                            let jj = j as usize;
+                            let s = 1.0
+                                / (sqdist(qi, &kl[jj * dk..(jj + 1) * dk]) + self.eps);
+                            scores[slot] = s;
+                            z += s;
+                            nc = slot + 1;
+                        }
+                        let sm =
+                            1.0 / (sqdist(qi, &km[i * dk..(i + 1) * dk]) + self.eps);
+                        z += sm;
+                        // Safety: index/row i claimed by exactly one chunk.
+                        unsafe { zsh.write(i, z) };
+                        let inv = 1.0 / z;
+                        let orow = unsafe { osh.range_mut(i * dv..(i + 1) * dv) };
+                        for slot in 0..nc {
+                            let jj = cands.idx[base + slot] as usize;
+                            let a = scores[slot] * inv;
+                            let vr = w.v.row(jj);
+                            for c in 0..dv {
+                                orow[c] += a * vr[c];
+                            }
+                        }
+                        let am = sm * inv;
+                        for c in 0..dv {
+                            orow[c] += am * vm[i * dv + c];
+                        }
+                    }
                 }
-                let jj = j as usize;
-                let s = 1.0 / (sqdist(qi, &kl[jj * dk..(jj + 1) * dk]) + self.eps);
-                z += s;
-            }
-            let sm = 1.0 / (sqdist(qi, &km[i * dk..(i + 1) * dk]) + self.eps);
-            z += sm;
-            zsum[i] = z;
-            let inv = 1.0 / z;
-            let orow = o.row_mut(i);
-            for slot in 0..cands.k {
-                let j = cands.idx[base + slot];
-                if j == u32::MAX {
-                    break;
-                }
-                let jj = j as usize;
-                let s = 1.0 / (sqdist(qi, &kl[jj * dk..(jj + 1) * dk]) + self.eps);
-                let a = s * inv;
-                let vr = w.v.row(jj);
-                for c in 0..dv {
-                    orow[c] += a * vr[c];
-                }
-            }
-            let am = sm * inv;
-            for c in 0..dv {
-                orow[c] += am * vm[i * dv + c];
-            }
-        }
+                scores.len() * 4
+            });
+            ws.iter().sum()
+        };
         let ws = search_ws
             + (ql.len() + kl.len() + km.len() + vm.len() + zsum.len()) * 4
-            + cands.idx.len() * 4;
+            + cands.idx.len() * 4
+            + score_ws;
         (o, cands, ql, kl, km, vm, zsum, ws)
     }
 }
@@ -184,18 +237,18 @@ impl AttentionImpl for ZetaNative {
         "zeta"
     }
 
-    fn forward(&self, w: &Workload) -> (Tensor, MemReport) {
-        let (o, _, _, _, _, _, _, ws) = self.fwd_full(w);
+    fn forward_with(&self, w: &Workload, pool: &Pool) -> (Tensor, MemReport) {
+        let (o, _, _, _, _, _, _, ws) = self.fwd_full(w, pool);
         let mem = MemReport { workspace_bytes: ws, output_bytes: o.bytes() };
         (o, mem)
     }
 
-    fn forward_backward(&self, w: &Workload) -> (Grads, MemReport) {
+    fn forward_backward_with(&self, w: &Workload, pool: &Pool) -> (Grads, MemReport) {
         let n = w.n();
         let dv = w.v.shape[1];
         let dk = self.d_k;
         let d = w.q.shape[1];
-        let (o, cands, ql, kl, km, vm, zsum, ws) = self.fwd_full(w);
+        let (o, cands, ql, kl, km, vm, zsum, ws) = self.fwd_full(w, pool);
 
         // Gradients in the low-dim space; mapped back to the first d_k
         // coordinates of q/k (the projection is a fixed slice).
@@ -207,79 +260,110 @@ impl AttentionImpl for ZetaNative {
         let mut vm_suffix = vec![0f32; n * dv];
         let mut km_suffix = vec![0f32; n * dk];
 
-        for i in 0..n {
-            let qi = &ql[i * dk..(i + 1) * dk];
-            let gi = w.dout.row(i);
-            let oi = o.row(i);
-            let z = zsum[i];
-            let base = i * cands.k;
+        // Query-parallel main loop: dql / km_suffix / vm_suffix rows are
+        // disjoint per query; dkl / dvt scatter across candidate keys, so
+        // workers accumulate into private buffers merged after the join.
+        let grain = pool.grain(n, 32);
+        let parts: Vec<(Vec<f32>, Vec<f32>)> = {
+            let dqlsh = SharedSlice::new(&mut dql);
+            let kmsh = SharedSlice::new(&mut km_suffix);
+            let vmsh = SharedSlice::new(&mut vm_suffix);
+            pool.run_chunked(n, grain, |queue| {
+                let mut dkl_local = vec![0f32; n * dk];
+                let mut dvt_local = vec![0f32; n * dv];
+                while let Some(rows) = queue.next_chunk() {
+                    for i in rows {
+                        let qi = &ql[i * dk..(i + 1) * dk];
+                        let gi = w.dout.row(i);
+                        let oi = o.row(i);
+                        let z = zsum[i];
+                        let base = i * cands.k;
 
-            let mut dq_acc = [0f32; 16];
-            debug_assert!(dk <= 16);
-            for slot in 0..=cands.k {
-                // slot == cands.k is the smoothing token
-                let (kj, vj, jj): (&[f32], &[f32], Option<usize>) = if slot == cands.k {
-                    (&km[i * dk..(i + 1) * dk], &vm[i * dv..(i + 1) * dv], None)
-                } else {
-                    let j = cands.idx[base + slot];
-                    if j == u32::MAX {
-                        continue;
-                    }
-                    let jj = j as usize;
-                    (
-                        &kl[jj * dk..(jj + 1) * dk],
-                        &w.v.data[jj * dv..(jj + 1) * dv],
-                        Some(jj),
-                    )
-                };
-                let delta = sqdist(qi, kj) + self.eps;
-                let s = 1.0 / delta;
-                let a = s / z;
-                // dL/dS = g . (v_j - o_i) / Z ; dL/ddelta = -dL/dS * s^2
-                let mut gdot = 0.0;
-                for c in 0..dv {
-                    gdot += gi[c] * (vj[c] - oi[c]);
-                }
-                let ds = gdot / z;
-                let ddelta = -ds * s * s;
-                // dq += ddelta * 2 (q - k); dk_j -= ddelta * 2 (q - k)
-                match jj {
-                    Some(j) => {
-                        let dkj = &mut dkl[j * dk..(j + 1) * dk];
+                        let mut dq_acc = [0f32; 16];
+                        debug_assert!(dk <= 16);
+                        for slot in 0..=cands.k {
+                            // slot == cands.k is the smoothing token
+                            let (kj, vj, jj): (&[f32], &[f32], Option<usize>) =
+                                if slot == cands.k {
+                                    (
+                                        &km[i * dk..(i + 1) * dk],
+                                        &vm[i * dv..(i + 1) * dv],
+                                        None,
+                                    )
+                                } else {
+                                    let j = cands.idx[base + slot];
+                                    if j == u32::MAX {
+                                        continue;
+                                    }
+                                    let jj = j as usize;
+                                    (
+                                        &kl[jj * dk..(jj + 1) * dk],
+                                        &w.v.data[jj * dv..(jj + 1) * dv],
+                                        Some(jj),
+                                    )
+                                };
+                            let delta = sqdist(qi, kj) + self.eps;
+                            let s = 1.0 / delta;
+                            let a = s / z;
+                            // dL/dS = g . (v_j - o_i) / Z ; dL/ddelta = -dL/dS * s^2
+                            let mut gdot = 0.0;
+                            for c in 0..dv {
+                                gdot += gi[c] * (vj[c] - oi[c]);
+                            }
+                            let ds = gdot / z;
+                            let ddelta = -ds * s * s;
+                            // dq += ddelta * 2 (q - k); dk_j -= ddelta * 2 (q - k)
+                            match jj {
+                                Some(j) => {
+                                    let dkj = &mut dkl_local[j * dk..(j + 1) * dk];
+                                    for c in 0..dk {
+                                        let diff = 2.0 * (qi[c] - kj[c]) * ddelta;
+                                        dq_acc[c] += diff;
+                                        dkj[c] -= diff;
+                                    }
+                                    let dvj = &mut dvt_local[j * dv..(j + 1) * dv];
+                                    for c in 0..dv {
+                                        dvj[c] += a * gi[c];
+                                    }
+                                }
+                                None => {
+                                    // smoothing token: gradient flows into the
+                                    // running means; defer via suffix
+                                    // accumulators (rows disjoint per query).
+                                    // Safety: row i claimed by one chunk.
+                                    let kms = unsafe {
+                                        kmsh.range_mut(i * dk..(i + 1) * dk)
+                                    };
+                                    for c in 0..dk {
+                                        let diff = 2.0 * (qi[c] - kj[c]) * ddelta;
+                                        dq_acc[c] += diff;
+                                        kms[c] -= diff;
+                                    }
+                                    let vms = unsafe {
+                                        vmsh.range_mut(i * dv..(i + 1) * dv)
+                                    };
+                                    for c in 0..dv {
+                                        vms[c] += a * gi[c];
+                                    }
+                                }
+                            }
+                        }
+                        // Safety: row i claimed by exactly one chunk.
+                        let dqli = unsafe { dqlsh.range_mut(i * dk..(i + 1) * dk) };
                         for c in 0..dk {
-                            let diff = 2.0 * (qi[c] - kj[c]) * ddelta;
-                            dq_acc[c] += diff;
-                            dkj[c] -= diff;
-                        }
-                        let dvj = &mut dvt.data[j * dv..(j + 1) * dv];
-                        for c in 0..dv {
-                            dvj[c] += a * gi[c];
-                        }
-                    }
-                    None => {
-                        // smoothing token: gradient flows into the running
-                        // means; defer via suffix accumulators.
-                        let kms = &mut km_suffix[i * dk..(i + 1) * dk];
-                        for c in 0..dk {
-                            let diff = 2.0 * (qi[c] - kj[c]) * ddelta;
-                            dq_acc[c] += diff;
-                            kms[c] -= diff;
-                        }
-                        let vms = &mut vm_suffix[i * dv..(i + 1) * dv];
-                        for c in 0..dv {
-                            vms[c] += a * gi[c];
+                            dqli[c] += dq_acc[c];
                         }
                     }
                 }
-            }
-            for c in 0..dk {
-                dql[i * dk + c] += dq_acc[c];
-            }
-        }
+                (dkl_local, dvt_local)
+            })
+        };
+        merge_partials(&mut dkl, parts.iter().map(|(dkl_p, _)| dkl_p.as_slice()));
+        merge_partials(&mut dvt.data, parts.iter().map(|(_, dvt_p)| dvt_p.as_slice()));
 
         // Propagate history-mean gradients: contribution of row i spreads to
         // all positions j <= i with weight 1/(i+1). Reverse prefix sum of
-        // (suffix_i / (i+1)).
+        // (suffix_i / (i+1)) — inherently sequential, O(N·d), left serial.
         let mut acc_v = vec![0f32; dv];
         let mut acc_k = vec![0f32; dk];
         for i in (0..n).rev() {
@@ -309,9 +393,12 @@ impl AttentionImpl for ZetaNative {
             dkt.row_mut(i)[..dcopy].copy_from_slice(&dkl[i * dk..i * dk + dcopy]);
         }
 
+        let partial_bytes: usize =
+            parts.iter().map(|(a, b)| (a.len() + b.len()) * 4).sum();
         let mem = MemReport {
             workspace_bytes: ws
                 + (dql.len() + dkl.len() + vm_suffix.len() + km_suffix.len()) * 4
+                + partial_bytes
                 + o.bytes(),
             output_bytes: dq.bytes() + dkt.bytes() + dvt.bytes(),
         };
@@ -432,5 +519,19 @@ mod tests {
         let (_, m2) = z.forward(&Workload::random(4096, 8, 8, 4));
         let ratio = m2.workspace_bytes as f64 / m1.workspace_bytes as f64;
         assert!(ratio < 5.0, "ratio {ratio}"); // ~4x for 4x N
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let z = ZetaNative { chunk: 32, ..ZetaNative::default() };
+        let w = Workload::random(512, 16, 8, 13);
+        let (os, _) = z.forward_with(&w, &Pool::serial());
+        let (op, _) = z.forward_with(&w, &Pool::new(4));
+        assert!(os.max_abs_diff(&op) < 1e-5);
+        let (gs, _) = z.forward_backward_with(&w, &Pool::serial());
+        let (gp, _) = z.forward_backward_with(&w, &Pool::new(4));
+        assert!(gs.dq.max_abs_diff(&gp.dq) < 1e-4);
+        assert!(gs.dk.max_abs_diff(&gp.dk) < 1e-4);
+        assert!(gs.dv.max_abs_diff(&gp.dv) < 1e-4);
     }
 }

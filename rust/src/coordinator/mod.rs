@@ -19,6 +19,10 @@
 //!   and fans results back out.
 //! * Backpressure: beyond `queue_cap` in-flight requests, `infer` fails
 //!   fast with a Busy error instead of growing the queue without bound.
+//! * The scheduler owns a worker-pool handle ([`crate::util::pool::Pool`],
+//!   sized by `ServerConfig::threads` / `ZETA_THREADS`): padding and
+//!   fan-out of large batches is split across the pool instead of running
+//!   serially on the scheduler thread.
 
 pub mod batcher;
 pub mod metrics;
@@ -31,6 +35,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::{Engine, HostTensor};
+use crate::util::pool::{Pool, SharedSlice};
 use batcher::{Batcher, Decision};
 use metrics::Metrics;
 
@@ -56,6 +61,9 @@ pub struct ServerConfig {
     pub max_delay: Duration,
     pub queue_cap: usize,
     pub seed: i32,
+    /// Worker-pool size for batch padding/fan-out on the scheduler thread
+    /// (0 = the process-global pool, i.e. `ZETA_THREADS` / auto-detect).
+    pub threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -66,6 +74,7 @@ impl Default for ServerConfig {
             max_delay: Duration::from_millis(5),
             queue_cap: 256,
             seed: 0,
+            threads: 0,
         }
     }
 }
@@ -143,6 +152,9 @@ impl Server {
                     }
                 };
 
+                // Pool handle for padding/fan-out of large batches.
+                let pool =
+                    if cfg2.threads == 0 { *Pool::global() } else { Pool::new(cfg2.threads) };
                 let mut batcher: Batcher<Job> = Batcher::new(max_batch, cfg2.max_delay);
                 loop {
                     match batcher.poll(Instant::now()) {
@@ -151,7 +163,7 @@ impl Server {
                             depth2.fetch_sub(jobs.len(), Ordering::Relaxed);
                             run_batch(
                                 &exe, &params, jobs, max_batch, seq_len, is_lm, vocab,
-                                &metrics2,
+                                &metrics2, &pool,
                             );
                             continue;
                         }
@@ -213,6 +225,13 @@ impl Server {
     }
 }
 
+/// Pad/fan-out threshold in total token elements: below this the scoped
+/// thread spawn (tens of µs per worker; the pool has no persistent
+/// threads) costs more than the memcpy it splits, so the fill stays on
+/// the scheduler thread. 1M i32 elements = 4 MB of row copies, ~hundreds
+/// of µs serially — the point where splitting starts to pay.
+const PARALLEL_PAD_MIN_ELEMS: usize = 1 << 20;
+
 #[allow(clippy::too_many_arguments)]
 fn run_batch(
     exe: &crate::runtime::Executable,
@@ -223,14 +242,32 @@ fn run_batch(
     is_lm: bool,
     vocab: usize,
     metrics: &Arc<Mutex<Metrics>>,
+    pool: &Pool,
 ) {
     let mut x = vec![0i32; max_batch * seq_len];
     let mut last_pos = vec![0usize; jobs.len()];
-    for (r, p) in jobs.iter().enumerate() {
-        let t = &p.payload.tokens;
-        let n = t.len().min(seq_len);
-        x[r * seq_len..r * seq_len + n].copy_from_slice(&t[..n]);
-        last_pos[r] = n.saturating_sub(1);
+    // Token refs only (the Job's reply channel stays on this thread).
+    let toks: Vec<&[i32]> = jobs.iter().map(|p| p.payload.tokens.as_slice()).collect();
+    for (r, t) in toks.iter().enumerate() {
+        last_pos[r] = t.len().min(seq_len).saturating_sub(1);
+    }
+    if toks.len() * seq_len >= PARALLEL_PAD_MIN_ELEMS && toks.len() >= 2 && pool.threads() > 1 {
+        // Row-parallel padding: each request row of x is disjoint.
+        let xsh = SharedSlice::new(&mut x);
+        pool.parallel_for(toks.len(), 1, |rows| {
+            for r in rows {
+                let t = toks[r];
+                let n = t.len().min(seq_len);
+                // Safety: row r claimed by exactly one chunk.
+                let row = unsafe { xsh.range_mut(r * seq_len..(r + 1) * seq_len) };
+                row[..n].copy_from_slice(&t[..n]);
+            }
+        });
+    } else {
+        for (r, t) in toks.iter().enumerate() {
+            let n = t.len().min(seq_len);
+            x[r * seq_len..r * seq_len + n].copy_from_slice(&t[..n]);
+        }
     }
     let mut inputs = vec![HostTensor::I32(vec![max_batch, seq_len], x)];
     inputs.extend(params.iter().cloned());

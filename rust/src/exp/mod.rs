@@ -19,6 +19,7 @@ use crate::runtime::Engine;
 use crate::trainer::Trainer;
 use crate::util::bench;
 use crate::util::json::Json;
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 use crate::zorder;
 
@@ -31,6 +32,10 @@ pub struct Opts {
     pub max_len: usize,
     pub out_dir: String,
     pub verbose: bool,
+    /// Pool size for the parallel kernel benchmarks (0 = the global pool,
+    /// i.e. `ZETA_THREADS` / auto-detect). Tables 3/4 report each row at
+    /// threads = 1 and threads = this value.
+    pub threads: usize,
 }
 
 impl Default for Opts {
@@ -42,7 +47,18 @@ impl Default for Opts {
             max_len: 16384,
             out_dir: "results".into(),
             verbose: false,
+            threads: 0,
         }
+    }
+}
+
+/// Thread counts benchmarked per row: serial plus the configured pool size.
+fn thread_counts(opts: &Opts) -> Vec<usize> {
+    let t = if opts.threads == 0 { Pool::global().threads() } else { opts.threads };
+    if t <= 1 {
+        vec![1]
+    } else {
+        vec![1, t]
     }
 }
 
@@ -316,48 +332,89 @@ pub fn table3(opts: &Opts) -> Result<()> {
         .collect();
     let d = 64;
     let dv = 64;
-    println!("\n== Table 3: time (ms) per op, CPU testbed ==");
+    let tcounts = thread_counts(opts);
+    println!("\n== Table 3: time (ms) per op, CPU testbed (thr = worker-pool size) ==");
     println!(
-        "{:<8}{:>12}{:>14}{:>12}{:>14}{:>12}{:>14}{:>12}{:>14}",
-        "N", "naive-F", "naive-FB", "mamba-F", "mamba-FB", "flash-F", "flash-FB", "zeta-F", "zeta-FB"
+        "{:<8}{:<5}{:>12}{:>14}{:>12}{:>14}{:>12}{:>14}{:>12}{:>14}",
+        "N", "thr", "naive-F", "naive-FB", "mamba-F", "mamba-FB", "flash-F", "flash-FB",
+        "zeta-F", "zeta-FB"
     );
     let mut rec = BTreeMap::new();
+    let mut bench_rows: Vec<Json> = Vec::new();
     for &n in &lens {
         let w = Workload::random(n, d, dv, opts.seed);
         let zeta = ZetaNative { chunk: (n / 16).max(64), ..ZetaNative::default() };
-        let mut cells: Vec<String> = Vec::new();
-        let budget = Duration::from_millis(500);
-        let mut time_impl = |im: &dyn AttentionImpl, fb: bool, cap: usize| -> String {
-            if n > cap {
-                return "    skip".into();
-            }
-            let st = if fb {
-                bench::bench(budget, 3, || {
-                    bench::black_box(im.forward_backward(&w));
-                })
-            } else {
-                bench::bench(budget, 3, || {
-                    bench::black_box(im.forward(&w));
-                })
+        for &t in &tcounts {
+            let pool = Pool::new(t);
+            let mut cells: Vec<String> = Vec::new();
+            let budget = Duration::from_millis(500);
+            let mut time_impl = |im: &dyn AttentionImpl, fb: bool, cap: usize| -> String {
+                if n > cap {
+                    return "    skip".into();
+                }
+                let st = if fb {
+                    bench::bench(budget, 3, || {
+                        bench::black_box(im.forward_backward_with(&w, &pool));
+                    })
+                } else {
+                    bench::bench(budget, 3, || {
+                        bench::black_box(im.forward_with(&w, &pool));
+                    })
+                };
+                let pass = if fb { "fb" } else { "f" };
+                rec.insert(
+                    format!("{}_{}_{}_t{}", im.name(), pass, n, t),
+                    Json::num(st.median_ms()),
+                );
+                bench_rows.push(Json::obj(vec![
+                    ("kernel", Json::str(im.name())),
+                    ("pass", Json::str(pass)),
+                    ("n", Json::num(n as f64)),
+                    ("threads", Json::num(t as f64)),
+                    ("ms", Json::num(st.median_ms())),
+                ]));
+                format!("{:>8.2}", st.median_ms())
             };
-            rec.insert(
-                format!("{}_{}_{}", im.name(), if fb { "fb" } else { "f" }, n),
-                Json::num(st.median_ms()),
-            );
-            format!("{:>8.2}", st.median_ms())
-        };
-        cells.push(time_impl(&Naive, false, NAIVE_MAX));
-        cells.push(time_impl(&Naive, true, NAIVE_MAX));
-        cells.push(time_impl(&MambaLite::default(), false, usize::MAX));
-        cells.push(time_impl(&MambaLite::default(), true, usize::MAX));
-        cells.push(time_impl(&Flash { block: 128 }, false, FLASH_MAX));
-        cells.push(time_impl(&Flash { block: 128 }, true, FLASH_MAX));
-        cells.push(time_impl(&zeta, false, usize::MAX));
-        cells.push(time_impl(&zeta, true, usize::MAX));
-        println!("{n:<8}{}", cells.join("      "));
+            cells.push(time_impl(&Naive, false, NAIVE_MAX));
+            cells.push(time_impl(&Naive, true, NAIVE_MAX));
+            cells.push(time_impl(&MambaLite::default(), false, usize::MAX));
+            cells.push(time_impl(&MambaLite::default(), true, usize::MAX));
+            cells.push(time_impl(&Flash { block: 128 }, false, FLASH_MAX));
+            cells.push(time_impl(&Flash { block: 128 }, true, FLASH_MAX));
+            cells.push(time_impl(&zeta, false, usize::MAX));
+            cells.push(time_impl(&zeta, true, usize::MAX));
+            println!("{n:<8}{t:<5}{}", cells.join("      "));
+        }
+    }
+    // Parallel-speedup summary: serial vs pooled zeta forward, largest N.
+    if let (Some(&tmax), Some(&nmax)) = (tcounts.last(), lens.last()) {
+        if tmax > 1 {
+            let k1 = format!("zeta_f_{nmax}_t1");
+            let kt = format!("zeta_f_{nmax}_t{tmax}");
+            if let (Some(a), Some(b)) = (
+                rec.get(&k1).and_then(|j| j.as_f64()),
+                rec.get(&kt).and_then(|j| j.as_f64()),
+            ) {
+                if b > 0.0 {
+                    println!(
+                        "zeta-F N={nmax}: parallel speedup {:.2}x at {tmax} threads",
+                        a / b
+                    );
+                }
+            }
+        }
     }
     println!("(skip = impractical on this testbed, analogous to the paper's OOM rows)");
-    record(opts, "table3", Json::Obj(rec))
+    record(opts, "table3", Json::Obj(rec))?;
+    // Machine-readable perf trajectory (per-kernel ms by N and threads) so
+    // future PRs can diff against this run. Lives at a fixed top-level name
+    // (the comparison anchor), so an unwritable CWD only warns — the
+    // benchmark results above are already recorded under out_dir.
+    match std::fs::write("BENCH_table3.json", Json::Arr(bench_rows).to_string()) {
+        Ok(()) => println!("wrote BENCH_table3.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_table3.json: {e}"),
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -371,46 +428,58 @@ pub fn table4(opts: &Opts) -> Result<()> {
         .collect();
     let d = 64;
     let dv = 64;
-    println!("\n== Table 4: memory (MB) per op (measured workspace + outputs + inputs) ==");
+    let tcounts = thread_counts(opts);
     println!(
-        "{:<8}{:>12}{:>14}{:>12}{:>14}{:>12}{:>14}{:>12}{:>14}",
-        "N", "naive-F", "naive-FB", "mamba-F", "mamba-FB", "flash-F", "flash-FB", "zeta-F", "zeta-FB"
+        "\n== Table 4: memory (MB) per op (measured workspace + outputs + inputs; \
+         thr = worker-pool size) =="
+    );
+    println!(
+        "{:<8}{:<5}{:>12}{:>14}{:>12}{:>14}{:>12}{:>14}{:>12}{:>14}",
+        "N", "thr", "naive-F", "naive-FB", "mamba-F", "mamba-FB", "flash-F", "flash-FB",
+        "zeta-F", "zeta-FB"
     );
     let mut rec = BTreeMap::new();
     for &n in &lens {
         let w = Workload::random(n, d, dv, opts.seed);
         let zeta = ZetaNative { chunk: (n / 16).max(64), ..ZetaNative::default() };
-        let mut cells = Vec::new();
-        let mut mem_impl = |im: &dyn AttentionImpl, fb: bool, cap: usize| -> String {
-            let mb = if n > cap {
-                // analytic model of the buffers it *would* allocate
-                let rep = im
-                    .analytic_mem(n, d, dv, fb)
-                    .expect("capped impl must provide an analytic memory model");
-                rep.total_with_inputs(&w) as f64 / 1e6
-            } else {
-                let rep = if fb { im.forward_backward(&w).1 } else { im.forward(&w).1 };
-                rep.total_with_inputs(&w) as f64 / 1e6
+        for &t in &tcounts {
+            let pool = Pool::new(t);
+            let mut cells = Vec::new();
+            let mut mem_impl = |im: &dyn AttentionImpl, fb: bool, cap: usize| -> String {
+                let mb = if n > cap {
+                    // analytic model of the buffers it *would* allocate
+                    let rep = im
+                        .analytic_mem(n, d, dv, fb, t)
+                        .expect("capped impl must provide an analytic memory model");
+                    rep.total_with_inputs(&w) as f64 / 1e6
+                } else {
+                    let rep = if fb {
+                        im.forward_backward_with(&w, &pool).1
+                    } else {
+                        im.forward_with(&w, &pool).1
+                    };
+                    rep.total_with_inputs(&w) as f64 / 1e6
+                };
+                rec.insert(
+                    format!("{}_{}_{}_t{}", im.name(), if fb { "fb" } else { "f" }, n, t),
+                    Json::num(mb),
+                );
+                if n > cap {
+                    format!("{mb:>7.1}*")
+                } else {
+                    format!("{mb:>8.1}")
+                }
             };
-            rec.insert(
-                format!("{}_{}_{}", im.name(), if fb { "fb" } else { "f" }, n),
-                Json::num(mb),
-            );
-            if n > cap {
-                format!("{mb:>7.1}*")
-            } else {
-                format!("{mb:>8.1}")
-            }
-        };
-        cells.push(mem_impl(&Naive, false, NAIVE_MAX));
-        cells.push(mem_impl(&Naive, true, NAIVE_MAX));
-        cells.push(mem_impl(&MambaLite::default(), false, usize::MAX));
-        cells.push(mem_impl(&MambaLite::default(), true, usize::MAX));
-        cells.push(mem_impl(&Flash { block: 128 }, false, FLASH_MAX));
-        cells.push(mem_impl(&Flash { block: 128 }, true, FLASH_MAX));
-        cells.push(mem_impl(&zeta, false, usize::MAX));
-        cells.push(mem_impl(&zeta, true, usize::MAX));
-        println!("{n:<8}{}", cells.join("      "));
+            cells.push(mem_impl(&Naive, false, NAIVE_MAX));
+            cells.push(mem_impl(&Naive, true, NAIVE_MAX));
+            cells.push(mem_impl(&MambaLite::default(), false, usize::MAX));
+            cells.push(mem_impl(&MambaLite::default(), true, usize::MAX));
+            cells.push(mem_impl(&Flash { block: 128 }, false, FLASH_MAX));
+            cells.push(mem_impl(&Flash { block: 128 }, true, FLASH_MAX));
+            cells.push(mem_impl(&zeta, false, usize::MAX));
+            cells.push(mem_impl(&zeta, true, usize::MAX));
+            println!("{n:<8}{t:<5}{}", cells.join("      "));
+        }
     }
     println!("(* = analytic, buffer too large to allocate — the paper's OOM)");
     record(opts, "table4", Json::Obj(rec))

@@ -10,9 +10,24 @@
 //!   ([`coordinator`]) and regenerates every table/figure of the paper
 //!   (`zeta exp …`, `rust/benches/`).
 //!
+//! ## Parallel execution core
+//!
+//! Every hot path runs on a shared scoped worker pool
+//! ([`util::pool::Pool`], sized by the `ZETA_THREADS` env var, auto-detected
+//! when unset, serial at 1). The four native attention kernels
+//! ([`attention`]) are row-parallel in the forward pass and chunk-parallel
+//! in the backward pass (per-thread gradient accumulators merged after the
+//! join); the ZETA pipeline additionally parallelizes Morton encoding and
+//! the per-query window search ([`zorder`]); the serving coordinator's
+//! scheduler uses the pool for batch padding/fan-out. [`attention`] also
+//! carries a batched multi-head workload type
+//! ([`attention::MultiWorkload`]) so one kernel call covers
+//! `batch × heads` problems.
+//!
 //! Substrates implemented in-tree (offline std-only build): JSON, PRNG,
-//! property tests, bench harness ([`util`]), Morton codec ([`zorder`]),
-//! native CPU attention kernels for the efficiency study ([`attention`]).
+//! property tests, bench harness, worker pool ([`util`]), Morton codec
+//! ([`zorder`]), native CPU attention kernels for the efficiency study
+//! ([`attention`]).
 
 pub mod attention;
 pub mod coordinator;

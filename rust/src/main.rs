@@ -53,6 +53,7 @@ fn opts_from_flags(f: &HashMap<String, String>) -> Result<exp::Opts> {
     o.eval_batches = flag_usize(f, "eval-batches", o.eval_batches)?;
     o.seed = flag_usize(f, "seed", o.seed as usize)? as u64;
     o.max_len = flag_usize(f, "max-len", o.max_len)?;
+    o.threads = flag_usize(f, "threads", o.threads)?;
     if let Some(out) = f.get("out") {
         o.out_dir = out.clone();
     }
@@ -96,9 +97,17 @@ commands:
   info                         PJRT platform info
   train  --preset P [--steps N] [--seed S] [--ckpt PATH] [--eval-batches B]
   serve  --preset P [--requests N] [--clients C] [--max-delay-ms D]
-  exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--verbose]
+  exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--threads T]
+         [--verbose]
          NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3,
                  table1, table2, table3, table4, table5, table6, all}
+
+parallelism:
+  All attention kernels run on a shared worker pool sized by the
+  ZETA_THREADS env var (unset or 0 = auto-detect hardware threads).
+  `exp table3` / `exp table4` report every row at threads=1 and at the
+  pool size (`--threads T` overrides), and `exp table3` writes the
+  machine-readable BENCH_table3.json perf trajectory.
 
 `make artifacts` builds the core presets; `make artifacts-full` builds the
 experiment sweeps (required for fig2*/table1/2/5/6).";
@@ -168,11 +177,16 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         ..Default::default()
     };
     let srv = Server::start(cfg, None)?;
-    println!("serving {preset}: {clients} clients x {} requests", requests / clients);
+    let clients = clients.max(1);
+    // Distribute the remainder so exactly `requests` are served (65 reqs /
+    // 4 clients = 17+16+16+16, not 4x16).
+    let base = requests / clients;
+    let extra = requests % clients;
+    println!("serving {preset}: {clients} clients, {requests} requests total");
 
-    let per_client = requests / clients.max(1);
     let mut joins = Vec::new();
     for c in 0..clients {
+        let per_client = base + usize::from(c < extra);
         let client = srv.client();
         joins.push(std::thread::spawn(move || -> Result<()> {
             let mut rng = Rng::new(c as u64);

@@ -1,7 +1,9 @@
 //! Std-only utility substrates (the offline build has no third-party crates
-//! beyond `xla`/`anyhow`): JSON, PRNG, property testing, benchmarking.
+//! beyond the `xla` stub and `anyhow`): JSON, PRNG, property tests,
+//! benchmarking, and the shared worker pool every parallel kernel runs on.
 
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;

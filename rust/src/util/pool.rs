@@ -1,0 +1,339 @@
+//! Shared worker pool: the parallel execution substrate for every kernel,
+//! the zorder codec, the experiment harness and the serving coordinator.
+//!
+//! Design (std-only, no rayon offline):
+//!
+//! * A [`Pool`] is a *thread-count policy*, cheap to copy and share. Work is
+//!   executed on scoped threads (`std::thread::scope`) spawned per parallel
+//!   region, so closures may borrow the caller's stack freely and no
+//!   `'static` boxing or channel plumbing is needed. At `threads = 1`
+//!   everything degrades to a plain inline loop — bit-identical to the old
+//!   serial kernels.
+//! * Chunks are handed out by a lock-free [`ChunkQueue`] (one atomic
+//!   `fetch_add` per chunk), so triangular workloads (causal attention row
+//!   costs grow with i) load-balance without a scheduler thread.
+//! * Per-thread accounting: workers accumulate into a stack-local
+//!   [`WorkerStats`] and results are merged once after the scope joins —
+//!   `MemReport` stays *measured* with zero locks on the hot path.
+//! * [`SharedSlice`] lets workers write disjoint rows of one output buffer
+//!   (the idiom rayon's `par_chunks_mut` provides); callers assert
+//!   disjointness at the single `unsafe` call site.
+//!
+//! The global pool reads `ZETA_THREADS` once (unset or `0` = auto-detect
+//! from `available_parallelism`).
+
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Stack-local per-worker statistics, merged after a parallel region joins.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WorkerStats {
+    /// Bytes of scratch buffers this worker actually allocated.
+    pub workspace_bytes: usize,
+}
+
+/// Thread-count policy handle. `Copy` so kernels, the experiment harness and
+/// the coordinator can share one without reference-counting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Strictly serial pool (the old single-threaded behaviour).
+    pub fn serial() -> Pool {
+        Pool::new(1)
+    }
+
+    /// Thread count from `ZETA_THREADS` (unset / 0 / unparsable = number of
+    /// available hardware threads).
+    pub fn auto() -> Pool {
+        let detected = || {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        };
+        match std::env::var("ZETA_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+            Some(0) | None => Pool::new(detected()),
+            Some(t) => Pool::new(t),
+        }
+    }
+
+    /// The process-wide pool (env read once, first use wins).
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(Pool::auto)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// A sensible dynamic-stealing grain for `n` items: small enough for
+    /// load balance (≈8 chunks per worker), never below `min`.
+    pub fn grain(&self, n: usize, min: usize) -> usize {
+        let target = n / (self.threads * 8).max(1);
+        target.max(min).max(1)
+    }
+
+    /// Run `f(worker_id)` on up to `workers` scoped threads and collect the
+    /// results in worker order. `workers` is clamped to the pool size; with
+    /// one effective worker, `f(0)` runs inline on the caller's thread.
+    pub fn run_workers<R, F>(&self, workers: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let workers = workers.clamp(1, self.threads);
+        if workers == 1 {
+            return vec![f(0)];
+        }
+        std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = (0..workers).map(|id| s.spawn(move || f(id))).collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Run `f(worker_id)` once per pool thread.
+    pub fn run<R, F>(&self, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        self.run_workers(self.threads, f)
+    }
+
+    /// One call per worker over a shared chunk queue for `0..n`: each
+    /// worker owns whatever per-worker state it builds inside `f` (scratch
+    /// buffers, gradient accumulators), drains chunks via the queue handle,
+    /// and returns a result collected in worker order. This is the one
+    /// place the worker-count formula lives — every chunk-parallel kernel
+    /// phase goes through here.
+    pub fn run_chunked<R, F>(&self, n: usize, grain: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(&ChunkQueue) -> R + Sync,
+    {
+        let grain = grain.max(1);
+        let queue = ChunkQueue::new(n, grain);
+        let workers = self.threads.min(((n + grain - 1) / grain).max(1));
+        self.run_workers(workers, |_| f(&queue))
+    }
+
+    /// Chunked parallel loop over `0..n` with per-worker stats; returns the
+    /// summed workspace bytes across workers. Chunks of `grain` indices are
+    /// claimed dynamically, so uneven per-index costs still balance.
+    pub fn parallel_for_stats<F>(&self, n: usize, grain: usize, f: F) -> usize
+    where
+        F: Fn(Range<usize>, &mut WorkerStats) + Sync,
+    {
+        if n == 0 {
+            return 0;
+        }
+        let stats = self.run_chunked(n, grain, |queue| {
+            let mut st = WorkerStats::default();
+            while let Some(r) = queue.next_chunk() {
+                f(r, &mut st);
+            }
+            st
+        });
+        stats.iter().map(|s| s.workspace_bytes).sum()
+    }
+
+    /// Chunked parallel loop over `0..n` (no accounting).
+    pub fn parallel_for<F>(&self, n: usize, grain: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        self.parallel_for_stats(n, grain, |r, _| f(r));
+    }
+}
+
+/// Lock-free dynamic chunk dispenser over `0..n`.
+pub struct ChunkQueue {
+    next: AtomicUsize,
+    n: usize,
+    grain: usize,
+}
+
+impl ChunkQueue {
+    pub fn new(n: usize, grain: usize) -> ChunkQueue {
+        ChunkQueue { next: AtomicUsize::new(0), n, grain: grain.max(1) }
+    }
+
+    /// Claim the next chunk, or `None` when the range is exhausted.
+    pub fn next_chunk(&self) -> Option<Range<usize>> {
+        let start = self.next.fetch_add(self.grain, Ordering::Relaxed);
+        if start >= self.n {
+            None
+        } else {
+            Some(start..(start + self.grain).min(self.n))
+        }
+    }
+}
+
+/// A mutable slice shared across workers that write *disjoint* regions
+/// (e.g. each worker owns a distinct row range of an output matrix).
+///
+/// The `unsafe` obligation is concentrated in [`SharedSlice::range_mut`] /
+/// [`SharedSlice::write`]: callers must guarantee that concurrently-claimed
+/// regions never overlap. Every use in this crate derives the region from a
+/// chunk claimed off a [`ChunkQueue`], which hands out each index exactly
+/// once.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> SharedSlice<'a, T> {
+        SharedSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of `range`.
+    ///
+    /// # Safety
+    /// Concurrent callers must claim non-overlapping ranges.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, range: Range<usize>) -> &mut [T] {
+        assert!(range.start <= range.end && range.end <= self.len, "range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// Concurrent callers must write non-overlapping indices.
+    pub unsafe fn write(&self, idx: usize, value: T) {
+        assert!(idx < self.len, "index out of bounds");
+        *self.ptr.add(idx) = value;
+    }
+}
+
+/// Merge per-worker accumulator buffers into `dst` (`dst[i] += part[i]`).
+/// The single merge path for every kernel's per-thread gradient
+/// accumulators; the serial path (one worker) reduces to a plain add,
+/// preserving the old accumulation order exactly.
+pub fn merge_partials<'a, I>(dst: &mut [f32], partials: I)
+where
+    I: IntoIterator<Item = &'a [f32]>,
+{
+    for part in partials {
+        debug_assert_eq!(part.len(), dst.len());
+        for (d, s) in dst.iter_mut().zip(part.iter()) {
+            *d += *s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let p = Pool::serial();
+        assert_eq!(p.threads(), 1);
+        let main_id = std::thread::current().id();
+        let ids = p.run(|w| (w, std::thread::current().id()));
+        assert_eq!(ids.len(), 1);
+        assert_eq!(ids[0].0, 0);
+        assert_eq!(ids[0].1, main_id);
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        for threads in [1usize, 2, 4] {
+            let p = Pool::new(threads);
+            let n = 1037;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            p.parallel_for(n, 16, |r| {
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn stats_sum_across_workers() {
+        let p = Pool::new(4);
+        let total = p.parallel_for_stats(100, 10, |r, st| {
+            st.workspace_bytes += r.len();
+        });
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn shared_slice_disjoint_rows() {
+        let n = 64;
+        let d = 8;
+        let mut buf = vec![0f32; n * d];
+        {
+            let sh = SharedSlice::new(&mut buf);
+            let p = Pool::new(4);
+            p.parallel_for(n, 4, |rows| {
+                for i in rows {
+                    let row = unsafe { sh.range_mut(i * d..(i + 1) * d) };
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v = (i * d + j) as f32;
+                    }
+                }
+            });
+        }
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn chunk_queue_exhausts() {
+        let q = ChunkQueue::new(10, 3);
+        let mut seen = Vec::new();
+        while let Some(r) = q.next_chunk() {
+            seen.extend(r);
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        assert!(q.next_chunk().is_none());
+    }
+
+    #[test]
+    fn merge_partials_sums() {
+        let mut dst = vec![1.0, 2.0];
+        let parts = [vec![0.5f32, 0.5], vec![1.0, -1.0]];
+        merge_partials(&mut dst, parts.iter().map(|p| p.as_slice()));
+        assert_eq!(dst, vec![2.5, 1.5]);
+    }
+
+    #[test]
+    fn grain_never_zero() {
+        let p = Pool::new(8);
+        assert!(p.grain(0, 1) >= 1);
+        assert!(p.grain(5, 16) == 16);
+        assert!(p.grain(100_000, 1) >= 1);
+    }
+}

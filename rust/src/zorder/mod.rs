@@ -53,17 +53,38 @@ pub fn deinterleave(z: u32, d: usize, bits: u32) -> Vec<u32> {
 /// Morton-encode a batch of points (row-major `n x d`) over a fixed grid
 /// [-range, range]^d. Returns one code per point.
 pub fn encode_points(points: &[f32], d: usize, range: f32, bits: u32) -> Vec<u32> {
+    encode_points_pool(points, d, range, bits, &crate::util::pool::Pool::serial())
+}
+
+/// [`encode_points`] split by point chunks over a worker pool — encoding is
+/// embarrassingly parallel (one code per point, no shared state), which is
+/// the first stage of the paper's "all queries searched simultaneously"
+/// pipeline. `threads = 1` is exactly the serial encoder.
+pub fn encode_points_pool(
+    points: &[f32],
+    d: usize,
+    range: f32,
+    bits: u32,
+    pool: &crate::util::pool::Pool,
+) -> Vec<u32> {
+    use crate::util::pool::SharedSlice;
     assert_eq!(points.len() % d, 0);
-    let mut scratch = vec![0u32; d];
-    points
-        .chunks_exact(d)
-        .map(|p| {
-            for (s, &x) in scratch.iter_mut().zip(p) {
-                *s = quantize(x, -range, range, bits);
+    let n = points.len() / d;
+    let mut out = vec![0u32; n];
+    {
+        let osh = SharedSlice::new(&mut out);
+        pool.parallel_for(n, pool.grain(n, 512), |rows| {
+            let mut scratch = vec![0u32; d];
+            for i in rows {
+                for (s, &x) in scratch.iter_mut().zip(&points[i * d..(i + 1) * d]) {
+                    *s = quantize(x, -range, range, bits);
+                }
+                // Safety: index i claimed by exactly one chunk.
+                unsafe { osh.write(i, interleave(&scratch, bits)) };
             }
-            interleave(&scratch, bits)
-        })
-        .collect()
+        });
+    }
+    out
 }
 
 /// Morton-encode with a data-derived grid (per-dimension min/max), the
@@ -194,6 +215,18 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn encode_points_pool_matches_serial() {
+        let mut rng = Rng::new(0xE0C0);
+        let d = 3;
+        let mut pts = vec![0f32; 513 * d];
+        rng.fill_normal(&mut pts, 1.0);
+        let bits = bits_for_dim(d);
+        let serial = encode_points(&pts, d, 4.0, bits);
+        let par = encode_points_pool(&pts, d, 4.0, bits, &crate::util::pool::Pool::new(4));
+        assert_eq!(serial, par);
     }
 
     #[test]

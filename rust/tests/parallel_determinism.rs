@@ -1,0 +1,112 @@
+//! Determinism gate for the pool refactor (tier-1):
+//!
+//! 1. `flash` forward must match `naive` forward within 1e-4 on random
+//!    workloads (exact-softmax cross-kernel agreement).
+//! 2. Every kernel's parallel (threads=4) output must match its serial
+//!    (threads=1) output within tolerance, forward and forward+backward.
+//! 3. The batched multi-head path must agree with the per-head loop, and
+//!    `MemReport` must stay measured (non-zero workspace) under the pool.
+
+use zeta::attention::{all_impls, AttentionImpl, MultiWorkload, Workload};
+use zeta::util::pool::Pool;
+
+const TOL: f32 = 1e-4;
+
+#[test]
+fn flash_forward_matches_naive_on_random_workloads() {
+    use zeta::attention::{flash::Flash, naive::Naive};
+    for (seed, &n) in [33usize, 96, 257].iter().enumerate() {
+        let w = Workload::random(n, 24, 12, 100 + seed as u64);
+        let (of, _) = Flash { block: 48 }.forward(&w);
+        let (on, _) = Naive.forward(&w);
+        assert!(
+            of.max_abs_diff(&on) < TOL,
+            "flash vs naive diverged at n={n}: {}",
+            of.max_abs_diff(&on)
+        );
+    }
+}
+
+#[test]
+fn every_kernel_parallel_forward_matches_serial() {
+    let serial = Pool::serial();
+    let par = Pool::new(4);
+    let w = Workload::random(384, 32, 16, 7);
+    for imp in all_impls() {
+        let (os, ms) = imp.forward_with(&w, &serial);
+        let (op, mp) = imp.forward_with(&w, &par);
+        assert!(
+            os.max_abs_diff(&op) < TOL,
+            "{}: parallel forward diverged: {}",
+            imp.name(),
+            os.max_abs_diff(&op)
+        );
+        // MemReport stays measured (not modeled) under the pool.
+        assert!(ms.output_bytes > 0 && mp.output_bytes > 0, "{}", imp.name());
+        assert!(
+            mp.workspace_bytes > 0,
+            "{}: parallel run reported no measured workspace",
+            imp.name()
+        );
+    }
+}
+
+#[test]
+fn every_kernel_parallel_backward_matches_serial() {
+    let serial = Pool::serial();
+    let par = Pool::new(4);
+    let w = Workload::random(256, 16, 8, 21);
+    for imp in all_impls() {
+        let (gs, _) = imp.forward_backward_with(&w, &serial);
+        let (gp, _) = imp.forward_backward_with(&w, &par);
+        for (name, a, b) in [
+            ("dq", &gs.dq, &gp.dq),
+            ("dk", &gs.dk, &gp.dk),
+            ("dv", &gs.dv, &gp.dv),
+        ] {
+            assert!(
+                a.max_abs_diff(b) < TOL,
+                "{} {name}: parallel backward diverged: {}",
+                imp.name(),
+                a.max_abs_diff(b)
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_multihead_matches_per_head_loop() {
+    let pool = Pool::new(4);
+    let mw = MultiWorkload::random(2, 3, 64, 16, 8, 5);
+    let n = mw.seq_len();
+    let dv = mw.v.shape[1];
+    for imp in all_impls() {
+        let (o, mem) = imp.forward_batch(&mw, &pool);
+        assert_eq!(o.shape, vec![mw.num_problems() * n, dv], "{}", imp.name());
+        assert!(mem.workspace_bytes > 0, "{}", imp.name());
+        for idx in 0..mw.num_problems() {
+            let (oh, _) = imp.forward_with(&mw.problem(idx), &pool);
+            let got = &o.data[idx * n * dv..(idx + 1) * n * dv];
+            let maxdiff = got
+                .iter()
+                .zip(&oh.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(maxdiff < TOL, "{} head {idx}: {maxdiff}", imp.name());
+        }
+    }
+}
+
+#[test]
+fn batched_multihead_backward_shapes() {
+    let pool = Pool::new(2);
+    let mw = MultiWorkload::random(1, 4, 32, 8, 8, 9);
+    for imp in all_impls() {
+        let (g, mem) = imp.forward_backward_batch(&mw, &pool);
+        assert_eq!(g.dq.shape, vec![4 * 32, 8], "{}", imp.name());
+        assert_eq!(g.dk.shape, vec![4 * 32, 8], "{}", imp.name());
+        assert_eq!(g.dv.shape, vec![4 * 32, 8], "{}", imp.name());
+        assert!(g.dv.data.iter().all(|v| v.is_finite()), "{}", imp.name());
+        assert!(mem.output_bytes > 0, "{}", imp.name());
+    }
+}

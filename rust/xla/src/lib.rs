@@ -1,0 +1,252 @@
+//! Offline stub of the PJRT/XLA bindings the `zeta` crate links against.
+//!
+//! The container image has no PJRT plugin, so this crate provides the exact
+//! API surface `zeta::runtime` / `zeta::trainer` use:
+//!
+//! * [`Literal`] is fully functional host-side (shape + dtype-tagged data,
+//!   `vec1` / `reshape` / `to_vec` / `to_tuple`), so checkpoint round-trips
+//!   and all host-tensor plumbing work without a device.
+//! * [`PjRtClient`] constructs, but `compile` (and therefore every execute
+//!   path) returns [`Error::Unavailable`]. Callers already guard on the
+//!   presence of `artifacts/manifest.json`, which this environment lacks.
+//!
+//! Swapping in the real `xla` crate is a one-line change in
+//! `rust/Cargo.toml`; no `zeta` source changes are required.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type: carries a message, converts into `anyhow::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!("{what}: PJRT is unavailable in this offline build"))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the zeta manifest can name (plus a few extras so consumer
+/// `match` arms with a catch-all stay reachable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F32,
+    F64,
+}
+
+/// Scalar types that can cross the host/literal boundary.
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn wrap(shape: Vec<i64>, data: Vec<Self>) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+macro_rules! native_type {
+    ($t:ty, $variant:ident, $ty:expr) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            fn wrap(shape: Vec<i64>, data: Vec<Self>) -> Literal {
+                Literal::$variant(shape, data)
+            }
+            fn extract(lit: &Literal) -> Result<Vec<Self>> {
+                match lit {
+                    Literal::$variant(_, d) => Ok(d.clone()),
+                    other => Err(Error(format!(
+                        "literal is {:?}, not {:?}",
+                        other.ty(),
+                        $ty
+                    ))),
+                }
+            }
+        }
+    };
+}
+
+native_type!(f32, F32, ElementType::F32);
+native_type!(i32, I32, ElementType::S32);
+native_type!(u32, U32, ElementType::U32);
+
+/// Host-side literal: shape + dtype-tagged flat data, or a tuple.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    F32(Vec<i64>, Vec<f32>),
+    I32(Vec<i64>, Vec<i32>),
+    U32(Vec<i64>, Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::wrap(vec![data.len() as i64], data.to_vec())
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal::Tuple(parts)
+    }
+
+    fn elems(&self) -> usize {
+        match self {
+            Literal::F32(_, d) => d.len(),
+            Literal::I32(_, d) => d.len(),
+            Literal::U32(_, d) => d.len(),
+            Literal::Tuple(p) => p.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.elems() {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elems) from {} elems",
+                self.elems()
+            )));
+        }
+        let dims = dims.to_vec();
+        Ok(match self {
+            Literal::F32(_, d) => Literal::F32(dims, d),
+            Literal::I32(_, d) => Literal::I32(dims, d),
+            Literal::U32(_, d) => Literal::U32(dims, d),
+            Literal::Tuple(_) => return Err(Error("cannot reshape a tuple".into())),
+        })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(match self {
+            Literal::F32(..) => ElementType::F32,
+            Literal::I32(..) => ElementType::S32,
+            Literal::U32(..) => ElementType::U32,
+            Literal::Tuple(_) => return Err(Error("tuple literal has no element type".into())),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(p) => Ok(p.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: never constructible without a device backend).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("parse HLO text {path}")))
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Device buffer handle (stub: produced only by `execute`, which errors).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("fetch buffer"))
+    }
+}
+
+/// Compiled executable handle (stub: never constructed).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute"))
+    }
+}
+
+/// CPU client handle. Construction succeeds so `Engine::new` works for
+/// manifest-only operations; compilation reports unavailability.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (PJRT unavailable offline)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.ty().unwrap(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let lit = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn reshape_count_mismatch_fails() {
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn tuple_access() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1u32]), Literal::vec1(&[2u32])]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+        assert!(t.ty().is_err());
+    }
+
+    #[test]
+    fn client_constructs_but_cannot_compile() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
