@@ -13,7 +13,8 @@
 //! of O and lse). The backward is row-parallel over queries with dq rows
 //! disjoint and per-thread dk/dv accumulators merged after the join.
 
-use super::{AttentionImpl, Grads, MemReport, Workload};
+use super::naive::ExactKvDecode;
+use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::{dot, Tensor};
 use crate::util::pool::{merge_partials, Pool, SharedSlice};
 
@@ -161,6 +162,14 @@ impl AttentionImpl for Flash {
     fn forward_with(&self, w: &Workload, pool: &Pool) -> (Tensor, MemReport) {
         let (o, _, mem) = self.fwd_with_lse(w, pool);
         (o, mem)
+    }
+
+    /// Single-row decode has no blocking to exploit — flash shares the
+    /// exact-softmax KV-cache state with `naive` (the streaming-softmax
+    /// forward agrees with the exact row softmax within fp tolerance, as
+    /// the flash-vs-naive gates already pin).
+    fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState> {
+        Box::new(ExactKvDecode::new(d, dv))
     }
 
     fn forward_backward_with(&self, w: &Workload, pool: &Pool) -> (Grads, MemReport) {

@@ -19,7 +19,7 @@
 //! (O(n_state) per step) rather than materializing O(N·n_state) gate
 //! arrays, preserving the O(1)-in-N forward workspace.
 
-use super::{AttentionImpl, Grads, MemReport, Workload};
+use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::Tensor;
 use crate::util::pool::{Pool, SharedSlice};
 
@@ -40,6 +40,21 @@ fn softplus(x: f32) -> f32 {
     } else {
         (1.0 + x.exp()).ln()
     }
+}
+
+/// One channel's recurrence step: advance its hidden-state row by one token
+/// and return the output y contribution. Shared verbatim by the batch
+/// forwards and [`MambaDecode::step`], so decode stays bit-identical to
+/// prefill by construction.
+#[inline]
+fn scan_channel_step(dt: f32, b: &[f32], c: &[f32], ns: usize, x: f32, hrow: &mut [f32]) -> f32 {
+    let mut acc = 0.0;
+    for s in 0..ns {
+        let a = (s + 1) as f32 / ns as f32;
+        hrow[s] = (-dt * a).exp() * hrow[s] + dt * b[s] * x;
+        acc += c[s] * hrow[s];
+    }
+    acc
 }
 
 impl MambaLite {
@@ -88,13 +103,7 @@ impl MambaLite {
                     for (hi, ch) in chs.clone().enumerate() {
                         let x = vr[ch];
                         let hrow = &mut h[hi * ns..(hi + 1) * ns];
-                        let mut acc = 0.0;
-                        for s in 0..ns {
-                            let a = (s + 1) as f32 / ns as f32;
-                            let decay = (-dt * a).exp();
-                            hrow[s] = decay * hrow[s] + dt * b[s] * x;
-                            acc += c[s] * hrow[s];
-                        }
+                        let acc = scan_channel_step(dt, &b, &c, ns, x, hrow);
                         // Safety: element (t, ch) / trajectory row (t, ch)
                         // belong to this channel chunk only.
                         unsafe {
@@ -116,9 +125,64 @@ impl MambaLite {
     }
 }
 
+/// Recurrent decode state — decoding is the SSM's natural form: the live
+/// hidden state `(dv, n_state)` advances one step per token, O(dv·n_state)
+/// time and O(1)-in-N memory. The per-(token, channel) arithmetic is the
+/// same sequence of operations as the batch forward, so decode outputs are
+/// bit-identical to prefill.
+pub struct MambaDecode {
+    ns: usize,
+    d: usize,
+    dv: usize,
+    h: Vec<f32>, // (dv, ns)
+    b: Vec<f32>,
+    c: Vec<f32>,
+    t: usize,
+}
+
+impl DecodeState for MambaDecode {
+    fn step(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32], out: &mut [f32]) {
+        let (ns, d, dv) = (self.ns, self.d, self.dv);
+        debug_assert_eq!(v_t.len(), dv);
+        debug_assert_eq!(out.len(), dv);
+        // Same stand-in gate projections as `MambaLite::gates_into`.
+        let dt = softplus(q_t[0]);
+        for s in 0..ns {
+            self.b[s] = k_t[s % d] * 0.5;
+            self.c[s] = q_t[s % d] * 0.5;
+        }
+        for (ch, (&x, o)) in v_t.iter().zip(out.iter_mut()).enumerate() {
+            let hrow = &mut self.h[ch * ns..(ch + 1) * ns];
+            *o = scan_channel_step(dt, &self.b, &self.c, ns, x, hrow);
+        }
+        self.t += 1;
+    }
+
+    fn pos(&self) -> usize {
+        self.t
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.h.len() + self.b.len() + self.c.len()) * 4
+    }
+}
+
 impl AttentionImpl for MambaLite {
     fn name(&self) -> &'static str {
         "mamba"
+    }
+
+    fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState> {
+        let ns = self.n_state;
+        Box::new(MambaDecode {
+            ns,
+            d,
+            dv,
+            h: vec![0f32; dv * ns],
+            b: vec![0f32; ns],
+            c: vec![0f32; ns],
+            t: 0,
+        })
     }
 
     fn forward_with(&self, w: &Workload, pool: &Pool) -> (Tensor, MemReport) {
@@ -143,12 +207,7 @@ impl AttentionImpl for MambaLite {
                     for (hi, ch) in chs.clone().enumerate() {
                         let x = vr[ch];
                         let hrow = &mut h[hi * ns..(hi + 1) * ns];
-                        let mut acc = 0.0;
-                        for s in 0..ns {
-                            let a = (s + 1) as f32 / ns as f32;
-                            hrow[s] = (-dt * a).exp() * hrow[s] + dt * b[s] * x;
-                            acc += c[s] * hrow[s];
-                        }
+                        let acc = scan_channel_step(dt, &b, &c, ns, x, hrow);
                         // Safety: element (t, ch) owned by this chunk.
                         unsafe { ysh.write(t * dv + ch, acc) };
                     }

@@ -142,6 +142,43 @@ impl MultiWorkload {
     }
 }
 
+/// Incremental per-token decode state for one single-head attention stream
+/// — the kernel-level KV cache. Produced by [`AttentionImpl::begin_decode`];
+/// one instance per serving request, owned by the coordinator's sessions.
+///
+/// Contract (the decode-equivalence gate in
+/// `rust/tests/decode_equivalence.rs`): after ingesting tokens `0..=t` via
+/// [`DecodeState::step`], the returned output rows match rows `0..=t` of
+/// the kernel's full-sequence `forward` on the same inputs within 1e-4 —
+/// prefill and decode are two schedules of one computation.
+pub trait DecodeState: Send {
+    /// Ingest `(k_t, v_t)` at the next position and write the attention
+    /// output row for `q_t` into `out` (length `dv`).
+    fn step(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32], out: &mut [f32]);
+
+    /// Tokens ingested so far.
+    fn pos(&self) -> usize;
+
+    /// Bytes of persistent per-request state (KV cache / Z-order index /
+    /// SSM state) — the serving-memory analogue of [`MemReport`].
+    fn state_bytes(&self) -> usize;
+}
+
+/// Run a whole workload through the decode path one token at a time,
+/// returning the `(N, dv)` outputs. This is the subject of the
+/// decode-vs-prefill equivalence gate: it must match `forward` row-for-row.
+pub fn decode_full(imp: &dyn AttentionImpl, w: &Workload) -> Tensor {
+    let n = w.n();
+    let d = w.q.shape[1];
+    let dv = w.v.shape[1];
+    let mut o = Tensor::zeros(&[n, dv]);
+    let mut st = imp.begin_decode(d, dv);
+    for t in 0..n {
+        st.step(w.q.row(t), w.k.row(t), w.v.row(t), o.row_mut(t));
+    }
+    o
+}
+
 /// Gradients w.r.t. the workload inputs.
 pub struct Grads {
     pub dq: Tensor,
@@ -195,6 +232,14 @@ pub trait AttentionImpl {
     fn forward_backward(&self, w: &Workload) -> (Grads, MemReport) {
         self.forward_backward_with(w, Pool::global())
     }
+
+    /// Begin incremental decoding for a stream with q/k width `d` and value
+    /// width `dv`. Prefill stays on `forward_with` (or on `step` loops for
+    /// strict streaming); each subsequent token costs the kernel's
+    /// per-token complexity instead of a full-sequence recompute:
+    /// O(log N + k) for `zeta`, O(N) for the exact-softmax kernels, O(1)
+    /// for `mamba`.
+    fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState>;
 
     /// Analytic memory model for problem sizes too expensive to *execute*
     /// on this testbed (Table 4's starred rows). `threads` is the pool size

@@ -6,11 +6,81 @@
 //! row-parallel dS/dV phase (per-thread dV accumulators merged at the end),
 //! a row-parallel dQ phase and a column-parallel dK phase.
 
-use super::{AttentionImpl, Grads, MemReport, Workload};
+use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::{dot, Tensor};
 use crate::util::pool::{merge_partials, Pool, SharedSlice};
 
 pub struct Naive;
+
+/// Exact-softmax KV-cache decode state, shared by `naive` and `flash`: the
+/// cache grows one row per token and each step computes a single causal
+/// attention row — O(t·d) per token, versus O(t²·d) for recomputing the
+/// full forward. The per-row arithmetic (max-subtracted exp, normalize,
+/// then accumulate in key order) mirrors the naive kernel exactly, so
+/// decode outputs are bit-compatible with prefill.
+pub struct ExactKvDecode {
+    d: usize,
+    dv: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    scores: Vec<f32>,
+    t: usize,
+}
+
+impl ExactKvDecode {
+    pub fn new(d: usize, dv: usize) -> ExactKvDecode {
+        ExactKvDecode { d, dv, k: Vec::new(), v: Vec::new(), scores: Vec::new(), t: 0 }
+    }
+}
+
+impl DecodeState for ExactKvDecode {
+    fn step(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32], out: &mut [f32]) {
+        let (d, dv) = (self.d, self.dv);
+        debug_assert_eq!(q_t.len(), d);
+        debug_assert_eq!(k_t.len(), d);
+        debug_assert_eq!(v_t.len(), dv);
+        debug_assert_eq!(out.len(), dv);
+        self.k.extend_from_slice(k_t);
+        self.v.extend_from_slice(v_t);
+        let t = self.t;
+        self.t += 1;
+        let scale = 1.0 / (d as f32).sqrt();
+        self.scores.clear();
+        let mut maxv = f32::NEG_INFINITY;
+        for j in 0..=t {
+            let s = dot(q_t, &self.k[j * d..(j + 1) * d]) * scale;
+            self.scores.push(s);
+            maxv = maxv.max(s);
+        }
+        let mut z = 0.0;
+        for s in self.scores.iter_mut() {
+            *s = (*s - maxv).exp();
+            z += *s;
+        }
+        let inv = 1.0 / z;
+        for s in self.scores.iter_mut() {
+            *s *= inv;
+        }
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for j in 0..=t {
+            let a = self.scores[j];
+            let vr = &self.v[j * dv..(j + 1) * dv];
+            for (o, &vv) in out.iter_mut().zip(vr) {
+                *o += a * vv;
+            }
+        }
+    }
+
+    fn pos(&self) -> usize {
+        self.t
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.k.capacity() + self.v.capacity() + self.scores.capacity()) * 4
+    }
+}
 
 impl Naive {
     /// Returns (output, attention matrix) — the bwd pass reuses A.
@@ -91,6 +161,10 @@ impl AttentionImpl for Naive {
         mem.add(&a); // the O(N^2) matrix is workspace
         mem.output_bytes = o.bytes();
         (o, mem)
+    }
+
+    fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState> {
+        Box::new(ExactKvDecode::new(d, dv))
     }
 
     fn forward_backward_with(&self, w: &Workload, pool: &Pool) -> (Grads, MemReport) {

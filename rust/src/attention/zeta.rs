@@ -1,26 +1,41 @@
 //! ZETA native kernel: Z-order top-k Cauchy attention on CPU.
 //!
 //! This is Algorithm 1 of the paper plus the Appendix-E backward, end to
-//! end in Rust: project to d_K dims -> Morton-encode -> radix sort ->
-//! per-query binary search + window candidate scan under the chunked causal
-//! mask -> Adaptive Cauchy-Softmax over the k candidates + the history-mean
-//! smoothing token. O(N log N) time (the sort; everything else is O(N·k)),
-//! O(N·k) memory.
+//! end in Rust: project to d_K dims -> Morton-encode -> *incrementally
+//! sorted* persistent index ([`crate::zorder::index::ZIndex`]) -> per-query
+//! window candidate lookup under the chunked causal mask -> Adaptive
+//! Cauchy-Softmax over the k candidates + the history-mean smoothing token.
+//! O(N log N) time, O(N·k) memory.
+//!
+//! ## Chunk-sequential search (strictly causal selection)
+//!
+//! Keys enter the index chunk by chunk; every query in chunk `c` (causal
+//! limit `c·chunk`) searches the index frozen at exactly `c·chunk` keys.
+//! Future keys therefore can no longer perturb the candidate *window* (the
+//! seed kernel sorted all N keys up front and filtered afterwards, which
+//! let future keys crowd past keys out of the window even though their
+//! values never leaked). More importantly this is precisely the state the
+//! incremental decode path maintains, so batched prefill
+//! ([`AttentionImpl::forward_with`]) and per-token decode ([`ZetaDecode`])
+//! run the *same* selection routine over the *same* index states and agree
+//! bit-for-bit.
 //!
 //! Parallel decomposition (the paper's claim that Z-order sorting makes
 //! top-k selection parallel — "all queries searched simultaneously"):
-//! Morton encoding, the per-query binary search + window scan, and the
-//! Cauchy-softmax accumulation are all split by query chunks over the
-//! shared pool; every worker writes disjoint candidate/output rows. Only
-//! the O(N) radix sort and the O(N·d) history-mean prefix scans stay
-//! serial. The backward is query-parallel with per-thread dK/dV
-//! accumulators merged once after the join.
+//! Morton encoding is point-parallel, and within each chunk phase all
+//! queries (across all heads sharing the key order) search the frozen
+//! index concurrently; the Cauchy-softmax accumulation is query-parallel.
+//! Only the O(log N)-amortized index appends and the O(N·d) history-mean
+//! prefix scans stay serial. The backward is query-parallel with
+//! per-thread dK/dV accumulators merged once after the join.
 
-use super::{AttentionImpl, Grads, MemReport, Workload};
+use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::{sqdist, Tensor};
 use crate::util::pool::{merge_partials, Pool, SharedSlice};
 use crate::zorder;
+use crate::zorder::index::{WindowScratch, ZIndex};
 
+#[derive(Debug, Clone)]
 pub struct ZetaNative {
     /// Low dimension used for the search/scores (paper: 3).
     pub d_k: usize,
@@ -34,11 +49,27 @@ pub struct ZetaNative {
     pub eps: f32,
     /// Fixed quantization range.
     pub range: f32,
+    /// Serving mode for `forward_batch`: heads of one sequence share the
+    /// key z-ordering built from head 0's projected keys — one encode +
+    /// one incremental sort serves all `heads` candidate searches (the
+    /// paper's per-layer shared search; per-head query codes still
+    /// binary-search the shared order, and scoring always uses each head's
+    /// own keys/values). Off by default: every head sorts its own keys and
+    /// the batched path matches the per-head loop exactly.
+    pub shared_sort: bool,
 }
 
 impl Default for ZetaNative {
     fn default() -> Self {
-        ZetaNative { d_k: 3, k: 32, chunk: 64, window: 64, eps: 0.5, range: 4.0 }
+        ZetaNative {
+            d_k: 3,
+            k: 32,
+            chunk: 64,
+            window: 64,
+            eps: 0.5,
+            range: 4.0,
+            shared_sort: false,
+        }
     }
 }
 
@@ -46,6 +77,62 @@ impl Default for ZetaNative {
 struct Candidates {
     idx: Vec<u32>, // (N, k) padded with u32::MAX
     k: usize,
+}
+
+/// Score one query row: Cauchy weights over its candidate slots + the
+/// history-mean smoothing token, accumulated into `out`; returns the
+/// normalizer Z (kept for the backward). This is the single shared
+/// implementation behind both the batch accumulation and the decode step —
+/// the bit-for-bit decode == prefill contract lives here, so any change to
+/// the scoring arithmetic automatically applies to both schedules.
+///
+/// `irow` is one query's `u32::MAX`-padded candidate slot row; `kl` / `v`
+/// are the flat key-projection and value stores the slots index into.
+#[allow(clippy::too_many_arguments)]
+fn cauchy_row(
+    eps: f32,
+    irow: &[u32],
+    qi: &[f32],
+    kl: &[f32],
+    km_i: &[f32],
+    vm_i: &[f32],
+    v: &[f32],
+    dk: usize,
+    dv: usize,
+    scores: &mut [f32],
+    out: &mut [f32],
+) -> f32 {
+    let mut z = 0.0f32;
+    let mut nc = 0usize;
+    for (slot, &j) in irow.iter().enumerate() {
+        if j == u32::MAX {
+            break;
+        }
+        let jj = j as usize;
+        let s = 1.0 / (sqdist(qi, &kl[jj * dk..(jj + 1) * dk]) + eps);
+        scores[slot] = s;
+        z += s;
+        nc = slot + 1;
+    }
+    let sm = 1.0 / (sqdist(qi, km_i) + eps);
+    z += sm;
+    let inv = 1.0 / z;
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for slot in 0..nc {
+        let jj = irow[slot] as usize;
+        let a = scores[slot] * inv;
+        let vr = &v[jj * dv..(jj + 1) * dv];
+        for (o, &vv) in out.iter_mut().zip(vr) {
+            *o += a * vv;
+        }
+    }
+    let am = sm * inv;
+    for (o, &mv) in out.iter_mut().zip(vm_i) {
+        *o += am * mv;
+    }
+    z
 }
 
 impl ZetaNative {
@@ -71,64 +158,142 @@ impl ZetaNative {
         out
     }
 
+    /// Gather the top-k candidates for one query code against the frozen
+    /// index (keys strictly before the query's causal chunk limit), writing
+    /// candidate key positions into `irow` (pre-filled with `u32::MAX`).
+    /// Shared verbatim by the batch search and the incremental decode step
+    /// so both paths select identically: window entries arrive in global
+    /// sorted order, and ties in curve distance break on key position via
+    /// the `(dz, pos)` tuple order — deterministic across schedules.
+    fn select_into(
+        &self,
+        qc_i: u32,
+        index: &ZIndex,
+        scratch: &mut WindowScratch,
+        win: &mut Vec<(u32, u32)>,
+        cand: &mut Vec<(u32, u32)>,
+        irow: &mut [u32],
+    ) {
+        index.window_with(qc_i, self.window, scratch, win);
+        cand.clear();
+        for &(c, pos) in win.iter() {
+            let dz = (c as i64 - qc_i as i64).unsigned_abs() as u32;
+            cand.push((dz, pos));
+        }
+        let kk = self.k.min(cand.len());
+        if kk == 0 {
+            return;
+        }
+        if cand.len() > kk {
+            cand.select_nth_unstable(kk - 1);
+        }
+        for (slot, &(_, pos)) in cand[..kk].iter().enumerate() {
+            irow[slot] = pos;
+        }
+    }
+
+    /// Chunk-sequential candidate search over one shared persistent index.
+    /// `qcs` holds one query-code set per head sharing this key ordering
+    /// ("one sort serves `heads` searches"); `kc` is the shared key codes.
+    /// Within each chunk phase, all (head, query) pairs search the frozen
+    /// index in parallel; between phases the chunk's keys are appended.
+    /// Phases run sequentially and free their scratch at each join, so the
+    /// reported workspace is the *peak* phase, not the sum.
+    fn search_multi(&self, qcs: &[&[u32]], kc: &[u32], pool: &Pool) -> (Vec<Candidates>, usize) {
+        let n = kc.len();
+        let h = qcs.len();
+        let chunk = self.chunk.max(1);
+        let kk_cap = self.k;
+        let mut tables: Vec<Vec<u32>> = (0..h).map(|_| vec![u32::MAX; n * kk_cap]).collect();
+        let mut index = ZIndex::new();
+        let mut cand_ws = 0usize;
+        {
+            let shares: Vec<SharedSlice<u32>> =
+                tables.iter_mut().map(|t| SharedSlice::new(t.as_mut_slice())).collect();
+            // Per-worker serial fallback: below this many lookups a phase
+            // runs inline — the scoped-thread spawn (tens of µs/worker)
+            // would cost more than the window scans it splits. Small
+            // default-chunk phases therefore stay serial while benchmark
+            // configs (chunk = N/16) still parallelize every phase.
+            const PARALLEL_SEARCH_MIN: usize = 256;
+            let mut serial_scratch = WindowScratch::default();
+            let mut serial_win: Vec<(u32, u32)> = Vec::with_capacity(self.window);
+            let mut serial_cand: Vec<(u32, u32)> = Vec::with_capacity(self.window);
+            let mut cs = 0usize;
+            while cs < n {
+                let ce = (cs + chunk).min(n);
+                if cs > 0 {
+                    let span = ce - cs;
+                    let total = span * h;
+                    if total < PARALLEL_SEARCH_MIN || pool.threads() == 1 {
+                        for item in 0..total {
+                            let head = item / span;
+                            let i = cs + (item % span);
+                            // Safety: single-threaded here; rows disjoint.
+                            let irow = unsafe {
+                                shares[head].range_mut(i * kk_cap..(i + 1) * kk_cap)
+                            };
+                            self.select_into(
+                                qcs[head][i],
+                                &index,
+                                &mut serial_scratch,
+                                &mut serial_win,
+                                &mut serial_cand,
+                                irow,
+                            );
+                        }
+                        let phase_ws = (serial_win.capacity() + serial_cand.capacity()) * 8
+                            + serial_scratch.bytes();
+                        cand_ws = cand_ws.max(phase_ws);
+                    } else {
+                        let grain = pool.grain(total, 16);
+                        let ws: Vec<usize> = pool.run_chunked(total, grain, |queue| {
+                            let mut scratch = WindowScratch::default();
+                            let mut win: Vec<(u32, u32)> = Vec::with_capacity(self.window);
+                            let mut cand: Vec<(u32, u32)> = Vec::with_capacity(self.window);
+                            while let Some(items) = queue.next_chunk() {
+                                for item in items {
+                                    let head = item / span;
+                                    let i = cs + (item % span);
+                                    // Safety: row (head, i) claimed by
+                                    // exactly one chunk.
+                                    let irow = unsafe {
+                                        shares[head].range_mut(i * kk_cap..(i + 1) * kk_cap)
+                                    };
+                                    self.select_into(
+                                        qcs[head][i],
+                                        &index,
+                                        &mut scratch,
+                                        &mut win,
+                                        &mut cand,
+                                        irow,
+                                    );
+                                }
+                            }
+                            (win.capacity() + cand.capacity()) * 8 + scratch.bytes()
+                        });
+                        cand_ws = cand_ws.max(ws.iter().sum::<usize>());
+                    }
+                }
+                for &code in &kc[cs..ce] {
+                    index.append(code);
+                }
+                cs = ce;
+            }
+        }
+        let ws = index.bytes() + cand_ws;
+        let cands = tables.into_iter().map(|idx| Candidates { idx, k: kk_cap }).collect();
+        (cands, ws)
+    }
+
     fn search(&self, ql: &[f32], kl: &[f32], n: usize, pool: &Pool) -> (Candidates, usize) {
         let bits = zorder::bits_for_dim(self.d_k);
         let qc = zorder::encode_points_pool(ql, self.d_k, self.range, bits, pool);
         let kc = zorder::encode_points_pool(kl, self.d_k, self.range, bits, pool);
-        let perm = zorder::argsort_codes(&kc); // O(N) radix sort (serial)
-        let sorted: Vec<u32> = perm.iter().map(|&p| kc[p as usize]).collect();
-
-        let mut idx = vec![u32::MAX; n * self.k];
-        let half = self.window / 2;
-        let kk_cap = self.k;
-        // Query-parallel search: each worker owns a private candidate
-        // scratch and writes disjoint rows of the index table.
-        let grain = pool.grain(n, 32);
-        let cand_ws: usize = {
-            let ish = SharedSlice::new(&mut idx);
-            let ws: Vec<usize> = pool.run_chunked(n, grain, |queue| {
-                let mut cand: Vec<(u32, u32)> = Vec::with_capacity(self.window);
-                while let Some(rows) = queue.next_chunk() {
-                    for i in rows {
-                        let limit = (i / self.chunk) * self.chunk; // causal bound
-                        if limit == 0 {
-                            continue;
-                        }
-                        // binary search for insertion position of q's code
-                        let ins = sorted.partition_point(|&c| c < qc[i]);
-                        let lo = ins.saturating_sub(half);
-                        let hi = (ins + half).min(n);
-                        cand.clear();
-                        for s in lo..hi {
-                            let pos = perm[s];
-                            if (pos as usize) < limit {
-                                let dz =
-                                    (sorted[s] as i64 - qc[i] as i64).unsigned_abs() as u32;
-                                cand.push((dz, pos));
-                            }
-                        }
-                        // keep the k candidates nearest along the curve
-                        let kk = kk_cap.min(cand.len());
-                        if kk > 0 {
-                            if cand.len() > kk {
-                                cand.select_nth_unstable(kk - 1);
-                            }
-                            // Safety: row i claimed by exactly one chunk.
-                            let irow =
-                                unsafe { ish.range_mut(i * kk_cap..(i + 1) * kk_cap) };
-                            for (slot, &(_, pos)) in cand[..kk].iter().enumerate() {
-                                irow[slot] = pos;
-                            }
-                        }
-                    }
-                }
-                cand.capacity() * 8
-            });
-            ws.iter().sum()
-        };
-        let ws =
-            (qc.len() + kc.len() + perm.len() + sorted.len()) * 4 + cand_ws;
-        (Candidates { idx, k: self.k }, ws)
+        debug_assert_eq!(kc.len(), n);
+        let codes_ws = (qc.len() + kc.len()) * 4;
+        let (mut cands, ws) = self.search_multi(&[qc.as_slice()], &kc, pool);
+        (cands.pop().expect("one head"), ws + codes_ws)
     }
 
     /// Causal inclusive running means of the low-dim keys and values
@@ -155,6 +320,63 @@ impl ZetaNative {
         (km, vm)
     }
 
+    /// Adaptive Cauchy-Softmax accumulation over candidate sets + the
+    /// history-mean smoothing token (query-parallel): returns the outputs,
+    /// the per-query normalizers (kept for the backward), and the scratch
+    /// bytes. Shared by the single-head forward and the batched serving
+    /// path.
+    fn cauchy_accumulate(
+        &self,
+        cands: &Candidates,
+        ql: &[f32],
+        kl: &[f32],
+        km: &[f32],
+        vm: &[f32],
+        v: &Tensor,
+        pool: &Pool,
+    ) -> (Tensor, Vec<f32>, usize) {
+        let n = v.shape[0];
+        let dv = v.shape[1];
+        let dk = self.d_k;
+        let mut o = Tensor::zeros(&[n, dv]);
+        let mut zsum = vec![0f32; n]; // normalizers, kept for bwd
+        // Query-parallel: o rows and zsum entries are disjoint per query.
+        // Each worker caches its candidate scores so every Cauchy score is
+        // computed exactly once.
+        let score_ws: usize = {
+            let osh = SharedSlice::new(&mut o.data);
+            let zsh = SharedSlice::new(&mut zsum);
+            let ws: Vec<usize> = pool.run_chunked(n, pool.grain(n, 32), |queue| {
+                let mut scores = vec![0f32; cands.k];
+                while let Some(rows) = queue.next_chunk() {
+                    for i in rows {
+                        let base = i * cands.k;
+                        // Safety: index/row i claimed by exactly one chunk.
+                        let orow = unsafe { osh.range_mut(i * dv..(i + 1) * dv) };
+                        let z = cauchy_row(
+                            self.eps,
+                            &cands.idx[base..base + cands.k],
+                            &ql[i * dk..(i + 1) * dk],
+                            kl,
+                            &km[i * dk..(i + 1) * dk],
+                            &vm[i * dv..(i + 1) * dv],
+                            &v.data,
+                            dk,
+                            dv,
+                            &mut scores,
+                            orow,
+                        );
+                        unsafe { zsh.write(i, z) };
+                    }
+                }
+                scores.len() * 4
+            });
+            ws.iter().sum()
+        };
+        let ws = score_ws + zsum.len() * 4;
+        (o, zsum, ws)
+    }
+
     /// Forward returning everything the backward needs.
     #[allow(clippy::type_complexity)]
     fn fwd_full(
@@ -163,72 +385,227 @@ impl ZetaNative {
         pool: &Pool,
     ) -> (Tensor, Candidates, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, usize) {
         let n = w.n();
-        let dv = w.v.shape[1];
-        let dk = self.d_k;
         let ql = self.project(&w.q, pool);
         let kl = self.project(&w.k, pool);
         let (cands, search_ws) = self.search(&ql, &kl, n, pool);
         let (km, vm) = self.history_means(&kl, &w.v, n);
-
-        let mut o = Tensor::zeros(&[n, dv]);
-        let mut zsum = vec![0f32; n]; // normalizers, kept for bwd
-        // Query-parallel Cauchy-softmax accumulation: o rows and zsum
-        // entries are disjoint per query. Each worker caches its candidate
-        // scores so every Cauchy score is computed exactly once.
-        let score_ws: usize = {
-            let osh = SharedSlice::new(&mut o.data);
-            let zsh = SharedSlice::new(&mut zsum);
-            let ws: Vec<usize> = pool.run_chunked(n, pool.grain(n, 32), |queue| {
-                let mut scores = vec![0f32; cands.k];
-                while let Some(rows) = queue.next_chunk() {
-                    for i in rows {
-                        let qi = &ql[i * dk..(i + 1) * dk];
-                        // scores over candidates + smoothing token
-                        let mut z = 0.0f32;
-                        let base = i * cands.k;
-                        let mut nc = 0;
-                        for slot in 0..cands.k {
-                            let j = cands.idx[base + slot];
-                            if j == u32::MAX {
-                                break;
-                            }
-                            let jj = j as usize;
-                            let s = 1.0
-                                / (sqdist(qi, &kl[jj * dk..(jj + 1) * dk]) + self.eps);
-                            scores[slot] = s;
-                            z += s;
-                            nc = slot + 1;
-                        }
-                        let sm =
-                            1.0 / (sqdist(qi, &km[i * dk..(i + 1) * dk]) + self.eps);
-                        z += sm;
-                        // Safety: index/row i claimed by exactly one chunk.
-                        unsafe { zsh.write(i, z) };
-                        let inv = 1.0 / z;
-                        let orow = unsafe { osh.range_mut(i * dv..(i + 1) * dv) };
-                        for slot in 0..nc {
-                            let jj = cands.idx[base + slot] as usize;
-                            let a = scores[slot] * inv;
-                            let vr = w.v.row(jj);
-                            for c in 0..dv {
-                                orow[c] += a * vr[c];
-                            }
-                        }
-                        let am = sm * inv;
-                        for c in 0..dv {
-                            orow[c] += am * vm[i * dv + c];
-                        }
-                    }
-                }
-                scores.len() * 4
-            });
-            ws.iter().sum()
-        };
+        let (o, zsum, score_ws) = self.cauchy_accumulate(&cands, &ql, &kl, &km, &vm, &w.v, pool);
         let ws = search_ws
-            + (ql.len() + kl.len() + km.len() + vm.len() + zsum.len()) * 4
+            + (ql.len() + kl.len() + km.len() + vm.len()) * 4
             + cands.idx.len() * 4
             + score_ws;
         (o, cands, ql, kl, km, vm, zsum, ws)
+    }
+
+    /// Shared-sort serving path of `forward_batch` (see the `shared_sort`
+    /// field): per sequence, head 0's key codes feed one incremental sort
+    /// that serves every head's candidate search; history means and Cauchy
+    /// scoring still run on each head's own keys/values.
+    fn forward_batch_shared(&self, mw: &super::MultiWorkload, pool: &Pool) -> (Tensor, MemReport) {
+        let n = mw.seq_len();
+        let dv = mw.v.shape[1];
+        let heads = mw.heads;
+        let p = mw.num_problems();
+        let bits = zorder::bits_for_dim(self.d_k);
+        let mut o = Tensor::zeros(&[p * n, dv]);
+        let mut ws_total = 0usize;
+        let mut out_total = 0usize;
+        for b in 0..mw.batch {
+            let wls: Vec<Workload> = (0..heads).map(|h| mw.problem(b * heads + h)).collect();
+            let qls: Vec<Vec<f32>> = wls.iter().map(|wl| self.project(&wl.q, pool)).collect();
+            let kls: Vec<Vec<f32>> = wls.iter().map(|wl| self.project(&wl.k, pool)).collect();
+            let qcs: Vec<Vec<u32>> = qls
+                .iter()
+                .map(|ql| zorder::encode_points_pool(ql, self.d_k, self.range, bits, pool))
+                .collect();
+            // One key encode + one incremental sort per *sequence*.
+            let kc0 = zorder::encode_points_pool(&kls[0], self.d_k, self.range, bits, pool);
+            let qrefs: Vec<&[u32]> = qcs.iter().map(|q| q.as_slice()).collect();
+            let (cands, search_ws) = self.search_multi(&qrefs, &kc0, pool);
+            // Sequence peak: the per-head input copies, projections, codes
+            // and candidate tables all coexist across the head loop; the
+            // per-head history-mean/score scratch is transient, so only its
+            // max contributes. Sequences run one after another (buffers
+            // freed between them), hence the outer .max.
+            let mut resident = search_ws
+                + kc0.len() * 4
+                + wls.iter().map(|wl| wl.input_bytes() + wl.dout.bytes()).sum::<usize>();
+            let mut transient_peak = 0usize;
+            for h in 0..heads {
+                let (km, vm) = self.history_means(&kls[h], &wls[h].v, n);
+                let (oh, _zsum, score_ws) =
+                    self.cauchy_accumulate(&cands[h], &qls[h], &kls[h], &km, &vm, &wls[h].v, pool);
+                let idx = b * heads + h;
+                o.data[idx * n * dv..(idx + 1) * n * dv].copy_from_slice(&oh.data);
+                resident += (qls[h].len() + kls[h].len() + qcs[h].len()) * 4
+                    + cands[h].idx.len() * 4;
+                transient_peak = transient_peak.max(score_ws + (km.len() + vm.len()) * 4);
+                out_total += oh.bytes();
+            }
+            ws_total = ws_total.max(resident + transient_peak);
+        }
+        (o, MemReport { workspace_bytes: ws_total, output_bytes: out_total })
+    }
+}
+
+/// Incremental ZETA decode state: a persistent sorted Z-order index over
+/// the past keys' Morton codes, the low-dim key / value caches, and the
+/// running history-mean sums. Per token: one O(log N)-amortized index
+/// append per key (at chunk boundaries), one O(window·log N) window
+/// lookup, and O(k·dv) scoring — versus O(N log N) for re-sorting from
+/// scratch every token. Runs the *same* selection routine over the *same*
+/// index states as the batch forward, so outputs agree bit-for-bit.
+pub struct ZetaDecode {
+    cfg: ZetaNative,
+    bits: u32,
+    d: usize,
+    dv: usize,
+    index: ZIndex,
+    /// Keys already appended to the index (== the causal chunk limit).
+    indexed: usize,
+    codes: Vec<u32>,
+    kl: Vec<f32>,     // low-dim key cache (t, d_k)
+    vcache: Vec<f32>, // value cache (t, dv)
+    ksum: Vec<f32>,
+    vsum: Vec<f32>,
+    km_t: Vec<f32>,
+    vm_t: Vec<f32>,
+    qlow: Vec<f32>,
+    klow: Vec<f32>,
+    scratch: WindowScratch,
+    win: Vec<(u32, u32)>,
+    cand: Vec<(u32, u32)>,
+    irow: Vec<u32>,
+    scores: Vec<f32>,
+    t: usize,
+}
+
+impl ZetaDecode {
+    pub fn new(cfg: ZetaNative, d: usize, dv: usize) -> ZetaDecode {
+        let dk = cfg.d_k;
+        let k = cfg.k;
+        ZetaDecode {
+            bits: zorder::bits_for_dim(dk),
+            d,
+            dv,
+            index: ZIndex::new(),
+            indexed: 0,
+            codes: Vec::new(),
+            kl: Vec::new(),
+            vcache: Vec::new(),
+            ksum: vec![0f32; dk],
+            vsum: vec![0f32; dv],
+            km_t: vec![0f32; dk],
+            vm_t: vec![0f32; dv],
+            qlow: vec![0f32; dk],
+            klow: vec![0f32; dk],
+            scratch: WindowScratch::default(),
+            win: Vec::new(),
+            cand: Vec::new(),
+            irow: vec![u32::MAX; k],
+            scores: vec![0f32; k],
+            t: 0,
+            cfg,
+        }
+    }
+}
+
+impl DecodeState for ZetaDecode {
+    fn step(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32], out: &mut [f32]) {
+        let dk = self.cfg.d_k;
+        let dv = self.dv;
+        debug_assert_eq!(v_t.len(), dv);
+        debug_assert_eq!(out.len(), dv);
+        let t = self.t;
+        let dcopy = dk.min(self.d);
+
+        // Project + encode + cache the new key (identical slice projection
+        // and grid encoding as the batch path).
+        for x in self.klow.iter_mut() {
+            *x = 0.0;
+        }
+        self.klow[..dcopy].copy_from_slice(&k_t[..dcopy]);
+        let code = zorder::encode_point(&self.klow, self.cfg.range, self.bits);
+        self.codes.push(code);
+        self.kl.extend_from_slice(&self.klow);
+        self.vcache.extend_from_slice(v_t);
+
+        // Running history means — same serial arithmetic as history_means.
+        for c in 0..dk {
+            self.ksum[c] += self.klow[c];
+            self.km_t[c] = self.ksum[c] / (t + 1) as f32;
+        }
+        for c in 0..dv {
+            self.vsum[c] += v_t[c];
+            self.vm_t[c] = self.vsum[c] / (t + 1) as f32;
+        }
+
+        // Advance the index to this token's causal chunk limit.
+        let chunk = self.cfg.chunk.max(1);
+        let limit = (t / chunk) * chunk;
+        while self.indexed < limit {
+            self.index.append(self.codes[self.indexed]);
+            self.indexed += 1;
+        }
+
+        // Candidate selection — the same routine the batch search runs.
+        for s in self.irow.iter_mut() {
+            *s = u32::MAX;
+        }
+        for x in self.qlow.iter_mut() {
+            *x = 0.0;
+        }
+        self.qlow[..dcopy].copy_from_slice(&q_t[..dcopy]);
+        if limit > 0 {
+            let qc = zorder::encode_point(&self.qlow, self.cfg.range, self.bits);
+            self.cfg.select_into(
+                qc,
+                &self.index,
+                &mut self.scratch,
+                &mut self.win,
+                &mut self.cand,
+                &mut self.irow,
+            );
+        }
+
+        // Cauchy-softmax over candidates + smoothing token — the exact
+        // routine the batch kernel runs per row.
+        cauchy_row(
+            self.cfg.eps,
+            &self.irow,
+            &self.qlow,
+            &self.kl,
+            &self.km_t,
+            &self.vm_t,
+            &self.vcache,
+            dk,
+            dv,
+            &mut self.scores,
+            out,
+        );
+        self.t += 1;
+    }
+
+    fn pos(&self) -> usize {
+        self.t
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.index.bytes()
+            + self.codes.capacity() * 4
+            + (self.kl.capacity()
+                + self.vcache.capacity()
+                + self.ksum.len()
+                + self.vsum.len()
+                + self.km_t.len()
+                + self.vm_t.len()
+                + self.qlow.len()
+                + self.klow.len()
+                + self.scores.len())
+                * 4
+            + self.irow.len() * 4
+            + (self.win.capacity() + self.cand.capacity()) * 8
+            + self.scratch.bytes()
     }
 }
 
@@ -240,6 +617,67 @@ impl AttentionImpl for ZetaNative {
     fn forward_with(&self, w: &Workload, pool: &Pool) -> (Tensor, MemReport) {
         let (o, _, _, _, _, _, _, ws) = self.fwd_full(w, pool);
         let mem = MemReport { workspace_bytes: ws, output_bytes: o.bytes() };
+        (o, mem)
+    }
+
+    fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState> {
+        Box::new(ZetaDecode::new(self.clone(), d, dv))
+    }
+
+    /// Specialized batched forward (ROADMAP open item): one pool region for
+    /// the whole batch — workers claim whole head problems and run the
+    /// serial pipeline, instead of the default loop's one pool region per
+    /// phase per head. With `shared_sort` set, heads of a sequence
+    /// additionally share one key encode + incremental sort
+    /// ([`ZetaNative::forward_batch_shared`]).
+    fn forward_batch(&self, mw: &super::MultiWorkload, pool: &Pool) -> (Tensor, MemReport) {
+        if self.shared_sort && mw.heads > 1 {
+            return self.forward_batch_shared(mw, pool);
+        }
+        let p = mw.num_problems();
+        let n = mw.seq_len();
+        let dv = mw.v.shape[1];
+        let mut o = Tensor::zeros(&[p * n, dv]);
+        if p < pool.threads() {
+            // Fewer problems than workers: problem-level parallelism would
+            // idle most of the pool, so keep each forward row-parallel on
+            // the full pool instead (the default-impl schedule).
+            let mut mem = MemReport::default();
+            for idx in 0..p {
+                let wl = mw.problem(idx);
+                let head_copy = wl.input_bytes() + wl.dout.bytes();
+                let (oh, mh) = self.forward_with(&wl, pool);
+                o.data[idx * n * dv..(idx + 1) * n * dv].copy_from_slice(&oh.data);
+                mem.workspace_bytes = mem.workspace_bytes.max(mh.workspace_bytes + head_copy);
+                mem.output_bytes += mh.output_bytes;
+            }
+            return (o, mem);
+        }
+        let serial = Pool::serial();
+        let stats: Vec<(usize, usize)> = {
+            let osh = SharedSlice::new(&mut o.data);
+            pool.run_chunked(p, 1, |queue| {
+                let mut peak = 0usize;
+                let mut outb = 0usize;
+                while let Some(probs) = queue.next_chunk() {
+                    for idx in probs {
+                        let wl = mw.problem(idx);
+                        let copy = wl.input_bytes() + wl.dout.bytes();
+                        let (oh, mh) = self.forward_with(&wl, &serial);
+                        // Safety: rows of problem idx claimed by one chunk.
+                        let dst = unsafe { osh.range_mut(idx * n * dv..(idx + 1) * n * dv) };
+                        dst.copy_from_slice(&oh.data);
+                        peak = peak.max(mh.workspace_bytes + copy);
+                        outb += mh.output_bytes;
+                    }
+                }
+                (peak, outb)
+            })
+        };
+        let mem = MemReport {
+            workspace_bytes: stats.iter().map(|s| s.0).sum(),
+            output_bytes: stats.iter().map(|s| s.1).sum(),
+        };
         (o, mem)
     }
 
@@ -408,10 +846,11 @@ impl AttentionImpl for ZetaNative {
 
 #[cfg(test)]
 mod tests {
+    use super::super::{decode_full, MultiWorkload};
     use super::*;
 
     fn tiny() -> ZetaNative {
-        ZetaNative { d_k: 2, k: 4, chunk: 4, window: 16, eps: 0.5, range: 4.0 }
+        ZetaNative { d_k: 2, k: 4, chunk: 4, window: 16, ..ZetaNative::default() }
     }
 
     #[test]
@@ -448,11 +887,125 @@ mod tests {
     }
 
     #[test]
+    fn selection_is_strictly_causal() {
+        // Chunk-sequential search: rewriting *keys and values* beyond
+        // position 32 must leave rows 0..32 bit-identical (their candidate
+        // windows are drawn from an index frozen before position 32). The
+        // seed kernel failed this — future keys could crowd past keys out
+        // of the full-sort window.
+        let n = 64;
+        let z = ZetaNative { chunk: 16, ..ZetaNative::default() };
+        let w1 = Workload::random(n, 8, 4, 7);
+        let mut w2 = Workload {
+            q: w1.q.clone(),
+            k: w1.k.clone(),
+            v: w1.v.clone(),
+            dout: w1.dout.clone(),
+        };
+        for i in 32..n {
+            for c in 0..8 {
+                w2.k.row_mut(i)[c] = -w2.k.row(i)[c] + 0.37;
+            }
+            for c in 0..4 {
+                w2.v.row_mut(i)[c] = 1e4;
+            }
+        }
+        let (o1, _) = z.forward(&w1);
+        let (o2, _) = z.forward(&w2);
+        for i in 0..32 {
+            for c in 0..4 {
+                assert_eq!(o1.row(i)[c], o2.row(i)[c], "row {i} col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_matches_forward_exactly() {
+        // The incremental path shares selection + scoring with the batch
+        // path over identical index states: agreement should be bitwise.
+        let z = ZetaNative { chunk: 16, ..ZetaNative::default() };
+        let w = Workload::random(160, 8, 4, 9);
+        let (of, _) = z.forward_with(&w, &Pool::serial());
+        let od = decode_full(&z, &w);
+        assert!(of.max_abs_diff(&od) < 1e-6, "diff {}", of.max_abs_diff(&od));
+    }
+
+    #[test]
+    fn decode_state_grows_sublinearly_vs_kv() {
+        let z = ZetaNative::default();
+        let mut st = z.begin_decode(8, 8);
+        let w = Workload::random(512, 8, 8, 11);
+        let mut out = vec![0f32; 8];
+        for t in 0..w.n() {
+            st.step(w.q.row(t), w.k.row(t), w.v.row(t), &mut out);
+        }
+        assert_eq!(st.pos(), 512);
+        assert!(st.state_bytes() > 0);
+        // state is O(N·(d_k + dv)), dominated by the value cache — just pin
+        // that it stays well under the O(N²) regime.
+        assert!(st.state_bytes() < 512 * 512, "{}", st.state_bytes());
+    }
+
+    #[test]
+    fn batch_specialization_matches_per_head_loop() {
+        let z = ZetaNative { chunk: 16, ..ZetaNative::default() };
+        let mw = MultiWorkload::random(2, 3, 64, 16, 8, 5);
+        let pool = Pool::new(4);
+        let (o, mem) = z.forward_batch(&mw, &pool);
+        assert!(mem.workspace_bytes > 0);
+        let n = mw.seq_len();
+        let dv = mw.v.shape[1];
+        for idx in 0..mw.num_problems() {
+            let (oh, _) = z.forward_with(&mw.problem(idx), &pool);
+            let got = &o.data[idx * n * dv..(idx + 1) * n * dv];
+            let maxdiff = got
+                .iter()
+                .zip(&oh.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(maxdiff < 1e-5, "head {idx}: {maxdiff}");
+        }
+    }
+
+    #[test]
+    fn shared_sort_matches_per_head_on_shared_keys() {
+        // When every head of a sequence carries identical keys, the shared
+        // sort is exactly each head's own sort — outputs must agree with
+        // the per-head path.
+        let z = ZetaNative { chunk: 16, shared_sort: true, ..ZetaNative::default() };
+        let mut mw = MultiWorkload::random(2, 3, 64, 8, 4, 13);
+        let n = mw.seq_len();
+        let d = mw.k.shape[1];
+        for b in 0..mw.batch {
+            let src_start = (b * mw.heads) * n * d;
+            let head0: Vec<f32> = mw.k.data[src_start..src_start + n * d].to_vec();
+            for h in 1..mw.heads {
+                let dst = (b * mw.heads + h) * n * d;
+                mw.k.data[dst..dst + n * d].copy_from_slice(&head0);
+            }
+        }
+        let pool = Pool::new(2);
+        let (o, _) = z.forward_batch(&mw, &pool);
+        let dv = mw.v.shape[1];
+        for idx in 0..mw.num_problems() {
+            let (oh, _) = z.forward_with(&mw.problem(idx), &pool);
+            let got = &o.data[idx * n * dv..(idx + 1) * n * dv];
+            let maxdiff = got
+                .iter()
+                .zip(&oh.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(maxdiff < 1e-5, "head {idx}: {maxdiff}");
+        }
+    }
+
+    #[test]
     fn grads_match_finite_difference() {
         let n = 12;
         let d = 3;
         let dv = 2;
-        let z = ZetaNative { d_k: 2, k: 3, chunk: 4, window: 16, eps: 0.4, range: 4.0 };
+        let z =
+            ZetaNative { d_k: 2, k: 3, chunk: 4, window: 16, eps: 0.4, ..ZetaNative::default() };
         let w = Workload::random(n, d, dv, 2);
         let (g, _) = z.forward_backward(&w);
 
@@ -480,7 +1033,15 @@ mod tests {
         let n = 12;
         let d = 2;
         let dv = 2;
-        let z = ZetaNative { d_k: 2, k: 3, chunk: 4, window: 16, eps: 0.8, range: 6.0 };
+        let z = ZetaNative {
+            d_k: 2,
+            k: 3,
+            chunk: 4,
+            window: 16,
+            eps: 0.8,
+            range: 6.0,
+            ..ZetaNative::default()
+        };
         let w = Workload::random(n, d, dv, 3);
         let (g, _) = z.forward_backward(&w);
         let loss_q = |qdata: &[f32]| {

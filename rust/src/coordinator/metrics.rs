@@ -9,6 +9,8 @@ pub struct Metrics {
     pub completed: u64,
     pub batches: u64,
     pub batched_requests: u64,
+    /// Tokens emitted by streaming generation sessions.
+    pub tokens: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -30,6 +32,27 @@ impl Metrics {
     pub fn record_batch(&mut self, size: usize) {
         self.batches += 1;
         self.batched_requests += size as u64;
+    }
+
+    /// Count tokens emitted by one decode sweep. `sweep_started` is when
+    /// the sweep began, so the observed span covers the work that produced
+    /// the first tokens (a single-sweep generation still reports a
+    /// non-zero span and therefore a real tok/s).
+    pub fn record_tokens(&mut self, n: u64, sweep_started: Instant) {
+        match self.started {
+            Some(s) if s <= sweep_started => {}
+            _ => self.started = Some(sweep_started),
+        }
+        self.finished = Some(Instant::now());
+        self.tokens += n;
+    }
+
+    /// Generated tokens per second over the observed span.
+    pub fn tokens_per_sec(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(s), Some(f)) if f > s => self.tokens as f64 / (f - s).as_secs_f64(),
+            _ => 0.0,
+        }
     }
 
     pub fn percentile(&self, p: f64) -> Option<Duration> {
@@ -68,7 +91,7 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "n={} p50={:?} p99={:?} mean={:?} batch_avg={:.1} thpt={:.1}/s",
             self.completed,
             self.percentile(50.0).unwrap_or_default(),
@@ -76,7 +99,11 @@ impl Metrics {
             self.mean().unwrap_or_default(),
             self.mean_batch_size(),
             self.throughput(),
-        )
+        );
+        if self.tokens > 0 {
+            s.push_str(&format!(" tokens={} tok/s={:.1}", self.tokens, self.tokens_per_sec()));
+        }
+        s
     }
 }
 

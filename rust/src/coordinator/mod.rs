@@ -3,29 +3,46 @@
 //! Architecture (std threads; the offline build has no tokio):
 //!
 //! ```text
-//!   clients ──mpsc──▶ [scheduler thread: Batcher + own PJRT engine] ─▶ exe
-//!      ▲                                                   │
-//!      └──────────── per-request oneshot channel ◀─────────┘
+//!   clients ──mpsc──▶ [scheduler thread: Batcher + sessions + backend] ─▶ exe
+//!      ▲                        │            │
+//!      │     one-shot oneshot ◀─┘            │
+//!      └───── per-token stream channel ◀─────┘
 //! ```
 //!
-//! * PJRT handles from the `xla` crate are `!Send` (Rc internals), so the
-//!   scheduler thread constructs and owns its *own* [`Engine`]; the rest of
-//!   the process only exchanges `Send` types (tokens, `HostTensor`s) with
-//!   it over channels.
-//! * Requests carry a token prefix; responses carry the model's next-token
-//!   logits (LM presets) or class logits (cls presets).
-//! * The scheduler aggregates up to the graph's static batch B with a
-//!   `max_delay` deadline ([`batcher::Batcher`]), pads the tail, executes,
-//!   and fans results back out.
-//! * Backpressure: beyond `queue_cap` in-flight requests, `infer` fails
-//!   fast with a Busy error instead of growing the queue without bound.
-//! * The scheduler owns a worker-pool handle ([`crate::util::pool::Pool`],
-//!   sized by `ServerConfig::threads` / `ZETA_THREADS`): padding and
-//!   fan-out of large batches is split across the pool instead of running
-//!   serially on the scheduler thread.
+//! Two request kinds share one scheduler:
+//!
+//! * **one-shot `infer`** — aggregated by the [`batcher::Batcher`] up to the
+//!   static batch B with a `max_delay` deadline, padded, executed, fanned
+//!   back out (the prefill path).
+//! * **streaming `generate`** — each request becomes a [`session::Session`]
+//!   holding its per-request decode state. The scheduler runs *continuous
+//!   batching*: every sweep advances every active session by one
+//!   micro-batch (a prefill slice of the prompt, or one decode step that
+//!   emits a token on the stream), interleaved with due infer batches, so
+//!   long generations never block new arrivals.
+//!
+//! Backends:
+//!
+//! * **PJRT engine** (default): loads the preset's `forward` graph; decode
+//!   sweeps are full-recompute forward batches over each session's token
+//!   prefix (O(N log N)+ per token — the baseline `exp decode` measures).
+//!   PJRT handles are `!Send` (Rc internals), so the scheduler thread
+//!   constructs and owns its *own* [`Engine`]; the rest of the process only
+//!   exchanges `Send` types with it over channels.
+//! * **native decode engine** (`ServerConfig::native`): the in-process
+//!   kernel-backed model ([`session::NativeDecodeModel`]) — no artifacts
+//!   required, and decode steps run incrementally on the kernel's
+//!   [`crate::attention::DecodeState`] (O(log N + k) per token for ZETA).
+//!
+//! Backpressure: beyond `queue_cap` in-flight requests (one-shot jobs and
+//! live sessions both count), `infer` / `generate` fail fast with a Busy
+//! error instead of growing the queue without bound. The admission counter
+//! rolls back if the scheduler is gone, so a restarted client never eats
+//! queue capacity permanently.
 
 pub mod batcher;
 pub mod metrics;
+pub mod session;
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -38,6 +55,8 @@ use crate::runtime::{Engine, HostTensor};
 use crate::util::pool::{Pool, SharedSlice};
 use batcher::{Batcher, Decision};
 use metrics::Metrics;
+pub use session::{GenStream, NativeModelConfig, StreamEvent};
+use session::{NativeDecodeModel, Session};
 
 /// Model output for one request.
 #[derive(Debug, Clone)]
@@ -54,6 +73,26 @@ struct Job {
     reply: mpsc::Sender<Result<Response>>,
 }
 
+struct GenJob {
+    tokens: Vec<i32>,
+    max_new: usize,
+    submitted: Instant,
+    reply: mpsc::Sender<Result<StreamEvent>>,
+}
+
+enum Request {
+    Infer(Job),
+    Generate(GenJob),
+}
+
+/// Static batch size of the native backend's one-shot path (the PJRT
+/// backend takes its batch from the preset's compiled graph).
+const NATIVE_MAX_BATCH: usize = 8;
+
+/// Prompt tokens ingested per session per sweep while prefilling — the
+/// micro-batch that keeps prefill from starving concurrent decodes.
+const PREFILL_CHUNK: usize = 32;
+
 #[derive(Clone)]
 pub struct ServerConfig {
     pub artifacts_dir: String,
@@ -64,6 +103,10 @@ pub struct ServerConfig {
     /// Worker-pool size for batch padding/fan-out on the scheduler thread
     /// (0 = the process-global pool, i.e. `ZETA_THREADS` / auto-detect).
     pub threads: usize,
+    /// Serve with the in-process native decode engine instead of PJRT:
+    /// runs without artifacts and decodes incrementally. `preset` /
+    /// `artifacts_dir` are ignored when set.
+    pub native: Option<NativeModelConfig>,
 }
 
 impl Default for ServerConfig {
@@ -75,6 +118,7 @@ impl Default for ServerConfig {
             queue_cap: 256,
             seed: 0,
             threads: 0,
+            native: None,
         }
     }
 }
@@ -82,24 +126,71 @@ impl Default for ServerConfig {
 /// Handle for submitting requests; cheap to clone across client threads.
 #[derive(Clone)]
 pub struct ClientHandle {
-    tx: mpsc::Sender<Job>,
+    tx: mpsc::Sender<Request>,
     depth: Arc<AtomicUsize>,
     queue_cap: usize,
 }
 
 impl ClientHandle {
-    /// Submit and wait for the response (blocking).
-    pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
-        if self.depth.load(Ordering::Relaxed) >= self.queue_cap {
+    /// Reserve one queue slot or fail fast. Reserve-then-check keeps the
+    /// bound exact under concurrent clients (a load-then-add race would let
+    /// a burst overshoot `queue_cap`).
+    fn admit(&self) -> Result<()> {
+        let prev = self.depth.fetch_add(1, Ordering::Relaxed);
+        if prev >= self.queue_cap {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
             bail!("server busy: queue at capacity {}", self.queue_cap);
         }
-        self.depth.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Send a request, rolling the admission back if the scheduler is gone
+    /// (otherwise a stopped server would permanently leak queue capacity).
+    fn send(&self, req: Request) -> Result<()> {
+        if self.tx.send(req).is_err() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            bail!("server stopped");
+        }
+        Ok(())
+    }
+
+    /// Submit and wait for the response (blocking).
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
+        self.admit()?;
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Job { tokens, submitted: Instant::now(), reply: rtx })
-            .map_err(|_| anyhow!("server stopped"))?;
+        self.send(Request::Infer(Job { tokens, submitted: Instant::now(), reply: rtx }))?;
         rrx.recv().map_err(|_| anyhow!("server dropped request"))?
     }
+
+    /// Submit a streaming generation: the returned [`GenStream`] yields
+    /// `max_new` tokens (fewer if the context fills) followed by a `Done`
+    /// event. Dropping the stream cancels the session.
+    pub fn generate(&self, tokens: Vec<i32>, max_new: usize) -> Result<GenStream> {
+        if tokens.is_empty() {
+            bail!("generate requires a non-empty prompt");
+        }
+        self.admit()?;
+        let (rtx, rrx) = mpsc::channel();
+        self.send(Request::Generate(GenJob {
+            tokens,
+            max_new,
+            submitted: Instant::now(),
+            reply: rtx,
+        }))?;
+        Ok(GenStream { rx: rrx })
+    }
+}
+
+/// The scheduler thread's execution backend (never crosses threads).
+enum Backend {
+    Native(NativeDecodeModel),
+    Engine {
+        exe: Arc<crate::runtime::Executable>,
+        params: Vec<HostTensor>,
+        seq_len: usize,
+        is_lm: bool,
+        vocab: usize,
+    },
 }
 
 pub struct Server {
@@ -112,9 +203,10 @@ pub struct Server {
 impl Server {
     /// Start the scheduler thread. Model weights come from the preset's
     /// `init` graph with `cfg.seed`, unless `params` (e.g. loaded from a
-    /// trainer checkpoint) are supplied.
+    /// trainer checkpoint) are supplied. With `cfg.native` set, the server
+    /// needs no artifacts at all.
     pub fn start(cfg: ServerConfig, params: Option<Vec<HostTensor>>) -> Result<Server> {
-        let (tx, rx) = mpsc::channel::<Job>();
+        let (tx, rx) = mpsc::channel::<Request>();
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let depth = Arc::new(AtomicUsize::new(0));
@@ -130,18 +222,34 @@ impl Server {
             .name("zeta-scheduler".into())
             .spawn(move || -> Result<()> {
                 // The engine lives on this thread (PJRT handles are !Send).
-                let setup = (|| -> Result<_> {
-                    let engine = Engine::new(&cfg2.artifacts_dir)?;
-                    let pspec = engine.manifest.preset(&cfg2.preset)?;
-                    let info = (pspec.batch, pspec.seq_len(), pspec.is_lm(), pspec.vocab());
-                    let exe = engine.load(&cfg2.preset, "forward")?;
-                    let params = match params {
-                        Some(p) => p,
-                        None => engine.init_params(&cfg2.preset, cfg2.seed)?,
-                    };
-                    Ok((engine, exe, params, info))
+                let setup = (|| -> Result<(Option<Engine>, Backend, usize)> {
+                    match &cfg2.native {
+                        Some(ncfg) => {
+                            let model = NativeDecodeModel::new(ncfg.clone())?;
+                            Ok((None, Backend::Native(model), NATIVE_MAX_BATCH))
+                        }
+                        None => {
+                            let engine = Engine::new(&cfg2.artifacts_dir)?;
+                            let pspec = engine.manifest.preset(&cfg2.preset)?;
+                            let info =
+                                (pspec.batch, pspec.seq_len(), pspec.is_lm(), pspec.vocab());
+                            let exe = engine.load(&cfg2.preset, "forward")?;
+                            let params = match params {
+                                Some(p) => p,
+                                None => engine.init_params(&cfg2.preset, cfg2.seed)?,
+                            };
+                            let backend = Backend::Engine {
+                                exe,
+                                params,
+                                seq_len: info.1,
+                                is_lm: info.2,
+                                vocab: info.3,
+                            };
+                            Ok((Some(engine), backend, info.0))
+                        }
+                    }
                 })();
-                let (_engine, exe, params, (max_batch, seq_len, is_lm, vocab)) = match setup {
+                let (_engine, backend, max_batch) = match setup {
                     Ok(v) => {
                         let _ = ready_tx.send(Ok(()));
                         v
@@ -152,48 +260,131 @@ impl Server {
                     }
                 };
 
-                // Pool handle for padding/fan-out of large batches.
+                // Pool handle for padding/fan-out and native prefill.
                 let pool =
                     if cfg2.threads == 0 { *Pool::global() } else { Pool::new(cfg2.threads) };
                 let mut batcher: Batcher<Job> = Batcher::new(max_batch, cfg2.max_delay);
+                let mut sessions: Vec<Session> = Vec::new();
+                let mut orow: Vec<f32> = Vec::new();
+                let mut logits_buf: Vec<f32> = Vec::new();
+                // Engine decode sweeps rewrite only the token slab at
+                // inputs[0]; the parameter tail is cloned once here, not
+                // once per emitted token.
+                let mut engine_inputs: Vec<HostTensor> = Vec::new();
+                if let Backend::Engine { params, seq_len, .. } = &backend {
+                    engine_inputs.push(HostTensor::I32(
+                        vec![max_batch, *seq_len],
+                        vec![0i32; max_batch * *seq_len],
+                    ));
+                    engine_inputs.extend(params.iter().cloned());
+                }
+                let mut disconnected = false;
                 loop {
-                    match batcher.poll(Instant::now()) {
-                        Decision::Fire(k) => {
-                            let jobs = batcher.take(k);
-                            depth2.fetch_sub(jobs.len(), Ordering::Relaxed);
-                            run_batch(
-                                &exe, &params, jobs, max_batch, seq_len, is_lm, vocab,
-                                &metrics2, &pool,
-                            );
-                            continue;
-                        }
-                        Decision::Wait(d) => match rx.recv_timeout(d) {
-                            Ok(job) => {
-                                batcher.push(job);
-                                while batcher.len() < max_batch {
-                                    match rx.try_recv() {
-                                        Ok(j) => batcher.push(j),
-                                        Err(_) => break,
-                                    }
-                                }
-                            }
-                            Err(mpsc::RecvTimeoutError::Timeout) => {}
-                            Err(mpsc::RecvTimeoutError::Disconnected) => {}
-                        },
-                        Decision::Idle => {
-                            match rx.recv_timeout(Duration::from_millis(2)) {
-                                Ok(job) => batcher.push(job),
-                                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                                    if batcher.is_empty() {
-                                        break;
-                                    }
-                                }
-                            }
-                            if stop2.load(Ordering::Relaxed) && batcher.is_empty() {
+                    let mut stopping = stop2.load(Ordering::Relaxed) || disconnected;
+                    // 1. Admit new work without blocking (new generations
+                    // are rejected once stopping — their streams would
+                    // only be truncated immediately below).
+                    loop {
+                        match rx.try_recv() {
+                            Ok(req) => admit_request(
+                                req,
+                                &backend,
+                                &mut batcher,
+                                &mut sessions,
+                                &depth2,
+                                stopping,
+                            ),
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                disconnected = true;
+                                stopping = true;
                                 break;
                             }
                         }
+                    }
+
+                    // Shutdown truncates live streams at a token boundary:
+                    // each client gets a final Done with what was generated
+                    // so far, so `shutdown()` cannot block on a slow (or
+                    // absent) stream consumer.
+                    if stopping && !sessions.is_empty() {
+                        for s in sessions.drain(..) {
+                            depth2.fetch_sub(1, Ordering::Relaxed);
+                            let _ = s.reply.send(Ok(StreamEvent::Done {
+                                generated: s.generated,
+                                latency: s.submitted.elapsed(),
+                            }));
+                        }
+                    }
+
+                    // 2. Fire due one-shot batches (everything when stopping).
+                    loop {
+                        let fire = match batcher.poll(Instant::now()) {
+                            Decision::Fire(k) => Some(k),
+                            Decision::Wait(_) if stopping => Some(batcher.len().min(max_batch)),
+                            _ => None,
+                        };
+                        let Some(k) = fire else { break };
+                        if k == 0 {
+                            break;
+                        }
+                        let jobs = batcher.take(k);
+                        depth2.fetch_sub(jobs.len(), Ordering::Relaxed);
+                        match &backend {
+                            Backend::Engine { exe, params, seq_len, is_lm, vocab } => run_batch(
+                                exe, params, jobs, max_batch, *seq_len, *is_lm, *vocab,
+                                &metrics2, &pool,
+                            ),
+                            Backend::Native(model) => {
+                                native_infer_batch(model, jobs, &metrics2, &pool)
+                            }
+                        }
+                    }
+
+                    // 3. Decode micro-batches: advance every active session.
+                    if !sessions.is_empty() {
+                        match &backend {
+                            Backend::Native(model) => native_decode_sweep(
+                                model,
+                                &mut sessions,
+                                &metrics2,
+                                &depth2,
+                                &mut orow,
+                                &mut logits_buf,
+                            ),
+                            Backend::Engine { exe, seq_len, vocab, .. } => engine_decode_sweep(
+                                exe,
+                                &mut engine_inputs,
+                                &mut sessions,
+                                max_batch,
+                                *seq_len,
+                                *vocab,
+                                &metrics2,
+                                &depth2,
+                            ),
+                        }
+                        continue; // stay hot while streams are live
+                    }
+
+                    // 4. Idle: exit or block briefly for new work.
+                    if stopping && batcher.is_empty() {
+                        break;
+                    }
+                    let wait = match batcher.poll(Instant::now()) {
+                        Decision::Wait(d) => d,
+                        _ => Duration::from_millis(2),
+                    };
+                    match rx.recv_timeout(wait) {
+                        Ok(req) => admit_request(
+                            req,
+                            &backend,
+                            &mut batcher,
+                            &mut sessions,
+                            &depth2,
+                            stopping,
+                        ),
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
                     }
                 }
                 Ok(())
@@ -216,12 +407,289 @@ impl Server {
         self.handle.clone()
     }
 
-    /// Stop the scheduler after draining queued work.
+    /// Stop the scheduler after draining queued work and live sessions.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
+    }
+}
+
+/// Route one admitted request to the batcher or the session table.
+fn admit_request(
+    req: Request,
+    backend: &Backend,
+    batcher: &mut Batcher<Job>,
+    sessions: &mut Vec<Session>,
+    depth: &Arc<AtomicUsize>,
+    stopping: bool,
+) {
+    match req {
+        Request::Infer(job) => batcher.push(job),
+        Request::Generate(g) => {
+            if stopping {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let _ = g.reply.send(Err(anyhow!("server stopping")));
+                return;
+            }
+            if g.max_new == 0 {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let _ = g.reply.send(Ok(StreamEvent::Done {
+                    generated: 0,
+                    latency: g.submitted.elapsed(),
+                }));
+                return;
+            }
+            match backend {
+                Backend::Native(model) => {
+                    let state = model.begin();
+                    sessions.push(Session::new(
+                        g.tokens,
+                        g.max_new,
+                        g.submitted,
+                        g.reply,
+                        Some(state),
+                    ));
+                }
+                Backend::Engine { is_lm, seq_len, .. } => {
+                    if !*is_lm {
+                        depth.fetch_sub(1, Ordering::Relaxed);
+                        let _ = g.reply.send(Err(anyhow!(
+                            "preset is not an LM; streaming generate unsupported"
+                        )));
+                        return;
+                    }
+                    if g.tokens.len() >= *seq_len {
+                        depth.fetch_sub(1, Ordering::Relaxed);
+                        let _ = g.reply.send(Err(anyhow!(
+                            "prompt length {} >= graph context {seq_len}",
+                            g.tokens.len()
+                        )));
+                        return;
+                    }
+                    sessions.push(Session::new(g.tokens, g.max_new, g.submitted, g.reply, None));
+                }
+            }
+        }
+    }
+}
+
+/// One-shot inference on the native backend: prefill is exactly one full
+/// forward per request (batched arrivals still amortize the scheduler trip).
+fn native_infer_batch(
+    model: &NativeDecodeModel,
+    jobs: Vec<batcher::Pending<Job>>,
+    metrics: &Arc<Mutex<Metrics>>,
+    pool: &Pool,
+) {
+    metrics.lock().unwrap().record_batch(jobs.len());
+    for p in jobs {
+        let result = model.forward_logits(&p.payload.tokens, pool);
+        let latency = p.payload.submitted.elapsed();
+        match result {
+            Ok(logits) => {
+                metrics.lock().unwrap().record(latency);
+                let _ = p.payload.reply.send(Ok(Response { logits, latency }));
+            }
+            Err(e) => {
+                let _ = p.payload.reply.send(Err(e));
+            }
+        }
+    }
+}
+
+/// Outcome of advancing one session by one micro-batch.
+enum Advance {
+    /// Still prefilling or more tokens to generate.
+    Continue,
+    /// `max_new` reached — retire with metrics + a `Done` event.
+    Done,
+    /// The client dropped the stream — retire silently (no metrics, the
+    /// receiver is gone).
+    Cancelled,
+}
+
+/// Advance one native session by one micro-batch.
+fn native_advance(
+    model: &NativeDecodeModel,
+    s: &mut Session,
+    orow: &mut Vec<f32>,
+    logits: &mut Vec<f32>,
+) -> Advance {
+    let st = s.state.as_mut().expect("native session carries decode state");
+    if s.fed < s.prompt_len {
+        // Prefill micro-batch: a slice of prompt tokens per sweep.
+        let e = (s.fed + PREFILL_CHUNK).min(s.prompt_len);
+        for i in s.fed..e {
+            model.step_token(st.as_mut(), s.tokens[i], orow, logits);
+        }
+        s.fed = e;
+        if s.fed < s.prompt_len {
+            return Advance::Continue; // still prefilling
+        }
+        // Prompt ingested: `logits` now predict the first new token.
+    } else {
+        // Decode step: feed the last emitted token.
+        let last = *s.tokens.last().expect("prompt is non-empty");
+        model.step_token(st.as_mut(), last, orow, logits);
+        s.fed += 1;
+    }
+    let tok = NativeDecodeModel::argmax(logits);
+    s.tokens.push(tok);
+    s.generated += 1;
+    let pos = s.generated - 1;
+    if s.reply.send(Ok(StreamEvent::Token { token: tok, pos })).is_err() {
+        return Advance::Cancelled;
+    }
+    if s.generated >= s.max_new {
+        Advance::Done
+    } else {
+        Advance::Continue
+    }
+}
+
+/// Continuous-batching sweep on the native backend: every live session
+/// advances one micro-batch; finished sessions are retired. Cancelled
+/// sessions free their queue slot but are not recorded as completions.
+fn native_decode_sweep(
+    model: &NativeDecodeModel,
+    sessions: &mut Vec<Session>,
+    metrics: &Arc<Mutex<Metrics>>,
+    depth: &Arc<AtomicUsize>,
+    orow: &mut Vec<f32>,
+    logits: &mut Vec<f32>,
+) {
+    let sweep_t0 = Instant::now();
+    let mut i = 0;
+    let mut emitted = 0u64;
+    while i < sessions.len() {
+        let before = sessions[i].generated;
+        let outcome = native_advance(model, &mut sessions[i], orow, logits);
+        emitted += (sessions[i].generated - before) as u64;
+        match outcome {
+            Advance::Continue => i += 1,
+            Advance::Cancelled => {
+                sessions.swap_remove(i);
+                depth.fetch_sub(1, Ordering::Relaxed);
+            }
+            Advance::Done => {
+                let s = sessions.swap_remove(i);
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let latency = s.submitted.elapsed();
+                let mut m = metrics.lock().unwrap();
+                m.record(latency);
+                drop(m);
+                let _ = s
+                    .reply
+                    .send(Ok(StreamEvent::Done { generated: s.generated, latency }));
+            }
+        }
+    }
+    if emitted > 0 {
+        metrics.lock().unwrap().record_tokens(emitted, sweep_t0);
+    }
+}
+
+/// Continuous-batching sweep on the PJRT backend: full-recompute decode —
+/// each wave of up to `max_batch` sessions runs one forward over its token
+/// prefixes and takes the logits at each last position. This is the
+/// baseline the incremental engine replaces (and what `exp decode` prices).
+#[allow(clippy::too_many_arguments)]
+fn engine_decode_sweep(
+    exe: &crate::runtime::Executable,
+    inputs: &mut [HostTensor],
+    sessions: &mut Vec<Session>,
+    max_batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    metrics: &Arc<Mutex<Metrics>>,
+    depth: &Arc<AtomicUsize>,
+) {
+    let sweep_t0 = Instant::now();
+    let mut done = vec![false; sessions.len()];
+    // Retire without metrics or a Done event: the request errored (client
+    // already got the Err) or the client dropped the stream.
+    let mut silent = vec![false; sessions.len()];
+    let mut emitted = 0u64;
+    let mut start = 0usize;
+    while start < sessions.len() {
+        let end = (start + max_batch).min(sessions.len());
+        let mut last_pos = vec![0usize; end - start];
+        {
+            // Rewrite the token slab in place; the parameter tail of
+            // `inputs` was cloned once at scheduler startup.
+            let HostTensor::I32(_, slab) = &mut inputs[0] else {
+                unreachable!("token slab is always I32");
+            };
+            slab.fill(0);
+            for (r, s) in sessions[start..end].iter().enumerate() {
+                let n = s.tokens.len().min(seq_len);
+                slab[r * seq_len..r * seq_len + n].copy_from_slice(&s.tokens[..n]);
+                last_pos[r] = n.saturating_sub(1);
+            }
+        }
+        // A wave-wide failure (execution error, or a forward graph whose
+        // output is not the expected (B, N, V) f32 logits) errors every
+        // session in the wave instead of panicking the scheduler.
+        let mut wave_err: Option<String> = None;
+        match exe.run(inputs) {
+            Ok(out) => {
+                let logits = out[0].as_f32().unwrap_or(&[]);
+                if logits.len() < max_batch * seq_len * vocab {
+                    wave_err = Some(format!(
+                        "decode batch returned malformed logits: {} elems, want {}",
+                        logits.len(),
+                        max_batch * seq_len * vocab
+                    ));
+                } else {
+                    for (r, s) in sessions[start..end].iter_mut().enumerate() {
+                        let base = (r * seq_len + last_pos[r]) * vocab;
+                        let tok = NativeDecodeModel::argmax(&logits[base..base + vocab]);
+                        s.tokens.push(tok);
+                        s.generated += 1;
+                        emitted += 1;
+                        let pos = s.generated - 1;
+                        let gone =
+                            s.reply.send(Ok(StreamEvent::Token { token: tok, pos })).is_err();
+                        if gone {
+                            done[start + r] = true;
+                            silent[start + r] = true;
+                        } else if s.generated >= s.max_new || s.tokens.len() >= seq_len {
+                            done[start + r] = true;
+                        }
+                    }
+                }
+            }
+            Err(e) => wave_err = Some(format!("decode batch failed: {e}")),
+        }
+        if let Some(msg) = wave_err {
+            for (r, s) in sessions[start..end].iter().enumerate() {
+                let _ = s.reply.send(Err(anyhow!(msg.clone())));
+                done[start + r] = true;
+                silent[start + r] = true;
+            }
+        }
+        start = end;
+    }
+    for i in (0..sessions.len()).rev() {
+        if done[i] {
+            let s = sessions.swap_remove(i);
+            depth.fetch_sub(1, Ordering::Relaxed);
+            if silent[i] {
+                continue;
+            }
+            let latency = s.submitted.elapsed();
+            let mut m = metrics.lock().unwrap();
+            m.record(latency);
+            drop(m);
+            let _ = s
+                .reply
+                .send(Ok(StreamEvent::Done { generated: s.generated, latency }));
+        }
+    }
+    if emitted > 0 {
+        metrics.lock().unwrap().record_tokens(emitted, sweep_t0);
     }
 }
 
@@ -300,7 +768,8 @@ fn run_batch(
 
 #[cfg(test)]
 mod tests {
-    //! End-to-end serving tests over real artifacts (skip when absent).
+    //! Native-backend tests run everywhere; PJRT-backed tests skip when
+    //! artifacts are absent.
     use super::*;
 
     fn have_artifacts() -> bool {
@@ -309,6 +778,14 @@ mod tests {
             eprintln!("skipping coordinator test: artifacts/ missing");
         }
         ok
+    }
+
+    fn native_cfg(kernel: &str) -> ServerConfig {
+        ServerConfig {
+            native: Some(NativeModelConfig { kernel: kernel.into(), ..Default::default() }),
+            max_delay: Duration::from_millis(1),
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -369,5 +846,128 @@ mod tests {
         }
         let cfg = ServerConfig { preset: "nonexistent".into(), ..Default::default() };
         assert!(Server::start(cfg, None).is_err());
+    }
+
+    #[test]
+    fn native_server_infers_without_artifacts() {
+        let srv = Server::start(native_cfg("zeta"), None).unwrap();
+        let c = srv.client();
+        let r = c.infer(vec![3, 1, 4, 1, 5]).unwrap();
+        assert_eq!(r.logits.len(), NativeModelConfig::default().vocab);
+        assert!(r.logits.iter().all(|v| v.is_finite()));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn native_generate_streams_exactly_max_new_tokens() {
+        let srv = Server::start(native_cfg("zeta"), None).unwrap();
+        let c = srv.client();
+        let stream = c.generate(vec![3, 1, 4, 1, 5, 9, 2, 6], 12).unwrap();
+        let toks = stream.collect_tokens().unwrap();
+        assert_eq!(toks.len(), 12);
+        let vocab = NativeModelConfig::default().vocab as i32;
+        assert!(toks.iter().all(|&t| (0..vocab).contains(&t)), "{toks:?}");
+        let m = srv.metrics.lock().unwrap();
+        assert_eq!(m.tokens, 12);
+        assert_eq!(m.completed, 1);
+        drop(m);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn native_generate_is_deterministic() {
+        let srv = Server::start(native_cfg("zeta"), None).unwrap();
+        let c = srv.client();
+        let a = c.generate(vec![7, 7, 7], 8).unwrap().collect_tokens().unwrap();
+        let b = c.generate(vec![7, 7, 7], 8).unwrap().collect_tokens().unwrap();
+        assert_eq!(a, b);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn incremental_sessions_match_full_recompute_reference() {
+        // The session-level equivalence gate: streaming decode through the
+        // server must reproduce the token stream of re-running a full
+        // forward per emitted token.
+        for kernel in ["zeta", "naive", "mamba"] {
+            let srv = Server::start(native_cfg(kernel), None).unwrap();
+            let prompt = vec![5, 9, 13, 2, 2, 7];
+            let got =
+                srv.client().generate(prompt.clone(), 10).unwrap().collect_tokens().unwrap();
+            srv.shutdown();
+
+            let model = NativeDecodeModel::new(NativeModelConfig {
+                kernel: kernel.into(),
+                ..Default::default()
+            })
+            .unwrap();
+            let pool = Pool::serial();
+            let mut toks = prompt;
+            let mut want = Vec::new();
+            for _ in 0..10 {
+                let logits = model.forward_logits(&toks, &pool).unwrap();
+                let t = NativeDecodeModel::argmax(&logits);
+                want.push(t);
+                toks.push(t);
+            }
+            assert_eq!(got, want, "kernel {kernel}");
+        }
+    }
+
+    #[test]
+    fn concurrent_generate_and_infer_interleave() {
+        let srv = Server::start(native_cfg("zeta"), None).unwrap();
+        let c = srv.client();
+        let s1 = c.generate(vec![1, 2, 3], 6).unwrap();
+        let s2 = c.generate(vec![9, 8, 7, 6], 4).unwrap();
+        let r = c.infer(vec![4, 5, 6]).unwrap();
+        assert_eq!(r.logits.len(), NativeModelConfig::default().vocab);
+        assert_eq!(s1.collect_tokens().unwrap().len(), 6);
+        assert_eq!(s2.collect_tokens().unwrap().len(), 4);
+        let m = srv.metrics.lock().unwrap();
+        assert_eq!(m.tokens, 10);
+        drop(m);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn stopped_server_rejects_without_leaking_queue_capacity() {
+        // Regression for the depth-counter leak: every failed submit must
+        // roll its admission back, so repeated retries against a stopped
+        // server keep reporting "stopped" — never a phantom "busy".
+        let cfg = ServerConfig { queue_cap: 2, ..native_cfg("zeta") };
+        let srv = Server::start(cfg, None).unwrap();
+        let c = srv.client();
+        srv.shutdown();
+        for i in 0..5 {
+            let err = c.infer(vec![1, 2, 3]).unwrap_err().to_string();
+            assert!(err.contains("server stopped"), "attempt {i}: {err}");
+        }
+        let err = c.generate(vec![1], 4).unwrap_err().to_string();
+        assert!(err.contains("server stopped"), "{err}");
+    }
+
+    #[test]
+    fn zero_max_new_completes_immediately() {
+        let srv = Server::start(native_cfg("mamba"), None).unwrap();
+        let toks = srv.client().generate(vec![1, 2], 0).unwrap().collect_tokens().unwrap();
+        assert!(toks.is_empty());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn dropping_stream_cancels_session() {
+        let srv = Server::start(native_cfg("mamba"), None).unwrap();
+        let c = srv.client();
+        let stream = c.generate(vec![1, 2, 3], 1_000_000).unwrap();
+        // read one token, then hang up
+        let first = stream.recv().unwrap().unwrap();
+        assert!(matches!(first, StreamEvent::Token { .. }));
+        drop(stream);
+        // the scheduler notices the dead channel and retires the session;
+        // a subsequent one-shot request must still be served promptly.
+        let r = c.infer(vec![2, 2, 2]).unwrap();
+        assert!(r.logits.iter().all(|v| v.is_finite()));
+        srv.shutdown();
     }
 }

@@ -1,0 +1,304 @@
+//! Streaming generation sessions — the L3 surface of the incremental
+//! decode engine.
+//!
+//! A [`Session`] is the continuous-batching unit: one per in-flight
+//! `generate` request, holding the request's tokens and (on the native
+//! backend) its kernel-level [`DecodeState`] — the per-request KV cache /
+//! Z-order index. The scheduler advances every active session by one
+//! micro-batch per sweep (a prefill slice or a single decode step), so
+//! prefill and decode interleave instead of head-of-line blocking.
+//!
+//! [`NativeDecodeModel`] is the engine that makes streaming generation run
+//! *offline*: a deterministic token model over the native attention
+//! kernels. Token embeddings and the readout are fixed seeded tables, and
+//! decoding is argmax, so the incremental decode path and a full-recompute
+//! forward must produce the *same token stream* — the session-level
+//! equivalence gate. (The PJRT backend serves `generate` by full-recompute
+//! forward batches instead; see `coordinator::engine_decode_sweep`.)
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::attention::{flash::Flash, mamba::MambaLite, naive::Naive, zeta::ZetaNative};
+use crate::attention::{AttentionImpl, DecodeState, Workload};
+use crate::tensor::{dot, Tensor};
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
+
+/// Configuration of the in-process native decode backend.
+#[derive(Debug, Clone)]
+pub struct NativeModelConfig {
+    /// Attention kernel: "zeta" | "naive" | "flash" | "mamba".
+    pub kernel: String,
+    /// q/k width fed to the kernel.
+    pub d: usize,
+    /// Value / output width.
+    pub dv: usize,
+    /// Token vocabulary size.
+    pub vocab: usize,
+    /// Seed of the fixed embedding / readout tables.
+    pub seed: u64,
+}
+
+impl Default for NativeModelConfig {
+    fn default() -> Self {
+        NativeModelConfig { kernel: "zeta".into(), d: 16, dv: 16, vocab: 32, seed: 0 }
+    }
+}
+
+/// Deterministic kernel-backed token model: embed -> attention kernel ->
+/// linear readout -> argmax. Everything is a fixed seeded table, so the
+/// model needs no artifacts, runs offline, and generation is exactly
+/// reproducible — incremental decode vs full-recompute forward is a pure
+/// scheduling difference.
+pub struct NativeDecodeModel {
+    imp: Box<dyn AttentionImpl>,
+    cfg: NativeModelConfig,
+    qe: Vec<f32>, // (vocab, d)
+    ke: Vec<f32>, // (vocab, d)
+    ve: Vec<f32>, // (vocab, dv)
+    ro: Vec<f32>, // (vocab, dv) readout
+}
+
+impl NativeDecodeModel {
+    pub fn new(cfg: NativeModelConfig) -> Result<NativeDecodeModel> {
+        if cfg.vocab == 0 || cfg.d == 0 || cfg.dv == 0 {
+            bail!("native model dims must be non-zero");
+        }
+        let imp: Box<dyn AttentionImpl> = match cfg.kernel.as_str() {
+            "naive" => Box::new(Naive),
+            "flash" => Box::new(Flash { block: 64 }),
+            // chunk 16: fine-grained causal limits so short serving prompts
+            // already exercise the windowed search.
+            "zeta" => Box::new(ZetaNative { chunk: 16, ..ZetaNative::default() }),
+            "mamba" => Box::new(MambaLite::default()),
+            other => bail!("unknown native kernel {other:?} (want zeta|naive|flash|mamba)"),
+        };
+        let mut rng = Rng::new(cfg.seed ^ 0x5E55_1015);
+        let mut qe = vec![0f32; cfg.vocab * cfg.d];
+        let mut ke = vec![0f32; cfg.vocab * cfg.d];
+        let mut ve = vec![0f32; cfg.vocab * cfg.dv];
+        let mut ro = vec![0f32; cfg.vocab * cfg.dv];
+        rng.fill_normal(&mut qe, 1.0);
+        rng.fill_normal(&mut ke, 1.0);
+        rng.fill_normal(&mut ve, 1.0);
+        rng.fill_normal(&mut ro, 1.0);
+        Ok(NativeDecodeModel { imp, cfg, qe, ke, ve, ro })
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    pub fn kernel_name(&self) -> &'static str {
+        self.imp.name()
+    }
+
+    /// Fresh per-request decode state (the kernel-level KV cache).
+    pub fn begin(&self) -> Box<dyn DecodeState> {
+        self.imp.begin_decode(self.cfg.d, self.cfg.dv)
+    }
+
+    fn embed_rows(&self, tok: i32) -> (&[f32], &[f32], &[f32]) {
+        let (d, dv) = (self.cfg.d, self.cfg.dv);
+        let t = tok.rem_euclid(self.cfg.vocab as i32) as usize;
+        (
+            &self.qe[t * d..(t + 1) * d],
+            &self.ke[t * d..(t + 1) * d],
+            &self.ve[t * dv..(t + 1) * dv],
+        )
+    }
+
+    /// Feed one token through the decode state; `logits` afterwards hold
+    /// the next-token distribution. `orow`/`logits` are caller scratch.
+    pub fn step_token(
+        &self,
+        st: &mut dyn DecodeState,
+        tok: i32,
+        orow: &mut Vec<f32>,
+        logits: &mut Vec<f32>,
+    ) {
+        let (q, k, v) = self.embed_rows(tok);
+        orow.resize(self.cfg.dv, 0.0);
+        st.step(q, k, v, orow);
+        self.readout(orow, logits);
+    }
+
+    /// Linear readout: logits[w] = o . ro[w].
+    pub fn readout(&self, orow: &[f32], logits: &mut Vec<f32>) {
+        let dv = self.cfg.dv;
+        logits.clear();
+        for w in 0..self.cfg.vocab {
+            logits.push(dot(orow, &self.ro[w * dv..(w + 1) * dv]));
+        }
+    }
+
+    /// Greedy decoding: the first maximal logit wins (deterministic).
+    pub fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &l) in logits.iter().enumerate() {
+            if l > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    /// Full-recompute reference path: one batched forward over the whole
+    /// token prefix, logits at the last position. This is what every token
+    /// would cost without the incremental engine — `exp decode` benchmarks
+    /// it, the session tests pin stream equality against it, and the
+    /// one-shot `infer` path serves through it (prefill is exactly one
+    /// full forward).
+    pub fn forward_logits(&self, tokens: &[i32], pool: &Pool) -> Result<Vec<f32>> {
+        if tokens.is_empty() {
+            bail!("empty token prefix");
+        }
+        let n = tokens.len();
+        let (d, dv) = (self.cfg.d, self.cfg.dv);
+        let mut q = Tensor::zeros(&[n, d]);
+        let mut k = Tensor::zeros(&[n, d]);
+        let mut v = Tensor::zeros(&[n, dv]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let (qr, kr, vr) = self.embed_rows(tok);
+            q.row_mut(i).copy_from_slice(qr);
+            k.row_mut(i).copy_from_slice(kr);
+            v.row_mut(i).copy_from_slice(vr);
+        }
+        let w = Workload { q, k, v, dout: Tensor::zeros(&[n, dv]) };
+        let (o, _) = self.imp.forward_with(&w, pool);
+        let mut logits = Vec::with_capacity(self.cfg.vocab);
+        self.readout(o.row(n - 1), &mut logits);
+        Ok(logits)
+    }
+}
+
+/// Events on a generation stream, in order: `max_new` `Token`s, then one
+/// `Done`.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// One generated token; `pos` counts from the end of the prompt.
+    Token { token: i32, pos: usize },
+    /// Generation finished (max_new reached, context full, or cancelled).
+    Done { generated: usize, latency: Duration },
+}
+
+/// Client-side handle to a streaming generation: a receiver of
+/// [`StreamEvent`]s. Dropping it cancels the session server-side.
+pub struct GenStream {
+    pub(crate) rx: mpsc::Receiver<Result<StreamEvent>>,
+}
+
+impl GenStream {
+    /// Next event, or `None` once the server is done with the stream.
+    pub fn recv(&self) -> Option<Result<StreamEvent>> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain the stream to completion and return the generated tokens.
+    pub fn collect_tokens(self) -> Result<Vec<i32>> {
+        let mut out = Vec::new();
+        while let Some(ev) = self.recv() {
+            match ev? {
+                StreamEvent::Token { token, .. } => out.push(token),
+                StreamEvent::Done { .. } => break,
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One in-flight generation request on the scheduler thread.
+pub struct Session {
+    /// Kernel decode state (native backend); `None` on the PJRT backend,
+    /// which recomputes from `tokens` every step.
+    pub state: Option<Box<dyn DecodeState>>,
+    /// Prompt followed by the tokens generated so far.
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Tokens fed into `state` so far (prefill progress; native only).
+    pub fed: usize,
+    pub generated: usize,
+    pub max_new: usize,
+    pub submitted: Instant,
+    pub reply: mpsc::Sender<Result<StreamEvent>>,
+}
+
+impl Session {
+    pub fn new(
+        tokens: Vec<i32>,
+        max_new: usize,
+        submitted: Instant,
+        reply: mpsc::Sender<Result<StreamEvent>>,
+        state: Option<Box<dyn DecodeState>>,
+    ) -> Session {
+        let prompt_len = tokens.len();
+        Session {
+            state,
+            tokens,
+            prompt_len,
+            fed: 0,
+            generated: 0,
+            max_new,
+            submitted,
+            reply,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_rejects_unknown_kernel() {
+        let cfg = NativeModelConfig { kernel: "transformer".into(), ..Default::default() };
+        assert!(NativeDecodeModel::new(cfg).is_err());
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(NativeDecodeModel::argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(NativeDecodeModel::argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn step_token_matches_forward_logits_per_prefix() {
+        // Incremental step logits == full-recompute logits at every prefix
+        // length, for the kernels whose decode path is bit-compatible.
+        for kernel in ["zeta", "naive", "mamba"] {
+            let model = NativeDecodeModel::new(NativeModelConfig {
+                kernel: kernel.into(),
+                ..Default::default()
+            })
+            .unwrap();
+            let toks = [3i32, 7, 1, 1, 9, 0, 4, 2, 8, 5, 6, 3, 2, 7, 1, 0, 5, 9];
+            let pool = Pool::serial();
+            let mut st = model.begin();
+            let mut orow = Vec::new();
+            let mut logits = Vec::new();
+            for l in 1..=toks.len() {
+                model.step_token(st.as_mut(), toks[l - 1], &mut orow, &mut logits);
+                let full = model.forward_logits(&toks[..l], &pool).unwrap();
+                let maxdiff = logits
+                    .iter()
+                    .zip(&full)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(maxdiff < 1e-5, "{kernel} prefix {l}: {maxdiff}");
+            }
+        }
+    }
+
+    #[test]
+    fn embeddings_are_deterministic_per_seed() {
+        let a = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
+        let b = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
+        assert_eq!(a.qe, b.qe);
+        let c = NativeDecodeModel::new(NativeModelConfig { seed: 1, ..Default::default() })
+            .unwrap();
+        assert_ne!(a.qe, c.qe);
+    }
+}

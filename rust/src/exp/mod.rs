@@ -8,12 +8,12 @@
 //! scale substitutions.
 
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::attention::{flash::Flash, mamba::MambaLite, naive::Naive, zeta::ZetaNative};
-use crate::attention::{AttentionImpl, Workload};
+use crate::attention::{decode_full, AttentionImpl, Workload};
 use crate::data::{corpus::CorpusLm, task_for_config};
 use crate::runtime::Engine;
 use crate::trainer::Trainer;
@@ -486,6 +486,150 @@ pub fn table4(opts: &Opts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Decode — per-token serving cost: incremental decode vs full recompute
+// ---------------------------------------------------------------------------
+
+/// Caps for the *full-recompute* column (one full forward per emitted token
+/// — the regime the incremental engine replaces; above the cap the column
+/// is skipped the way Table 3 skips impractical rows).
+const DECODE_FULL_NAIVE_MAX: usize = 4096;
+const DECODE_FULL_FLASH_MAX: usize = 8192;
+
+/// `exp decode`: per-token decode cost at context length N for all four
+/// kernels, incremental (`decode_step` on a live [`crate::attention::DecodeState`])
+/// vs full-recompute (one `forward` over the whole prefix per token).
+/// Writes `results/decode.json` and the machine-readable
+/// `BENCH_decode.json` trajectory, and runs the decode-vs-prefill
+/// equivalence gate first — benchmarking a wrong kernel is worse than not
+/// benchmarking.
+pub fn decode(opts: &Opts) -> Result<()> {
+    // Equivalence gate: decode must reproduce forward row-for-row.
+    {
+        let w = Workload::random(256, 32, 16, opts.seed ^ 0xD0DE);
+        let pool = Pool::serial();
+        for im in crate::attention::all_impls() {
+            let (of, _) = im.forward_with(&w, &pool);
+            let od = decode_full(im.as_ref(), &w);
+            let diff = of.max_abs_diff(&od);
+            if diff >= 1e-4 {
+                bail!("decode equivalence gate failed for {}: max |Δ| = {diff}", im.name());
+            }
+            println!("equivalence {:<6} ✓ (max |Δ| = {diff:.2e})", im.name());
+        }
+    }
+
+    let lens: Vec<usize> = [512usize, 1024, 2048, 4096, 8192]
+        .into_iter()
+        .filter(|&n| n <= opts.max_len.min(8192))
+        .collect();
+    let d = 64;
+    let dv = 64;
+    let pool = if opts.threads == 0 { *Pool::global() } else { Pool::new(opts.threads) };
+    println!(
+        "\n== Decode: per-token cost at context N — incremental decode_step vs \
+         full-recompute forward =="
+    );
+    println!(
+        "{:<8}{:<8}{:>14}{:>14}{:>10}{:>14}{:>12}",
+        "kernel", "N", "incr µs/tok", "full µs/tok", "speedup", "incr tok/s", "state MB"
+    );
+    let mut rec = BTreeMap::new();
+    let mut bench_rows: Vec<Json> = Vec::new();
+    let mut zeta_curve: Vec<(usize, f64)> = Vec::new();
+    for &n in &lens {
+        let w = Workload::random(n, d, dv, opts.seed);
+        let naive = Naive;
+        let flash = Flash { block: 128 };
+        let mamba = MambaLite::default();
+        let zeta = ZetaNative { chunk: (n / 16).max(64), ..ZetaNative::default() };
+        let impls: [(&dyn AttentionImpl, usize); 4] = [
+            (&naive, DECODE_FULL_NAIVE_MAX),
+            (&mamba, usize::MAX),
+            (&flash, DECODE_FULL_FLASH_MAX),
+            (&zeta, usize::MAX),
+        ];
+        for (im, full_cap) in impls {
+            // Incremental: stream the whole sequence once through a live
+            // decode state; the timed last quarter measures per-token cost
+            // *at* context ~N (thousands of steps, no bench harness needed).
+            let tail_start = n - n / 4;
+            let mut st = im.begin_decode(d, dv);
+            let mut out = vec![0f32; dv];
+            for t in 0..tail_start {
+                st.step(w.q.row(t), w.k.row(t), w.v.row(t), &mut out);
+            }
+            let t0 = Instant::now();
+            for t in tail_start..n {
+                st.step(w.q.row(t), w.k.row(t), w.v.row(t), &mut out);
+            }
+            let incr_us = t0.elapsed().as_secs_f64() * 1e6 / (n - tail_start) as f64;
+            bench::black_box(&out);
+            let state_mb = st.state_bytes() as f64 / 1e6;
+            // Full recompute: one forward over the n-token prefix is the
+            // cost of ONE emitted token without the incremental engine.
+            let full_us = if n <= full_cap {
+                let stt = bench::bench(Duration::from_millis(300), 2, || {
+                    bench::black_box(im.forward_with(&w, &pool));
+                });
+                Some(stt.median_us())
+            } else {
+                None
+            };
+            let name = im.name();
+            rec.insert(format!("{name}_incr_us_{n}"), Json::num(incr_us));
+            let mut row = vec![
+                ("kernel", Json::str(name)),
+                ("n", Json::num(n as f64)),
+                ("threads", Json::num(pool.threads() as f64)),
+                ("incr_us_per_tok", Json::num(incr_us)),
+                ("incr_toks_per_sec", Json::num(1e6 / incr_us.max(1e-9))),
+                ("state_mb", Json::num(state_mb)),
+            ];
+            let full_cell = match full_us {
+                Some(us) => {
+                    rec.insert(format!("{name}_full_us_{n}"), Json::num(us));
+                    row.push(("full_us_per_tok", Json::num(us)));
+                    row.push(("full_toks_per_sec", Json::num(1e6 / us.max(1e-9))));
+                    format!("{us:>14.1}")
+                }
+                None => format!("{:>14}", "skip"),
+            };
+            let speedup = match full_us {
+                Some(us) if incr_us > 0.0 => format!("{:>9.0}x", us / incr_us),
+                _ => format!("{:>10}", "-"),
+            };
+            bench_rows.push(Json::obj(row));
+            println!(
+                "{name:<8}{n:<8}{incr_us:>14.2}{full_cell}{speedup}{:>14.0}{state_mb:>12.2}",
+                1e6 / incr_us.max(1e-9)
+            );
+            if name == "zeta" {
+                zeta_curve.push((n, incr_us));
+            }
+        }
+    }
+    // Sublinearity check: ZETA's per-token cost must grow slower than N.
+    if let (Some(&(n0, c0)), Some(&(n1, c1))) = (zeta_curve.first(), zeta_curve.last()) {
+        if n1 > n0 && c0 > 0.0 {
+            let cost_ratio = c1 / c0;
+            let n_ratio = n1 as f64 / n0 as f64;
+            let verdict = if cost_ratio < n_ratio { "sublinear ✓" } else { "NOT sublinear ✗" };
+            println!(
+                "zeta incremental per-token cost: {cost_ratio:.2}x across a {n_ratio:.0}x \
+                 context sweep — {verdict}"
+            );
+        }
+    }
+    println!("(full = one forward per token; skip = impractical at this N, as in Table 3)");
+    record(opts, "decode", Json::Obj(rec))?;
+    match std::fs::write("BENCH_decode.json", Json::Arr(bench_rows).to_string()) {
+        Ok(()) => println!("wrote BENCH_decode.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_decode.json: {e}"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Table 5 — d_K ablation on ListOps / Image
 // ---------------------------------------------------------------------------
 
@@ -524,6 +668,7 @@ pub fn all(engine: &Engine, opts: &Opts) -> Result<()> {
     table2(engine, opts)?;
     table3(opts)?;
     table4(opts)?;
+    decode(opts)?;
     table5(engine, opts)?;
     Ok(())
 }

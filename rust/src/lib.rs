@@ -24,10 +24,25 @@
 //! ([`attention::MultiWorkload`]) so one kernel call covers
 //! `batch × heads` problems.
 //!
+//! ## Incremental decode engine
+//!
+//! Serving splits into prefill and decode. Prefill is the batched kernel
+//! forward; decode runs on per-request [`attention::DecodeState`]s — for
+//! ZETA a persistent sorted Z-order index ([`zorder::index::ZIndex`],
+//! amortized O(log N) appends) plus windowed top-k and running
+//! history-mean state, so each generated token costs O(log N + k) instead
+//! of an O(N log N) re-sort. The coordinator turns `generate` requests
+//! into [`coordinator::session::Session`]s and continuously batches them
+//! (every sweep advances all live sessions one micro-batch, interleaved
+//! with one-shot infer batches). `rust/tests/decode_equivalence.rs` pins
+//! decode output to the full-sequence forward row-for-row; `zeta exp
+//! decode` prices incremental vs full-recompute per token
+//! (`BENCH_decode.json`).
+//!
 //! Substrates implemented in-tree (offline std-only build): JSON, PRNG,
-//! property tests, bench harness, worker pool ([`util`]), Morton codec
-//! ([`zorder`]), native CPU attention kernels for the efficiency study
-//! ([`attention`]).
+//! property tests, bench harness, worker pool ([`util`]), Morton codec +
+//! persistent sorted index ([`zorder`]), native CPU attention kernels for
+//! the efficiency study ([`attention`]).
 
 pub mod attention;
 pub mod coordinator;

@@ -12,7 +12,7 @@
 use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
-use zeta::coordinator::{Server, ServerConfig};
+use zeta::coordinator::{NativeModelConfig, Server, ServerConfig};
 use zeta::data::task_for_config;
 use zeta::exp;
 use zeta::runtime::Engine;
@@ -97,17 +97,28 @@ commands:
   info                         PJRT platform info
   train  --preset P [--steps N] [--seed S] [--ckpt PATH] [--eval-batches B]
   serve  --preset P [--requests N] [--clients C] [--max-delay-ms D]
+         [--generate] [--max-new N] [--native] [--native-kernel K]
   exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--threads T]
          [--verbose]
-         NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3,
-                 table1, table2, table3, table4, table5, table6, all}
+         NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3, table1, table2,
+                 table3, table4, table5, table6, decode, all}
+
+serving:
+  `serve` runs one-shot batched inference by default. With --generate each
+  request becomes a streaming generation session: the scheduler interleaves
+  prefill and decode micro-batches (continuous batching) and streams
+  --max-new tokens per request. --native (or missing artifacts) serves with
+  the in-process native decode engine — per-request kernel decode state
+  (ZETA: persistent Z-order index, O(log N + k) per token) instead of
+  full-sequence recompute; --native-kernel picks zeta|naive|flash|mamba.
 
 parallelism:
   All attention kernels run on a shared worker pool sized by the
   ZETA_THREADS env var (unset or 0 = auto-detect hardware threads).
   `exp table3` / `exp table4` report every row at threads=1 and at the
-  pool size (`--threads T` overrides), and `exp table3` writes the
-  machine-readable BENCH_table3.json perf trajectory.
+  pool size (`--threads T` overrides); `exp table3` writes the
+  machine-readable BENCH_table3.json perf trajectory and `exp decode`
+  writes BENCH_decode.json (incremental vs full-recompute per-token cost).
 
 `make artifacts` builds the core presets; `make artifacts-full` builds the
 experiment sweeps (required for fig2*/table1/2/5/6).";
@@ -170,11 +181,29 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     let requests = flag_usize(f, "requests", 64)?;
     let clients = flag_usize(f, "clients", 4)?;
     let delay_ms = flag_usize(f, "max-delay-ms", 5)? as u64;
-    let seq = Engine::new(zeta::ARTIFACTS_DIR)?.manifest.preset(&preset)?.seq_len();
-    let cfg = ServerConfig {
-        preset: preset.clone(),
-        max_delay: std::time::Duration::from_millis(delay_ms),
-        ..Default::default()
+    let generate = f.contains_key("generate");
+    let max_new = flag_usize(f, "max-new", 32)?;
+    // Native decode engine: forced with --native / --native-kernel, and the
+    // fallback whenever the AOT artifacts are absent.
+    let native_kernel = f.get("native-kernel").cloned();
+    let have_artifacts =
+        std::path::Path::new(zeta::ARTIFACTS_DIR).join("manifest.json").exists();
+    let use_native = f.contains_key("native") || native_kernel.is_some() || !have_artifacts;
+    let max_delay = std::time::Duration::from_millis(delay_ms);
+    let (cfg, seq, backend_desc) = if use_native {
+        let ncfg = NativeModelConfig {
+            kernel: native_kernel.unwrap_or_else(|| "zeta".into()),
+            ..Default::default()
+        };
+        if !have_artifacts {
+            eprintln!("artifacts/ missing — using the native decode engine");
+        }
+        let desc = format!("native decode engine ({} kernel)", ncfg.kernel);
+        (ServerConfig { native: Some(ncfg), max_delay, ..Default::default() }, 128, desc)
+    } else {
+        let seq = Engine::new(zeta::ARTIFACTS_DIR)?.manifest.preset(&preset)?.seq_len();
+        let cfg = ServerConfig { preset: preset.clone(), max_delay, ..Default::default() };
+        (cfg, seq, format!("preset {preset}"))
     };
     let srv = Server::start(cfg, None)?;
     let clients = clients.max(1);
@@ -182,24 +211,47 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     // 4 clients = 17+16+16+16, not 4x16).
     let base = requests / clients;
     let extra = requests % clients;
-    println!("serving {preset}: {clients} clients, {requests} requests total");
+    let mode = if generate {
+        format!("generate (--max-new {max_new})")
+    } else {
+        "infer".into()
+    };
+    println!("serving {backend_desc}: {clients} clients, {requests} {mode} requests total");
 
     let mut joins = Vec::new();
     for c in 0..clients {
         let per_client = base + usize::from(c < extra);
         let client = srv.client();
-        joins.push(std::thread::spawn(move || -> Result<()> {
+        joins.push(std::thread::spawn(move || -> Result<u64> {
             let mut rng = Rng::new(c as u64);
+            let mut streamed = 0u64;
             for _ in 0..per_client {
-                let len = 8 + rng.usize_below(seq - 8);
+                // Sample a prompt length in [min(8, seq), seq), clamped so
+                // presets with seq_len <= 8 cannot underflow the sampler.
+                // Generation needs room for new tokens in the context, so
+                // generate-mode prompts additionally stay below seq.
+                let lo = seq.min(8).max(1);
+                let mut len = if seq > lo { lo + rng.usize_below(seq - lo) } else { lo };
+                if generate {
+                    len = len.min(seq.saturating_sub(1)).max(1);
+                }
                 let toks: Vec<i32> = (0..len).map(|_| 1 + rng.below(200) as i32).collect();
-                client.infer(toks)?;
+                if generate {
+                    let stream = client.generate(toks, max_new)?;
+                    streamed += stream.collect_tokens()?.len() as u64;
+                } else {
+                    client.infer(toks)?;
+                }
             }
-            Ok(())
+            Ok(streamed)
         }));
     }
+    let mut streamed_total = 0u64;
     for j in joins {
-        j.join().map_err(|_| anyhow!("client thread panicked"))??;
+        streamed_total += j.join().map_err(|_| anyhow!("client thread panicked"))??;
+    }
+    if generate {
+        println!("streamed {streamed_total} generated tokens");
     }
     println!("metrics: {}", srv.metrics.lock().unwrap().summary());
     srv.shutdown();
@@ -208,11 +260,12 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
     let opts = opts_from_flags(f)?;
-    // fig3 / table3 / table4 need no artifacts
+    // fig3 / table3 / table4 / decode need no artifacts
     match which {
         "fig3" => return exp::fig3(&opts),
         "table3" => return exp::table3(&opts),
         "table4" => return exp::table4(&opts),
+        "decode" => return exp::decode(&opts),
         _ => {}
     }
     let engine = Engine::new(zeta::ARTIFACTS_DIR)?;

@@ -1,0 +1,339 @@
+//! Persistent sorted Z-order index — the L1 substrate of the incremental
+//! decode engine.
+//!
+//! [`ZIndex`] maintains the Morton codes of all keys seen so far in sorted
+//! order under *append-only* growth, so the per-token serving path never
+//! re-sorts the whole key set:
+//!
+//! * `append(code)` — amortized O(log N): the index stores O(log N) sorted
+//!   runs with binary-counter sizes (the classic logarithmic method /
+//!   Bentley–Saxe transform). Each append creates a singleton run and
+//!   merges equal-size runs; every element takes part in at most log2(N)
+//!   merges over the index's lifetime.
+//! * `window_with(code, w)` — O(w·log N·log w): the exact `w`-wide
+//!   candidate window around `code`'s insertion rank in the *global* sorted
+//!   order, assembled from per-run neighbourhoods.
+//!
+//! ## Exact equivalence with `argsort_codes`
+//!
+//! The global order is `(code, position)` lexicographic — identical to the
+//! stable LSD radix sort in [`super::argsort_codes`], which orders equal
+//! codes by insertion index. Every query helper here is defined against
+//! that order, so a window taken from a `ZIndex` after `n` appends is
+//! bit-for-bit the window a full rebuild + radix sort would produce on the
+//! same prefix. The property tests below pin this at every prefix length,
+//! and the ZETA kernel relies on it: batched prefill (`forward`) and
+//! incremental decode (`decode_step`) share one selection routine over this
+//! structure.
+
+/// One index entry: `(morton code, original append position)`.
+pub type Entry = (u32, u32);
+
+/// Append-only sorted index over Morton codes (sorted-runs design).
+#[derive(Debug, Default, Clone)]
+pub struct ZIndex {
+    /// Sorted runs, sizes forming a binary counter (largest first); each
+    /// run is ascending in `(code, pos)`.
+    runs: Vec<Vec<Entry>>,
+    len: usize,
+}
+
+/// Reusable scratch buffers for [`ZIndex::window_with`], so the per-token
+/// hot path allocates nothing after warm-up.
+#[derive(Debug, Default)]
+pub struct WindowScratch {
+    below: Vec<Entry>,
+    above: Vec<Entry>,
+}
+
+impl WindowScratch {
+    /// Bytes currently held by the scratch buffers (memory accounting).
+    pub fn bytes(&self) -> usize {
+        (self.below.capacity() + self.above.capacity()) * std::mem::size_of::<Entry>()
+    }
+}
+
+fn merge_runs(a: Vec<Entry>, b: Vec<Entry>) -> Vec<Entry> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        // Positions are unique, so `(code, pos)` is a strict total order.
+        if a[i] <= b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+impl ZIndex {
+    pub fn new() -> ZIndex {
+        ZIndex::default()
+    }
+
+    /// Build an index by appending every code in order.
+    pub fn from_codes(codes: &[u32]) -> ZIndex {
+        let mut ix = ZIndex::new();
+        for &c in codes {
+            ix.append(c);
+        }
+        ix
+    }
+
+    /// Number of entries appended so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of sorted runs currently held (≤ log2(len) + 1).
+    pub fn run_count(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Bytes held by the run storage (memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.runs
+            .iter()
+            .map(|r| r.capacity() * std::mem::size_of::<Entry>())
+            .sum()
+    }
+
+    /// Append the next key's Morton code; its position is the append index.
+    /// Amortized O(log N): merges equal-size runs binary-counter style.
+    pub fn append(&mut self, code: u32) {
+        assert!(self.len < u32::MAX as usize, "ZIndex position overflow");
+        let pos = self.len as u32;
+        self.len += 1;
+        let mut run = vec![(code, pos)];
+        while let Some(top) = self.runs.last() {
+            if top.len() > run.len() {
+                break;
+            }
+            let top = self.runs.pop().expect("non-empty checked above");
+            run = merge_runs(top, run);
+        }
+        self.runs.push(run);
+    }
+
+    /// Global insertion rank of `code`: the number of entries whose code is
+    /// strictly smaller (equal codes sort *after* the probe, matching
+    /// `partition_point(|c| c < code)` on the fully sorted array).
+    pub fn rank(&self, code: u32) -> usize {
+        self.runs
+            .iter()
+            .map(|run| run.partition_point(|&(c, _)| c < code))
+            .sum()
+    }
+
+    /// The exact candidate window of the fully sorted array: with
+    /// `ins = rank(code)` and `half = window / 2`, returns the entries at
+    /// global sorted ranks `[ins - half, ins + half)` (clamped to the array
+    /// bounds), in ascending `(code, pos)` order — byte-identical to
+    /// slicing a full `argsort_codes` rebuild of the same code sequence.
+    pub fn window_with(
+        &self,
+        code: u32,
+        window: usize,
+        scratch: &mut WindowScratch,
+        out: &mut Vec<Entry>,
+    ) {
+        out.clear();
+        if self.len == 0 || window == 0 {
+            return;
+        }
+        let half = window / 2;
+        scratch.below.clear();
+        scratch.above.clear();
+        let mut ins = 0usize;
+        for run in &self.runs {
+            let p = run.partition_point(|&(c, _)| c < code);
+            ins += p;
+            // Any global-window entry below the rank must be among its own
+            // run's `half` entries nearest the partition point (fewer than
+            // `half` entries separate it from the boundary globally, hence
+            // within its run too). Same argument above the rank.
+            scratch.below.extend_from_slice(&run[p.saturating_sub(half)..p]);
+            scratch.above.extend_from_slice(&run[p..(p + half).min(run.len())]);
+        }
+        scratch.below.sort_unstable();
+        scratch.above.sort_unstable();
+        let take_below = half.min(ins);
+        let take_above = half.min(self.len - ins);
+        out.extend_from_slice(&scratch.below[scratch.below.len() - take_below..]);
+        out.extend_from_slice(&scratch.above[..take_above]);
+    }
+
+    /// Allocating convenience wrapper around [`ZIndex::window_with`].
+    pub fn window(&self, code: u32, window: usize) -> Vec<Entry> {
+        let mut scratch = WindowScratch::default();
+        let mut out = Vec::new();
+        self.window_with(code, window, &mut scratch, &mut out);
+        out
+    }
+
+    /// Materialize the full sorted view (k-way merge of the runs). O(N log N)
+    /// worst case via repeated two-way merges — test/diagnostic use only;
+    /// the hot paths never need it.
+    pub fn sorted_entries(&self) -> Vec<Entry> {
+        let mut acc: Vec<Entry> = Vec::new();
+        for run in self.runs.iter().rev() {
+            acc = merge_runs(acc, run.clone());
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::zorder::argsort_codes;
+
+    /// Reference: the fully sorted `(code, pos)` array via the stable radix
+    /// argsort (the rebuild the index must be indistinguishable from).
+    fn ref_sorted(codes: &[u32]) -> Vec<Entry> {
+        argsort_codes(codes)
+            .into_iter()
+            .map(|p| (codes[p as usize], p))
+            .collect()
+    }
+
+    /// Reference window on the fully sorted array — mirrors the ZETA
+    /// kernel's `lo..hi` slice semantics exactly.
+    fn ref_window(sorted: &[Entry], probe: u32, window: usize) -> Vec<Entry> {
+        if window == 0 {
+            return Vec::new();
+        }
+        let ins = sorted.partition_point(|&(c, _)| c < probe);
+        let half = window / 2;
+        let lo = ins.saturating_sub(half);
+        let hi = (ins + half).min(sorted.len());
+        sorted[lo..hi].to_vec()
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let mut ix = ZIndex::new();
+        assert!(ix.is_empty());
+        assert_eq!(ix.window(5, 8), vec![]);
+        ix.append(7);
+        assert_eq!(ix.len(), 1);
+        assert_eq!(ix.sorted_entries(), vec![(7, 0)]);
+        assert_eq!(ix.window(7, 8), vec![(7, 0)]); // equal code sits above the rank
+        assert_eq!(ix.window(9, 8), vec![(7, 0)]);
+        assert_eq!(ix.rank(7), 0);
+        assert_eq!(ix.rank(8), 1);
+    }
+
+    #[test]
+    fn window_wider_than_index_returns_everything() {
+        let codes = [9u32, 3, 7, 3, 1];
+        let ix = ZIndex::from_codes(&codes);
+        assert_eq!(ix.window(4, 100), ref_sorted(&codes));
+    }
+
+    #[test]
+    fn duplicate_codes_keep_append_order() {
+        // All-equal codes: sorted order must be pure position order (the
+        // stability contract that matches the radix argsort).
+        let codes = [5u32; 9];
+        let ix = ZIndex::from_codes(&codes);
+        let want: Vec<Entry> = (0..9).map(|p| (5, p as u32)).collect();
+        assert_eq!(ix.sorted_entries(), want);
+        assert_eq!(ix.rank(5), 0);
+        assert_eq!(ix.rank(6), 9);
+    }
+
+    #[test]
+    fn run_sizes_stay_logarithmic() {
+        let mut ix = ZIndex::new();
+        for i in 0..1000u32 {
+            ix.append(i.wrapping_mul(2654435761) & 0x7FFF_FFFF);
+            let n = ix.len();
+            let cap = (usize::BITS - n.leading_zeros()) as usize; // floor(log2)+1
+            assert!(ix.run_count() <= cap, "n={n}: {} runs", ix.run_count());
+        }
+    }
+
+    #[test]
+    fn sorted_entries_match_argsort_rebuild() {
+        prop::check(40, 0x21DE1, |rng| {
+            let n = 1 + rng.usize_below(400);
+            // dup-heavy range so stability is actually exercised
+            let codes: Vec<u32> = (0..n).map(|_| rng.next_u32() % 97).collect();
+            let ix = ZIndex::from_codes(&codes);
+            prop::assert_eq_prop(&ix.sorted_entries(), &ref_sorted(&codes))
+        });
+    }
+
+    #[test]
+    fn interleaved_appends_match_full_rebuild_at_every_prefix() {
+        // The decode-engine contract: after every single append, candidate
+        // windows from the persistent index are identical to windows over a
+        // full argsort_codes rebuild of the same prefix.
+        prop::check(15, 0x21DE2, |rng| {
+            let n = 2 + rng.usize_below(160);
+            let dup_heavy = rng.below(2) == 0;
+            let codes: Vec<u32> = (0..n)
+                .map(|_| {
+                    if dup_heavy {
+                        rng.next_u32() % 31
+                    } else {
+                        rng.next_u32() & 0x7FFF_FFFF
+                    }
+                })
+                .collect();
+            let mut ix = ZIndex::new();
+            let mut scratch = WindowScratch::default();
+            let mut got = Vec::new();
+            for l in 1..=n {
+                ix.append(codes[l - 1]);
+                let sorted = ref_sorted(&codes[..l]);
+                for w in [1usize, 2, 7, 16, 64] {
+                    // probe an existing code, a neighbour, and a random one
+                    let probes = [
+                        codes[rng.usize_below(l)],
+                        codes[rng.usize_below(l)].wrapping_add(1),
+                        rng.next_u32() & 0x7FFF_FFFF,
+                    ];
+                    for probe in probes {
+                        ix.window_with(probe, w, &mut scratch, &mut got);
+                        let want = ref_window(&sorted, probe, w);
+                        if got != want {
+                            return Err(format!(
+                                "prefix {l} w {w} probe {probe}: {got:?} != {want:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rank_matches_partition_point() {
+        prop::check(30, 0x21DE3, |rng| {
+            let n = 1 + rng.usize_below(200);
+            let codes: Vec<u32> = (0..n).map(|_| rng.next_u32() % 64).collect();
+            let ix = ZIndex::from_codes(&codes);
+            let sorted = ref_sorted(&codes);
+            for probe in 0..65u32 {
+                let want = sorted.partition_point(|&(c, _)| c < probe);
+                if ix.rank(probe) != want {
+                    return Err(format!("probe {probe}: {} != {want}", ix.rank(probe)));
+                }
+            }
+            Ok(())
+        });
+    }
+}

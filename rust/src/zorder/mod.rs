@@ -3,9 +3,12 @@
 //! Mirror of python/compile/zorder.py, used on the Rust side by
 //!   * the Fig-3 locality study (`exp fig3`, `benches/fig3_locality.rs`),
 //!   * the Rust-native ZETA kernel (Table 3/4 benchmarks),
+//!   * the persistent sorted index behind the incremental decode engine
+//!     ([`index::ZIndex`]),
 //!   * property tests that cross-check the JAX implementation's conventions
 //!     (bit b of coordinate j lands at output position b*d + j).
 
+pub mod index;
 pub mod knn;
 
 /// Bits per coordinate so the interleaved code fits in 31 bits (matches the
@@ -85,6 +88,20 @@ pub fn encode_points_pool(
         });
     }
     out
+}
+
+/// Morton-encode a single point over the fixed grid [-range, range]^d —
+/// the per-token path of the decode engine. Exactly one row of
+/// [`encode_points`], so incremental codes match batch-prefill codes
+/// bit-for-bit.
+pub fn encode_point(point: &[f32], range: f32, bits: u32) -> u32 {
+    let d = point.len();
+    assert!(d <= 16, "encode_point supports up to 16 dims");
+    let mut coords = [0u32; 16];
+    for (c, &x) in coords.iter_mut().zip(point) {
+        *c = quantize(x, -range, range, bits);
+    }
+    interleave(&coords[..d], bits)
 }
 
 /// Morton-encode with a data-derived grid (per-dimension min/max), the
@@ -215,6 +232,19 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn encode_point_matches_batch_rows() {
+        let mut rng = Rng::new(0x0E0E);
+        let d = 3;
+        let mut pts = vec![0f32; 97 * d];
+        rng.fill_normal(&mut pts, 1.5);
+        let bits = bits_for_dim(d);
+        let batch = encode_points(&pts, d, 4.0, bits);
+        for (i, row) in pts.chunks_exact(d).enumerate() {
+            assert_eq!(encode_point(row, 4.0, bits), batch[i], "row {i}");
+        }
     }
 
     #[test]

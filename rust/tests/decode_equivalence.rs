@@ -1,0 +1,111 @@
+//! Decode-path equivalence gate (tier-1), the companion of
+//! `parallel_determinism.rs`:
+//!
+//! 1. For every kernel, generating T tokens via `decode_step` must match
+//!    the full-sequence `forward` outputs row-for-row within 1e-4, at
+//!    threads = 1 and threads = 4 — prefill and incremental decode are two
+//!    schedules of one computation.
+//! 2. Decode states report their position and a measured, N-scaled state
+//!    footprint (the serving-memory analogue of `MemReport`).
+//! 3. Interleaving two streams through independent states never
+//!    cross-contaminates (the continuous-batching invariant).
+
+use zeta::attention::{all_impls, decode_full, AttentionImpl, DecodeState, Workload};
+use zeta::util::pool::Pool;
+
+const TOL: f32 = 1e-4;
+
+#[test]
+fn decode_matches_forward_rowwise_for_every_kernel() {
+    // n spans several ZETA causal chunks (default chunk = 64).
+    let w = Workload::random(192, 16, 8, 42);
+    let dv = w.v.shape[1];
+    for threads in [1usize, 4] {
+        let pool = Pool::new(threads);
+        for imp in all_impls() {
+            let (of, _) = imp.forward_with(&w, &pool);
+            let od = decode_full(imp.as_ref(), &w);
+            for t in 0..w.n() {
+                let diff = of.row(t)
+                    .iter()
+                    .zip(&od.data[t * dv..(t + 1) * dv])
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    diff < TOL,
+                    "{} threads={threads} row {t}: decode diverged from forward by {diff}",
+                    imp.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_state_position_and_footprint() {
+    let w = Workload::random(96, 8, 8, 7);
+    for imp in all_impls() {
+        let mut st = imp.begin_decode(8, 8);
+        assert_eq!(st.pos(), 0, "{}", imp.name());
+        let mut out = vec![0f32; 8];
+        for t in 0..w.n() {
+            st.step(w.q.row(t), w.k.row(t), w.v.row(t), &mut out);
+        }
+        assert_eq!(st.pos(), w.n(), "{}", imp.name());
+        assert!(st.state_bytes() > 0, "{}", imp.name());
+        assert!(out.iter().all(|v| v.is_finite()), "{}", imp.name());
+    }
+}
+
+#[test]
+fn independent_streams_do_not_interleave_state() {
+    // Two sequences decoded through alternately-stepped states must equal
+    // the same sequences decoded back-to-back.
+    let wa = Workload::random(64, 8, 4, 1);
+    let wb = Workload::random(64, 8, 4, 2);
+    for imp in all_impls() {
+        let oa_ref = decode_full(imp.as_ref(), &wa);
+        let ob_ref = decode_full(imp.as_ref(), &wb);
+        let mut sa = imp.begin_decode(8, 4);
+        let mut sb = imp.begin_decode(8, 4);
+        let mut ra = vec![0f32; 4];
+        let mut rb = vec![0f32; 4];
+        for t in 0..64 {
+            sa.step(wa.q.row(t), wa.k.row(t), wa.v.row(t), &mut ra);
+            sb.step(wb.q.row(t), wb.k.row(t), wb.v.row(t), &mut rb);
+            let da = ra
+                .iter()
+                .zip(oa_ref.row(t))
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            let db = rb
+                .iter()
+                .zip(ob_ref.row(t))
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(da < TOL && db < TOL, "{} t={t}: {da} / {db}", imp.name());
+        }
+    }
+}
+
+#[test]
+fn mamba_decode_state_is_constant_in_n() {
+    use zeta::attention::mamba::MambaLite;
+    let m = MambaLite::default();
+    let probe = |n: usize| -> usize {
+        let w = Workload::random(n, 8, 8, 3);
+        let mut st = m.begin_decode(8, 8);
+        let mut out = vec![0f32; 8];
+        for t in 0..n {
+            st.step(w.q.row(t), w.k.row(t), w.v.row(t), &mut out);
+        }
+        st.state_bytes()
+    };
+    assert_eq!(probe(64), probe(512));
+}
+
+#[test]
+fn boxed_decode_state_is_send() {
+    fn assert_send<T: Send + ?Sized>() {}
+    assert_send::<dyn DecodeState>();
+}
