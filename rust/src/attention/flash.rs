@@ -296,6 +296,52 @@ mod tests {
     }
 
     #[test]
+    fn fused_step_batch_matches_serial_stepping() {
+        // The fused cross-stream sweep over flash's exact-KV decode states
+        // must be bit-identical to stepping each stream alone, at any
+        // thread count (each slot runs the same serial arithmetic on its
+        // own state — only the schedule changes).
+        use super::super::DecodeStep;
+        let f = Flash { block: 16 };
+        let (d, dv, n_streams, steps) = (8usize, 4usize, 6usize, 40usize);
+        let ws: Vec<Workload> =
+            (0..n_streams).map(|s| Workload::random(steps, d, dv, 100 + s as u64)).collect();
+        for threads in [1usize, 4] {
+            let pool = Pool::new(threads);
+            let mut fused: Vec<_> = (0..n_streams).map(|_| f.begin_decode(d, dv)).collect();
+            let mut serial: Vec<_> = (0..n_streams).map(|_| f.begin_decode(d, dv)).collect();
+            let mut of = vec![0f32; n_streams * dv];
+            let mut os = vec![0f32; n_streams * dv];
+            for t in 0..steps {
+                {
+                    let mut batch: Vec<DecodeStep> = fused
+                        .iter_mut()
+                        .zip(of.chunks_mut(dv))
+                        .enumerate()
+                        .map(|(s, (st, out))| DecodeStep {
+                            state: st.as_mut(),
+                            q: ws[s].q.row(t),
+                            k: ws[s].k.row(t),
+                            v: ws[s].v.row(t),
+                            out,
+                        })
+                        .collect();
+                    f.step_batch(&mut batch, &pool);
+                }
+                for (s, st) in serial.iter_mut().enumerate() {
+                    st.step(
+                        ws[s].q.row(t),
+                        ws[s].k.row(t),
+                        ws[s].v.row(t),
+                        &mut os[s * dv..(s + 1) * dv],
+                    );
+                }
+                assert_eq!(of, os, "threads={threads} t={t}");
+            }
+        }
+    }
+
+    #[test]
     fn parallel_matches_serial() {
         let w = Workload::random(129, 8, 8, 12);
         let f = Flash { block: 16 };

@@ -162,6 +162,11 @@ impl DecodeState for MambaDecode {
         self.t
     }
 
+    fn step_cost_hint(&self) -> usize {
+        // One recurrent step: O(dv·n_state), constant in context length.
+        self.dv * self.ns * 6 + self.ns * 4
+    }
+
     fn state_bytes(&self) -> usize {
         (self.h.len() + self.b.len() + self.c.len()) * 4
     }

@@ -49,7 +49,7 @@ pub mod naive;
 pub mod zeta;
 
 use crate::tensor::Tensor;
-use crate::util::pool::Pool;
+use crate::util::pool::{Pool, SharedSlice};
 use crate::util::rng::Rng;
 
 /// One attention problem instance (single head; batch = repeat).
@@ -162,7 +162,36 @@ pub trait DecodeState: Send {
     /// Bytes of persistent per-request state (KV cache / Z-order index /
     /// SSM state) — the serving-memory analogue of [`MemReport`].
     fn state_bytes(&self) -> usize;
+
+    /// Rough scalar-op estimate of the *next* [`DecodeState::step`] call,
+    /// used by [`AttentionImpl::step_batch`] to decide whether a fused
+    /// cross-stream sweep is worth a pool fan-out (scoped-thread spawns
+    /// cost tens of µs; tiny steps stay inline). Kernels override with
+    /// their per-token complexity; the default models the exact-softmax
+    /// O(t) regime.
+    fn step_cost_hint(&self) -> usize {
+        (self.pos() + 1) * 8
+    }
 }
+
+/// One stream's slot in a fused cross-session decode sweep: its live
+/// [`DecodeState`] plus this step's q/k/v rows and output row. Slots are
+/// independent (disjoint states and outputs), which is what makes the
+/// sweep embarrassingly parallel.
+pub struct DecodeStep<'a> {
+    pub state: &'a mut dyn DecodeState,
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub out: &'a mut [f32],
+}
+
+/// Minimum estimated scalar ops across a fused sweep before
+/// [`AttentionImpl::step_batch`] fans out to the pool — below this, the
+/// scoped-thread spawn (tens of µs per worker; the pool has no persistent
+/// threads) costs more than the steps it splits, so the sweep runs inline
+/// and stays exactly the serial schedule.
+const PARALLEL_STEP_MIN_OPS: usize = 1 << 17;
 
 /// Run a whole workload through the decode path one token at a time,
 /// returning the `(N, dv)` outputs. This is the subject of the
@@ -240,6 +269,37 @@ pub trait AttentionImpl {
     /// O(log N + k) for `zeta`, O(N) for the exact-softmax kernels, O(1)
     /// for `mamba`.
     fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState>;
+
+    /// Fused cross-stream decode: advance every slot's [`DecodeState`] by
+    /// one token in a *single* pool-parallel kernel call — the serving
+    /// sweep's replacement for N serial `step` calls across concurrent
+    /// sessions. Slots are claimed dynamically off the chunk queue, and
+    /// each slot runs the exact single-stream `step` arithmetic on its own
+    /// state, so fused and serial sweeps produce bit-identical outputs
+    /// (the fused-sweep equivalence gate in `rust/tests/fused_sweep.rs`).
+    /// Sweeps whose total estimated work is below the fan-out break-even
+    /// ([`PARALLEL_STEP_MIN_OPS`]) run inline serially.
+    fn step_batch(&self, batch: &mut [DecodeStep<'_>], pool: &Pool) {
+        let n = batch.len();
+        let total: usize = batch.iter().map(|s| s.state.step_cost_hint()).sum();
+        if n < 2 || pool.threads() == 1 || total < PARALLEL_STEP_MIN_OPS {
+            for s in batch.iter_mut() {
+                s.state.step(s.q, s.k, s.v, s.out);
+            }
+            return;
+        }
+        let share = SharedSlice::new(batch);
+        pool.run_chunked(n, 1, |queue| {
+            while let Some(slots) = queue.next_chunk() {
+                for i in slots {
+                    // Safety: slot i is claimed by exactly one chunk, and
+                    // every slot owns a distinct state/output pair.
+                    let s = unsafe { &mut share.range_mut(i..i + 1)[0] };
+                    s.state.step(s.q, s.k, s.v, s.out);
+                }
+            }
+        });
+    }
 
     /// Analytic memory model for problem sizes too expensive to *execute*
     /// on this testbed (Table 4's starred rows). `threads` is the pool size

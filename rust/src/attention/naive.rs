@@ -77,6 +77,11 @@ impl DecodeState for ExactKvDecode {
         self.t
     }
 
+    fn step_cost_hint(&self) -> usize {
+        // One exact softmax row over the cache: O(t·(d + dv)).
+        (self.t + 1) * (self.d + self.dv + 4)
+    }
+
     fn state_bytes(&self) -> usize {
         (self.k.capacity() + self.v.capacity() + self.scores.capacity()) * 4
     }

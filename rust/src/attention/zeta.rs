@@ -590,6 +590,13 @@ impl DecodeState for ZetaDecode {
         self.t
     }
 
+    fn step_cost_hint(&self) -> usize {
+        // Window scan over the sorted index + top-k Cauchy scoring —
+        // O(window·log N + k·dv), constant-ish in context length.
+        let logn = usize::BITS as usize - self.codes.len().max(1).leading_zeros() as usize;
+        self.cfg.window * (logn + 8) + self.cfg.k * (self.dv + 8)
+    }
+
     fn state_bytes(&self) -> usize {
         self.index.bytes()
             + self.codes.capacity() * 4

@@ -9,8 +9,13 @@ pub struct Metrics {
     pub completed: u64,
     pub batches: u64,
     pub batched_requests: u64,
-    /// Tokens emitted by streaming generation sessions.
+    /// Tokens *delivered* to streaming generation clients (sends that
+    /// succeeded). Never-delivered tokens — the client hung up before the
+    /// send — are tracked separately in `dropped_tokens` so tokens/sec
+    /// reflects real delivery, not work wasted on vanished receivers.
     pub tokens: u64,
+    /// Tokens generated whose stream send failed (cancelled sessions).
+    pub dropped_tokens: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -34,17 +39,25 @@ impl Metrics {
         self.batched_requests += size as u64;
     }
 
-    /// Count tokens emitted by one decode sweep. `sweep_started` is when
-    /// the sweep began, so the observed span covers the work that produced
-    /// the first tokens (a single-sweep generation still reports a
-    /// non-zero span and therefore a real tok/s).
-    pub fn record_tokens(&mut self, n: u64, sweep_started: Instant) {
+    /// Count one decode sweep's tokens: `delivered` sends that succeeded,
+    /// `dropped` sends that failed (client gone). Only delivered tokens
+    /// feed tokens/sec. `sweep_started` is when the sweep began, so the
+    /// observed span covers the work that produced the first tokens (a
+    /// single-sweep generation still reports a non-zero span and therefore
+    /// a real tok/s).
+    pub fn record_tokens(&mut self, delivered: u64, dropped: u64, sweep_started: Instant) {
+        self.dropped_tokens += dropped;
+        if delivered == 0 {
+            // A drop-only sweep must not stretch the observed span — that
+            // would deflate tokens/sec without any delivery happening.
+            return;
+        }
         match self.started {
             Some(s) if s <= sweep_started => {}
             _ => self.started = Some(sweep_started),
         }
         self.finished = Some(Instant::now());
-        self.tokens += n;
+        self.tokens += delivered;
     }
 
     /// Generated tokens per second over the observed span.
@@ -103,6 +116,9 @@ impl Metrics {
         if self.tokens > 0 {
             s.push_str(&format!(" tokens={} tok/s={:.1}", self.tokens, self.tokens_per_sec()));
         }
+        if self.dropped_tokens > 0 {
+            s.push_str(&format!(" dropped_tokens={}", self.dropped_tokens));
+        }
         s
     }
 }
@@ -137,5 +153,23 @@ mod tests {
         m.record_batch(8);
         m.record_batch(4);
         assert_eq!(m.mean_batch_size(), 6.0);
+    }
+
+    #[test]
+    fn dropped_tokens_do_not_feed_throughput() {
+        let mut m = Metrics::new();
+        let t0 = Instant::now();
+        m.record_tokens(5, 3, t0);
+        assert_eq!(m.tokens, 5);
+        assert_eq!(m.dropped_tokens, 3);
+        // A drop-only sweep must neither count tokens nor stretch the
+        // observed span (which would deflate tokens/sec).
+        let tps = m.tokens_per_sec();
+        std::thread::sleep(Duration::from_millis(2));
+        m.record_tokens(0, 2, t0);
+        assert_eq!(m.tokens, 5);
+        assert_eq!(m.dropped_tokens, 5);
+        assert_eq!(m.tokens_per_sec(), tps);
+        assert!(m.summary().contains("dropped_tokens=5"));
     }
 }

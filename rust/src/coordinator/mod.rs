@@ -16,10 +16,13 @@
 //!   back out (the prefill path).
 //! * **streaming `generate`** — each request becomes a [`session::Session`]
 //!   holding its per-request decode state. The scheduler runs *continuous
-//!   batching*: every sweep advances every active session by one
-//!   micro-batch (a prefill slice of the prompt, or one decode step that
-//!   emits a token on the stream), interleaved with due infer batches, so
-//!   long generations never block new arrivals.
+//!   batching*: every sweep partitions the live sessions into a prefill
+//!   wave (bounded by a global per-sweep prefill-token budget, so a burst
+//!   of long prompts cannot starve token cadence) and a *fused decode
+//!   wave* — one pool-parallel [`crate::attention::AttentionImpl::step_batch`]
+//!   kernel call across all ready sessions instead of N serial steps —
+//!   interleaved with due infer batches, so long generations never block
+//!   new arrivals.
 //!
 //! Backends:
 //!
@@ -51,12 +54,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::attention::DecodeState;
 use crate::runtime::{Engine, HostTensor};
 use crate::util::pool::{Pool, SharedSlice};
 use batcher::{Batcher, Decision};
 use metrics::Metrics;
 pub use session::{GenStream, NativeModelConfig, StreamEvent};
-use session::{NativeDecodeModel, Session};
+use session::{NativeDecodeModel, PrefillStep, Session, SessionStep, StepScratch};
 
 /// Model output for one request.
 #[derive(Debug, Clone)]
@@ -78,6 +82,8 @@ struct GenJob {
     max_new: usize,
     submitted: Instant,
     reply: mpsc::Sender<Result<StreamEvent>>,
+    /// Shared with the client's [`GenStream`]; set when it is dropped.
+    cancel: Arc<AtomicBool>,
 }
 
 enum Request {
@@ -90,8 +96,12 @@ enum Request {
 const NATIVE_MAX_BATCH: usize = 8;
 
 /// Prompt tokens ingested per session per sweep while prefilling — the
-/// micro-batch that keeps prefill from starving concurrent decodes.
+/// per-session micro-batch that keeps one long prompt from monopolizing a
+/// sweep (the *global* cap across sessions is `ServerConfig::prefill_budget`).
 const PREFILL_CHUNK: usize = 32;
+
+/// Default global per-sweep prefill-token budget (`ServerConfig::prefill_budget`).
+const DEFAULT_PREFILL_BUDGET: usize = 256;
 
 #[derive(Clone)]
 pub struct ServerConfig {
@@ -103,6 +113,12 @@ pub struct ServerConfig {
     /// Worker-pool size for batch padding/fan-out on the scheduler thread
     /// (0 = the process-global pool, i.e. `ZETA_THREADS` / auto-detect).
     pub threads: usize,
+    /// Global cap on prompt tokens ingested per scheduler sweep, summed
+    /// across *all* prefilling sessions (native backend). Sessions beyond
+    /// the budget wait in arrival order, so a burst of long prompts cannot
+    /// starve the decode wave's token cadence. Each session is still
+    /// individually capped at `PREFILL_CHUNK` per sweep. 0 = unlimited.
+    pub prefill_budget: usize,
     /// Serve with the in-process native decode engine instead of PJRT:
     /// runs without artifacts and decodes incrementally. `preset` /
     /// `artifacts_dir` are ignored when set.
@@ -118,6 +134,7 @@ impl Default for ServerConfig {
             queue_cap: 256,
             seed: 0,
             threads: 0,
+            prefill_budget: DEFAULT_PREFILL_BUDGET,
             native: None,
         }
     }
@@ -163,21 +180,25 @@ impl ClientHandle {
     }
 
     /// Submit a streaming generation: the returned [`GenStream`] yields
-    /// `max_new` tokens (fewer if the context fills) followed by a `Done`
-    /// event. Dropping the stream cancels the session.
+    /// `max_new` tokens (fewer if the context fills — the native backend's
+    /// `NativeModelConfig::max_context`, the engine backend's graph
+    /// `seq_len`) followed by a `Done` event. Dropping the stream cancels
+    /// the session immediately, even mid-prefill.
     pub fn generate(&self, tokens: Vec<i32>, max_new: usize) -> Result<GenStream> {
         if tokens.is_empty() {
             bail!("generate requires a non-empty prompt");
         }
         self.admit()?;
         let (rtx, rrx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
         self.send(Request::Generate(GenJob {
             tokens,
             max_new,
             submitted: Instant::now(),
             reply: rtx,
+            cancel: cancel.clone(),
         }))?;
-        Ok(GenStream { rx: rrx })
+        Ok(GenStream { rx: rrx, cancel })
     }
 }
 
@@ -265,8 +286,8 @@ impl Server {
                     if cfg2.threads == 0 { *Pool::global() } else { Pool::new(cfg2.threads) };
                 let mut batcher: Batcher<Job> = Batcher::new(max_batch, cfg2.max_delay);
                 let mut sessions: Vec<Session> = Vec::new();
-                let mut orow: Vec<f32> = Vec::new();
-                let mut logits_buf: Vec<f32> = Vec::new();
+                // Reusable fused-sweep buffers (per-slot orows/logits/tokens).
+                let mut scratch = StepScratch::default();
                 // Engine decode sweeps rewrite only the token slab at
                 // inputs[0]; the parameter tail is cloned once here, not
                 // once per emitted token.
@@ -349,8 +370,9 @@ impl Server {
                                 &mut sessions,
                                 &metrics2,
                                 &depth2,
-                                &mut orow,
-                                &mut logits_buf,
+                                &mut scratch,
+                                &pool,
+                                cfg2.prefill_budget,
                             ),
                             Backend::Engine { exe, seq_len, vocab, .. } => engine_decode_sweep(
                                 exe,
@@ -443,6 +465,18 @@ fn admit_request(
             }
             match backend {
                 Backend::Native(model) => {
+                    // The native context cap mirrors the engine backend's
+                    // seq_len bound: a prompt that already fills the
+                    // context could never emit a token.
+                    let cap = model.max_context();
+                    if cap > 0 && g.tokens.len() >= cap {
+                        depth.fetch_sub(1, Ordering::Relaxed);
+                        let _ = g.reply.send(Err(anyhow!(
+                            "prompt length {} >= native context cap {cap}",
+                            g.tokens.len()
+                        )));
+                        return;
+                    }
                     let state = model.begin();
                     sessions.push(Session::new(
                         g.tokens,
@@ -450,6 +484,7 @@ fn admit_request(
                         g.submitted,
                         g.reply,
                         Some(state),
+                        g.cancel,
                     ));
                 }
                 Backend::Engine { is_lm, seq_len, .. } => {
@@ -468,7 +503,14 @@ fn admit_request(
                         )));
                         return;
                     }
-                    sessions.push(Session::new(g.tokens, g.max_new, g.submitted, g.reply, None));
+                    sessions.push(Session::new(
+                        g.tokens,
+                        g.max_new,
+                        g.submitted,
+                        g.reply,
+                        None,
+                        g.cancel,
+                    ));
                 }
             }
         }
@@ -499,95 +541,212 @@ fn native_infer_batch(
     }
 }
 
-/// Outcome of advancing one session by one micro-batch.
-enum Advance {
-    /// Still prefilling or more tokens to generate.
-    Continue,
-    /// `max_new` reached — retire with metrics + a `Done` event.
-    Done,
-    /// The client dropped the stream — retire silently (no metrics, the
-    /// receiver is gone).
-    Cancelled,
+/// Retire every session whose client dropped its stream — before any
+/// compute is spent on it, including sessions still deep in prefill.
+/// Cancelled sessions free their queue slot silently (no metrics, no Done:
+/// the receiver is gone). Ordered removal (not `swap_remove`) keeps the
+/// session table in arrival order — the prefill budget allocates down that
+/// order, so reordering would let late arrivals capture the budget ahead
+/// of older budget-starved sessions.
+fn retire_cancelled(sessions: &mut Vec<Session>, depth: &Arc<AtomicUsize>) {
+    sessions.retain(|s| {
+        if s.cancelled() {
+            depth.fetch_sub(1, Ordering::Relaxed);
+            false
+        } else {
+            true
+        }
+    });
 }
 
-/// Advance one native session by one micro-batch.
-fn native_advance(
-    model: &NativeDecodeModel,
+/// Stream one generated token to a session's client and decide its fate.
+/// Only a *delivered* token counts toward the tokens/sec metric — a failed
+/// send means the client hung up between the sweep's cancel check and now,
+/// and its token must not inflate throughput; the session retires silently.
+#[allow(clippy::too_many_arguments)]
+fn emit_token(
     s: &mut Session,
-    orow: &mut Vec<f32>,
-    logits: &mut Vec<f32>,
-) -> Advance {
-    let st = s.state.as_mut().expect("native session carries decode state");
-    if s.fed < s.prompt_len {
-        // Prefill micro-batch: a slice of prompt tokens per sweep.
-        let e = (s.fed + PREFILL_CHUNK).min(s.prompt_len);
-        for i in s.fed..e {
-            model.step_token(st.as_mut(), s.tokens[i], orow, logits);
-        }
-        s.fed = e;
-        if s.fed < s.prompt_len {
-            return Advance::Continue; // still prefilling
-        }
-        // Prompt ingested: `logits` now predict the first new token.
-    } else {
-        // Decode step: feed the last emitted token.
-        let last = *s.tokens.last().expect("prompt is non-empty");
-        model.step_token(st.as_mut(), last, orow, logits);
-        s.fed += 1;
-    }
-    let tok = NativeDecodeModel::argmax(logits);
+    idx: usize,
+    tok: i32,
+    max_context: usize,
+    emitted: &mut u64,
+    dropped: &mut u64,
+    retire_done: &mut Vec<usize>,
+    retire_silent: &mut Vec<usize>,
+) {
     s.tokens.push(tok);
     s.generated += 1;
     let pos = s.generated - 1;
     if s.reply.send(Ok(StreamEvent::Token { token: tok, pos })).is_err() {
-        return Advance::Cancelled;
+        *dropped += 1;
+        retire_silent.push(idx);
+        return;
     }
-    if s.generated >= s.max_new {
-        Advance::Done
-    } else {
-        Advance::Continue
+    *emitted += 1;
+    if s.generated >= s.max_new || (max_context > 0 && s.tokens.len() >= max_context) {
+        retire_done.push(idx);
     }
 }
 
-/// Continuous-batching sweep on the native backend: every live session
-/// advances one micro-batch; finished sessions are retired. Cancelled
-/// sessions free their queue slot but are not recorded as completions.
+/// Continuous-batching sweep on the native backend, fused across sessions:
+///
+/// 1. Cancelled sessions (dropped streams) retire before any compute.
+/// 2. The rest partition into a *prefill wave* — bounded per session by
+///    `PREFILL_CHUNK` and globally by `prefill_budget`, so a burst of long
+///    prompts cannot starve decode cadence — and a *decode wave*.
+/// 3. The prefill wave runs through [`NativeDecodeModel::prefill_batch`]
+///    (across-session pool-parallel; sessions whose prompt completes emit
+///    their first token from the final prefill logits); the decode wave
+///    runs through one fused [`NativeDecodeModel::step_batch`] kernel call
+///    instead of N serial `step_token` calls.
+/// 4. Per-session arithmetic is identical to serial stepping, so fused and
+///    serial sweeps produce identical token streams (the fused-sweep
+///    equivalence gate in `rust/tests/fused_sweep.rs`).
 fn native_decode_sweep(
     model: &NativeDecodeModel,
     sessions: &mut Vec<Session>,
     metrics: &Arc<Mutex<Metrics>>,
     depth: &Arc<AtomicUsize>,
-    orow: &mut Vec<f32>,
-    logits: &mut Vec<f32>,
+    scratch: &mut StepScratch,
+    pool: &Pool,
+    prefill_budget: usize,
 ) {
     let sweep_t0 = Instant::now();
-    let mut i = 0;
     let mut emitted = 0u64;
-    while i < sessions.len() {
-        let before = sessions[i].generated;
-        let outcome = native_advance(model, &mut sessions[i], orow, logits);
-        emitted += (sessions[i].generated - before) as u64;
-        match outcome {
-            Advance::Continue => i += 1,
-            Advance::Cancelled => {
-                sessions.swap_remove(i);
-                depth.fetch_sub(1, Ordering::Relaxed);
+    let mut dropped = 0u64;
+
+    retire_cancelled(sessions, depth);
+    if sessions.is_empty() {
+        return;
+    }
+
+    // Partition into the budgeted prefill wave and the fused decode wave.
+    // Indices stay valid for the whole sweep: retirement happens at the end.
+    let mut prefill: Vec<(usize, usize)> = Vec::new(); // (session idx, tokens)
+    let mut decode: Vec<usize> = Vec::new();
+    let mut remaining = if prefill_budget == 0 { usize::MAX } else { prefill_budget };
+    for (idx, s) in sessions.iter().enumerate() {
+        if s.fed < s.prompt_len {
+            let take = (s.prompt_len - s.fed).min(PREFILL_CHUNK).min(remaining);
+            if take > 0 {
+                remaining -= take;
+                prefill.push((idx, take));
             }
-            Advance::Done => {
-                let s = sessions.swap_remove(i);
-                depth.fetch_sub(1, Ordering::Relaxed);
-                let latency = s.submitted.elapsed();
-                let mut m = metrics.lock().unwrap();
-                m.record(latency);
-                drop(m);
-                let _ = s
-                    .reply
-                    .send(Ok(StreamEvent::Done { generated: s.generated, latency }));
-            }
+            // take == 0: budget exhausted — the session waits its turn
+            // (arrival order keeps the wave fair across sweeps).
+        } else {
+            decode.push(idx);
         }
     }
-    if emitted > 0 {
-        metrics.lock().unwrap().record_tokens(emitted, sweep_t0);
+
+    let mut retire_done: Vec<usize> = Vec::new();
+    let mut retire_silent: Vec<usize> = Vec::new();
+    let max_context = model.max_context();
+
+    // Prefill wave: move each state out, run the batched prefill, put the
+    // states back and stream first tokens for completed prompts.
+    if !prefill.is_empty() {
+        let mut staged: Vec<(usize, usize, Box<dyn DecodeState>)> =
+            Vec::with_capacity(prefill.len());
+        for &(idx, take) in &prefill {
+            let st = sessions[idx].state.take().expect("native session carries decode state");
+            staged.push((idx, take, st));
+        }
+        {
+            let mut items: Vec<PrefillStep> = staged
+                .iter_mut()
+                .map(|(idx, take, st)| {
+                    let s = &sessions[*idx];
+                    PrefillStep {
+                        state: st.as_mut(),
+                        tokens: &s.tokens[s.fed..s.fed + *take],
+                        emit: s.fed + *take == s.prompt_len,
+                    }
+                })
+                .collect();
+            model.prefill_batch(&mut items, scratch, pool);
+        }
+        for ((idx, take, st), tok) in staged.into_iter().zip(scratch.next.iter().copied()) {
+            let s = &mut sessions[idx];
+            s.state = Some(st);
+            s.fed += take;
+            if s.fed < s.prompt_len {
+                continue; // still prefilling next sweep
+            }
+            emit_token(
+                s,
+                idx,
+                tok,
+                max_context,
+                &mut emitted,
+                &mut dropped,
+                &mut retire_done,
+                &mut retire_silent,
+            );
+        }
+    }
+
+    // Fused decode wave: one pool-parallel kernel call across all ready
+    // sessions (each feeds its last emitted token).
+    if !decode.is_empty() {
+        let mut staged: Vec<(usize, Box<dyn DecodeState>)> = Vec::with_capacity(decode.len());
+        for &idx in &decode {
+            let st = sessions[idx].state.take().expect("native session carries decode state");
+            staged.push((idx, st));
+        }
+        {
+            let mut items: Vec<SessionStep> = staged
+                .iter_mut()
+                .map(|(idx, st)| SessionStep {
+                    state: st.as_mut(),
+                    tok: *sessions[*idx].tokens.last().expect("prompt is non-empty"),
+                })
+                .collect();
+            model.step_batch(&mut items, scratch, pool);
+        }
+        for ((idx, st), tok) in staged.into_iter().zip(scratch.next.iter().copied()) {
+            let s = &mut sessions[idx];
+            s.state = Some(st);
+            s.fed += 1;
+            emit_token(
+                s,
+                idx,
+                tok,
+                max_context,
+                &mut emitted,
+                &mut dropped,
+                &mut retire_done,
+                &mut retire_silent,
+            );
+        }
+    }
+
+    // Retire in descending index order so removal never disturbs a
+    // still-pending index; ordered `remove` keeps the survivors in arrival
+    // order, which is what makes the prefill budget's "wait your turn"
+    // fairness real across sweeps.
+    let mut retire: Vec<(usize, bool)> = retire_done
+        .into_iter()
+        .map(|i| (i, true))
+        .chain(retire_silent.into_iter().map(|i| (i, false)))
+        .collect();
+    retire.sort_unstable_by_key(|r| std::cmp::Reverse(r.0));
+    for (idx, done) in retire {
+        let s = sessions.remove(idx);
+        depth.fetch_sub(1, Ordering::Relaxed);
+        if !done {
+            continue;
+        }
+        let latency = s.submitted.elapsed();
+        let mut m = metrics.lock().unwrap();
+        m.record(latency);
+        drop(m);
+        let _ = s
+            .reply
+            .send(Ok(StreamEvent::Done { generated: s.generated, latency }));
+    }
+    if emitted > 0 || dropped > 0 {
+        metrics.lock().unwrap().record_tokens(emitted, dropped, sweep_t0);
     }
 }
 
@@ -607,11 +766,13 @@ fn engine_decode_sweep(
     depth: &Arc<AtomicUsize>,
 ) {
     let sweep_t0 = Instant::now();
+    retire_cancelled(sessions, depth);
     let mut done = vec![false; sessions.len()];
     // Retire without metrics or a Done event: the request errored (client
     // already got the Err) or the client dropped the stream.
     let mut silent = vec![false; sessions.len()];
     let mut emitted = 0u64;
+    let mut dropped = 0u64;
     let mut start = 0usize;
     while start < sessions.len() {
         let end = (start + max_batch).min(sessions.len());
@@ -648,15 +809,20 @@ fn engine_decode_sweep(
                         let tok = NativeDecodeModel::argmax(&logits[base..base + vocab]);
                         s.tokens.push(tok);
                         s.generated += 1;
-                        emitted += 1;
                         let pos = s.generated - 1;
                         let gone =
                             s.reply.send(Ok(StreamEvent::Token { token: tok, pos })).is_err();
                         if gone {
+                            // Never-delivered token: not counted toward
+                            // tokens/sec (the receiver is gone).
+                            dropped += 1;
                             done[start + r] = true;
                             silent[start + r] = true;
-                        } else if s.generated >= s.max_new || s.tokens.len() >= seq_len {
-                            done[start + r] = true;
+                        } else {
+                            emitted += 1;
+                            if s.generated >= s.max_new || s.tokens.len() >= seq_len {
+                                done[start + r] = true;
+                            }
                         }
                     }
                 }
@@ -672,9 +838,11 @@ fn engine_decode_sweep(
         }
         start = end;
     }
+    // Reverse order keeps pending indices valid; ordered `remove` keeps
+    // the survivors in arrival order (see `retire_cancelled`).
     for i in (0..sessions.len()).rev() {
         if done[i] {
-            let s = sessions.swap_remove(i);
+            let s = sessions.remove(i);
             depth.fetch_sub(1, Ordering::Relaxed);
             if silent[i] {
                 continue;
@@ -688,8 +856,8 @@ fn engine_decode_sweep(
                 .send(Ok(StreamEvent::Done { generated: s.generated, latency }));
         }
     }
-    if emitted > 0 {
-        metrics.lock().unwrap().record_tokens(emitted, sweep_t0);
+    if emitted > 0 || dropped > 0 {
+        metrics.lock().unwrap().record_tokens(emitted, dropped, sweep_t0);
     }
 }
 
@@ -952,6 +1120,117 @@ mod tests {
         let srv = Server::start(native_cfg("mamba"), None).unwrap();
         let toks = srv.client().generate(vec![1, 2], 0).unwrap().collect_tokens().unwrap();
         assert!(toks.is_empty());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn undelivered_tokens_do_not_inflate_token_metrics() {
+        // Regression: the sweep used to count a cancelled session's final
+        // token into `emitted` even though the StreamEvent::Token send
+        // failed — tokens/sec was inflated by never-delivered tokens. Keep
+        // the cancel flag clear so the failure is observed at the send
+        // itself, not at the sweep's cancel check.
+        let model = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let depth = Arc::new(AtomicUsize::new(1));
+        let (tx, rx) = mpsc::channel();
+        drop(rx); // receiver gone, flag not set: the send must fail
+        let cancel = Arc::new(AtomicBool::new(false));
+        let mut sessions = vec![Session::new(
+            vec![1, 2, 3],
+            8,
+            Instant::now(),
+            tx,
+            Some(model.begin()),
+            cancel,
+        )];
+        let mut scratch = StepScratch::default();
+        let pool = Pool::serial();
+        native_decode_sweep(&model, &mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
+        assert!(sessions.is_empty(), "send-failed session must retire");
+        assert_eq!(depth.load(Ordering::Relaxed), 0);
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.tokens, 0, "never-delivered tokens must not count");
+        assert_eq!(m.dropped_tokens, 1);
+        assert_eq!(m.completed, 0, "cancelled sessions are not completions");
+    }
+
+    #[test]
+    fn cancelled_session_retires_before_prefill_compute() {
+        // A dropped GenStream is detected at the top of the sweep — a
+        // session still mid-prefill stops consuming kernel time instead of
+        // burning its whole prompt for a vanished receiver.
+        let model = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let depth = Arc::new(AtomicUsize::new(1));
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(true)); // client hung up
+        let mut sessions = vec![Session::new(
+            vec![5; 500],
+            4,
+            Instant::now(),
+            tx,
+            Some(model.begin()),
+            cancel,
+        )];
+        let mut scratch = StepScratch::default();
+        let pool = Pool::serial();
+        native_decode_sweep(&model, &mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
+        assert!(sessions.is_empty(), "cancelled session must retire immediately");
+        assert_eq!(depth.load(Ordering::Relaxed), 0);
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.tokens + m.dropped_tokens, 0, "no prefill output was produced");
+        drop(m);
+        drop(rx); // receiver intentionally alive until here
+    }
+
+    #[test]
+    fn prefill_budget_bounds_per_sweep_prompt_work() {
+        // Three 100-token prompts under a 40-token global budget: the
+        // first session gets its full 32-token chunk, the second the 8
+        // remaining budget tokens, the third waits.
+        let model = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let depth = Arc::new(AtomicUsize::new(3));
+        let mut rxs = Vec::new();
+        let mut sessions = Vec::new();
+        for _ in 0..3 {
+            let (tx, rx) = mpsc::channel();
+            rxs.push(rx);
+            sessions.push(Session::new(
+                vec![7; 100],
+                4,
+                Instant::now(),
+                tx,
+                Some(model.begin()),
+                Arc::new(AtomicBool::new(false)),
+            ));
+        }
+        let mut scratch = StepScratch::default();
+        let pool = Pool::serial();
+        native_decode_sweep(&model, &mut sessions, &metrics, &depth, &mut scratch, &pool, 40);
+        let fed: Vec<usize> = sessions.iter().map(|s| s.fed).collect();
+        assert_eq!(fed, vec![32, 8, 0]);
+        // Unlimited budget (0): every session advances a full chunk.
+        native_decode_sweep(&model, &mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
+        let fed: Vec<usize> = sessions.iter().map(|s| s.fed).collect();
+        assert_eq!(fed, vec![64, 40, 32]);
+    }
+
+    #[test]
+    fn native_context_cap_terminates_generation_early() {
+        let mut cfg = native_cfg("zeta");
+        if let Some(n) = cfg.native.as_mut() {
+            n.max_context = 12;
+        }
+        let srv = Server::start(cfg, None).unwrap();
+        let c = srv.client();
+        // prompt 4 + cap 12 → at most 8 generated tokens despite max_new 50
+        let toks = c.generate(vec![1, 2, 3, 4], 50).unwrap().collect_tokens().unwrap();
+        assert_eq!(toks.len(), 8, "context cap must end generation early");
+        // a prompt already at the cap is rejected up front
+        let err = c.generate(vec![7; 12], 4).unwrap().collect_tokens().unwrap_err().to_string();
+        assert!(err.contains("context cap"), "{err}");
         srv.shutdown();
     }
 

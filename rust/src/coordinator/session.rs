@@ -16,15 +16,16 @@
 //! equivalence gate. (The PJRT backend serves `generate` by full-recompute
 //! forward batches instead; see `coordinator::engine_decode_sweep`.)
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::attention::{flash::Flash, mamba::MambaLite, naive::Naive, zeta::ZetaNative};
-use crate::attention::{AttentionImpl, DecodeState, Workload};
+use crate::attention::{AttentionImpl, DecodeState, DecodeStep, Workload};
 use crate::tensor::{dot, Tensor};
-use crate::util::pool::Pool;
+use crate::util::pool::{Pool, SharedSlice};
 use crate::util::rng::Rng;
 
 /// Configuration of the in-process native decode backend.
@@ -40,11 +41,24 @@ pub struct NativeModelConfig {
     pub vocab: usize,
     /// Seed of the fixed embedding / readout tables.
     pub seed: u64,
+    /// Hard cap on a session's total context (prompt + generated tokens).
+    /// A session whose context reaches the cap terminates early with a
+    /// `Done` event — the native analogue of the engine backend's
+    /// `seq_len` bound, keeping per-request KV caches / Z-indices from
+    /// growing without limit. 0 disables the cap.
+    pub max_context: usize,
 }
 
 impl Default for NativeModelConfig {
     fn default() -> Self {
-        NativeModelConfig { kernel: "zeta".into(), d: 16, dv: 16, vocab: 32, seed: 0 }
+        NativeModelConfig {
+            kernel: "zeta".into(),
+            d: 16,
+            dv: 16,
+            vocab: 32,
+            seed: 0,
+            max_context: 4096,
+        }
     }
 }
 
@@ -54,7 +68,9 @@ impl Default for NativeModelConfig {
 /// reproducible — incremental decode vs full-recompute forward is a pure
 /// scheduling difference.
 pub struct NativeDecodeModel {
-    imp: Box<dyn AttentionImpl>,
+    // `Send + Sync` so fused sweep phases may capture `&self` in pool
+    // closures (all four kernels are plain-data structs).
+    imp: Box<dyn AttentionImpl + Send + Sync>,
     cfg: NativeModelConfig,
     qe: Vec<f32>, // (vocab, d)
     ke: Vec<f32>, // (vocab, d)
@@ -67,7 +83,7 @@ impl NativeDecodeModel {
         if cfg.vocab == 0 || cfg.d == 0 || cfg.dv == 0 {
             bail!("native model dims must be non-zero");
         }
-        let imp: Box<dyn AttentionImpl> = match cfg.kernel.as_str() {
+        let imp: Box<dyn AttentionImpl + Send + Sync> = match cfg.kernel.as_str() {
             "naive" => Box::new(Naive),
             "flash" => Box::new(Flash { block: 64 }),
             // chunk 16: fine-grained causal limits so short serving prompts
@@ -90,6 +106,11 @@ impl NativeDecodeModel {
 
     pub fn vocab(&self) -> usize {
         self.cfg.vocab
+    }
+
+    /// Context cap (prompt + generated tokens) per session; 0 = unlimited.
+    pub fn max_context(&self) -> usize {
+        self.cfg.max_context
     }
 
     pub fn kernel_name(&self) -> &'static str {
@@ -128,22 +149,36 @@ impl NativeDecodeModel {
 
     /// Linear readout: logits[w] = o . ro[w].
     pub fn readout(&self, orow: &[f32], logits: &mut Vec<f32>) {
-        let dv = self.cfg.dv;
         logits.clear();
-        for w in 0..self.cfg.vocab {
-            logits.push(dot(orow, &self.ro[w * dv..(w + 1) * dv]));
+        logits.resize(self.cfg.vocab, 0.0);
+        self.readout_into(orow, logits);
+    }
+
+    /// Readout into a pre-sized `vocab`-length row (the fused sweep's flat
+    /// per-slot logits buffers).
+    pub fn readout_into(&self, orow: &[f32], logits: &mut [f32]) {
+        let dv = self.cfg.dv;
+        for (w, l) in logits.iter_mut().enumerate() {
+            *l = dot(orow, &self.ro[w * dv..(w + 1) * dv]);
         }
     }
 
-    /// Greedy decoding: the first maximal logit wins (deterministic).
+    /// Greedy decoding: the first maximal logit wins (deterministic). NaN
+    /// logits are skipped — a NaN never compares greater, so the old `>`
+    /// scan silently elected token 0 the moment the best-so-far slot held
+    /// a NaN; a fully-NaN row still falls back to token 0.
     pub fn argmax(logits: &[f32]) -> i32 {
-        let mut best = 0usize;
+        let mut best: Option<usize> = None;
         for (i, &l) in logits.iter().enumerate() {
-            if l > logits[best] {
-                best = i;
+            if l.is_nan() {
+                continue;
+            }
+            match best {
+                Some(b) if logits[b] >= l => {}
+                _ => best = Some(i),
             }
         }
-        best as i32
+        best.unwrap_or(0) as i32
     }
 
     /// Full-recompute reference path: one batched forward over the whole
@@ -173,6 +208,172 @@ impl NativeDecodeModel {
         self.readout(o.row(n - 1), &mut logits);
         Ok(logits)
     }
+
+    /// Fused decode across sessions: batched embed → one pool-parallel
+    /// kernel call ([`crate::attention::AttentionImpl::step_batch`]) across
+    /// every slot's decode state → batched readout/argmax.
+    /// `scratch.next[i]` holds slot i's next token afterwards. Each slot
+    /// runs exactly the [`NativeDecodeModel::step_token`] arithmetic on its
+    /// own state, so fused and serial sweeps generate identical token
+    /// streams — only the schedule differs.
+    pub fn step_batch(
+        &self,
+        items: &mut [SessionStep<'_>],
+        scratch: &mut StepScratch,
+        pool: &Pool,
+    ) {
+        let n = items.len();
+        let (dv, vocab) = (self.cfg.dv, self.cfg.vocab);
+        scratch.orows.clear();
+        scratch.orows.resize(n * dv, 0.0);
+        scratch.logits.clear();
+        scratch.logits.resize(n * vocab, 0.0);
+        scratch.next.clear();
+        scratch.next.resize(n, 0);
+        if n == 0 {
+            return;
+        }
+        {
+            let mut steps: Vec<DecodeStep<'_>> = items
+                .iter_mut()
+                .zip(scratch.orows.chunks_mut(dv))
+                .map(|(item, orow)| {
+                    let (q, k, v) = self.embed_rows(item.tok);
+                    DecodeStep { state: &mut *item.state, q, k, v, out: orow }
+                })
+                .collect();
+            self.imp.step_batch(&mut steps, pool);
+        }
+        // Batched readout + argmax: slot-parallel when the vocab·dv work
+        // outweighs the pool fan-out, inline otherwise.
+        if n >= 2 && pool.threads() > 1 && n * vocab * dv >= PARALLEL_READOUT_MIN_OPS {
+            let orows = &scratch.orows;
+            let lsh = SharedSlice::new(&mut scratch.logits);
+            let nsh = SharedSlice::new(&mut scratch.next);
+            pool.parallel_for(n, 1, |slots| {
+                for i in slots {
+                    // Safety: slot i is claimed by exactly one chunk.
+                    let lrow = unsafe { lsh.range_mut(i * vocab..(i + 1) * vocab) };
+                    self.readout_into(&orows[i * dv..(i + 1) * dv], lrow);
+                    unsafe { nsh.write(i, Self::argmax(lrow)) };
+                }
+            });
+        } else {
+            for i in 0..n {
+                let lrow = &mut scratch.logits[i * vocab..(i + 1) * vocab];
+                self.readout_into(&scratch.orows[i * dv..(i + 1) * dv], lrow);
+                scratch.next[i] = Self::argmax(lrow);
+            }
+        }
+    }
+
+    /// Batched prefill wave: every slot feeds its prompt micro-batch into
+    /// its own state (within-stream order is inherent; across slots the
+    /// wave is pool-parallel). Intermediate readouts are skipped — only the
+    /// final prompt position's logits are ever consumed — so for slots
+    /// with `emit` set, `scratch.next[i]` holds the argmax of the last
+    /// token's logits (the session's first generated token); other slots
+    /// get -1. Waves below the fan-out break-even run inline serially.
+    pub fn prefill_batch(
+        &self,
+        items: &mut [PrefillStep<'_>],
+        scratch: &mut StepScratch,
+        pool: &Pool,
+    ) {
+        let n = items.len();
+        scratch.next.clear();
+        scratch.next.resize(n, -1);
+        if n == 0 {
+            return;
+        }
+        let total: usize = items
+            .iter()
+            .map(|it| it.tokens.len() * (it.state.step_cost_hint() + self.cfg.d + self.cfg.dv))
+            .sum();
+        if n >= 2 && pool.threads() > 1 && total >= PARALLEL_PREFILL_MIN_OPS {
+            let ish = SharedSlice::new(items);
+            let nsh = SharedSlice::new(&mut scratch.next);
+            pool.run_chunked(n, 1, |queue| {
+                let mut orow = vec![0f32; self.cfg.dv];
+                let mut logits = Vec::new();
+                while let Some(slots) = queue.next_chunk() {
+                    for i in slots {
+                        // Safety: slot i is claimed by exactly one chunk,
+                        // and every slot owns a distinct state.
+                        let it = unsafe { &mut ish.range_mut(i..i + 1)[0] };
+                        let nx = self.prefill_slot(it, &mut orow, &mut logits);
+                        unsafe { nsh.write(i, nx) };
+                    }
+                }
+            });
+        } else {
+            let mut orow = vec![0f32; self.cfg.dv];
+            let mut logits = Vec::new();
+            for (i, it) in items.iter_mut().enumerate() {
+                scratch.next[i] = self.prefill_slot(it, &mut orow, &mut logits);
+            }
+        }
+    }
+
+    /// Feed one slot's prompt tokens; returns the argmax of the final
+    /// logits when the slot emits, else -1.
+    fn prefill_slot(
+        &self,
+        it: &mut PrefillStep<'_>,
+        orow: &mut Vec<f32>,
+        logits: &mut Vec<f32>,
+    ) -> i32 {
+        orow.resize(self.cfg.dv, 0.0);
+        let last = it.tokens.len();
+        for (i, &tok) in it.tokens.iter().enumerate() {
+            let (q, k, v) = self.embed_rows(tok);
+            it.state.step(q, k, v, orow);
+            if it.emit && i + 1 == last {
+                self.readout(orow, logits);
+            }
+        }
+        if it.emit && last > 0 {
+            Self::argmax(logits)
+        } else {
+            -1
+        }
+    }
+}
+
+/// Fan-out break-evens for the fused model-level phases, in estimated
+/// scalar ops: the pool spawns scoped threads per region (tens of µs per
+/// worker), so small waves stay inline — the same reasoning as the
+/// coordinator's `PARALLEL_PAD_MIN_ELEMS`.
+const PARALLEL_READOUT_MIN_OPS: usize = 1 << 18;
+const PARALLEL_PREFILL_MIN_OPS: usize = 1 << 17;
+
+/// One session's slot in a fused decode sweep: its live kernel state plus
+/// the token to feed (the session's last emitted token, or the final
+/// prompt token).
+pub struct SessionStep<'a> {
+    pub state: &'a mut dyn DecodeState,
+    pub tok: i32,
+}
+
+/// One session's slot in a batched prefill wave: the state, this sweep's
+/// prompt micro-batch, and whether the chunk finishes the prompt (in which
+/// case the final logits are read out to produce the first new token).
+pub struct PrefillStep<'a> {
+    pub state: &'a mut dyn DecodeState,
+    pub tokens: &'a [i32],
+    pub emit: bool,
+}
+
+/// Reusable buffers for the fused sweep entry points
+/// ([`NativeDecodeModel::step_batch`] / [`NativeDecodeModel::prefill_batch`]):
+/// flat per-slot attention output rows, logits rows, and resulting tokens.
+#[derive(Default)]
+pub struct StepScratch {
+    orows: Vec<f32>,
+    logits: Vec<f32>,
+    /// Per-slot argmax token after a fused call (-1 for prefill slots that
+    /// did not finish their prompt).
+    pub next: Vec<i32>,
 }
 
 /// Events on a generation stream, in order: `max_new` `Token`s, then one
@@ -186,9 +387,20 @@ pub enum StreamEvent {
 }
 
 /// Client-side handle to a streaming generation: a receiver of
-/// [`StreamEvent`]s. Dropping it cancels the session server-side.
+/// [`StreamEvent`]s. Dropping it cancels the session server-side: a shared
+/// cancel flag flips on drop, and the scheduler checks it at the top of
+/// every sweep — so even a session still deep in prefill stops consuming
+/// kernel time immediately, instead of being discovered only at its first
+/// (failed) token send.
 pub struct GenStream {
     pub(crate) rx: mpsc::Receiver<Result<StreamEvent>>,
+    pub(crate) cancel: Arc<AtomicBool>,
+}
+
+impl Drop for GenStream {
+    fn drop(&mut self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
 }
 
 impl GenStream {
@@ -224,6 +436,10 @@ pub struct Session {
     pub max_new: usize,
     pub submitted: Instant,
     pub reply: mpsc::Sender<Result<StreamEvent>>,
+    /// Set when the client dropped its [`GenStream`] — checked every sweep
+    /// so cancelled sessions retire before consuming any further compute,
+    /// including mid-prefill.
+    cancel: Arc<AtomicBool>,
 }
 
 impl Session {
@@ -233,6 +449,7 @@ impl Session {
         submitted: Instant,
         reply: mpsc::Sender<Result<StreamEvent>>,
         state: Option<Box<dyn DecodeState>>,
+        cancel: Arc<AtomicBool>,
     ) -> Session {
         let prompt_len = tokens.len();
         Session {
@@ -244,7 +461,13 @@ impl Session {
             max_new,
             submitted,
             reply,
+            cancel,
         }
+    }
+
+    /// Whether the client hung up (dropped its stream handle).
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
     }
 }
 
@@ -262,6 +485,107 @@ mod tests {
     fn argmax_first_max_wins() {
         assert_eq!(NativeDecodeModel::argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
         assert_eq!(NativeDecodeModel::argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn argmax_skips_nan_logits() {
+        // A NaN best-so-far used to freeze the scan at token 0; NaNs must
+        // lose to any finite (or even -inf) logit.
+        assert_eq!(NativeDecodeModel::argmax(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(NativeDecodeModel::argmax(&[f32::NAN, 5.0, 2.0, 5.0]), 1);
+        assert_eq!(NativeDecodeModel::argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(NativeDecodeModel::argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(NativeDecodeModel::argmax(&[f32::NAN, f32::NEG_INFINITY]), 1);
+    }
+
+    #[test]
+    fn fused_step_batch_matches_serial_step_token() {
+        // The fused model-level sweep (batched embed → kernel step_batch →
+        // batched readout/argmax) must generate the exact token stream of
+        // per-session step_token loops, for every kernel, at 1 and 4
+        // threads.
+        for kernel in ["zeta", "naive", "flash", "mamba"] {
+            let model = NativeDecodeModel::new(NativeModelConfig {
+                kernel: kernel.into(),
+                ..Default::default()
+            })
+            .unwrap();
+            let prompts = [3i32, 9, 1, 14, 27];
+            let steps = 12;
+            for threads in [1usize, 4] {
+                let pool = Pool::new(threads);
+                let (mut orow, mut logits) = (Vec::new(), Vec::new());
+                let mut serial_toks: Vec<Vec<i32>> = prompts.iter().map(|&t| vec![t]).collect();
+                for toks in serial_toks.iter_mut() {
+                    let mut st = model.begin();
+                    for _ in 0..steps {
+                        let tok = *toks.last().unwrap();
+                        model.step_token(st.as_mut(), tok, &mut orow, &mut logits);
+                        toks.push(NativeDecodeModel::argmax(&logits));
+                    }
+                }
+                let mut states: Vec<_> = prompts.iter().map(|_| model.begin()).collect();
+                let mut scratch = StepScratch::default();
+                let mut fused_toks: Vec<Vec<i32>> = prompts.iter().map(|&t| vec![t]).collect();
+                for _ in 0..steps {
+                    let mut items: Vec<SessionStep> = states
+                        .iter_mut()
+                        .zip(&fused_toks)
+                        .map(|(st, toks)| SessionStep {
+                            state: st.as_mut(),
+                            tok: *toks.last().unwrap(),
+                        })
+                        .collect();
+                    model.step_batch(&mut items, &mut scratch, &pool);
+                    drop(items);
+                    for (toks, &nx) in fused_toks.iter_mut().zip(&scratch.next) {
+                        toks.push(nx);
+                    }
+                }
+                assert_eq!(serial_toks, fused_toks, "{kernel} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_batch_matches_step_token_prefill() {
+        let model = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
+        let pool = Pool::new(2);
+        let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3, 4, 5, 6, 7], vec![9, 8, 7], vec![4; 40]];
+        let (mut orow, mut logits) = (Vec::new(), Vec::new());
+        let mut want = Vec::new();
+        for p in &prompts {
+            let mut st = model.begin();
+            for &t in p {
+                model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+            }
+            want.push(NativeDecodeModel::argmax(&logits));
+        }
+        let mut states: Vec<_> = prompts.iter().map(|_| model.begin()).collect();
+        let mut scratch = StepScratch::default();
+        {
+            let mut items: Vec<PrefillStep> = states
+                .iter_mut()
+                .zip(&prompts)
+                .map(|(st, p)| PrefillStep {
+                    state: st.as_mut(),
+                    tokens: p.as_slice(),
+                    emit: true,
+                })
+                .collect();
+            model.prefill_batch(&mut items, &mut scratch, &pool);
+        }
+        assert_eq!(scratch.next, want);
+        // Slots that do not finish their prompt report -1 (no readout).
+        let mut st2 = model.begin();
+        let mut items = vec![PrefillStep {
+            state: st2.as_mut(),
+            tokens: prompts[0].as_slice(),
+            emit: false,
+        }];
+        model.prefill_batch(&mut items, &mut scratch, &pool);
+        drop(items);
+        assert_eq!(scratch.next, vec![-1]);
     }
 
     #[test]

@@ -626,6 +626,129 @@ pub fn decode(opts: &Opts) -> Result<()> {
         Ok(()) => println!("wrote BENCH_decode.json"),
         Err(e) => eprintln!("warning: could not write BENCH_decode.json: {e}"),
     }
+    decode_batch(opts)
+}
+
+// ---------------------------------------------------------------------------
+// Decode batch — fused cross-session sweeps vs serial per-session stepping
+// ---------------------------------------------------------------------------
+
+/// Multi-session decode sweep benchmark (the serving coordinator's hot
+/// path): per-token µs when N concurrent sessions step serially (one
+/// `step_token` per session per sweep — the pre-fusion scheduler) vs
+/// through the fused `step_batch` sweep (one pool-parallel kernel call +
+/// batched readout/argmax), over a sessions × threads grid. Serial and
+/// fused rounds alternate on the *same* live states so context-growth
+/// drift between the two measurements cancels. Writes
+/// `results/decode_batch.json` and the machine-readable
+/// `BENCH_decode_batch.json`.
+pub fn decode_batch(opts: &Opts) -> Result<()> {
+    use crate::coordinator::session::{
+        NativeDecodeModel, NativeModelConfig, PrefillStep, SessionStep, StepScratch,
+    };
+    let ctx = opts.max_len.clamp(64, 1024);
+    let steps_per_round = 16usize;
+    let rounds = 4usize;
+    let session_counts = [1usize, 2, 4, 8, 16];
+    let tcounts = thread_counts(opts);
+    println!(
+        "\n== Decode batch: fused step_batch sweep vs serial per-session stepping \
+         (per-token µs, ctx {ctx}) =="
+    );
+    println!(
+        "{:<8}{:<10}{:<5}{:>14}{:>14}{:>10}",
+        "kernel", "sessions", "thr", "serial µs", "fused µs", "speedup"
+    );
+    let mut rec = BTreeMap::new();
+    let mut bench_rows: Vec<Json> = Vec::new();
+    for kernel in ["naive", "mamba", "flash", "zeta"] {
+        // Serving-scale dims (the coordinator's defaults are toy-sized):
+        // the batched vocab × dv readout is part of the fused win.
+        let model = NativeDecodeModel::new(NativeModelConfig {
+            kernel: kernel.into(),
+            d: 64,
+            dv: 64,
+            vocab: 1024,
+            seed: opts.seed,
+            max_context: 0,
+        })?;
+        for &sess in &session_counts {
+            let mut rng = Rng::new(opts.seed ^ 0xBA7C4);
+            let prompts: Vec<Vec<i32>> =
+                (0..sess).map(|_| (0..ctx).map(|_| rng.below(1024) as i32).collect()).collect();
+            for &t in &tcounts {
+                let pool = Pool::new(t);
+                let mut scratch = StepScratch::default();
+                let mut states: Vec<_> = (0..sess).map(|_| model.begin()).collect();
+                {
+                    let mut items: Vec<PrefillStep> = states
+                        .iter_mut()
+                        .zip(&prompts)
+                        .map(|(st, p)| PrefillStep {
+                            state: st.as_mut(),
+                            tokens: p.as_slice(),
+                            emit: true,
+                        })
+                        .collect();
+                    model.prefill_batch(&mut items, &mut scratch, &pool);
+                }
+                let mut toks: Vec<i32> = scratch.next.clone();
+                let (mut orow, mut logits) = (Vec::new(), Vec::new());
+                let mut serial_ns = 0u128;
+                let mut fused_ns = 0u128;
+                for _ in 0..rounds {
+                    let t0 = Instant::now();
+                    for _ in 0..steps_per_round {
+                        for (st, tok) in states.iter_mut().zip(toks.iter_mut()) {
+                            model.step_token(st.as_mut(), *tok, &mut orow, &mut logits);
+                            *tok = NativeDecodeModel::argmax(&logits);
+                        }
+                    }
+                    serial_ns += t0.elapsed().as_nanos();
+                    let t0 = Instant::now();
+                    for _ in 0..steps_per_round {
+                        let mut items: Vec<SessionStep> = states
+                            .iter_mut()
+                            .zip(&toks)
+                            .map(|(st, &tok)| SessionStep { state: st.as_mut(), tok })
+                            .collect();
+                        model.step_batch(&mut items, &mut scratch, &pool);
+                        drop(items);
+                        toks.copy_from_slice(&scratch.next);
+                    }
+                    fused_ns += t0.elapsed().as_nanos();
+                }
+                let denom = (rounds * steps_per_round * sess) as f64;
+                let serial_us = serial_ns as f64 / 1e3 / denom;
+                let fused_us = fused_ns as f64 / 1e3 / denom;
+                let speedup = serial_us / fused_us.max(1e-9);
+                println!(
+                    "{kernel:<8}{sess:<10}{t:<5}{serial_us:>14.2}{fused_us:>14.2}{speedup:>9.2}x"
+                );
+                rec.insert(
+                    format!("{kernel}_s{sess}_t{t}"),
+                    Json::obj(vec![
+                        ("serial_us", Json::num(serial_us)),
+                        ("fused_us", Json::num(fused_us)),
+                    ]),
+                );
+                bench_rows.push(Json::obj(vec![
+                    ("kernel", Json::str(kernel)),
+                    ("sessions", Json::num(sess as f64)),
+                    ("threads", Json::num(t as f64)),
+                    ("ctx", Json::num(ctx as f64)),
+                    ("serial_us_per_tok", Json::num(serial_us)),
+                    ("fused_us_per_tok", Json::num(fused_us)),
+                    ("speedup", Json::num(speedup)),
+                ]));
+            }
+        }
+    }
+    record(opts, "decode_batch", Json::Obj(rec))?;
+    match std::fs::write("BENCH_decode_batch.json", Json::Arr(bench_rows).to_string()) {
+        Ok(()) => println!("wrote BENCH_decode_batch.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_decode_batch.json: {e}"),
+    }
     Ok(())
 }
 

@@ -32,12 +32,16 @@
 //! amortized O(log N) appends) plus windowed top-k and running
 //! history-mean state, so each generated token costs O(log N + k) instead
 //! of an O(N log N) re-sort. The coordinator turns `generate` requests
-//! into [`coordinator::session::Session`]s and continuously batches them
-//! (every sweep advances all live sessions one micro-batch, interleaved
-//! with one-shot infer batches). `rust/tests/decode_equivalence.rs` pins
-//! decode output to the full-sequence forward row-for-row; `zeta exp
-//! decode` prices incremental vs full-recompute per token
-//! (`BENCH_decode.json`).
+//! into [`coordinator::session::Session`]s and continuously batches them:
+//! every sweep runs a prefill wave (per-session `PREFILL_CHUNK` micro-
+//! batches under a *global* per-sweep prefill-token budget) and a *fused
+//! decode wave* — one pool-parallel [`attention::AttentionImpl::step_batch`]
+//! kernel call across all ready sessions — interleaved with one-shot infer
+//! batches. `rust/tests/decode_equivalence.rs` pins decode output to the
+//! full-sequence forward row-for-row, `rust/tests/fused_sweep.rs` pins
+//! fused sweeps to serial stepping; `zeta exp decode` prices incremental
+//! vs full-recompute per token (`BENCH_decode.json`) and fused vs serial
+//! multi-session sweeps (`BENCH_decode_batch.json`).
 //!
 //! Substrates implemented in-tree (offline std-only build): JSON, PRNG,
 //! property tests, bench harness, worker pool ([`util`]), Morton codec +

@@ -98,19 +98,27 @@ commands:
   train  --preset P [--steps N] [--seed S] [--ckpt PATH] [--eval-batches B]
   serve  --preset P [--requests N] [--clients C] [--max-delay-ms D]
          [--generate] [--max-new N] [--native] [--native-kernel K]
+         [--prefill-budget T] [--max-context N]
   exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--threads T]
          [--verbose]
          NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3, table1, table2,
-                 table3, table4, table5, table6, decode, all}
+                 table3, table4, table5, table6, decode, decode_batch, all}
 
 serving:
   `serve` runs one-shot batched inference by default. With --generate each
-  request becomes a streaming generation session: the scheduler interleaves
-  prefill and decode micro-batches (continuous batching) and streams
-  --max-new tokens per request. --native (or missing artifacts) serves with
-  the in-process native decode engine — per-request kernel decode state
-  (ZETA: persistent Z-order index, O(log N + k) per token) instead of
-  full-sequence recompute; --native-kernel picks zeta|naive|flash|mamba.
+  request becomes a streaming generation session. On the native backend
+  every scheduler sweep splits the live sessions into a prefill wave —
+  bounded globally by --prefill-budget prompt tokens per sweep (0 =
+  unlimited), so bursts of long prompts cannot starve token cadence — and
+  a *fused decode wave*: one pool-parallel step_batch kernel call across
+  all ready sessions. (The PJRT backend decodes by full-recompute forward
+  batches; --prefill-budget and --max-context apply to native serving.)
+  --native (or missing artifacts) serves with the in-process native decode
+  engine — per-request kernel decode state (ZETA: persistent Z-order
+  index, O(log N + k) per token) instead of full-sequence recompute;
+  --native-kernel picks zeta|naive|flash|mamba, and --max-context caps
+  each session's total context (prompt + generated; sessions end with an
+  early Done when it fills, 0 = unlimited).
 
 parallelism:
   All attention kernels run on a shared worker pool sized by the
@@ -118,7 +126,9 @@ parallelism:
   `exp table3` / `exp table4` report every row at threads=1 and at the
   pool size (`--threads T` overrides); `exp table3` writes the
   machine-readable BENCH_table3.json perf trajectory and `exp decode`
-  writes BENCH_decode.json (incremental vs full-recompute per-token cost).
+  writes BENCH_decode.json (incremental vs full-recompute per-token cost)
+  plus BENCH_decode_batch.json (fused vs serial multi-session sweeps over
+  a sessions × threads grid).
 
 `make artifacts` builds the core presets; `make artifacts-full` builds the
 experiment sweeps (required for fig2*/table1/2/5/6).";
@@ -183,6 +193,14 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     let delay_ms = flag_usize(f, "max-delay-ms", 5)? as u64;
     let generate = f.contains_key("generate");
     let max_new = flag_usize(f, "max-new", 32)?;
+    // Global per-sweep prefill-token budget across all prefilling sessions
+    // (native backend; 0 = unlimited).
+    let default_budget = ServerConfig::default().prefill_budget;
+    let prefill_budget = flag_usize(f, "prefill-budget", default_budget)?;
+    // Per-session context cap, prompt + generated (native backend;
+    // 0 = unlimited).
+    let default_ctx = NativeModelConfig::default().max_context;
+    let max_context = flag_usize(f, "max-context", default_ctx)?;
     // Native decode engine: forced with --native / --native-kernel, and the
     // fallback whenever the AOT artifacts are absent.
     let native_kernel = f.get("native-kernel").cloned();
@@ -193,16 +211,29 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     let (cfg, seq, backend_desc) = if use_native {
         let ncfg = NativeModelConfig {
             kernel: native_kernel.unwrap_or_else(|| "zeta".into()),
+            max_context,
             ..Default::default()
         };
         if !have_artifacts {
             eprintln!("artifacts/ missing — using the native decode engine");
         }
         let desc = format!("native decode engine ({} kernel)", ncfg.kernel);
-        (ServerConfig { native: Some(ncfg), max_delay, ..Default::default() }, 128, desc)
+        // Generation prompts must fit under the context cap (leave room
+        // for at least one new token, as with the engine's seq_len).
+        let seq = if max_context > 0 { max_context.min(128) } else { 128 };
+        (
+            ServerConfig { native: Some(ncfg), max_delay, prefill_budget, ..Default::default() },
+            seq,
+            desc,
+        )
     } else {
         let seq = Engine::new(zeta::ARTIFACTS_DIR)?.manifest.preset(&preset)?.seq_len();
-        let cfg = ServerConfig { preset: preset.clone(), max_delay, ..Default::default() };
+        let cfg = ServerConfig {
+            preset: preset.clone(),
+            max_delay,
+            prefill_budget,
+            ..Default::default()
+        };
         (cfg, seq, format!("preset {preset}"))
     };
     let srv = Server::start(cfg, None)?;
@@ -260,12 +291,13 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
     let opts = opts_from_flags(f)?;
-    // fig3 / table3 / table4 / decode need no artifacts
+    // fig3 / table3 / table4 / decode / decode_batch need no artifacts
     match which {
         "fig3" => return exp::fig3(&opts),
         "table3" => return exp::table3(&opts),
         "table4" => return exp::table4(&opts),
         "decode" => return exp::decode(&opts),
+        "decode_batch" => return exp::decode_batch(&opts),
         _ => {}
     }
     let engine = Engine::new(zeta::ARTIFACTS_DIR)?;

@@ -1,0 +1,244 @@
+//! Fused-sweep equivalence gate (tier-1), the serving-level companion of
+//! `decode_equivalence.rs` and `parallel_determinism.rs`:
+//!
+//! 1. Kernel level: `AttentionImpl::step_batch` over many live decode
+//!    states — including states at *staggered* positions, as in a real
+//!    mixed prefill/decode sweep — must be bit-identical to stepping each
+//!    stream alone, for all four kernels at threads 1 and 4. Fused and
+//!    serial sweeps are two schedules of one computation.
+//! 2. Server level: token streams produced by the fused
+//!    `native_decode_sweep` (budgeted prefill wave + one fused decode
+//!    kernel call per sweep) must equal the serial full-recompute
+//!    reference for every kernel, with mixed prompt lengths contending
+//!    for a tight global prefill budget.
+//! 3. Cancellation mid-generation (a dropped `GenStream`) must leave every
+//!    other live stream's tokens exactly unchanged.
+
+use zeta::coordinator::session::{NativeDecodeModel, NativeModelConfig};
+use zeta::coordinator::{Server, ServerConfig, StreamEvent};
+use zeta::util::pool::Pool;
+
+fn native_cfg(kernel: &str, threads: usize, prefill_budget: usize) -> ServerConfig {
+    ServerConfig {
+        native: Some(NativeModelConfig { kernel: kernel.into(), ..Default::default() }),
+        threads,
+        prefill_budget,
+        max_delay: std::time::Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+/// Serial greedy reference: one isolated session stepped token-by-token
+/// through `step_token` — exactly the pre-fusion scheduler's per-session
+/// schedule, which the fused sweep must reproduce bit-for-bit. (The
+/// decode-vs-forward gates in `decode_equivalence.rs` separately pin this
+/// path to the full-sequence forward.)
+fn reference_stream(kernel: &str, prompt: &[i32], max_new: usize) -> Vec<i32> {
+    let model = NativeDecodeModel::new(NativeModelConfig {
+        kernel: kernel.into(),
+        ..Default::default()
+    })
+    .unwrap();
+    let cap = NativeModelConfig::default().max_context;
+    let mut st = model.begin();
+    let (mut orow, mut logits) = (Vec::new(), Vec::new());
+    for &t in prompt {
+        model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+    }
+    let mut context = prompt.len();
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let t = NativeDecodeModel::argmax(&logits);
+        out.push(t);
+        context += 1;
+        if cap > 0 && context >= cap {
+            break; // the server retires the session with an early Done
+        }
+        if out.len() < max_new {
+            model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+        }
+    }
+    out
+}
+
+#[test]
+fn kernel_step_batch_bitwise_matches_serial_at_staggered_positions() {
+    use zeta::attention::{all_impls, DecodeStep, Workload};
+    let (d, dv) = (16usize, 8usize);
+    let n_streams = 5usize;
+    for imp in all_impls() {
+        for threads in [1usize, 4] {
+            let pool = Pool::new(threads);
+            let ws: Vec<Workload> =
+                (0..n_streams).map(|s| Workload::random(96, d, dv, 500 + s as u64)).collect();
+            let mut fused: Vec<_> = (0..n_streams).map(|_| imp.begin_decode(d, dv)).collect();
+            let mut serial: Vec<_> = (0..n_streams).map(|_| imp.begin_decode(d, dv)).collect();
+            // Stagger the streams: stream s pre-ingests s*9 tokens, so the
+            // fused sweep mixes early-prefill and deep-decode positions.
+            let mut out = vec![0f32; dv];
+            for (s, (fs, ss)) in fused.iter_mut().zip(serial.iter_mut()).enumerate() {
+                for t in 0..s * 9 {
+                    fs.step(ws[s].q.row(t), ws[s].k.row(t), ws[s].v.row(t), &mut out);
+                    ss.step(ws[s].q.row(t), ws[s].k.row(t), ws[s].v.row(t), &mut out);
+                }
+            }
+            let mut of = vec![0f32; n_streams * dv];
+            let mut os = vec![0f32; n_streams * dv];
+            for step in 0..40 {
+                {
+                    let mut batch: Vec<DecodeStep> = fused
+                        .iter_mut()
+                        .zip(of.chunks_mut(dv))
+                        .enumerate()
+                        .map(|(s, (st, orow))| {
+                            let t = st.pos();
+                            DecodeStep {
+                                state: st.as_mut(),
+                                q: ws[s].q.row(t),
+                                k: ws[s].k.row(t),
+                                v: ws[s].v.row(t),
+                                out: orow,
+                            }
+                        })
+                        .collect();
+                    imp.step_batch(&mut batch, &pool);
+                }
+                for (s, st) in serial.iter_mut().enumerate() {
+                    let t = st.pos();
+                    st.step(
+                        ws[s].q.row(t),
+                        ws[s].k.row(t),
+                        ws[s].v.row(t),
+                        &mut os[s * dv..(s + 1) * dv],
+                    );
+                }
+                assert_eq!(of, os, "{} threads={threads} step={step}", imp.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_paths_engage_pool_fanout_and_stay_exact() {
+    // The break-evens keep toy-sized sweeps inline, so this test works at
+    // serving scale (deep exact-KV contexts, vocab·dv readout) where the
+    // kernel step, prefill, and readout phases all genuinely fan out to
+    // the pool — and must still match per-session serial stepping exactly.
+    use zeta::coordinator::session::{PrefillStep, SessionStep, StepScratch};
+    let model = NativeDecodeModel::new(NativeModelConfig {
+        kernel: "naive".into(),
+        d: 64,
+        dv: 64,
+        vocab: 1024,
+        seed: 0,
+        max_context: 0,
+    })
+    .unwrap();
+    let pool = Pool::new(4);
+    let n_streams = 6usize;
+    let ctx = 300usize;
+    let prompts: Vec<Vec<i32>> = (0..n_streams)
+        .map(|s| (0..ctx).map(|t| ((t * 31 + s * 7 + 1) % 1024) as i32).collect())
+        .collect();
+    // Fused: parallel prefill wave, then fused decode steps.
+    let mut scratch = StepScratch::default();
+    let mut fused_states: Vec<_> = (0..n_streams).map(|_| model.begin()).collect();
+    {
+        let mut items: Vec<PrefillStep> = fused_states
+            .iter_mut()
+            .zip(&prompts)
+            .map(|(st, p)| PrefillStep { state: st.as_mut(), tokens: p.as_slice(), emit: true })
+            .collect();
+        model.prefill_batch(&mut items, &mut scratch, &pool);
+    }
+    let mut fused_toks: Vec<Vec<i32>> = scratch.next.iter().map(|&t| vec![t]).collect();
+    for _ in 0..8 {
+        let mut items: Vec<SessionStep> = fused_states
+            .iter_mut()
+            .zip(&fused_toks)
+            .map(|(st, toks)| SessionStep { state: st.as_mut(), tok: *toks.last().unwrap() })
+            .collect();
+        model.step_batch(&mut items, &mut scratch, &pool);
+        drop(items);
+        for (toks, &nx) in fused_toks.iter_mut().zip(&scratch.next) {
+            toks.push(nx);
+        }
+    }
+    // Serial reference: step_token loops per stream.
+    let (mut orow, mut logits) = (Vec::new(), Vec::new());
+    for (s, p) in prompts.iter().enumerate() {
+        let mut st = model.begin();
+        for &tok in p {
+            model.step_token(st.as_mut(), tok, &mut orow, &mut logits);
+        }
+        let mut toks = vec![NativeDecodeModel::argmax(&logits)];
+        for _ in 0..8 {
+            let tok = *toks.last().unwrap();
+            model.step_token(st.as_mut(), tok, &mut orow, &mut logits);
+            toks.push(NativeDecodeModel::argmax(&logits));
+        }
+        assert_eq!(fused_toks[s], toks, "stream {s}");
+    }
+}
+
+#[test]
+fn fused_sweep_streams_match_serial_reference_per_kernel() {
+    // Mixed prompt lengths: several prompts span multiple PREFILL_CHUNK
+    // micro-batches and, under a 48-token global prefill budget, contend
+    // for the same sweep — so prefill and decode waves genuinely mix while
+    // earlier sessions are already streaming tokens.
+    let prompts: Vec<Vec<i32>> = vec![
+        (0..70).map(|i| (i * 7 + 3) % 31).collect(),
+        vec![5, 9, 13, 2, 2, 7],
+        (0..45).map(|i| (i * 11 + 1) % 29).collect(),
+        vec![1, 2, 3],
+        (0..33).map(|i| (i * 5 + 2) % 23).collect(),
+        vec![9; 12],
+    ];
+    let max_news = [10usize, 7, 12, 5, 9, 8];
+    for kernel in ["zeta", "naive", "flash", "mamba"] {
+        for threads in [1usize, 4] {
+            let srv = Server::start(native_cfg(kernel, threads, 48), None).unwrap();
+            let c = srv.client();
+            let streams: Vec<_> = prompts
+                .iter()
+                .zip(&max_news)
+                .map(|(p, &m)| c.generate(p.clone(), m).unwrap())
+                .collect();
+            let got: Vec<Vec<i32>> =
+                streams.into_iter().map(|s| s.collect_tokens().unwrap()).collect();
+            srv.shutdown();
+            for (i, (p, &m)) in prompts.iter().zip(&max_news).enumerate() {
+                let want = reference_stream(kernel, p, m);
+                assert_eq!(got[i], want, "{kernel} threads={threads} session {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_generation_cancellation_leaves_other_streams_exact() {
+    for threads in [1usize, 4] {
+        let srv = Server::start(native_cfg("zeta", threads, 0), None).unwrap();
+        let c = srv.client();
+        let a = c.generate(vec![3, 1, 4, 1, 5], 12).unwrap();
+        let b = c.generate((0..50).map(|i| i % 17).collect(), 1_000_000).unwrap();
+        let d = c.generate(vec![2, 7, 1, 8], 9).unwrap();
+        // Read a couple of tokens from the doomed stream, then hang up
+        // mid-generation; the scheduler retires it at the next sweep.
+        let mut read = 0;
+        while read < 2 {
+            match b.recv() {
+                Some(Ok(StreamEvent::Token { .. })) => read += 1,
+                Some(Ok(StreamEvent::Done { .. })) | None => break,
+                Some(Err(e)) => panic!("{e}"),
+            }
+        }
+        drop(b);
+        let got_a = a.collect_tokens().unwrap();
+        let got_d = d.collect_tokens().unwrap();
+        srv.shutdown();
+        assert_eq!(got_a, reference_stream("zeta", &[3, 1, 4, 1, 5], 12), "threads={threads}");
+        assert_eq!(got_d, reference_stream("zeta", &[2, 7, 1, 8], 9), "threads={threads}");
+    }
+}
