@@ -49,6 +49,7 @@ pub mod naive;
 pub mod zeta;
 
 use crate::tensor::Tensor;
+use crate::util::breakeven::{fan_out, PARALLEL_STEP_MIN_OPS};
 use crate::util::pool::{Pool, SharedSlice};
 use crate::util::rng::Rng;
 
@@ -165,8 +166,8 @@ pub trait DecodeState: Send {
 
     /// Rough scalar-op estimate of the *next* [`DecodeState::step`] call,
     /// used by [`AttentionImpl::step_batch`] to decide whether a fused
-    /// cross-stream sweep is worth a pool fan-out (scoped-thread spawns
-    /// cost tens of µs; tiny steps stay inline). Kernels override with
+    /// cross-stream sweep is worth a pool fan-out (waking the resident
+    /// team costs a few µs; tiny steps stay inline). Kernels override with
     /// their per-token complexity; the default models the exact-softmax
     /// O(t) regime.
     fn step_cost_hint(&self) -> usize {
@@ -185,13 +186,6 @@ pub struct DecodeStep<'a> {
     pub v: &'a [f32],
     pub out: &'a mut [f32],
 }
-
-/// Minimum estimated scalar ops across a fused sweep before
-/// [`AttentionImpl::step_batch`] fans out to the pool — below this, the
-/// scoped-thread spawn (tens of µs per worker; the pool has no persistent
-/// threads) costs more than the steps it splits, so the sweep runs inline
-/// and stays exactly the serial schedule.
-const PARALLEL_STEP_MIN_OPS: usize = 1 << 17;
 
 /// Run a whole workload through the decode path one token at a time,
 /// returning the `(N, dv)` outputs. This is the subject of the
@@ -282,7 +276,7 @@ pub trait AttentionImpl {
     fn step_batch(&self, batch: &mut [DecodeStep<'_>], pool: &Pool) {
         let n = batch.len();
         let total: usize = batch.iter().map(|s| s.state.step_cost_hint()).sum();
-        if n < 2 || pool.threads() == 1 || total < PARALLEL_STEP_MIN_OPS {
+        if !fan_out(n, total, pool.threads(), PARALLEL_STEP_MIN_OPS) {
             for s in batch.iter_mut() {
                 s.state.step(s.q, s.k, s.v, s.out);
             }

@@ -210,12 +210,12 @@ impl ZetaNative {
         {
             let shares: Vec<SharedSlice<u32>> =
                 tables.iter_mut().map(|t| SharedSlice::new(t.as_mut_slice())).collect();
-            // Per-worker serial fallback: below this many lookups a phase
-            // runs inline — the scoped-thread spawn (tens of µs/worker)
-            // would cost more than the window scans it splits. Small
-            // default-chunk phases therefore stay serial while benchmark
-            // configs (chunk = N/16) still parallelize every phase.
-            const PARALLEL_SEARCH_MIN: usize = 256;
+            // Per-phase serial fallback: below the shared break-even a
+            // phase runs inline — waking the resident team would cost more
+            // than the window scans it splits. With the parked pool the
+            // bound is low enough that even default-chunk (64) phases fan
+            // out once a couple of heads search together.
+            use crate::util::breakeven::{fan_out, PARALLEL_SEARCH_MIN_LOOKUPS};
             let mut serial_scratch = WindowScratch::default();
             let mut serial_win: Vec<(u32, u32)> = Vec::with_capacity(self.window);
             let mut serial_cand: Vec<(u32, u32)> = Vec::with_capacity(self.window);
@@ -225,7 +225,7 @@ impl ZetaNative {
                 if cs > 0 {
                     let span = ce - cs;
                     let total = span * h;
-                    if total < PARALLEL_SEARCH_MIN || pool.threads() == 1 {
+                    if !fan_out(total, total, pool.threads(), PARALLEL_SEARCH_MIN_LOOKUPS) {
                         for item in 0..total {
                             let head = item / span;
                             let i = cs + (item % span);

@@ -56,6 +56,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::attention::DecodeState;
 use crate::runtime::{Engine, HostTensor};
+use crate::util::breakeven::{fan_out, PARALLEL_PAD_MIN_ELEMS};
 use crate::util::pool::{Pool, SharedSlice};
 use batcher::{Batcher, Decision};
 use metrics::Metrics;
@@ -861,13 +862,6 @@ fn engine_decode_sweep(
     }
 }
 
-/// Pad/fan-out threshold in total token elements: below this the scoped
-/// thread spawn (tens of µs per worker; the pool has no persistent
-/// threads) costs more than the memcpy it splits, so the fill stays on
-/// the scheduler thread. 1M i32 elements = 4 MB of row copies, ~hundreds
-/// of µs serially — the point where splitting starts to pay.
-const PARALLEL_PAD_MIN_ELEMS: usize = 1 << 20;
-
 #[allow(clippy::too_many_arguments)]
 fn run_batch(
     exe: &crate::runtime::Executable,
@@ -887,7 +881,7 @@ fn run_batch(
     for (r, t) in toks.iter().enumerate() {
         last_pos[r] = t.len().min(seq_len).saturating_sub(1);
     }
-    if toks.len() * seq_len >= PARALLEL_PAD_MIN_ELEMS && toks.len() >= 2 && pool.threads() > 1 {
+    if fan_out(toks.len(), toks.len() * seq_len, pool.threads(), PARALLEL_PAD_MIN_ELEMS) {
         // Row-parallel padding: each request row of x is disjoint.
         let xsh = SharedSlice::new(&mut x);
         pool.parallel_for(toks.len(), 1, |rows| {

@@ -25,6 +25,7 @@ use anyhow::{bail, Result};
 use crate::attention::{flash::Flash, mamba::MambaLite, naive::Naive, zeta::ZetaNative};
 use crate::attention::{AttentionImpl, DecodeState, DecodeStep, Workload};
 use crate::tensor::{dot, Tensor};
+use crate::util::breakeven::{fan_out, PARALLEL_PREFILL_MIN_OPS, PARALLEL_READOUT_MIN_OPS};
 use crate::util::pool::{Pool, SharedSlice};
 use crate::util::rng::Rng;
 
@@ -246,7 +247,7 @@ impl NativeDecodeModel {
         }
         // Batched readout + argmax: slot-parallel when the vocab·dv work
         // outweighs the pool fan-out, inline otherwise.
-        if n >= 2 && pool.threads() > 1 && n * vocab * dv >= PARALLEL_READOUT_MIN_OPS {
+        if fan_out(n, n * vocab * dv, pool.threads(), PARALLEL_READOUT_MIN_OPS) {
             let orows = &scratch.orows;
             let lsh = SharedSlice::new(&mut scratch.logits);
             let nsh = SharedSlice::new(&mut scratch.next);
@@ -290,7 +291,7 @@ impl NativeDecodeModel {
             .iter()
             .map(|it| it.tokens.len() * (it.state.step_cost_hint() + self.cfg.d + self.cfg.dv))
             .sum();
-        if n >= 2 && pool.threads() > 1 && total >= PARALLEL_PREFILL_MIN_OPS {
+        if fan_out(n, total, pool.threads(), PARALLEL_PREFILL_MIN_OPS) {
             let ish = SharedSlice::new(items);
             let nsh = SharedSlice::new(&mut scratch.next);
             pool.run_chunked(n, 1, |queue| {
@@ -339,13 +340,6 @@ impl NativeDecodeModel {
         }
     }
 }
-
-/// Fan-out break-evens for the fused model-level phases, in estimated
-/// scalar ops: the pool spawns scoped threads per region (tens of µs per
-/// worker), so small waves stay inline — the same reasoning as the
-/// coordinator's `PARALLEL_PAD_MIN_ELEMS`.
-const PARALLEL_READOUT_MIN_OPS: usize = 1 << 18;
-const PARALLEL_PREFILL_MIN_OPS: usize = 1 << 17;
 
 /// One session's slot in a fused decode sweep: its live kernel state plus
 /// the token to feed (the session's last emitted token, or the final
@@ -512,7 +506,7 @@ mod tests {
             .unwrap();
             let prompts = [3i32, 9, 1, 14, 27];
             let steps = 12;
-            for threads in [1usize, 4] {
+            for threads in [1usize, 2, 8] {
                 let pool = Pool::new(threads);
                 let (mut orow, mut logits) = (Vec::new(), Vec::new());
                 let mut serial_toks: Vec<Vec<i32>> = prompts.iter().map(|&t| vec![t]).collect();

@@ -19,7 +19,7 @@ use crate::runtime::Engine;
 use crate::trainer::Trainer;
 use crate::util::bench;
 use crate::util::json::Json;
-use crate::util::pool::Pool;
+use crate::util::pool::{Pool, SharedSlice};
 use crate::util::rng::Rng;
 use crate::zorder;
 
@@ -753,6 +753,167 @@ pub fn decode_batch(opts: &Opts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Pool — parallel-region launch latency: resident team vs scoped spawns
+// ---------------------------------------------------------------------------
+
+/// `exp pool`: the region-launch micro-benchmark behind the
+/// [`crate::util::breakeven`] thresholds. Measures (a) per-region
+/// launch+join overhead of the resident parked worker team against a
+/// `std::thread::scope` spawn baseline (what every region cost before the
+/// persistent pool) at several worker counts, and (b) a fused-sweep-shaped
+/// inline-vs-fan-out sweep that locates the measured break-even in total
+/// scalar ops. Writes `results/pool.json` and the machine-readable
+/// `BENCH_pool.json` trajectory (rows tagged `bench = region_launch |
+/// sweep | breakeven_const`).
+pub fn pool(opts: &Opts) -> Result<()> {
+    use crate::util::breakeven;
+
+    let budget = Duration::from_millis(250);
+    let mut rec = BTreeMap::new();
+    let mut bench_rows: Vec<Json> = Vec::new();
+
+    println!(
+        "\n== Pool: per-region launch+join overhead — resident parked team vs \
+         per-region scoped spawns =="
+    );
+    println!("{:<10}{:>14}{:>14}{:>10}", "workers", "pool µs", "scoped µs", "spawn/wake");
+    for wkr in [2usize, 4, 8] {
+        let p = Pool::new(wkr);
+        // Warm the team: the first regions spawn + park the residents.
+        for _ in 0..32 {
+            bench::black_box(p.run_workers(wkr, |w| w));
+        }
+        let pooled = bench::bench(budget, 16, || {
+            bench::black_box(p.run_workers(wkr, |w| w));
+        });
+        let scoped = bench::bench(budget, 16, || {
+            std::thread::scope(|s| {
+                let hs: Vec<_> = (0..wkr).map(|w| s.spawn(move || bench::black_box(w))).collect();
+                for h in hs {
+                    let _ = h.join();
+                }
+            });
+        });
+        let (pu, su) = (pooled.median_us(), scoped.median_us());
+        println!("{wkr:<10}{pu:>14.2}{su:>14.2}{:>9.1}x", su / pu.max(1e-9));
+        rec.insert(
+            format!("region_launch_w{wkr}"),
+            Json::obj(vec![("pool_us", Json::num(pu)), ("scoped_us", Json::num(su))]),
+        );
+        bench_rows.push(Json::obj(vec![
+            ("bench", Json::str("region_launch")),
+            ("workers", Json::num(wkr as f64)),
+            ("pool_us", Json::num(pu)),
+            ("scoped_us", Json::num(su)),
+            ("spawn_over_wake", Json::num(su / pu.max(1e-9))),
+        ]));
+    }
+
+    // Fused-sweep-shaped break-even: 8 independent slots of `ops` xorshift
+    // chains each (a synthetic step_batch wave), timed inline vs fanned
+    // out. `parallel_for` applies no break-even of its own, so the
+    // crossover in total ops is the measured justification for
+    // PARALLEL_STEP_MIN_OPS. `--threads` is honored exactly, like every
+    // other experiment (0 = default 4).
+    let threads = if opts.threads == 0 { 4 } else { opts.threads };
+    if threads == 1 {
+        println!(
+            "note: --threads 1 makes the fan-out column degenerate to the \
+             inline loop (a serial pool never wakes the team)"
+        );
+    }
+    let p = Pool::new(threads);
+    let slots = 8usize;
+    println!(
+        "\n== Pool: synthetic fused sweep ({slots} slots, {threads} threads) — \
+         inline vs fan-out per-sweep µs =="
+    );
+    println!("{:<14}{:<12}{:>12}{:>12}", "ops/slot", "total ops", "inline µs", "pool µs");
+    let mut crossover: Option<usize> = None;
+    let mut out = vec![0u64; slots];
+    for ops in [256usize, 1024, 4096, 16384, 65536] {
+        let total = slots * ops;
+        // Per-slot xorshift chain: ~3 dependent scalar ops per iteration,
+        // unvectorizable — the same shape as a kernel decode step's
+        // serial inner loop.
+        let work = |slot: usize| -> u64 {
+            let mut x = slot as u64 + 0x9E37_79B9_7F4A_7C15;
+            for _ in 0..ops {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+            }
+            x
+        };
+        let inline_st = bench::bench(budget, 16, || {
+            for (s, o) in out.iter_mut().enumerate() {
+                *o = work(s);
+            }
+            bench::black_box(&out);
+        });
+        let pooled_st = bench::bench(budget, 16, || {
+            let osh = SharedSlice::new(&mut out);
+            p.parallel_for(slots, 1, |r| {
+                for s in r {
+                    // Safety: slot s claimed by exactly one chunk.
+                    unsafe { osh.write(s, work(s)) };
+                }
+            });
+        });
+        let (iu, pu) = (inline_st.median_us(), pooled_st.median_us());
+        if pu <= iu && crossover.is_none() {
+            crossover = Some(total);
+        }
+        println!("{ops:<14}{total:<12}{iu:>12.2}{pu:>12.2}");
+        rec.insert(
+            format!("sweep_ops{ops}"),
+            Json::obj(vec![("inline_us", Json::num(iu)), ("pool_us", Json::num(pu))]),
+        );
+        bench_rows.push(Json::obj(vec![
+            ("bench", Json::str("sweep")),
+            ("threads", Json::num(threads as f64)),
+            ("slots", Json::num(slots as f64)),
+            ("ops_per_slot", Json::num(ops as f64)),
+            ("total_ops", Json::num(total as f64)),
+            ("inline_us", Json::num(iu)),
+            ("pool_us", Json::num(pu)),
+        ]));
+    }
+    match crossover {
+        Some(c) => println!(
+            "measured fan-out break-even ≈ {c} total ops (configured \
+             PARALLEL_STEP_MIN_OPS = {})",
+            breakeven::PARALLEL_STEP_MIN_OPS
+        ),
+        None => println!(
+            "fan-out never beat inline in this sweep (configured \
+             PARALLEL_STEP_MIN_OPS = {}) — likely a 1-2 core machine",
+            breakeven::PARALLEL_STEP_MIN_OPS
+        ),
+    }
+    // Record the active thresholds so the trajectory is self-describing.
+    for (name, v) in [
+        ("PARALLEL_STEP_MIN_OPS", breakeven::PARALLEL_STEP_MIN_OPS),
+        ("PARALLEL_PREFILL_MIN_OPS", breakeven::PARALLEL_PREFILL_MIN_OPS),
+        ("PARALLEL_READOUT_MIN_OPS", breakeven::PARALLEL_READOUT_MIN_OPS),
+        ("PARALLEL_PAD_MIN_ELEMS", breakeven::PARALLEL_PAD_MIN_ELEMS),
+        ("PARALLEL_SEARCH_MIN_LOOKUPS", breakeven::PARALLEL_SEARCH_MIN_LOOKUPS),
+    ] {
+        bench_rows.push(Json::obj(vec![
+            ("bench", Json::str("breakeven_const")),
+            ("name", Json::str(name)),
+            ("value", Json::num(v as f64)),
+        ]));
+    }
+    record(opts, "pool", Json::Obj(rec))?;
+    match std::fs::write("BENCH_pool.json", Json::Arr(bench_rows).to_string()) {
+        Ok(()) => println!("wrote BENCH_pool.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_pool.json: {e}"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Table 5 — d_K ablation on ListOps / Image
 // ---------------------------------------------------------------------------
 
@@ -792,6 +953,7 @@ pub fn all(engine: &Engine, opts: &Opts) -> Result<()> {
     table3(opts)?;
     table4(opts)?;
     decode(opts)?;
+    pool(opts)?;
     table5(engine, opts)?;
     Ok(())
 }

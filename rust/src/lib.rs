@@ -12,9 +12,13 @@
 //!
 //! ## Parallel execution core
 //!
-//! Every hot path runs on a shared scoped worker pool
+//! Every hot path runs on a shared **resident** worker pool
 //! ([`util::pool::Pool`], sized by the `ZETA_THREADS` env var, auto-detected
-//! when unset, serial at 1). The four native attention kernels
+//! when unset, serial at 1): worker threads park on a condvar between
+//! parallel regions and are woken per region, so entering a region costs a
+//! µs-scale handshake instead of a thread spawn — which is what lets the
+//! small fused serving sweeps clear the [`util::breakeven`] fan-out
+//! thresholds. The four native attention kernels
 //! ([`attention`]) are row-parallel in the forward pass and chunk-parallel
 //! in the backward pass (per-thread gradient accumulators merged after the
 //! join); the ZETA pipeline additionally parallelizes Morton encoding and

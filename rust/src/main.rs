@@ -102,7 +102,8 @@ commands:
   exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--threads T]
          [--verbose]
          NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3, table1, table2,
-                 table3, table4, table5, table6, decode, decode_batch, all}
+                 table3, table4, table5, table6, decode, decode_batch,
+                 pool, all}
 
 serving:
   `serve` runs one-shot batched inference by default. With --generate each
@@ -122,13 +123,17 @@ serving:
 
 parallelism:
   All attention kernels run on a shared worker pool sized by the
-  ZETA_THREADS env var (unset or 0 = auto-detect hardware threads).
-  `exp table3` / `exp table4` report every row at threads=1 and at the
-  pool size (`--threads T` overrides); `exp table3` writes the
-  machine-readable BENCH_table3.json perf trajectory and `exp decode`
-  writes BENCH_decode.json (incremental vs full-recompute per-token cost)
-  plus BENCH_decode_batch.json (fused vs serial multi-session sweeps over
-  a sessions × threads grid).
+  ZETA_THREADS env var (unset or 0 = auto-detect hardware threads). The
+  pool is a persistent resident team: workers park on a condvar between
+  parallel regions and are woken per region, so entering a region costs
+  µs, not a thread spawn. `exp table3` / `exp table4` report every row at
+  threads=1 and at the pool size (`--threads T` overrides); `exp table3`
+  writes the machine-readable BENCH_table3.json perf trajectory, `exp
+  decode` writes BENCH_decode.json (incremental vs full-recompute
+  per-token cost) plus BENCH_decode_batch.json (fused vs serial
+  multi-session sweeps over a sessions × threads grid), and `exp pool`
+  writes BENCH_pool.json (region launch latency: resident team vs scoped
+  spawns, plus the fan-out break-even sweep).
 
 `make artifacts` builds the core presets; `make artifacts-full` builds the
 experiment sweeps (required for fig2*/table1/2/5/6).";
@@ -291,13 +296,14 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
     let opts = opts_from_flags(f)?;
-    // fig3 / table3 / table4 / decode / decode_batch need no artifacts
+    // fig3 / table3 / table4 / decode / decode_batch / pool need no artifacts
     match which {
         "fig3" => return exp::fig3(&opts),
         "table3" => return exp::table3(&opts),
         "table4" => return exp::table4(&opts),
         "decode" => return exp::decode(&opts),
         "decode_batch" => return exp::decode_batch(&opts),
+        "pool" => return exp::pool(&opts),
         _ => {}
     }
     let engine = Engine::new(zeta::ARTIFACTS_DIR)?;

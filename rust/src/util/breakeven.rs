@@ -1,0 +1,93 @@
+//! Fan-out break-even thresholds — the one table of inline-vs-pool
+//! decisions for every small-region call site, re-tuned for the resident
+//! parked worker team ([`crate::util::pool`]).
+//!
+//! Rationale: with per-region scoped-thread spawns (the pre-resident pool)
+//! entering a parallel region cost tens of µs per worker, so the fused
+//! serving sweeps — the common case under many-user decode traffic — ran
+//! inline unless a sweep carried ≥ 2^17 estimated scalar ops. A parked
+//! team is woken with one generation-stamped descriptor and a condvar
+//! broadcast: the `exp pool` micro-benchmark (`BENCH_pool.json`) puts the
+//! launch+join handshake at single-digit µs at 4–8 workers, roughly an
+//! order of magnitude below the scoped-spawn baseline it also measures.
+//! The thresholds below are lowered by that measured ratio (16×), so small
+//! fused `step_batch` / `prefill_batch` / readout waves now engage the
+//! pool instead of falling back to serial loops.
+//!
+//! | constant | old (scoped spawns) | now (resident team) | unit |
+//! |---|---|---|---|
+//! | [`PARALLEL_STEP_MIN_OPS`]     | 2^17 | 2^13 | est. scalar ops / sweep |
+//! | [`PARALLEL_PREFILL_MIN_OPS`]  | 2^17 | 2^13 | est. scalar ops / wave |
+//! | [`PARALLEL_READOUT_MIN_OPS`]  | 2^18 | 2^14 | scalar ops (slots·vocab·dv) |
+//! | [`PARALLEL_PAD_MIN_ELEMS`]    | 2^20 | 2^16 | i32 token elements |
+//! | [`PARALLEL_SEARCH_MIN_LOOKUPS`] | 256 | 64 | window lookups / phase |
+//!
+//! Every call site funnels through [`fan_out`], and the unit tests here pin
+//! the decision boundary to the documented values — change a threshold and
+//! the table, the sites and the tests move together.
+
+/// Minimum estimated scalar ops across a fused cross-stream decode sweep
+/// before [`crate::attention::AttentionImpl::step_batch`] fans out.
+pub const PARALLEL_STEP_MIN_OPS: usize = 1 << 13;
+
+/// Minimum estimated scalar ops across a batched prefill wave before
+/// `NativeDecodeModel::prefill_batch` fans out.
+pub const PARALLEL_PREFILL_MIN_OPS: usize = 1 << 13;
+
+/// Minimum `slots · vocab · dv` scalar ops before the batched
+/// readout/argmax phase of `NativeDecodeModel::step_batch` fans out.
+pub const PARALLEL_READOUT_MIN_OPS: usize = 1 << 14;
+
+/// Minimum total i32 token elements (`rows · seq_len`) before the
+/// coordinator's batch padding fans out off the scheduler thread.
+pub const PARALLEL_PAD_MIN_ELEMS: usize = 1 << 16;
+
+/// Minimum `(head, query)` window lookups in one ZETA chunk-search phase
+/// before the phase fans out (each lookup is a sorted-index window scan +
+/// top-k select, far heavier than one scalar op — hence the smaller bound).
+pub const PARALLEL_SEARCH_MIN_LOOKUPS: usize = 64;
+
+/// The single inline-vs-fan-out decision: a region is worth waking the
+/// resident team when it has at least two independent slots, the pool has
+/// more than one thread, and the estimated work clears the call site's
+/// break-even from the table above. Below that, the serial inline loop is
+/// faster *and* bit-identical to the fan-out schedule.
+pub fn fan_out(slots: usize, est_ops: usize, threads: usize, min_ops: usize) -> bool {
+    slots >= 2 && threads > 1 && est_ops >= min_ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_match_documented_table() {
+        assert_eq!(PARALLEL_STEP_MIN_OPS, 8192);
+        assert_eq!(PARALLEL_PREFILL_MIN_OPS, 8192);
+        assert_eq!(PARALLEL_READOUT_MIN_OPS, 16384);
+        assert_eq!(PARALLEL_PAD_MIN_ELEMS, 65536);
+        assert_eq!(PARALLEL_SEARCH_MIN_LOOKUPS, 64);
+    }
+
+    #[test]
+    fn decision_boundary_is_exactly_the_threshold() {
+        for min in [
+            PARALLEL_STEP_MIN_OPS,
+            PARALLEL_PREFILL_MIN_OPS,
+            PARALLEL_READOUT_MIN_OPS,
+            PARALLEL_PAD_MIN_ELEMS,
+            PARALLEL_SEARCH_MIN_LOOKUPS,
+        ] {
+            assert!(!fan_out(2, min - 1, 4, min), "one op under the break-even must stay inline");
+            assert!(fan_out(2, min, 4, min), "at the break-even the region must fan out");
+        }
+    }
+
+    #[test]
+    fn single_slot_or_serial_pool_never_fans_out() {
+        let min = PARALLEL_STEP_MIN_OPS;
+        assert!(!fan_out(1, min * 100, 8, min), "one slot has no parallelism to exploit");
+        assert!(!fan_out(0, min * 100, 8, min));
+        assert!(!fan_out(64, min * 100, 1, min), "threads=1 is the bit-identical serial path");
+    }
+}

@@ -3,6 +3,7 @@
 //! benchmarking, and the shared worker pool every parallel kernel runs on.
 
 pub mod bench;
+pub mod breakeven;
 pub mod json;
 pub mod pool;
 pub mod prop;

@@ -3,29 +3,64 @@
 //!
 //! Design (std-only, no rayon offline):
 //!
-//! * A [`Pool`] is a *thread-count policy*, cheap to copy and share. Work is
-//!   executed on scoped threads (`std::thread::scope`) spawned per parallel
-//!   region, so closures may borrow the caller's stack freely and no
-//!   `'static` boxing or channel plumbing is needed. At `threads = 1`
-//!   everything degrades to a plain inline loop — bit-identical to the old
-//!   serial kernels.
-//! * Chunks are handed out by a lock-free [`ChunkQueue`] (one atomic
-//!   `fetch_add` per chunk), so triangular workloads (causal attention row
-//!   costs grow with i) load-balance without a scheduler thread.
+//! * A [`Pool`] is a *thread-count policy*, cheap to copy and share. Work
+//!   executes on a process-wide **resident team** of worker threads that
+//!   park on a condvar between parallel regions and are woken by a
+//!   generation-stamped region descriptor (trampoline fn + context ptr).
+//!   Entering a region therefore costs one park/wake handshake (single-digit
+//!   µs) instead of a `std::thread::scope` spawn per region (tens of µs per
+//!   worker) — the `exp pool` micro-benchmark measures both sides and writes
+//!   `BENCH_pool.json`. That drop is what funds the lowered
+//!   [`crate::util::breakeven`] fan-out thresholds.
+//! * Closures may still borrow the caller's stack freely: the submitting
+//!   thread publishes the region, runs a share of it itself, and blocks
+//!   until every resident has retired the region's generation — so every
+//!   borrow outlives every use, the same guarantee `std::thread::scope`
+//!   gave, enforced by the region join instead of the scope join.
+//! * Worker ids are *logical*: participants (the submitter plus the
+//!   residents) claim ids off an atomic counter, so a region may run
+//!   several ids on one thread. Oversubscription (`threads ≫ cores`) just
+//!   multiplexes ids over the capped team; results are still collected in
+//!   worker-id order. Closures must not synchronize *across* worker ids.
+//! * One region is live at a time (parallelism lives *within* a region),
+//!   but nobody ever waits on another submitter: a thread that finds the
+//!   team busy runs its whole region **inline**, and a thread already
+//!   inside a region — a resident, or a submitter running its own share —
+//!   executes nested submissions inline too. Re-entrant by construction,
+//!   so nested and cross-thread-concurrent submission cannot deadlock
+//!   (`rust/tests/pool_stress.rs`). Only as many residents as a region
+//!   asks for participate in it, so a 2-slot sweep joins in two
+//!   handshakes even on a 64-thread team.
+//! * Worker panics are caught per worker id, the first payload is
+//!   re-raised on the submitting thread after the join, and the residents
+//!   park normally — the next region sees a clean, un-poisoned team.
+//! * At `threads = 1` everything degrades to a plain inline loop,
+//!   bit-identical to the old serial kernels; the team is never woken.
+//! * Chunks are handed out by a lock-free [`ChunkQueue`] (one saturating
+//!   compare-and-swap per chunk), so triangular workloads (causal attention
+//!   row costs grow with i) load-balance without a scheduler thread.
 //! * Per-thread accounting: workers accumulate into a stack-local
-//!   [`WorkerStats`] and results are merged once after the scope joins —
+//!   [`WorkerStats`] and results are merged once after the region joins —
 //!   `MemReport` stays *measured* with zero locks on the hot path.
 //! * [`SharedSlice`] lets workers write disjoint rows of one output buffer
 //!   (the idiom rayon's `par_chunks_mut` provides); callers assert
 //!   disjointness at the single `unsafe` call site.
 //!
 //! The global pool reads `ZETA_THREADS` once (unset or `0` = auto-detect
-//! from `available_parallelism`).
+//! from `available_parallelism`). The resident team spawns lazily on the
+//! first fan-out, is capped at `2 × available_parallelism` threads (min 8,
+//! max 64 — logical worker ids beyond the cap multiplex), and parks between
+//! regions. Dropping a team signals shutdown and joins its residents; the
+//! process-global team lives for the process and dies with it.
 
+use std::any::Any;
+use std::cell::{Cell, UnsafeCell};
 use std::marker::PhantomData;
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
 /// Stack-local per-worker statistics, merged after a parallel region joins.
 #[derive(Debug, Default, Clone, Copy)]
@@ -35,7 +70,9 @@ pub struct WorkerStats {
 }
 
 /// Thread-count policy handle. `Copy` so kernels, the experiment harness and
-/// the coordinator can share one without reference-counting.
+/// the coordinator can share one without reference-counting. All pools fan
+/// out onto the one process-wide resident team; the policy only bounds how
+/// many logical workers a region uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Pool {
     threads: usize,
@@ -82,26 +119,25 @@ impl Pool {
         target.max(min).max(1)
     }
 
-    /// Run `f(worker_id)` on up to `workers` scoped threads and collect the
-    /// results in worker order. `workers` is clamped to the pool size; with
-    /// one effective worker, `f(0)` runs inline on the caller's thread.
+    /// Run `f(worker_id)` for each worker id in `0..workers` and collect the
+    /// results in worker-id order. `workers` is clamped to the pool size.
+    ///
+    /// With one effective worker — or when the calling thread is already
+    /// inside a pool region (nested submission) — every id runs inline on
+    /// the caller's thread, bit-identical to the serial loop. Otherwise the
+    /// resident team is woken and ids are claimed dynamically by the
+    /// submitter plus the parked workers; a panic in any id is re-raised
+    /// here, on the submitting thread, once the region has joined.
     pub fn run_workers<R, F>(&self, workers: usize, f: F) -> Vec<R>
     where
         R: Send,
         F: Fn(usize) -> R + Sync,
     {
         let workers = workers.clamp(1, self.threads);
-        if workers == 1 {
-            return vec![f(0)];
+        if workers == 1 || in_pool_context() {
+            return (0..workers).map(&f).collect();
         }
-        std::thread::scope(|s| {
-            let f = &f;
-            let handles: Vec<_> = (0..workers).map(|id| s.spawn(move || f(id))).collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("pool worker panicked"))
-                .collect()
-        })
+        run_region_on(Team::global(), workers, &f)
     }
 
     /// Run `f(worker_id)` once per pool thread.
@@ -159,6 +195,319 @@ impl Pool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Resident team: parked worker threads + generation-stamped region dispatch
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// True while this thread is executing inside a pool region — set
+    /// permanently on resident workers, and around the submitter's own
+    /// share of a region. Nested submissions from such threads run inline,
+    /// which is what makes region submission re-entrant and deadlock-free.
+    static IN_POOL: Cell<bool> = Cell::new(false);
+}
+
+fn in_pool_context() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Type-erased parallel region: a trampoline instantiated for the concrete
+/// closure/result types plus a pointer to the [`RegionCtx`] on the
+/// submitter's stack. The context stays valid for the whole region because
+/// the submitter blocks until every resident has retired this generation.
+#[derive(Clone, Copy)]
+struct RegionDesc {
+    run: unsafe fn(*const ()),
+    ctx: *const (),
+}
+
+// Safety: the context outlives the region (the submitter joins it before
+// returning) and every field reachable through it is Sync (see RegionCtx).
+unsafe impl Send for RegionDesc {}
+
+/// Per-worker-id result slot: written exactly once by whichever participant
+/// claims the id, read by the submitter after the region joins (the team
+/// mutex orders the write before the read).
+struct Slot<R>(UnsafeCell<Option<R>>);
+
+// Safety: each slot is written by exactly one participant (unique id claim
+// off the atomic counter) and only read after the region join.
+unsafe impl<R: Send> Sync for Slot<R> {}
+
+/// Stack-allocated state of one parallel region.
+struct RegionCtx<'f, F, R> {
+    f: &'f F,
+    /// Next logical worker id to claim; participants multiplex ids.
+    next_id: AtomicUsize,
+    workers: usize,
+    slots: Vec<Slot<R>>,
+    /// Set on the first panic so other participants stop claiming ids.
+    poisoned: AtomicBool,
+    /// First panic payload, re-raised on the submitting thread.
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+/// Region trampoline: claim logical worker ids until the region is drained
+/// (or poisoned), catching panics so residents always park clean.
+unsafe fn region_main<R, F>(ptr: *const ())
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let ctx = &*(ptr as *const RegionCtx<'_, F, R>);
+    while !ctx.poisoned.load(Ordering::Relaxed) {
+        let id = ctx.next_id.fetch_add(1, Ordering::Relaxed);
+        if id >= ctx.workers {
+            break;
+        }
+        match catch_unwind(AssertUnwindSafe(|| (ctx.f)(id))) {
+            Ok(r) => *ctx.slots[id].0.get() = Some(r),
+            Err(p) => {
+                ctx.poisoned.store(true, Ordering::Relaxed);
+                let mut slot = ctx.panic.lock().unwrap_or_else(|e| e.into_inner());
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+        }
+    }
+}
+
+/// Execute a `workers >= 2` region on `team`, blocking until it joins.
+/// Re-raises the first worker panic on the calling thread. When another
+/// region is already in flight the submitter runs every id inline instead
+/// of queueing — same results, and a busy team never stalls a caller.
+fn run_region_on<R, F>(team: &Team, workers: usize, f: &F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    debug_assert!(workers >= 2);
+    let ctx = RegionCtx {
+        f,
+        next_id: AtomicUsize::new(0),
+        workers,
+        slots: (0..workers).map(|_| Slot(UnsafeCell::new(None))).collect(),
+        poisoned: AtomicBool::new(false),
+        panic: Mutex::new(None),
+    };
+    let desc = RegionDesc {
+        run: region_main::<R, F>,
+        ctx: &ctx as *const RegionCtx<'_, F, R> as *const (),
+    };
+    if !team.run_region(workers - 1, desc) {
+        return (0..workers).map(f).collect();
+    }
+    let RegionCtx { slots, panic, .. } = ctx;
+    if let Some(p) = panic.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        resume_unwind(p);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.0.into_inner().expect("pool region missed a worker id"))
+        .collect()
+}
+
+/// State shared between the residents and the submitters, guarded by one
+/// mutex: the current region (if any), its generation stamp, and the
+/// participation accounting that bounds a region's join to the workers it
+/// actually asked for.
+struct TeamState {
+    /// Monotonic region stamp; each resident joins each generation at most
+    /// once (and skips it entirely when the participant quota is filled).
+    generation: u64,
+    region: Option<RegionDesc>,
+    /// Unclaimed participant slots for the current region: only residents
+    /// that decrement this (under the lock, while the region is live) may
+    /// touch the region descriptor — which is what keeps a small region's
+    /// launch cost proportional to *its* worker count, not to the largest
+    /// team the process ever grew.
+    participants: usize,
+    /// Participants that have not yet retired the current region; the
+    /// submitter's join waits for this to reach zero.
+    outstanding: usize,
+    /// Resident threads spawned so far.
+    residents: usize,
+    shutdown: bool,
+}
+
+struct TeamCore {
+    state: Mutex<TeamState>,
+    /// Residents park here between regions.
+    wake: Condvar,
+    /// The submitter parks here until `outstanding == 0`.
+    done: Condvar,
+}
+
+/// A team of resident worker threads, parked between regions. The process
+/// owns exactly one (`Team::global`), spawned lazily and capped; dropping a
+/// team (unit tests construct private ones) signals shutdown and joins all
+/// residents.
+struct Team {
+    core: Arc<TeamCore>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Admits one live region at a time — parallelism is *within* a
+    /// region. Never waited on: a submitter that finds it held runs its
+    /// region inline instead, and nested submissions never reach it at
+    /// all, so the gate can neither stall a caller nor self-deadlock.
+    gate: Mutex<()>,
+    /// Maximum residents this team will spawn; logical worker ids beyond
+    /// it multiplex.
+    cap: usize,
+}
+
+impl Team {
+    fn with_cap(cap: usize) -> Team {
+        Team {
+            core: Arc::new(TeamCore {
+                state: Mutex::new(TeamState {
+                    generation: 0,
+                    region: None,
+                    participants: 0,
+                    outstanding: 0,
+                    residents: 0,
+                    shutdown: false,
+                }),
+                wake: Condvar::new(),
+                done: Condvar::new(),
+            }),
+            handles: Mutex::new(Vec::new()),
+            gate: Mutex::new(()),
+            cap: cap.max(1),
+        }
+    }
+
+    fn global() -> &'static Team {
+        static TEAM: OnceLock<Team> = OnceLock::new();
+        TEAM.get_or_init(|| Team::with_cap(default_team_cap()))
+    }
+
+    /// Publish `desc` to the residents, run the submitter's own share, and
+    /// block until every participating resident has retired the region.
+    /// Returns `false` without running anything when another region is in
+    /// flight — the caller then runs the whole region inline instead of
+    /// idling behind the gate (a blocked submitter has work of its own).
+    fn run_region(&self, helpers: usize, desc: RegionDesc) -> bool {
+        let _gate = match self.gate.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => return false,
+        };
+        {
+            let mut st = self.core.state.lock().unwrap_or_else(|e| e.into_inner());
+            self.ensure_residents(&mut st, helpers.min(self.cap));
+            // Only as many residents as the region asked for participate;
+            // the rest observe the new generation and park straight away,
+            // so a 2-slot sweep never waits on a 64-thread team.
+            let joining = st.residents.min(helpers);
+            st.generation += 1;
+            st.region = Some(desc);
+            st.participants = joining;
+            st.outstanding = joining;
+            drop(st);
+            // Targeted wakes instead of a notify_all thundering herd: only
+            // `joining` residents are needed, and `joining` notify_one
+            // calls reach them — any resident not parked at this instant
+            // is in transit and re-checks the (already published) region
+            // under the lock before it can park, so no quota slot can be
+            // left waiting on a lost wakeup.
+            for _ in 0..joining {
+                self.core.wake.notify_one();
+            }
+        }
+        // The submitter is a participant too: it drains worker ids itself,
+        // so a region completes even if the team spawned zero residents.
+        IN_POOL.with(|c| c.set(true));
+        unsafe { (desc.run)(desc.ctx) };
+        IN_POOL.with(|c| c.set(false));
+        let mut st = self.core.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.outstanding > 0 {
+            st = self.core.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.region = None;
+        true
+    }
+
+    /// Spawn residents (under the state lock) until `want` are live or the
+    /// OS refuses; fewer residents only means more id multiplexing.
+    fn ensure_residents(&self, st: &mut TeamState, want: usize) {
+        while st.residents < want {
+            let core = Arc::clone(&self.core);
+            let name = format!("zeta-pool-{}", st.residents);
+            match std::thread::Builder::new().name(name).spawn(move || worker_loop(core)) {
+                Ok(h) => {
+                    st.residents += 1;
+                    self.handles.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+                }
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+impl Drop for Team {
+    fn drop(&mut self) {
+        {
+            let mut st = self.core.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.shutdown = true;
+        }
+        self.core.wake.notify_all();
+        let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Resident main loop: park on the condvar until a fresh generation (or
+/// shutdown) appears, claim a participant slot if the region still has
+/// one — only counted participants may touch the region descriptor — run
+/// the trampoline, and retire the region.
+fn worker_loop(core: Arc<TeamCore>) {
+    IN_POOL.with(|c| c.set(true));
+    let mut last_gen = 0u64;
+    loop {
+        let desc = {
+            let mut st = core.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(d) = st.region {
+                    if st.generation != last_gen {
+                        last_gen = st.generation;
+                        if st.participants > 0 {
+                            st.participants -= 1;
+                            break d;
+                        }
+                        // Quota filled: this region is not ours; park.
+                    }
+                }
+                st = core.wake.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // Run outside the lock; the trampoline catches panics, so the
+        // retirement below always happens and the team is never poisoned.
+        unsafe { (desc.run)(desc.ctx) };
+        let mut st = core.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.outstanding -= 1;
+        if st.outstanding == 0 {
+            core.done.notify_all();
+        }
+    }
+}
+
+/// Resident cap: oversubscribed pools multiplex logical worker ids instead
+/// of spawning unboundedly many OS threads.
+fn default_team_cap() -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (hw * 2).clamp(8, 64)
+}
+
+// ---------------------------------------------------------------------------
+// Chunk dispenser + shared output slice + partial merge
+// ---------------------------------------------------------------------------
+
 /// Lock-free dynamic chunk dispenser over `0..n`.
 pub struct ChunkQueue {
     next: AtomicUsize,
@@ -172,12 +521,29 @@ impl ChunkQueue {
     }
 
     /// Claim the next chunk, or `None` when the range is exhausted.
+    ///
+    /// The cursor advances by *saturating* compare-and-swap: the old
+    /// unconditional `fetch_add(grain)` kept advancing after exhaustion, so
+    /// repeated polling with a huge grain could wrap `usize` and land the
+    /// cursor back below `n` — handing out already-claimed chunks again.
+    /// Pinned by `chunk_queue_saturates_after_exhaustion`.
     pub fn next_chunk(&self) -> Option<Range<usize>> {
-        let start = self.next.fetch_add(self.grain, Ordering::Relaxed);
-        if start >= self.n {
-            None
-        } else {
-            Some(start..(start + self.grain).min(self.n))
+        let mut start = self.next.load(Ordering::Relaxed);
+        loop {
+            if start >= self.n {
+                return None;
+            }
+            let end = start.saturating_add(self.grain);
+            let claim = self.next.compare_exchange_weak(
+                start,
+                end,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            match claim {
+                Ok(_) => return Some(start..end.min(self.n)),
+                Err(cur) => start = cur,
+            }
         }
     }
 }
@@ -322,6 +688,23 @@ mod tests {
     }
 
     #[test]
+    fn chunk_queue_saturates_after_exhaustion() {
+        // Old behaviour: `fetch_add(grain)` advanced the cursor past
+        // exhaustion; with a huge grain a handful of polls wrapped `usize`
+        // and the cursor landed back below `n`, re-issuing chunk 0.
+        let q = ChunkQueue::new(usize::MAX, usize::MAX);
+        assert_eq!(q.next_chunk(), Some(0..usize::MAX));
+        for _ in 0..8 {
+            assert!(q.next_chunk().is_none(), "exhausted queue re-issued a chunk");
+        }
+        let q2 = ChunkQueue::new(10, usize::MAX / 2);
+        assert_eq!(q2.next_chunk(), Some(0..10));
+        for _ in 0..8 {
+            assert!(q2.next_chunk().is_none());
+        }
+    }
+
+    #[test]
     fn merge_partials_sums() {
         let mut dst = vec![1.0, 2.0];
         let parts = [vec![0.5f32, 0.5], vec![1.0, -1.0]];
@@ -335,5 +718,34 @@ mod tests {
         assert!(p.grain(0, 1) >= 1);
         assert!(p.grain(5, 16) == 16);
         assert!(p.grain(100_000, 1) >= 1);
+    }
+
+    #[test]
+    fn run_workers_results_in_worker_id_order() {
+        let p = Pool::new(16);
+        assert_eq!(p.run_workers(16, |w| w), (0..16).collect::<Vec<_>>());
+        // Oversubscribed: ids multiplex over the capped team, order kept.
+        let p = Pool::new(300);
+        assert_eq!(p.run_workers(300, |w| w * 2), (0..300).map(|w| w * 2).collect::<Vec<_>>());
+    }
+
+    // Panic propagation, nested submission, oversubscription and
+    // concurrent-submitter contention are covered by the integration gate
+    // in `rust/tests/pool_stress.rs`; the tests here stick to private
+    // internals and the serial/inline contracts.
+
+    #[test]
+    fn private_team_shutdown_on_drop_joins_residents() {
+        let team = Team::with_cap(3);
+        let hits = AtomicUsize::new(0);
+        let out: Vec<usize> = run_region_on(&team, 5, &|w| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            w
+        });
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+        assert!(team.core.state.lock().unwrap().residents <= 3);
+        // Drop parks → shutdown → join; must not hang.
+        drop(team);
     }
 }

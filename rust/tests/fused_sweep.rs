@@ -4,8 +4,9 @@
 //! 1. Kernel level: `AttentionImpl::step_batch` over many live decode
 //!    states — including states at *staggered* positions, as in a real
 //!    mixed prefill/decode sweep — must be bit-identical to stepping each
-//!    stream alone, for all four kernels at threads 1 and 4. Fused and
-//!    serial sweeps are two schedules of one computation.
+//!    stream alone, for all four kernels across the thread matrix
+//!    {1, 2, 4, 8}. Fused and serial sweeps are two schedules of one
+//!    computation.
 //! 2. Server level: token streams produced by the fused
 //!    `native_decode_sweep` (budgeted prefill wave + one fused decode
 //!    kernel call per sweep) must equal the serial full-recompute
@@ -67,7 +68,7 @@ fn kernel_step_batch_bitwise_matches_serial_at_staggered_positions() {
     let (d, dv) = (16usize, 8usize);
     let n_streams = 5usize;
     for imp in all_impls() {
-        for threads in [1usize, 4] {
+        for threads in [1usize, 2, 4, 8] {
             let pool = Pool::new(threads);
             let ws: Vec<Workload> =
                 (0..n_streams).map(|s| Workload::random(96, d, dv, 500 + s as u64)).collect();

@@ -2,15 +2,25 @@
 //!
 //! 1. `flash` forward must match `naive` forward within 1e-4 on random
 //!    workloads (exact-softmax cross-kernel agreement).
-//! 2. Every kernel's parallel (threads=4) output must match its serial
-//!    (threads=1) output within tolerance, forward and forward+backward.
+//! 2. Every kernel's parallel output must match its serial (threads=1)
+//!    output within tolerance across the full thread matrix
+//!    {2, 4, 8} — including oversubscribed sizes multiplexed over the
+//!    resident team — forward and forward+backward.
 //! 3. The batched multi-head path must agree with the per-head loop, and
 //!    `MemReport` must stay measured (non-zero workspace) under the pool.
+//! 4. The `shared_sort` ZETA serving path and the fused `step_batch` sweep
+//!    are deterministic across the same thread matrix (`step_batch`
+//!    bit-for-bit — slot arithmetic is slot-local, so pool size can never
+//!    perturb a stream).
 
-use zeta::attention::{all_impls, AttentionImpl, MultiWorkload, Workload};
+use zeta::attention::{all_impls, AttentionImpl, DecodeStep, MultiWorkload, Workload};
 use zeta::util::pool::Pool;
 
 const TOL: f32 = 1e-4;
+
+/// The in-process pool sizes every matrix test sweeps (the `ZETA_THREADS`
+/// values CI exercises process-wide, plus the serial reference).
+const THREAD_MATRIX: [usize; 3] = [2, 4, 8];
 
 #[test]
 fn flash_forward_matches_naive_on_random_workloads() {
@@ -30,46 +40,121 @@ fn flash_forward_matches_naive_on_random_workloads() {
 #[test]
 fn every_kernel_parallel_forward_matches_serial() {
     let serial = Pool::serial();
-    let par = Pool::new(4);
     let w = Workload::random(384, 32, 16, 7);
     for imp in all_impls() {
         let (os, ms) = imp.forward_with(&w, &serial);
-        let (op, mp) = imp.forward_with(&w, &par);
-        assert!(
-            os.max_abs_diff(&op) < TOL,
-            "{}: parallel forward diverged: {}",
-            imp.name(),
-            os.max_abs_diff(&op)
-        );
-        // MemReport stays measured (not modeled) under the pool.
-        assert!(ms.output_bytes > 0 && mp.output_bytes > 0, "{}", imp.name());
-        assert!(
-            mp.workspace_bytes > 0,
-            "{}: parallel run reported no measured workspace",
-            imp.name()
-        );
+        assert!(ms.output_bytes > 0, "{}", imp.name());
+        for threads in THREAD_MATRIX {
+            let par = Pool::new(threads);
+            let (op, mp) = imp.forward_with(&w, &par);
+            assert!(
+                os.max_abs_diff(&op) < TOL,
+                "{} threads={threads}: parallel forward diverged: {}",
+                imp.name(),
+                os.max_abs_diff(&op)
+            );
+            // MemReport stays measured (not modeled) under the pool.
+            assert!(mp.output_bytes > 0, "{}", imp.name());
+            assert!(
+                mp.workspace_bytes > 0,
+                "{} threads={threads}: parallel run reported no measured workspace",
+                imp.name()
+            );
+        }
     }
 }
 
 #[test]
 fn every_kernel_parallel_backward_matches_serial() {
     let serial = Pool::serial();
-    let par = Pool::new(4);
     let w = Workload::random(256, 16, 8, 21);
     for imp in all_impls() {
         let (gs, _) = imp.forward_backward_with(&w, &serial);
-        let (gp, _) = imp.forward_backward_with(&w, &par);
-        for (name, a, b) in [
-            ("dq", &gs.dq, &gp.dq),
-            ("dk", &gs.dk, &gp.dk),
-            ("dv", &gs.dv, &gp.dv),
-        ] {
-            assert!(
-                a.max_abs_diff(b) < TOL,
-                "{} {name}: parallel backward diverged: {}",
-                imp.name(),
-                a.max_abs_diff(b)
-            );
+        for threads in THREAD_MATRIX {
+            let par = Pool::new(threads);
+            let (gp, _) = imp.forward_backward_with(&w, &par);
+            for (name, a, b) in [
+                ("dq", &gs.dq, &gp.dq),
+                ("dk", &gs.dk, &gp.dk),
+                ("dv", &gs.dv, &gp.dv),
+            ] {
+                assert!(
+                    a.max_abs_diff(b) < TOL,
+                    "{} {name} threads={threads}: parallel backward diverged: {}",
+                    imp.name(),
+                    a.max_abs_diff(b)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zeta_shared_sort_deterministic_across_thread_matrix() {
+    use zeta::attention::zeta::ZetaNative;
+    // The shared-sort serving path (one key sort serving every head of a
+    // sequence) must be thread-count invariant like every other kernel
+    // path: the sorted index is built sequentially per sequence, so only
+    // the search/score fan-out varies with pool size.
+    let z = ZetaNative { chunk: 16, shared_sort: true, ..ZetaNative::default() };
+    let mw = MultiWorkload::random(2, 3, 96, 16, 8, 17);
+    let (oref, _) = z.forward_batch(&mw, &Pool::serial());
+    for threads in THREAD_MATRIX {
+        let pool = Pool::new(threads);
+        let (o, _) = z.forward_batch(&mw, &pool);
+        assert!(
+            oref.max_abs_diff(&o) < TOL,
+            "shared_sort threads={threads}: diverged from serial by {}",
+            oref.max_abs_diff(&o)
+        );
+    }
+}
+
+#[test]
+fn step_batch_bitwise_identical_across_thread_matrix() {
+    // Fused cross-stream sweeps advance each slot with slot-local serial
+    // arithmetic, so every pool size — below and above the fan-out
+    // break-even — must produce bit-identical streams. 24 streams push the
+    // sweep's estimated work across PARALLEL_STEP_MIN_OPS partway through,
+    // covering the inline path, the fan-out path and the boundary itself.
+    let (d, dv) = (16usize, 8usize);
+    let streams = 24usize;
+    let steps = 64usize;
+    for imp in all_impls() {
+        let ws: Vec<Workload> =
+            (0..streams).map(|s| Workload::random(steps, d, dv, 900 + s as u64)).collect();
+        let mut reference: Vec<Vec<f32>> = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let pool = Pool::new(threads);
+            let mut states: Vec<_> = (0..streams).map(|_| imp.begin_decode(d, dv)).collect();
+            let mut outs = vec![0f32; streams * dv];
+            for step in 0..steps {
+                {
+                    let mut batch: Vec<DecodeStep> = states
+                        .iter_mut()
+                        .zip(outs.chunks_mut(dv))
+                        .enumerate()
+                        .map(|(s, (st, orow))| DecodeStep {
+                            state: st.as_mut(),
+                            q: ws[s].q.row(step),
+                            k: ws[s].k.row(step),
+                            v: ws[s].v.row(step),
+                            out: orow,
+                        })
+                        .collect();
+                    imp.step_batch(&mut batch, &pool);
+                }
+                if threads == 1 {
+                    reference.push(outs.clone());
+                } else {
+                    assert_eq!(
+                        outs,
+                        reference[step],
+                        "{} threads={threads} step {step}: fused sweep not bit-equal",
+                        imp.name()
+                    );
+                }
+            }
         }
     }
 }

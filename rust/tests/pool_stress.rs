@@ -1,0 +1,230 @@
+//! Concurrency stress gate for the resident parked worker pool (tier-1),
+//! the substrate-level companion of `parallel_determinism.rs`:
+//!
+//! 1. Concurrent regions submitted from many OS threads at once — the
+//!    serving shape: scheduler sweeps, client threads and test harness
+//!    threads all racing regions through one shared team — must each see
+//!    exactly-once chunk coverage.
+//! 2. Nested region submission (a worker submitting from inside a region)
+//!    must run inline on the submitting worker's thread, never deadlock
+//!    the submission gate.
+//! 3. Degenerate regions — zero work, a single chunk, grain ≫ n — take the
+//!    inline path and still cover every index.
+//! 4. Oversubscription (`threads ≫ cores`): logical worker ids multiplex
+//!    over the capped resident team; coverage and worker-id order hold.
+//! 5. A worker panic propagates to the submitting thread with its original
+//!    payload, without deadlocking concurrent submitters or poisoning the
+//!    team for the next region.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use zeta::util::pool::{ChunkQueue, Pool};
+
+#[test]
+fn concurrent_regions_from_many_os_threads() {
+    let submitters = 8usize;
+    let regions = 32usize;
+    let n = 501usize;
+    let total = Arc::new(AtomicUsize::new(0));
+    let mut joins = Vec::new();
+    for s in 0..submitters {
+        let total = Arc::clone(&total);
+        joins.push(std::thread::spawn(move || {
+            // Mixed pool sizes: policies differ, the resident team is one.
+            let pool = Pool::new(2 + (s % 3));
+            for _ in 0..regions {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                pool.parallel_for(n, 16, |r| {
+                    for i in r {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "submitter {s}: some index not covered exactly once"
+                );
+                total.fetch_add(n, Ordering::Relaxed);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("submitter thread panicked");
+    }
+    assert_eq!(total.load(Ordering::Relaxed), submitters * regions * n);
+}
+
+#[test]
+fn nested_region_submission_does_not_deadlock() {
+    let pool = Pool::new(4);
+    // Outer region fans out; every worker submits inner regions, which run
+    // inline on that worker (the gate is never re-entered).
+    let results = pool.run_workers(4, |w| {
+        let me = std::thread::current().id();
+        let inner_ids = pool.run_workers(3, |i| (i + w, std::thread::current().id()));
+        assert!(
+            inner_ids.iter().all(|(_, tid)| *tid == me),
+            "nested region escaped the submitting worker's thread"
+        );
+        let inner: usize = inner_ids.iter().map(|(v, _)| v).sum();
+        // Two levels deeper, through the chunked path.
+        let sums: Vec<usize> = pool.run_chunked(10, 3, |q| {
+            let mut s = 0usize;
+            while let Some(r) = q.next_chunk() {
+                s += r.sum::<usize>();
+            }
+            s
+        });
+        inner + sums.iter().sum::<usize>()
+    });
+    // inner = (0+w) + (1+w) + (2+w) = 3w + 3; chunked sum = 0+..+9 = 45.
+    assert_eq!(results, vec![48, 51, 54, 57]);
+}
+
+#[test]
+fn zero_work_single_chunk_and_oversized_grain_regions() {
+    let pool = Pool::new(4);
+    // Zero work: the closure must never run.
+    pool.parallel_for(0, 8, |_r| panic!("zero-work region ran its closure"));
+    assert_eq!(pool.parallel_for_stats(0, 8, |_r, _st| {}), 0);
+    // Single index with a giant grain: one chunk, inline.
+    let hits = AtomicUsize::new(0);
+    pool.parallel_for(1, 1024, |r| {
+        hits.fetch_add(r.len(), Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 1);
+    // n smaller than one grain through the chunked path.
+    let parts: Vec<usize> = pool.run_chunked(7, 100, |q| {
+        let mut s = 0usize;
+        while let Some(r) = q.next_chunk() {
+            s += r.len();
+        }
+        s
+    });
+    assert_eq!(parts.iter().sum::<usize>(), 7);
+}
+
+#[test]
+fn oversubscribed_pool_covers_every_index_exactly_once() {
+    // threads ≫ cores: the resident team is capped, so logical worker ids
+    // multiplex over fewer OS threads — coverage must be unaffected.
+    let pool = Pool::new(256);
+    let n = 10_000usize;
+    let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+    pool.parallel_for(n, 7, |r| {
+        for i in r {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    // Results still arrive in worker-id order under multiplexing.
+    let ids = pool.run_workers(200, |w| w);
+    assert_eq!(ids, (0..200).collect::<Vec<_>>());
+}
+
+#[test]
+fn worker_panic_propagates_and_pool_stays_usable() {
+    let pool = Pool::new(4);
+    for round in 0..3 {
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_workers(4, |w| {
+                if w == 2 {
+                    panic!("boom {round}");
+                }
+                w
+            })
+        }))
+        .expect_err("worker panic must reach the submitting thread");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("boom"), "panic payload lost: {msg:?}");
+        // The team is not poisoned: the next region runs clean.
+        let hits = AtomicUsize::new(0);
+        pool.parallel_for(100, 4, |r| {
+            hits.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+}
+
+#[test]
+fn panics_under_concurrent_submission_neither_deadlock_nor_leak() {
+    let joins: Vec<_> = (0..4usize)
+        .map(|s| {
+            std::thread::spawn(move || {
+                let pool = Pool::new(3);
+                for i in 0..12 {
+                    if (s + i) % 3 == 0 {
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            pool.parallel_for(64, 4, |r| {
+                                if r.start == 32 {
+                                    panic!("chunk boom");
+                                }
+                            })
+                        }));
+                        assert!(r.is_err(), "panic in a chunk must propagate");
+                    } else {
+                        let hits = AtomicUsize::new(0);
+                        pool.parallel_for(64, 4, |r| {
+                            hits.fetch_add(r.len(), Ordering::Relaxed);
+                        });
+                        assert_eq!(hits.load(Ordering::Relaxed), 64);
+                    }
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("submitter thread panicked");
+    }
+}
+
+#[test]
+fn chunk_queue_repolling_with_huge_grain_never_reissues() {
+    // The old `fetch_add` cursor wrapped `usize` under repeated post-
+    // exhaustion polling with huge grains and re-issued claimed chunks.
+    let q = ChunkQueue::new(3, usize::MAX / 2);
+    assert_eq!(q.next_chunk(), Some(0..3));
+    for _ in 0..100 {
+        assert!(q.next_chunk().is_none(), "exhausted queue re-issued a chunk");
+    }
+    // Concurrent post-exhaustion polling stays exhausted too.
+    let q = Arc::new(ChunkQueue::new(5, usize::MAX));
+    assert_eq!(q.next_chunk(), Some(0..5));
+    let joins: Vec<_> = (0..4)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || (0..1000).all(|_| q.next_chunk().is_none()))
+        })
+        .collect();
+    for j in joins {
+        assert!(j.join().unwrap());
+    }
+}
+
+#[test]
+fn results_and_stats_are_consistent_under_contention() {
+    // parallel_for_stats must sum per-worker stats exactly even while other
+    // threads churn regions through the same team.
+    let stop = Arc::new(AtomicUsize::new(0));
+    let bg = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let pool = Pool::new(2);
+            while stop.load(Ordering::Relaxed) == 0 {
+                pool.parallel_for(64, 8, |r| {
+                    std::hint::black_box(r.len());
+                });
+            }
+        })
+    };
+    let pool = Pool::new(4);
+    for _ in 0..50 {
+        let total = pool.parallel_for_stats(321, 10, |r, st| {
+            st.workspace_bytes += r.len();
+        });
+        assert_eq!(total, 321);
+    }
+    stop.store(1, Ordering::Relaxed);
+    bg.join().unwrap();
+}
