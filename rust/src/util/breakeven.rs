@@ -6,7 +6,7 @@
 //! entering a parallel region cost tens of µs per worker, so the fused
 //! serving sweeps — the common case under many-user decode traffic — ran
 //! inline unless a sweep carried ≥ 2^17 estimated scalar ops. A parked
-//! team is woken with one generation-stamped descriptor and a condvar
+//! team is woken with one shared region descriptor and a condvar
 //! broadcast: the `exp pool` micro-benchmark (`BENCH_pool.json`) puts the
 //! launch+join handshake at single-digit µs at 4–8 workers, roughly an
 //! order of magnitude below the scoped-spawn baseline it also measures.

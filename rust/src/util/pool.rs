@@ -5,8 +5,8 @@
 //!
 //! * A [`Pool`] is a *thread-count policy*, cheap to copy and share. Work
 //!   executes on a process-wide **resident team** of worker threads that
-//!   park on a condvar between parallel regions and are woken by a
-//!   generation-stamped region descriptor (trampoline fn + context ptr).
+//!   park on a condvar between parallel regions and are woken with a
+//!   region descriptor (trampoline fn + context ptr).
 //!   Entering a region therefore costs one park/wake handshake (single-digit
 //!   µs) instead of a `std::thread::scope` spawn per region (tens of µs per
 //!   worker) — the `exp pool` micro-benchmark measures both sides and writes
@@ -14,7 +14,7 @@
 //!   [`crate::util::breakeven`] fan-out thresholds.
 //! * Closures may still borrow the caller's stack freely: the submitting
 //!   thread publishes the region, runs a share of it itself, and blocks
-//!   until every resident has retired the region's generation — so every
+//!   until every participating resident has retired the region — so every
 //!   borrow outlives every use, the same guarantee `std::thread::scope`
 //!   gave, enforced by the region join instead of the scope join.
 //! * Worker ids are *logical*: participants (the submitter plus the
@@ -196,7 +196,7 @@ impl Pool {
 }
 
 // ---------------------------------------------------------------------------
-// Resident team: parked worker threads + generation-stamped region dispatch
+// Resident team: parked worker threads + participant-counted region dispatch
 // ---------------------------------------------------------------------------
 
 thread_local! {
@@ -214,7 +214,7 @@ fn in_pool_context() -> bool {
 /// Type-erased parallel region: a trampoline instantiated for the concrete
 /// closure/result types plus a pointer to the [`RegionCtx`] on the
 /// submitter's stack. The context stays valid for the whole region because
-/// the submitter blocks until every resident has retired this generation.
+/// the submitter blocks until every participant has retired the region.
 #[derive(Clone, Copy)]
 struct RegionDesc {
     run: unsafe fn(*const ()),
@@ -283,6 +283,10 @@ where
     F: Fn(usize) -> R + Sync,
 {
     debug_assert!(workers >= 2);
+    // In-context callers must take the inline path (`Pool::run_workers`
+    // short-circuits them); a direct call from inside a region would have
+    // its IN_POOL flag cleared by the submitter share below.
+    debug_assert!(!in_pool_context(), "run_region_on called from inside a pool region");
     let ctx = RegionCtx {
         f,
         next_id: AtomicUsize::new(0),
@@ -309,19 +313,20 @@ where
 }
 
 /// State shared between the residents and the submitters, guarded by one
-/// mutex: the current region (if any), its generation stamp, and the
-/// participation accounting that bounds a region's join to the workers it
-/// actually asked for.
+/// mutex: the current region (if any) and the participation accounting
+/// that bounds a region's join to the workers it actually asked for.
 struct TeamState {
-    /// Monotonic region stamp; each resident joins each generation at most
-    /// once (and skips it entirely when the participant quota is filled).
-    generation: u64,
     region: Option<RegionDesc>,
     /// Unclaimed participant slots for the current region: only residents
     /// that decrement this (under the lock, while the region is live) may
     /// touch the region descriptor — which is what keeps a small region's
     /// launch cost proportional to *its* worker count, not to the largest
-    /// team the process ever grew.
+    /// team the process ever grew. This count is the *sole* claim guard:
+    /// a resident that already helped the live region may claim a second
+    /// slot after retiring its first (benign — `region_main` drains no
+    /// ids once the region is exhausted, and `outstanding` counts claims,
+    /// not threads), which is what makes the targeted `notify_one`
+    /// publish in [`Team::run_region`] immune to lost wakeups.
     participants: usize,
     /// Participants that have not yet retired the current region; the
     /// submitter's join waits for this to reach zero.
@@ -361,7 +366,6 @@ impl Team {
         Team {
             core: Arc::new(TeamCore {
                 state: Mutex::new(TeamState {
-                    generation: 0,
                     region: None,
                     participants: 0,
                     outstanding: 0,
@@ -397,29 +401,36 @@ impl Team {
             let mut st = self.core.state.lock().unwrap_or_else(|e| e.into_inner());
             self.ensure_residents(&mut st, helpers.min(self.cap));
             // Only as many residents as the region asked for participate;
-            // the rest observe the new generation and park straight away,
-            // so a 2-slot sweep never waits on a 64-thread team.
+            // the rest find the participant quota drained and park straight
+            // away, so a 2-slot sweep never waits on a 64-thread team.
             let joining = st.residents.min(helpers);
-            st.generation += 1;
             st.region = Some(desc);
             st.participants = joining;
             st.outstanding = joining;
             drop(st);
             // Targeted wakes instead of a notify_all thundering herd: only
-            // `joining` residents are needed, and `joining` notify_one
-            // calls reach them — any resident not parked at this instant
-            // is in transit and re-checks the (already published) region
-            // under the lock before it can park, so no quota slot can be
-            // left waiting on a lost wakeup.
+            // `joining` residents are needed. A wake may land on a resident
+            // that cannot help — e.g. one counted in `joining` that already
+            // claimed, drained the (small) region, retired, and re-parked
+            // before this loop finished, then got picked by a later notify
+            // (Condvar wake order is unspecified). That is harmless:
+            // claiming is guarded only by `participants`, so *any* resident
+            // that wakes while slots remain claims one and makes progress,
+            // and once the quota is drained the remaining `outstanding`
+            // retirements are owed exclusively by participants that are
+            // already awake — no parked resident is needed, so no wakeup
+            // can be lost where it matters.
             for _ in 0..joining {
                 self.core.wake.notify_one();
             }
         }
         // The submitter is a participant too: it drains worker ids itself,
         // so a region completes even if the team spawned zero residents.
-        IN_POOL.with(|c| c.set(true));
+        // Save/restore rather than hard-set the flag so the nested-inline
+        // protection survives a future in-context caller of this path.
+        let was_in_pool = IN_POOL.with(|c| c.replace(true));
         unsafe { (desc.run)(desc.ctx) };
-        IN_POOL.with(|c| c.set(false));
+        IN_POOL.with(|c| c.set(was_in_pool));
         let mut st = self.core.state.lock().unwrap_or_else(|e| e.into_inner());
         while st.outstanding > 0 {
             st = self.core.done.wait(st).unwrap_or_else(|e| e.into_inner());
@@ -459,13 +470,22 @@ impl Drop for Team {
     }
 }
 
-/// Resident main loop: park on the condvar until a fresh generation (or
-/// shutdown) appears, claim a participant slot if the region still has
-/// one — only counted participants may touch the region descriptor — run
-/// the trampoline, and retire the region.
+/// Resident main loop: park on the condvar until a live region with an
+/// unclaimed participant slot (or shutdown) appears, claim the slot —
+/// only counted participants may touch the region descriptor — run the
+/// trampoline, and retire the region.
+///
+/// Claiming is deliberately *not* gated on whether this resident already
+/// helped the live region: a repeat claim just re-enters `region_main`,
+/// which drains nothing once the worker ids are exhausted, and retires
+/// again — `outstanding` counts claims, not distinct threads. Gating on a
+/// region stamp instead (as an earlier revision did) loses wakeups: a
+/// fast resident can drain a small region, re-park while the submitter is
+/// still issuing its targeted notifies, swallow a notify meant for a
+/// still-parked peer, and refuse to claim — leaving a participant slot
+/// unclaimed and the submitter waiting on `done` forever.
 fn worker_loop(core: Arc<TeamCore>) {
     IN_POOL.with(|c| c.set(true));
-    let mut last_gen = 0u64;
     loop {
         let desc = {
             let mut st = core.state.lock().unwrap_or_else(|e| e.into_inner());
@@ -474,14 +494,11 @@ fn worker_loop(core: Arc<TeamCore>) {
                     return;
                 }
                 if let Some(d) = st.region {
-                    if st.generation != last_gen {
-                        last_gen = st.generation;
-                        if st.participants > 0 {
-                            st.participants -= 1;
-                            break d;
-                        }
-                        // Quota filled: this region is not ours; park.
+                    if st.participants > 0 {
+                        st.participants -= 1;
+                        break d;
                     }
+                    // Quota filled: this region needs no more hands; park.
                 }
                 st = core.wake.wait(st).unwrap_or_else(|e| e.into_inner());
             }
@@ -733,6 +750,26 @@ mod tests {
     // concurrent-submitter contention are covered by the integration gate
     // in `rust/tests/pool_stress.rs`; the tests here stick to private
     // internals and the serial/inline contracts.
+
+    #[test]
+    fn small_region_hammer_no_lost_wakeups() {
+        // Regression for a lost-wakeup deadlock: when claims were gated on
+        // a region generation stamp, a fast resident could claim, drain a
+        // tiny region, retire, and re-park while the submitter was still
+        // issuing its targeted notifies; a later notify could then wake
+        // that re-parked resident (Condvar wake order is unspecified),
+        // which saw a stale-for-it generation, refused to claim, and
+        // re-waited — swallowing the signal meant for a still-parked peer
+        // and hanging the submitter on `done.wait` with a participant slot
+        // forever unclaimed. Hammering near-empty multi-helper regions
+        // reproduces that interleaving with high probability; with claims
+        // guarded by the slot count alone the loop must always join.
+        let team = Team::with_cap(3);
+        for i in 0..20_000usize {
+            let out: Vec<usize> = run_region_on(&team, 4, &|w| w + i);
+            assert_eq!(out, vec![i, i + 1, i + 2, i + 3]);
+        }
+    }
 
     #[test]
     fn private_team_shutdown_on_drop_joins_residents() {
