@@ -13,9 +13,12 @@
 //! of O and lse). The backward is row-parallel over queries with dq rows
 //! disjoint and per-thread dk/dv accumulators merged after the join.
 
+use std::sync::Arc;
+
 use super::naive::ExactKvDecode;
 use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::{dot, Tensor};
+use crate::util::arena::PageArena;
 use crate::util::pool::{merge_partials, Pool, SharedSlice};
 
 pub struct Flash {
@@ -168,8 +171,13 @@ impl AttentionImpl for Flash {
     /// exact-softmax KV-cache state with `naive` (the streaming-softmax
     /// forward agrees with the exact row softmax within fp tolerance, as
     /// the flash-vs-naive gates already pin).
-    fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState> {
-        Box::new(ExactKvDecode::new(d, dv))
+    fn begin_decode_in(
+        &self,
+        d: usize,
+        dv: usize,
+        arena: &Arc<PageArena>,
+    ) -> Box<dyn DecodeState> {
+        Box::new(ExactKvDecode::new(d, dv, arena))
     }
 
     fn forward_backward_with(&self, w: &Workload, pool: &Pool) -> (Grads, MemReport) {

@@ -19,8 +19,11 @@
 //! (O(n_state) per step) rather than materializing O(N·n_state) gate
 //! arrays, preserving the O(1)-in-N forward workspace.
 
+use std::sync::Arc;
+
 use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::Tensor;
+use crate::util::arena::{PageArena, PagedKv};
 use crate::util::pool::{Pool, SharedSlice};
 
 pub struct MambaLite {
@@ -129,12 +132,14 @@ impl MambaLite {
 /// hidden state `(dv, n_state)` advances one step per token, O(dv·n_state)
 /// time and O(1)-in-N memory. The per-(token, channel) arithmetic is the
 /// same sequence of operations as the batch forward, so decode outputs are
-/// bit-identical to prefill.
+/// bit-identical to prefill. The hidden state lives on arena pages (one
+/// `n_state`-wide row per channel): a fork shares the pages until either
+/// side's next step, whose `row_mut` copy-on-write privatizes them.
 pub struct MambaDecode {
     ns: usize,
     d: usize,
     dv: usize,
-    h: Vec<f32>, // (dv, ns)
+    h: PagedKv, // (dv, ns): one row per value channel
     b: Vec<f32>,
     c: Vec<f32>,
     t: usize,
@@ -145,6 +150,15 @@ impl DecodeState for MambaDecode {
         let (ns, d, dv) = (self.ns, self.d, self.dv);
         debug_assert_eq!(v_t.len(), dv);
         debug_assert_eq!(out.len(), dv);
+        if self.h.is_empty() {
+            // Re-prefilling after release(): the hidden-state rows
+            // re-materialize lazily, so a released state holds zero pages
+            // until it is actually stepped again (the release contract).
+            let zero = vec![0f32; ns];
+            for _ in 0..dv {
+                self.h.push_row(&zero);
+            }
+        }
         // Same stand-in gate projections as `MambaLite::gates_into`.
         let dt = softplus(q_t[0]);
         for s in 0..ns {
@@ -152,7 +166,7 @@ impl DecodeState for MambaDecode {
             self.c[s] = q_t[s % d] * 0.5;
         }
         for (ch, (&x, o)) in v_t.iter().zip(out.iter_mut()).enumerate() {
-            let hrow = &mut self.h[ch * ns..(ch + 1) * ns];
+            let hrow = self.h.row_mut(ch);
             *o = scan_channel_step(dt, &self.b, &self.c, ns, x, hrow);
         }
         self.t += 1;
@@ -168,7 +182,24 @@ impl DecodeState for MambaDecode {
     }
 
     fn state_bytes(&self) -> usize {
-        (self.h.len() + self.b.len() + self.c.len()) * 4
+        self.h.bytes() + (self.b.len() + self.c.len()) * 4
+    }
+
+    fn fork(&self) -> Box<dyn DecodeState> {
+        Box::new(MambaDecode {
+            ns: self.ns,
+            d: self.d,
+            dv: self.dv,
+            h: self.h.fork(),
+            b: self.b.clone(),
+            c: self.c.clone(),
+            t: self.t,
+        })
+    }
+
+    fn release(&mut self) {
+        self.h.release();
+        self.t = 0;
     }
 }
 
@@ -177,17 +208,19 @@ impl AttentionImpl for MambaLite {
         "mamba"
     }
 
-    fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState> {
+    fn begin_decode_in(
+        &self,
+        d: usize,
+        dv: usize,
+        arena: &Arc<PageArena>,
+    ) -> Box<dyn DecodeState> {
         let ns = self.n_state;
-        Box::new(MambaDecode {
-            ns,
-            d,
-            dv,
-            h: vec![0f32; dv * ns],
-            b: vec![0f32; ns],
-            c: vec![0f32; ns],
-            t: 0,
-        })
+        let mut h = PagedKv::new(arena, ns);
+        let zero = vec![0f32; ns];
+        for _ in 0..dv {
+            h.push_row(&zero);
+        }
+        Box::new(MambaDecode { ns, d, dv, h, b: vec![0f32; ns], c: vec![0f32; ns], t: 0 })
     }
 
     fn forward_with(&self, w: &Workload, pool: &Pool) -> (Tensor, MemReport) {

@@ -48,7 +48,10 @@ pub mod mamba;
 pub mod naive;
 pub mod zeta;
 
+use std::sync::Arc;
+
 use crate::tensor::Tensor;
+use crate::util::arena::PageArena;
 use crate::util::breakeven::{fan_out, PARALLEL_STEP_MIN_OPS};
 use crate::util::pool::{Pool, SharedSlice};
 use crate::util::rng::Rng;
@@ -161,8 +164,28 @@ pub trait DecodeState: Send {
     fn pos(&self) -> usize;
 
     /// Bytes of persistent per-request state (KV cache / Z-order index /
-    /// SSM state) — the serving-memory analogue of [`MemReport`].
+    /// SSM state) — the serving-memory analogue of [`MemReport`]. Counts
+    /// the arena pages this state references: pages shared with forks are
+    /// counted in each handle, while the owning
+    /// [`crate::util::arena::PageArena`] counts every live page exactly
+    /// once (the number the serving byte budget enforces).
     fn state_bytes(&self) -> usize;
+
+    /// Copy-on-write fork: the returned state has ingested exactly the
+    /// same token history and continues independently. Full arena pages
+    /// are *shared* (refcount bumps — the arena's live bytes barely grow);
+    /// only the partial tail page and the O(1) running scalars are copied.
+    /// Contract (the paged-state gate in `rust/tests/paged_state.rs`):
+    /// stepping a fork is bit-identical to stepping a fresh state fed the
+    /// same full sequence, and never perturbs the original.
+    fn fork(&self) -> Box<dyn DecodeState>;
+
+    /// Return every arena page to the arena and reset to the empty state
+    /// (pos 0). Called when a session is preempted or retired so its
+    /// memory is reusable immediately; dropping the state releases pages
+    /// too, so `release` is about *when*, not *whether*. A released state
+    /// must be re-prefilled from scratch before further `step`s.
+    fn release(&mut self);
 
     /// Rough scalar-op estimate of the *next* [`DecodeState::step`] call,
     /// used by [`AttentionImpl::step_batch`] to decide whether a fused
@@ -257,12 +280,23 @@ pub trait AttentionImpl {
     }
 
     /// Begin incremental decoding for a stream with q/k width `d` and value
-    /// width `dv`. Prefill stays on `forward_with` (or on `step` loops for
-    /// strict streaming); each subsequent token costs the kernel's
-    /// per-token complexity instead of a full-sequence recompute:
-    /// O(log N + k) for `zeta`, O(N) for the exact-softmax kernels, O(1)
-    /// for `mamba`.
-    fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState>;
+    /// width `dv`, with all persistent state on `arena` pages. Prefill
+    /// stays on `forward_with` (or on `step` loops for strict streaming);
+    /// each subsequent token costs the kernel's per-token complexity
+    /// instead of a full-sequence recompute: O(log N + k) for `zeta`,
+    /// O(N) for the exact-softmax kernels, O(1) for `mamba`.
+    fn begin_decode_in(
+        &self,
+        d: usize,
+        dv: usize,
+        arena: &Arc<PageArena>,
+    ) -> Box<dyn DecodeState>;
+
+    /// [`AttentionImpl::begin_decode_in`] on the process-wide default
+    /// arena ([`PageArena::global`]).
+    fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState> {
+        self.begin_decode_in(d, dv, PageArena::global())
+    }
 
     /// Fused cross-stream decode: advance every slot's [`DecodeState`] by
     /// one token in a *single* pool-parallel kernel call — the serving
@@ -363,6 +397,24 @@ pub fn all_impls() -> Vec<Box<dyn AttentionImpl>> {
         Box::new(zeta::ZetaNative::default()),
         Box::new(mamba::MambaLite::default()),
     ]
+}
+
+/// The one `kernel-name → AttentionImpl` factory, at *serving* settings —
+/// used by the coordinator's native backend, the `exp` serving benchmarks
+/// and the serving-level tests, so the name→config mapping can never
+/// drift between them. (`all_impls` stays on the paper-default benchmark
+/// settings: flash block 128, zeta chunk 64.) Returns `None` for unknown
+/// names; callers own the error message.
+pub fn kernel_by_name(name: &str) -> Option<Box<dyn AttentionImpl + Send + Sync>> {
+    Some(match name {
+        "naive" => Box::new(naive::Naive) as Box<dyn AttentionImpl + Send + Sync>,
+        "flash" => Box::new(flash::Flash { block: 64 }),
+        // chunk 16: fine-grained causal limits so short serving prompts
+        // already exercise the windowed search.
+        "zeta" => Box::new(zeta::ZetaNative { chunk: 16, ..zeta::ZetaNative::default() }),
+        "mamba" => Box::new(mamba::MambaLite::default()),
+        _ => return None,
+    })
 }
 
 #[cfg(test)]

@@ -6,8 +6,11 @@
 //! row-parallel dS/dV phase (per-thread dV accumulators merged at the end),
 //! a row-parallel dQ phase and a column-parallel dK phase.
 
+use std::sync::Arc;
+
 use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::{dot, Tensor};
+use crate::util::arena::{PageArena, PagedKv};
 use crate::util::pool::{merge_partials, Pool, SharedSlice};
 
 pub struct Naive;
@@ -17,19 +20,28 @@ pub struct Naive;
 /// attention row — O(t·d) per token, versus O(t²·d) for recomputing the
 /// full forward. The per-row arithmetic (max-subtracted exp, normalize,
 /// then accumulate in key order) mirrors the naive kernel exactly, so
-/// decode outputs are bit-compatible with prefill.
+/// decode outputs are bit-compatible with prefill. The K/V rows live on
+/// arena pages ([`PagedKv`]), so forks share the cached prefix
+/// copy-on-write and preemption returns the pages to the arena.
 pub struct ExactKvDecode {
     d: usize,
     dv: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    k: PagedKv,
+    v: PagedKv,
     scores: Vec<f32>,
     t: usize,
 }
 
 impl ExactKvDecode {
-    pub fn new(d: usize, dv: usize) -> ExactKvDecode {
-        ExactKvDecode { d, dv, k: Vec::new(), v: Vec::new(), scores: Vec::new(), t: 0 }
+    pub fn new(d: usize, dv: usize, arena: &Arc<PageArena>) -> ExactKvDecode {
+        ExactKvDecode {
+            d,
+            dv,
+            k: PagedKv::new(arena, d),
+            v: PagedKv::new(arena, dv),
+            scores: Vec::new(),
+            t: 0,
+        }
     }
 }
 
@@ -40,15 +52,15 @@ impl DecodeState for ExactKvDecode {
         debug_assert_eq!(k_t.len(), d);
         debug_assert_eq!(v_t.len(), dv);
         debug_assert_eq!(out.len(), dv);
-        self.k.extend_from_slice(k_t);
-        self.v.extend_from_slice(v_t);
+        self.k.push_row(k_t);
+        self.v.push_row(v_t);
         let t = self.t;
         self.t += 1;
         let scale = 1.0 / (d as f32).sqrt();
         self.scores.clear();
         let mut maxv = f32::NEG_INFINITY;
         for j in 0..=t {
-            let s = dot(q_t, &self.k[j * d..(j + 1) * d]) * scale;
+            let s = dot(q_t, self.k.row(j)) * scale;
             self.scores.push(s);
             maxv = maxv.max(s);
         }
@@ -66,7 +78,7 @@ impl DecodeState for ExactKvDecode {
         }
         for j in 0..=t {
             let a = self.scores[j];
-            let vr = &self.v[j * dv..(j + 1) * dv];
+            let vr = self.v.row(j);
             for (o, &vv) in out.iter_mut().zip(vr) {
                 *o += a * vv;
             }
@@ -83,7 +95,25 @@ impl DecodeState for ExactKvDecode {
     }
 
     fn state_bytes(&self) -> usize {
-        (self.k.capacity() + self.v.capacity() + self.scores.capacity()) * 4
+        self.k.bytes() + self.v.bytes() + self.scores.capacity() * 4
+    }
+
+    fn fork(&self) -> Box<dyn DecodeState> {
+        Box::new(ExactKvDecode {
+            d: self.d,
+            dv: self.dv,
+            k: self.k.fork(),
+            v: self.v.fork(),
+            scores: Vec::new(),
+            t: self.t,
+        })
+    }
+
+    fn release(&mut self) {
+        self.k.release();
+        self.v.release();
+        self.scores = Vec::new();
+        self.t = 0;
     }
 }
 
@@ -168,8 +198,13 @@ impl AttentionImpl for Naive {
         (o, mem)
     }
 
-    fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState> {
-        Box::new(ExactKvDecode::new(d, dv))
+    fn begin_decode_in(
+        &self,
+        d: usize,
+        dv: usize,
+        arena: &Arc<PageArena>,
+    ) -> Box<dyn DecodeState> {
+        Box::new(ExactKvDecode::new(d, dv, arena))
     }
 
     fn forward_backward_with(&self, w: &Workload, pool: &Pool) -> (Grads, MemReport) {

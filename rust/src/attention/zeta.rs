@@ -29,8 +29,11 @@
 //! prefix scans stay serial. The backward is query-parallel with
 //! per-thread dK/dV accumulators merged once after the join.
 
+use std::sync::Arc;
+
 use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::{sqdist, Tensor};
+use crate::util::arena::{FlatRows, PageArena, PagedKv, PagedU32, RowStore};
 use crate::util::pool::{merge_partials, Pool, SharedSlice};
 use crate::zorder;
 use crate::zorder::index::{WindowScratch, ZIndex};
@@ -87,18 +90,20 @@ struct Candidates {
 /// the scoring arithmetic automatically applies to both schedules.
 ///
 /// `irow` is one query's `u32::MAX`-padded candidate slot row; `kl` / `v`
-/// are the flat key-projection and value stores the slots index into.
+/// are the key-projection and value row stores the slots index into —
+/// generic over [`RowStore`], so the batch path scores out of its flat
+/// buffers and the decode path out of its paged arena caches through the
+/// *same* monomorphized arithmetic (identical op sequence either way, so
+/// the bit-for-bit decode == prefill contract survives the paging).
 #[allow(clippy::too_many_arguments)]
-fn cauchy_row(
+fn cauchy_row<KR: RowStore, VR: RowStore>(
     eps: f32,
     irow: &[u32],
     qi: &[f32],
-    kl: &[f32],
+    kl: &KR,
     km_i: &[f32],
     vm_i: &[f32],
-    v: &[f32],
-    dk: usize,
-    dv: usize,
+    v: &VR,
     scores: &mut [f32],
     out: &mut [f32],
 ) -> f32 {
@@ -109,7 +114,7 @@ fn cauchy_row(
             break;
         }
         let jj = j as usize;
-        let s = 1.0 / (sqdist(qi, &kl[jj * dk..(jj + 1) * dk]) + eps);
+        let s = 1.0 / (sqdist(qi, kl.row_at(jj)) + eps);
         scores[slot] = s;
         z += s;
         nc = slot + 1;
@@ -123,7 +128,7 @@ fn cauchy_row(
     for slot in 0..nc {
         let jj = irow[slot] as usize;
         let a = scores[slot] * inv;
-        let vr = &v[jj * dv..(jj + 1) * dv];
+        let vr = v.row_at(jj);
         for (o, &vv) in out.iter_mut().zip(vr) {
             *o += a * vv;
         }
@@ -343,6 +348,8 @@ impl ZetaNative {
         // Query-parallel: o rows and zsum entries are disjoint per query.
         // Each worker caches its candidate scores so every Cauchy score is
         // computed exactly once.
+        let kl_rows = FlatRows { data: kl, width: dk };
+        let v_rows = FlatRows { data: &v.data, width: dv };
         let score_ws: usize = {
             let osh = SharedSlice::new(&mut o.data);
             let zsh = SharedSlice::new(&mut zsum);
@@ -357,12 +364,10 @@ impl ZetaNative {
                             self.eps,
                             &cands.idx[base..base + cands.k],
                             &ql[i * dk..(i + 1) * dk],
-                            kl,
+                            &kl_rows,
                             &km[i * dk..(i + 1) * dk],
                             &vm[i * dv..(i + 1) * dv],
-                            &v.data,
-                            dk,
-                            dv,
+                            &v_rows,
                             &mut scores,
                             orow,
                         );
@@ -455,6 +460,13 @@ impl ZetaNative {
 /// lookup, and O(k·dv) scoring — versus O(N log N) for re-sorting from
 /// scratch every token. Runs the *same* selection routine over the *same*
 /// index states as the batch forward, so outputs agree bit-for-bit.
+///
+/// All O(N) storage lives on arena pages: the Morton-code history
+/// ([`PagedU32`]) and the low-dim key / value caches ([`PagedKv`]), plus
+/// the refcounted sorted runs inside [`ZIndex`]. [`DecodeState::fork`]
+/// therefore shares the whole ingested prefix — full pages and sorted
+/// runs by refcount bump, only the partial tail pages copied — instead of
+/// re-projecting, re-encoding and re-sorting it.
 pub struct ZetaDecode {
     cfg: ZetaNative,
     bits: u32,
@@ -463,9 +475,9 @@ pub struct ZetaDecode {
     index: ZIndex,
     /// Keys already appended to the index (== the causal chunk limit).
     indexed: usize,
-    codes: Vec<u32>,
-    kl: Vec<f32>,     // low-dim key cache (t, d_k)
-    vcache: Vec<f32>, // value cache (t, dv)
+    codes: PagedU32,
+    kl: PagedKv,     // low-dim key cache (t, d_k)
+    vcache: PagedKv, // value cache (t, dv)
     ksum: Vec<f32>,
     vsum: Vec<f32>,
     km_t: Vec<f32>,
@@ -481,7 +493,7 @@ pub struct ZetaDecode {
 }
 
 impl ZetaDecode {
-    pub fn new(cfg: ZetaNative, d: usize, dv: usize) -> ZetaDecode {
+    pub fn new(cfg: ZetaNative, d: usize, dv: usize, arena: &Arc<PageArena>) -> ZetaDecode {
         let dk = cfg.d_k;
         let k = cfg.k;
         ZetaDecode {
@@ -490,9 +502,9 @@ impl ZetaDecode {
             dv,
             index: ZIndex::new(),
             indexed: 0,
-            codes: Vec::new(),
-            kl: Vec::new(),
-            vcache: Vec::new(),
+            codes: PagedU32::new(arena),
+            kl: PagedKv::new(arena, dk),
+            vcache: PagedKv::new(arena, dv),
             ksum: vec![0f32; dk],
             vsum: vec![0f32; dv],
             km_t: vec![0f32; dk],
@@ -527,8 +539,8 @@ impl DecodeState for ZetaDecode {
         self.klow[..dcopy].copy_from_slice(&k_t[..dcopy]);
         let code = zorder::encode_point(&self.klow, self.cfg.range, self.bits);
         self.codes.push(code);
-        self.kl.extend_from_slice(&self.klow);
-        self.vcache.extend_from_slice(v_t);
+        self.kl.push_row(&self.klow);
+        self.vcache.push_row(v_t);
 
         // Running history means — same serial arithmetic as history_means.
         for c in 0..dk {
@@ -544,7 +556,7 @@ impl DecodeState for ZetaDecode {
         let chunk = self.cfg.chunk.max(1);
         let limit = (t / chunk) * chunk;
         while self.indexed < limit {
-            self.index.append(self.codes[self.indexed]);
+            self.index.append(self.codes.get(self.indexed));
             self.indexed += 1;
         }
 
@@ -578,8 +590,6 @@ impl DecodeState for ZetaDecode {
             &self.km_t,
             &self.vm_t,
             &self.vcache,
-            dk,
-            dv,
             &mut self.scores,
             out,
         );
@@ -599,10 +609,10 @@ impl DecodeState for ZetaDecode {
 
     fn state_bytes(&self) -> usize {
         self.index.bytes()
-            + self.codes.capacity() * 4
-            + (self.kl.capacity()
-                + self.vcache.capacity()
-                + self.ksum.len()
+            + self.codes.bytes()
+            + self.kl.bytes()
+            + self.vcache.bytes()
+            + (self.ksum.len()
                 + self.vsum.len()
                 + self.km_t.len()
                 + self.vm_t.len()
@@ -613,6 +623,47 @@ impl DecodeState for ZetaDecode {
             + self.irow.len() * 4
             + (self.win.capacity() + self.cand.capacity()) * 8
             + self.scratch.bytes()
+    }
+
+    fn fork(&self) -> Box<dyn DecodeState> {
+        Box::new(ZetaDecode {
+            cfg: self.cfg.clone(),
+            bits: self.bits,
+            d: self.d,
+            dv: self.dv,
+            index: self.index.fork(),
+            indexed: self.indexed,
+            codes: self.codes.fork(),
+            kl: self.kl.fork(),
+            vcache: self.vcache.fork(),
+            ksum: self.ksum.clone(),
+            vsum: self.vsum.clone(),
+            km_t: self.km_t.clone(),
+            vm_t: self.vm_t.clone(),
+            qlow: self.qlow.clone(),
+            klow: self.klow.clone(),
+            scratch: WindowScratch::default(),
+            win: Vec::new(),
+            cand: Vec::new(),
+            irow: self.irow.clone(),
+            scores: self.scores.clone(),
+            t: self.t,
+        })
+    }
+
+    fn release(&mut self) {
+        self.codes.release();
+        self.kl.release();
+        self.vcache.release();
+        self.index = ZIndex::new();
+        self.indexed = 0;
+        self.t = 0;
+        for x in self.ksum.iter_mut() {
+            *x = 0.0;
+        }
+        for x in self.vsum.iter_mut() {
+            *x = 0.0;
+        }
     }
 }
 
@@ -627,8 +678,13 @@ impl AttentionImpl for ZetaNative {
         (o, mem)
     }
 
-    fn begin_decode(&self, d: usize, dv: usize) -> Box<dyn DecodeState> {
-        Box::new(ZetaDecode::new(self.clone(), d, dv))
+    fn begin_decode_in(
+        &self,
+        d: usize,
+        dv: usize,
+        arena: &Arc<PageArena>,
+    ) -> Box<dyn DecodeState> {
+        Box::new(ZetaDecode::new(self.clone(), d, dv, arena))
     }
 
     /// Specialized batched forward (ROADMAP open item): one pool region for

@@ -16,6 +16,20 @@ pub struct Metrics {
     pub tokens: u64,
     /// Tokens generated whose stream send failed (cancelled sessions).
     pub dropped_tokens: u64,
+    /// Prompt-prefix cache hits: sessions that started by forking a cached
+    /// page-aligned prompt prefix instead of re-prefilling it.
+    pub prefix_hits: u64,
+    /// Sessions preempted by the KV byte budget (pages dropped, re-prefilled
+    /// later with identical output tokens).
+    pub evictions: u64,
+    /// Aggregate `DecodeState::state_bytes` across live sessions plus the
+    /// prefix cache (gauge, refreshed each sweep; per-handle view, so pages
+    /// shared by forks count per holder).
+    pub kv_state_bytes: usize,
+    /// Live bytes on the serving page arena (gauge; each page once).
+    pub arena_live_bytes: usize,
+    /// High-water mark of the serving page arena's live bytes.
+    pub arena_high_water_bytes: usize,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -118,6 +132,18 @@ impl Metrics {
         }
         if self.dropped_tokens > 0 {
             s.push_str(&format!(" dropped_tokens={}", self.dropped_tokens));
+        }
+        if self.arena_high_water_bytes > 0 {
+            s.push_str(&format!(
+                " kv_state={}B arena_hw={}B",
+                self.kv_state_bytes, self.arena_high_water_bytes
+            ));
+        }
+        if self.prefix_hits > 0 {
+            s.push_str(&format!(" prefix_hits={}", self.prefix_hits));
+        }
+        if self.evictions > 0 {
+            s.push_str(&format!(" evictions={}", self.evictions));
         }
         s
     }

@@ -61,7 +61,8 @@ use crate::util::pool::{Pool, SharedSlice};
 use batcher::{Batcher, Decision};
 use metrics::Metrics;
 pub use session::{GenStream, NativeModelConfig, StreamEvent};
-use session::{NativeDecodeModel, PrefillStep, Session, SessionStep, StepScratch};
+pub use session::{NativeDecodeModel, PrefixCache, Session};
+use session::{PrefillStep, SessionStep, StepScratch};
 
 /// Model output for one request.
 #[derive(Debug, Clone)]
@@ -104,6 +105,10 @@ const PREFILL_CHUNK: usize = 32;
 /// Default global per-sweep prefill-token budget (`ServerConfig::prefill_budget`).
 const DEFAULT_PREFILL_BUDGET: usize = 256;
 
+/// Entry cap of the prompt-prefix cache (LRU beyond it). Entries hold real
+/// arena pages, so the cap bounds cache memory alongside the byte budget.
+const PREFIX_CACHE_CAP: usize = 32;
+
 #[derive(Clone)]
 pub struct ServerConfig {
     pub artifacts_dir: String,
@@ -120,6 +125,17 @@ pub struct ServerConfig {
     /// starve the decode wave's token cadence. Each session is still
     /// individually capped at `PREFILL_CHUNK` per sweep. 0 = unlimited.
     pub prefill_budget: usize,
+    /// Byte budget (`--kv-mem-budget`) over the native backend's page
+    /// arena — the KV/code/state rows of every live session *and* the
+    /// prompt-prefix cache. (Arena pages are the dominant share of decode
+    /// memory; ZETA's refcounted sorted-run index adds ~8 B/token of
+    /// plain heap the budget does not meter.) New sessions are admitted
+    /// only when the budget has headroom;
+    /// when live pages exceed it, the scheduler sheds prefix-cache entries
+    /// first and then preempts the least-recently-stepped session (its
+    /// pages drop, and it transparently re-prefills later with identical
+    /// output tokens). 0 = unlimited. Must be at least one KV page.
+    pub kv_mem_budget: usize,
     /// Serve with the in-process native decode engine instead of PJRT:
     /// runs without artifacts and decodes incrementally. `preset` /
     /// `artifacts_dir` are ignored when set.
@@ -136,6 +152,7 @@ impl Default for ServerConfig {
             seed: 0,
             threads: 0,
             prefill_budget: DEFAULT_PREFILL_BUDGET,
+            kv_mem_budget: 0,
             native: None,
         }
     }
@@ -205,7 +222,7 @@ impl ClientHandle {
 
 /// The scheduler thread's execution backend (never crosses threads).
 enum Backend {
-    Native(NativeDecodeModel),
+    Native(NativeServing),
     Engine {
         exe: Arc<crate::runtime::Executable>,
         params: Vec<HostTensor>,
@@ -228,6 +245,26 @@ impl Server {
     /// trainer checkpoint) are supplied. With `cfg.native` set, the server
     /// needs no artifacts at all.
     pub fn start(cfg: ServerConfig, params: Option<Vec<HostTensor>>) -> Result<Server> {
+        // Budget sanity up front: a budget smaller than a single KV page
+        // would admit sessions that can never allocate their first page.
+        if let Some(ncfg) = &cfg.native {
+            if ncfg.kv_page == 0 {
+                bail!("--kv-page must be at least 1 token per page");
+            }
+            if cfg.kv_mem_budget > 0 {
+                let page_bytes = ncfg.kv_page * ncfg.d.max(ncfg.dv) * 4;
+                if cfg.kv_mem_budget < page_bytes {
+                    bail!(
+                        "--kv-mem-budget {} B is smaller than one KV page \
+                         ({page_bytes} B = {} tokens x {} floats x 4 B): no session \
+                         could ever allocate its first page",
+                        cfg.kv_mem_budget,
+                        ncfg.kv_page,
+                        ncfg.d.max(ncfg.dv)
+                    );
+                }
+            }
+        }
         let (tx, rx) = mpsc::channel::<Request>();
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Mutex::new(Metrics::new()));
@@ -248,7 +285,8 @@ impl Server {
                     match &cfg2.native {
                         Some(ncfg) => {
                             let model = NativeDecodeModel::new(ncfg.clone())?;
-                            Ok((None, Backend::Native(model), NATIVE_MAX_BATCH))
+                            let serving = NativeServing::new(model, cfg2.kv_mem_budget);
+                            Ok((None, Backend::Native(serving), NATIVE_MAX_BATCH))
                         }
                         None => {
                             let engine = Engine::new(&cfg2.artifacts_dir)?;
@@ -271,7 +309,7 @@ impl Server {
                         }
                     }
                 })();
-                let (_engine, backend, max_batch) = match setup {
+                let (_engine, mut backend, max_batch) = match setup {
                     Ok(v) => {
                         let _ = ready_tx.send(Ok(()));
                         v
@@ -357,17 +395,16 @@ impl Server {
                                 exe, params, jobs, max_batch, *seq_len, *is_lm, *vocab,
                                 &metrics2, &pool,
                             ),
-                            Backend::Native(model) => {
-                                native_infer_batch(model, jobs, &metrics2, &pool)
+                            Backend::Native(serving) => {
+                                native_infer_batch(serving.model(), jobs, &metrics2, &pool)
                             }
                         }
                     }
 
                     // 3. Decode micro-batches: advance every active session.
                     if !sessions.is_empty() {
-                        match &backend {
-                            Backend::Native(model) => native_decode_sweep(
-                                model,
+                        match &mut backend {
+                            Backend::Native(serving) => serving.sweep(
                                 &mut sessions,
                                 &metrics2,
                                 &depth2,
@@ -376,7 +413,7 @@ impl Server {
                                 cfg2.prefill_budget,
                             ),
                             Backend::Engine { exe, seq_len, vocab, .. } => engine_decode_sweep(
-                                exe,
+                                &*exe,
                                 &mut engine_inputs,
                                 &mut sessions,
                                 max_batch,
@@ -465,11 +502,11 @@ fn admit_request(
                 return;
             }
             match backend {
-                Backend::Native(model) => {
+                Backend::Native(serving) => {
                     // The native context cap mirrors the engine backend's
                     // seq_len bound: a prompt that already fills the
                     // context could never emit a token.
-                    let cap = model.max_context();
+                    let cap = serving.model().max_context();
                     if cap > 0 && g.tokens.len() >= cap {
                         depth.fetch_sub(1, Ordering::Relaxed);
                         let _ = g.reply.send(Err(anyhow!(
@@ -478,13 +515,16 @@ fn admit_request(
                         )));
                         return;
                     }
-                    let state = model.begin();
+                    // Sessions start *parked* (no decode state): the next
+                    // sweep's budget-aware admission gate activates them —
+                    // possibly by forking a cached prompt prefix — once
+                    // the arena has headroom.
                     sessions.push(Session::new(
                         g.tokens,
                         g.max_new,
                         g.submitted,
                         g.reply,
-                        Some(state),
+                        None,
                         g.cancel,
                     ));
                 }
@@ -589,165 +629,421 @@ fn emit_token(
     }
 }
 
-/// Continuous-batching sweep on the native backend, fused across sessions:
-///
-/// 1. Cancelled sessions (dropped streams) retire before any compute.
-/// 2. The rest partition into a *prefill wave* — bounded per session by
-///    `PREFILL_CHUNK` and globally by `prefill_budget`, so a burst of long
-///    prompts cannot starve decode cadence — and a *decode wave*.
-/// 3. The prefill wave runs through [`NativeDecodeModel::prefill_batch`]
-///    (across-session pool-parallel; sessions whose prompt completes emit
-///    their first token from the final prefill logits); the decode wave
-///    runs through one fused [`NativeDecodeModel::step_batch`] kernel call
-///    instead of N serial `step_token` calls.
-/// 4. Per-session arithmetic is identical to serial stepping, so fused and
-///    serial sweeps produce identical token streams (the fused-sweep
-///    equivalence gate in `rust/tests/fused_sweep.rs`).
-fn native_decode_sweep(
-    model: &NativeDecodeModel,
-    sessions: &mut Vec<Session>,
-    metrics: &Arc<Mutex<Metrics>>,
-    depth: &Arc<AtomicUsize>,
-    scratch: &mut StepScratch,
-    pool: &Pool,
-    prefill_budget: usize,
-) {
-    let sweep_t0 = Instant::now();
-    let mut emitted = 0u64;
-    let mut dropped = 0u64;
+/// Tokens a session must ingest via prefill before it joins the decode
+/// wave: the full prompt on its first pass (the final position's logits
+/// emit the first generated token), or — after a budget preemption —
+/// everything but its latest token, which the decode wave then re-feeds
+/// to continue the stream exactly where it left off. Decode == prefill
+/// bit-equivalence makes the replay invisible to the client.
+fn prefill_target(s: &Session) -> usize {
+    if s.generated == 0 {
+        s.prompt_len
+    } else {
+        s.tokens.len() - 1
+    }
+}
 
-    retire_cancelled(sessions, depth);
-    if sessions.is_empty() {
-        return;
+/// Native-backend serving state: the kernel-backed token model plus the
+/// paged decode-state memory policy layered above it — the prompt-prefix
+/// cache, the `--kv-mem-budget` admission gate, and LRU preemption of
+/// live sessions back to the parked queue.
+pub struct NativeServing {
+    model: NativeDecodeModel,
+    prefix: PrefixCache,
+    /// Arena byte budget across every live decode state (0 = unlimited).
+    budget: usize,
+    /// Monotonic sweep counter; stamps [`Session::last_step`] so the
+    /// budget preemption can evict the least-recently-stepped session.
+    sweep_no: u64,
+}
+
+impl NativeServing {
+    pub fn new(model: NativeDecodeModel, budget: usize) -> NativeServing {
+        let prefix = PrefixCache::new(model.page_tokens(), PREFIX_CACHE_CAP);
+        NativeServing { model, prefix, budget, sweep_no: 0 }
     }
 
-    // Partition into the budgeted prefill wave and the fused decode wave.
-    // Indices stay valid for the whole sweep: retirement happens at the end.
-    let mut prefill: Vec<(usize, usize)> = Vec::new(); // (session idx, tokens)
-    let mut decode: Vec<usize> = Vec::new();
-    let mut remaining = if prefill_budget == 0 { usize::MAX } else { prefill_budget };
-    for (idx, s) in sessions.iter().enumerate() {
-        if s.fed < s.prompt_len {
-            let take = (s.prompt_len - s.fed).min(PREFILL_CHUNK).min(remaining);
-            if take > 0 {
-                remaining -= take;
-                prefill.push((idx, take));
-            }
-            // take == 0: budget exhausted — the session waits its turn
-            // (arrival order keeps the wave fair across sweeps).
-        } else {
-            decode.push(idx);
-        }
+    pub fn model(&self) -> &NativeDecodeModel {
+        &self.model
     }
 
-    let mut retire_done: Vec<usize> = Vec::new();
-    let mut retire_silent: Vec<usize> = Vec::new();
-    let max_context = model.max_context();
+    pub fn prefix_cache(&self) -> &PrefixCache {
+        &self.prefix
+    }
 
-    // Prefill wave: move each state out, run the batched prefill, put the
-    // states back and stream first tokens for completed prompts.
-    if !prefill.is_empty() {
-        let mut staged: Vec<(usize, usize, Box<dyn DecodeState>)> =
-            Vec::with_capacity(prefill.len());
-        for &(idx, take) in &prefill {
-            let st = sessions[idx].state.take().expect("native session carries decode state");
-            staged.push((idx, take, st));
+    /// Test / benchmark harness: build one parked session per prompt,
+    /// sweep until every session retires, and return the per-session
+    /// token streams (asserting every stream ends in `Done`). Callers
+    /// read eviction / arena counters from `metrics` and
+    /// `self.model().arena().stats()` afterwards. Shared by the
+    /// paged-state equivalence gate and `exp mem`.
+    pub fn drive_to_completion(
+        &mut self,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+        metrics: &Arc<Mutex<Metrics>>,
+        pool: &Pool,
+    ) -> Vec<Vec<i32>> {
+        let depth = Arc::new(AtomicUsize::new(prompts.len()));
+        let mut rxs = Vec::new();
+        let mut sessions: Vec<Session> = Vec::new();
+        for p in prompts {
+            let (tx, rx) = mpsc::channel();
+            rxs.push(rx);
+            sessions.push(Session::new(
+                p.clone(),
+                max_new,
+                Instant::now(),
+                tx,
+                None,
+                Arc::new(AtomicBool::new(false)),
+            ));
         }
-        {
-            let mut items: Vec<PrefillStep> = staged
-                .iter_mut()
-                .map(|(idx, take, st)| {
-                    let s = &sessions[*idx];
-                    PrefillStep {
-                        state: st.as_mut(),
-                        tokens: &s.tokens[s.fed..s.fed + *take],
-                        emit: s.fed + *take == s.prompt_len,
+        let mut scratch = StepScratch::default();
+        let mut sweeps = 0u32;
+        while !sessions.is_empty() {
+            self.sweep(&mut sessions, metrics, &depth, &mut scratch, pool, 0);
+            sweeps += 1;
+            assert!(sweeps < 1_000_000, "session drive did not converge");
+        }
+        rxs.into_iter()
+            .map(|rx| {
+                let mut toks = Vec::new();
+                let mut done = false;
+                while let Ok(ev) = rx.try_recv() {
+                    match ev.expect("no stream errors expected") {
+                        StreamEvent::Token { token, .. } => toks.push(token),
+                        StreamEvent::Done { .. } => done = true,
                     }
-                })
-                .collect();
-            model.prefill_batch(&mut items, scratch, pool);
+                }
+                assert!(done, "stream must end with Done");
+                toks
+            })
+            .collect()
+    }
+
+    /// While the arena's live bytes exceed the budget: shed prompt-prefix
+    /// cache entries first (pure accelerators — dropping one can never
+    /// change a stream), then preempt the least-recently-stepped *active*
+    /// session: release its pages and park it. `activate` re-admits it
+    /// when headroom returns and its re-prefill replays the exact context
+    /// (identical tokens — the preemption gate in
+    /// `rust/tests/paged_state.rs` pins this). At least one session stays
+    /// active so the scheduler always makes progress, even when a single
+    /// context alone exceeds the budget.
+    fn enforce_budget(&mut self, sessions: &mut [Session], metrics: &Arc<Mutex<Metrics>>) {
+        if self.budget == 0 {
+            return;
         }
-        for ((idx, take, st), tok) in staged.into_iter().zip(scratch.next.iter().copied()) {
-            let s = &mut sessions[idx];
-            s.state = Some(st);
-            s.fed += take;
-            if s.fed < s.prompt_len {
-                continue; // still prefilling next sweep
+        // Cache shedding stops the moment an eviction frees nothing: such
+        // an entry's pages are pinned by live sessions (fork-shared), and
+        // shedding more of them would wipe the hot cache without
+        // reclaiming a byte — preemption is what actually frees pages.
+        let mut shed_cache = true;
+        while self.model.arena().stats().live_bytes > self.budget {
+            if shed_cache {
+                let before = self.model.arena().stats().live_bytes;
+                if self.prefix.evict_lru() {
+                    if self.model.arena().stats().live_bytes < before {
+                        continue;
+                    }
+                    shed_cache = false;
+                } else {
+                    shed_cache = false;
+                }
             }
-            emit_token(
-                s,
-                idx,
-                tok,
-                max_context,
-                &mut emitted,
-                &mut dropped,
-                &mut retire_done,
-                &mut retire_silent,
-            );
-        }
-    }
-
-    // Fused decode wave: one pool-parallel kernel call across all ready
-    // sessions (each feeds its last emitted token).
-    if !decode.is_empty() {
-        let mut staged: Vec<(usize, Box<dyn DecodeState>)> = Vec::with_capacity(decode.len());
-        for &idx in &decode {
-            let st = sessions[idx].state.take().expect("native session carries decode state");
-            staged.push((idx, st));
-        }
-        {
-            let mut items: Vec<SessionStep> = staged
-                .iter_mut()
-                .map(|(idx, st)| SessionStep {
-                    state: st.as_mut(),
-                    tok: *sessions[*idx].tokens.last().expect("prompt is non-empty"),
-                })
-                .collect();
-            model.step_batch(&mut items, scratch, pool);
-        }
-        for ((idx, st), tok) in staged.into_iter().zip(scratch.next.iter().copied()) {
+            let mut victim: Option<(u64, usize)> = None;
+            let mut actives = 0usize;
+            for (i, s) in sessions.iter().enumerate() {
+                if s.state.is_none() {
+                    continue;
+                }
+                actives += 1;
+                match victim {
+                    Some((ls, _)) if ls <= s.last_step => {}
+                    _ => victim = Some((s.last_step, i)),
+                }
+            }
+            let Some((_, idx)) = victim else { return };
+            if actives <= 1 {
+                return;
+            }
             let s = &mut sessions[idx];
-            s.state = Some(st);
-            s.fed += 1;
-            emit_token(
-                s,
-                idx,
-                tok,
-                max_context,
-                &mut emitted,
-                &mut dropped,
-                &mut retire_done,
-                &mut retire_silent,
-            );
+            if let Some(mut st) = s.state.take() {
+                st.release();
+            }
+            s.fed = 0;
+            metrics.lock().unwrap().evictions += 1;
         }
     }
 
-    // Retire in descending index order so removal never disturbs a
-    // still-pending index; ordered `remove` keeps the survivors in arrival
-    // order, which is what makes the prefill budget's "wait your turn"
-    // fairness real across sweeps.
-    let mut retire: Vec<(usize, bool)> = retire_done
-        .into_iter()
-        .map(|i| (i, true))
-        .chain(retire_silent.into_iter().map(|i| (i, false)))
-        .collect();
-    retire.sort_unstable_by_key(|r| std::cmp::Reverse(r.0));
-    for (idx, done) in retire {
-        let s = sessions.remove(idx);
-        depth.fetch_sub(1, Ordering::Relaxed);
-        if !done {
-            continue;
+    /// Budget-aware admission: hand parked sessions (fresh arrivals and
+    /// preempted ones) a decode state when the arena has headroom,
+    /// strictly in table (arrival) order — when the oldest parked session
+    /// does not fit, admission *stops* rather than skipping ahead, so a
+    /// stream of small late arrivals can never starve a large session at
+    /// the head of the queue. When nothing is active the oldest parked
+    /// session activates unconditionally so the scheduler always makes
+    /// progress. Activation consults the prompt-prefix cache — a hit
+    /// forks the cached state (shared pages, shared Z-order runs) and the
+    /// session skips prefill for the whole shared prefix.
+    fn activate(&mut self, sessions: &mut [Session]) {
+        let mut any_active = sessions.iter().any(|s| s.state.is_some());
+        for s in sessions.iter_mut() {
+            if s.state.is_some() {
+                continue;
+            }
+            if self.budget > 0 && any_active {
+                let live = self.model.arena().stats().live_bytes;
+                let need = self.model.estimate_state_bytes(s.tokens.len());
+                if live + need > self.budget {
+                    break; // FIFO: nothing younger may jump this session
+                }
+            }
+            let limit = prefill_target(s).min(s.tokens.len().saturating_sub(1));
+            match self.prefix.lookup(&s.tokens[..limit]) {
+                Some((l, st)) => {
+                    debug_assert_eq!(st.pos(), l);
+                    s.state = Some(st);
+                    s.fed = l;
+                    s.prefix_cached =
+                        s.generated > 0 || l >= self.prefix.cacheable_len(s.prompt_len);
+                }
+                None => {
+                    s.state = Some(self.model.begin());
+                    s.fed = 0;
+                }
+            }
+            s.last_step = self.sweep_no;
+            any_active = true;
         }
-        let latency = s.submitted.elapsed();
-        let mut m = metrics.lock().unwrap();
-        m.record(latency);
-        drop(m);
-        let _ = s
-            .reply
-            .send(Ok(StreamEvent::Done { generated: s.generated, latency }));
     }
-    if emitted > 0 || dropped > 0 {
-        metrics.lock().unwrap().record_tokens(emitted, dropped, sweep_t0);
+
+    /// Refresh the serving-memory gauges: aggregate per-session
+    /// `state_bytes` (plus the prefix cache's share) and the arena's
+    /// live / high-water counters.
+    fn publish_memory_metrics(&self, sessions: &[Session], metrics: &Arc<Mutex<Metrics>>) {
+        let stats = self.model.arena().stats();
+        let mut m = metrics.lock().unwrap();
+        m.kv_state_bytes = sessions
+            .iter()
+            .filter_map(|s| s.state.as_ref())
+            .map(|st| st.state_bytes())
+            .sum::<usize>()
+            + self.prefix.state_bytes();
+        m.arena_live_bytes = stats.live_bytes;
+        m.arena_high_water_bytes = stats.high_water_bytes;
+        m.prefix_hits = self.prefix.hits;
+    }
+
+    /// Continuous-batching sweep on the native backend, fused across
+    /// sessions:
+    ///
+    /// 1. Cancelled sessions (dropped streams) retire before any compute.
+    /// 2. Memory policy runs: over-budget pages are reclaimed
+    ///    (prefix-cache shedding, then LRU session preemption), and parked
+    ///    sessions are activated while the budget has headroom — via a
+    ///    prompt-prefix-cache fork when their prompt head is cached.
+    /// 3. The active sessions partition into a *prefill wave* — bounded
+    ///    per session by `PREFILL_CHUNK` and globally by `prefill_budget`,
+    ///    so a burst of long prompts cannot starve decode cadence — and a
+    ///    *decode wave*.
+    /// 4. The prefill wave runs through
+    ///    [`NativeDecodeModel::prefill_batch`] (across-session
+    ///    pool-parallel; sessions whose prompt completes emit their first
+    ///    token from the final prefill logits, and page-aligned prompt
+    ///    prefixes are snapshotted into the prefix cache); the decode wave
+    ///    runs through one fused [`NativeDecodeModel::step_batch`] kernel
+    ///    call instead of N serial `step_token` calls.
+    /// 5. Per-session arithmetic is identical to serial stepping, so fused
+    ///    and serial sweeps produce identical token streams (the
+    ///    fused-sweep equivalence gate in `rust/tests/fused_sweep.rs`).
+    pub fn sweep(
+        &mut self,
+        sessions: &mut Vec<Session>,
+        metrics: &Arc<Mutex<Metrics>>,
+        depth: &Arc<AtomicUsize>,
+        scratch: &mut StepScratch,
+        pool: &Pool,
+        prefill_budget: usize,
+    ) {
+        let sweep_t0 = Instant::now();
+        self.sweep_no += 1;
+        let mut emitted = 0u64;
+        let mut dropped = 0u64;
+
+        retire_cancelled(sessions, depth);
+        if sessions.is_empty() {
+            self.publish_memory_metrics(sessions, metrics);
+            return;
+        }
+
+        self.enforce_budget(sessions, metrics);
+        self.activate(sessions);
+
+        // Partition the active sessions into the budgeted prefill wave and
+        // the fused decode wave. Indices stay valid for the whole sweep:
+        // retirement happens at the end.
+        let mut prefill: Vec<(usize, usize)> = Vec::new(); // (session idx, tokens)
+        let mut decode: Vec<usize> = Vec::new();
+        let mut remaining = if prefill_budget == 0 { usize::MAX } else { prefill_budget };
+        for (idx, s) in sessions.iter().enumerate() {
+            if s.state.is_none() {
+                continue; // parked under the memory budget
+            }
+            let target = prefill_target(s);
+            if s.fed < target {
+                let mut cap = target - s.fed;
+                if s.generated == 0 && !s.prefix_cached {
+                    // Stop exactly at the page-aligned cache boundary so
+                    // the completed prefix can be snapshotted.
+                    let cl = self.prefix.cacheable_len(s.prompt_len);
+                    if s.fed < cl {
+                        cap = cap.min(cl - s.fed);
+                    }
+                }
+                let take = cap.min(PREFILL_CHUNK).min(remaining);
+                if take > 0 {
+                    remaining -= take;
+                    prefill.push((idx, take));
+                }
+                // take == 0: budget exhausted — the session waits its turn
+                // (arrival order keeps the wave fair across sweeps).
+            } else {
+                decode.push(idx);
+            }
+        }
+
+        let mut retire_done: Vec<usize> = Vec::new();
+        let mut retire_silent: Vec<usize> = Vec::new();
+        let max_context = self.model.max_context();
+
+        // Prefill wave: move each state out, run the batched prefill, put
+        // the states back and stream first tokens for completed prompts.
+        if !prefill.is_empty() {
+            let mut staged: Vec<(usize, usize, Box<dyn DecodeState>)> =
+                Vec::with_capacity(prefill.len());
+            for &(idx, take) in &prefill {
+                let st =
+                    sessions[idx].state.take().expect("active session carries decode state");
+                staged.push((idx, take, st));
+            }
+            {
+                let mut items: Vec<PrefillStep> = staged
+                    .iter_mut()
+                    .map(|(idx, take, st)| {
+                        let s = &sessions[*idx];
+                        PrefillStep {
+                            state: st.as_mut(),
+                            tokens: &s.tokens[s.fed..s.fed + *take],
+                            // Resumed (preempted) sessions never re-emit:
+                            // their replayed positions already streamed.
+                            emit: s.generated == 0 && s.fed + *take == s.prompt_len,
+                        }
+                    })
+                    .collect();
+                self.model.prefill_batch(&mut items, scratch, pool);
+            }
+            for ((idx, take, st), tok) in staged.into_iter().zip(scratch.next.iter().copied()) {
+                let s = &mut sessions[idx];
+                s.state = Some(st);
+                s.fed += take;
+                s.last_step = self.sweep_no;
+                if s.generated == 0 && !s.prefix_cached {
+                    let cl = self.prefix.cacheable_len(s.prompt_len);
+                    if cl > 0 && s.fed == cl {
+                        let snap = s.state.as_ref().expect("state put back above").fork();
+                        self.prefix.insert(&s.tokens[..cl], snap);
+                        s.prefix_cached = true;
+                    } else if s.fed > cl {
+                        s.prefix_cached = true; // crossed past the boundary
+                    }
+                }
+                if s.fed < prefill_target(s) {
+                    continue; // still prefilling next sweep
+                }
+                if s.generated > 0 {
+                    continue; // resumed: the decode wave re-feeds the tail
+                }
+                emit_token(
+                    s,
+                    idx,
+                    tok,
+                    max_context,
+                    &mut emitted,
+                    &mut dropped,
+                    &mut retire_done,
+                    &mut retire_silent,
+                );
+            }
+        }
+
+        // Fused decode wave: one pool-parallel kernel call across all
+        // ready sessions (each feeds its last emitted token).
+        if !decode.is_empty() {
+            let mut staged: Vec<(usize, Box<dyn DecodeState>)> =
+                Vec::with_capacity(decode.len());
+            for &idx in &decode {
+                let st =
+                    sessions[idx].state.take().expect("active session carries decode state");
+                staged.push((idx, st));
+            }
+            {
+                let mut items: Vec<SessionStep> = staged
+                    .iter_mut()
+                    .map(|(idx, st)| SessionStep {
+                        state: st.as_mut(),
+                        tok: *sessions[*idx].tokens.last().expect("prompt is non-empty"),
+                    })
+                    .collect();
+                self.model.step_batch(&mut items, scratch, pool);
+            }
+            for ((idx, st), tok) in staged.into_iter().zip(scratch.next.iter().copied()) {
+                let s = &mut sessions[idx];
+                s.state = Some(st);
+                s.fed += 1;
+                s.last_step = self.sweep_no;
+                emit_token(
+                    s,
+                    idx,
+                    tok,
+                    max_context,
+                    &mut emitted,
+                    &mut dropped,
+                    &mut retire_done,
+                    &mut retire_silent,
+                );
+            }
+        }
+
+        // Retire in descending index order so removal never disturbs a
+        // still-pending index; ordered `remove` keeps the survivors in
+        // arrival order, which is what makes the prefill budget's "wait
+        // your turn" fairness real across sweeps.
+        let mut retire: Vec<(usize, bool)> = retire_done
+            .into_iter()
+            .map(|i| (i, true))
+            .chain(retire_silent.into_iter().map(|i| (i, false)))
+            .collect();
+        retire.sort_unstable_by_key(|r| std::cmp::Reverse(r.0));
+        for (idx, done) in retire {
+            let s = sessions.remove(idx);
+            depth.fetch_sub(1, Ordering::Relaxed);
+            if !done {
+                continue;
+            }
+            let latency = s.submitted.elapsed();
+            let mut m = metrics.lock().unwrap();
+            m.record(latency);
+            drop(m);
+            let _ = s
+                .reply
+                .send(Ok(StreamEvent::Done { generated: s.generated, latency }));
+        }
+        if emitted > 0 || dropped > 0 {
+            metrics.lock().unwrap().record_tokens(emitted, dropped, sweep_t0);
+        }
+        self.publish_memory_metrics(sessions, metrics);
     }
 }
 
@@ -1138,9 +1434,10 @@ mod tests {
             Some(model.begin()),
             cancel,
         )];
+        let mut serving = NativeServing::new(model, 0);
         let mut scratch = StepScratch::default();
         let pool = Pool::serial();
-        native_decode_sweep(&model, &mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
+        serving.sweep(&mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
         assert!(sessions.is_empty(), "send-failed session must retire");
         assert_eq!(depth.load(Ordering::Relaxed), 0);
         let m = metrics.lock().unwrap();
@@ -1167,9 +1464,10 @@ mod tests {
             Some(model.begin()),
             cancel,
         )];
+        let mut serving = NativeServing::new(model, 0);
         let mut scratch = StepScratch::default();
         let pool = Pool::serial();
-        native_decode_sweep(&model, &mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
+        serving.sweep(&mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
         assert!(sessions.is_empty(), "cancelled session must retire immediately");
         assert_eq!(depth.load(Ordering::Relaxed), 0);
         let m = metrics.lock().unwrap();
@@ -1200,15 +1498,19 @@ mod tests {
                 Arc::new(AtomicBool::new(false)),
             ));
         }
+        let mut serving = NativeServing::new(model, 0);
         let mut scratch = StepScratch::default();
         let pool = Pool::serial();
-        native_decode_sweep(&model, &mut sessions, &metrics, &depth, &mut scratch, &pool, 40);
+        serving.sweep(&mut sessions, &metrics, &depth, &mut scratch, &pool, 40);
         let fed: Vec<usize> = sessions.iter().map(|s| s.fed).collect();
         assert_eq!(fed, vec![32, 8, 0]);
         // Unlimited budget (0): every session advances a full chunk.
-        native_decode_sweep(&model, &mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
+        serving.sweep(&mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
         let fed: Vec<usize> = sessions.iter().map(|s| s.fed).collect();
         assert_eq!(fed, vec![64, 40, 32]);
+        // The first session crossed the 64-token page boundary: its
+        // page-aligned prompt prefix is now snapshotted in the cache.
+        assert_eq!(serving.prefix_cache().len(), 1);
     }
 
     #[test]
@@ -1225,6 +1527,48 @@ mod tests {
         // a prompt already at the cap is rejected up front
         let err = c.generate(vec![7; 12], 4).unwrap().collect_tokens().unwrap_err().to_string();
         assert!(err.contains("context cap"), "{err}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn kv_mem_budget_below_one_page_is_rejected_with_clear_error() {
+        // Satellite fix: a budget smaller than one KV page could admit a
+        // session that can never allocate — reject it at startup instead.
+        let mut cfg = native_cfg("zeta");
+        cfg.kv_mem_budget = 100; // default page: 64 tokens x 16 floats x 4 B = 4096 B
+        let err = Server::start(cfg, None).unwrap_err().to_string();
+        assert!(err.contains("kv-mem-budget"), "{err}");
+        assert!(err.contains("one KV page"), "{err}");
+        // Exactly one page is the smallest accepted budget.
+        let mut cfg = native_cfg("zeta");
+        cfg.kv_mem_budget = 64 * 16 * 4;
+        let srv = Server::start(cfg, None).unwrap();
+        srv.shutdown();
+        // kv_page = 0 is rejected regardless of budget.
+        let mut cfg = native_cfg("zeta");
+        if let Some(n) = cfg.native.as_mut() {
+            n.kv_page = 0;
+        }
+        let err = Server::start(cfg, None).unwrap_err().to_string();
+        assert!(err.contains("kv-page"), "{err}");
+    }
+
+    #[test]
+    fn identical_prompts_hit_the_prefix_cache_with_identical_streams() {
+        // Two sessions sharing a >= 1-page prompt: the second must fork
+        // the cached prefix (prefix_hits > 0) and still stream exactly
+        // the same tokens as the first (fork == fresh prefill).
+        let srv = Server::start(native_cfg("zeta"), None).unwrap();
+        let c = srv.client();
+        let prompt: Vec<i32> = (0..100).map(|i| (i * 13 + 5) % 31).collect();
+        let a = c.generate(prompt.clone(), 8).unwrap().collect_tokens().unwrap();
+        let b = c.generate(prompt.clone(), 8).unwrap().collect_tokens().unwrap();
+        assert_eq!(a, b);
+        let m = srv.metrics.lock().unwrap();
+        assert!(m.prefix_hits >= 1, "second session should hit the prefix cache");
+        assert!(m.arena_high_water_bytes > 0);
+        assert!(m.summary().contains("prefix_hits"), "{}", m.summary());
+        drop(m);
         srv.shutdown();
     }
 

@@ -16,15 +16,16 @@
 //! equivalence gate. (The PJRT backend serves `generate` by full-recompute
 //! forward batches instead; see `coordinator::engine_decode_sweep`.)
 
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::attention::{flash::Flash, mamba::MambaLite, naive::Naive, zeta::ZetaNative};
-use crate::attention::{AttentionImpl, DecodeState, DecodeStep, Workload};
+use crate::attention::{kernel_by_name, AttentionImpl, DecodeState, DecodeStep, Workload};
 use crate::tensor::{dot, Tensor};
+use crate::util::arena::{PageArena, DEFAULT_PAGE_TOKENS};
 use crate::util::breakeven::{fan_out, PARALLEL_PREFILL_MIN_OPS, PARALLEL_READOUT_MIN_OPS};
 use crate::util::pool::{Pool, SharedSlice};
 use crate::util::rng::Rng;
@@ -48,6 +49,11 @@ pub struct NativeModelConfig {
     /// `seq_len` bound, keeping per-request KV caches / Z-indices from
     /// growing without limit. 0 disables the cap.
     pub max_context: usize,
+    /// Tokens per KV page (`--kv-page`): the granularity of the server's
+    /// page arena — every decode state's caches grow, fork and release in
+    /// pages of this many rows, and the prompt-prefix cache snapshots at
+    /// whole-page boundaries. Must be >= 1.
+    pub kv_page: usize,
 }
 
 impl Default for NativeModelConfig {
@@ -59,6 +65,7 @@ impl Default for NativeModelConfig {
             vocab: 32,
             seed: 0,
             max_context: 4096,
+            kv_page: DEFAULT_PAGE_TOKENS,
         }
     }
 }
@@ -73,6 +80,10 @@ pub struct NativeDecodeModel {
     // closures (all four kernels are plain-data structs).
     imp: Box<dyn AttentionImpl + Send + Sync>,
     cfg: NativeModelConfig,
+    /// Page arena every session's decode state allocates from — one arena
+    /// per server, so `--kv-page` granularity and the `--kv-mem-budget`
+    /// byte accounting are isolated per server instance.
+    arena: Arc<PageArena>,
     qe: Vec<f32>, // (vocab, d)
     ke: Vec<f32>, // (vocab, d)
     ve: Vec<f32>, // (vocab, dv)
@@ -84,15 +95,13 @@ impl NativeDecodeModel {
         if cfg.vocab == 0 || cfg.d == 0 || cfg.dv == 0 {
             bail!("native model dims must be non-zero");
         }
-        let imp: Box<dyn AttentionImpl + Send + Sync> = match cfg.kernel.as_str() {
-            "naive" => Box::new(Naive),
-            "flash" => Box::new(Flash { block: 64 }),
-            // chunk 16: fine-grained causal limits so short serving prompts
-            // already exercise the windowed search.
-            "zeta" => Box::new(ZetaNative { chunk: 16, ..ZetaNative::default() }),
-            "mamba" => Box::new(MambaLite::default()),
-            other => bail!("unknown native kernel {other:?} (want zeta|naive|flash|mamba)"),
-        };
+        if cfg.kv_page == 0 {
+            bail!("--kv-page must be at least 1 token per page");
+        }
+        let imp = kernel_by_name(&cfg.kernel).ok_or_else(|| {
+            anyhow::anyhow!("unknown native kernel {:?} (want zeta|naive|flash|mamba)", cfg.kernel)
+        })?;
+        let arena = PageArena::new(cfg.kv_page);
         let mut rng = Rng::new(cfg.seed ^ 0x5E55_1015);
         let mut qe = vec![0f32; cfg.vocab * cfg.d];
         let mut ke = vec![0f32; cfg.vocab * cfg.d];
@@ -102,7 +111,7 @@ impl NativeDecodeModel {
         rng.fill_normal(&mut ke, 1.0);
         rng.fill_normal(&mut ve, 1.0);
         rng.fill_normal(&mut ro, 1.0);
-        Ok(NativeDecodeModel { imp, cfg, qe, ke, ve, ro })
+        Ok(NativeDecodeModel { imp, cfg, arena, qe, ke, ve, ro })
     }
 
     pub fn vocab(&self) -> usize {
@@ -118,9 +127,32 @@ impl NativeDecodeModel {
         self.imp.name()
     }
 
-    /// Fresh per-request decode state (the kernel-level KV cache).
+    /// The server's page arena (budget accounting, telemetry).
+    pub fn arena(&self) -> &Arc<PageArena> {
+        &self.arena
+    }
+
+    /// Tokens per KV page.
+    pub fn page_tokens(&self) -> usize {
+        self.arena.page_tokens()
+    }
+
+    /// Upper-ish bound on the arena bytes a session holding `tokens` of
+    /// context needs: one `(d + dv)`-float row per token rounded up to
+    /// whole pages, plus one page of slack for code/index storage. The
+    /// budget admission gate compares this against the arena's live
+    /// bytes; over-estimating only delays admission (never corrupts it),
+    /// and the preemption path reclaims any overshoot.
+    pub fn estimate_state_bytes(&self, tokens: usize) -> usize {
+        let page = self.arena.page_tokens();
+        let pages = tokens.div_ceil(page) + 1;
+        pages * page * (self.cfg.d + self.cfg.dv) * 4
+    }
+
+    /// Fresh per-request decode state (the kernel-level KV cache) on the
+    /// server's page arena.
     pub fn begin(&self) -> Box<dyn DecodeState> {
-        self.imp.begin_decode(self.cfg.d, self.cfg.dv)
+        self.imp.begin_decode_in(self.cfg.d, self.cfg.dv, &self.arena)
     }
 
     fn embed_rows(&self, tok: i32) -> (&[f32], &[f32], &[f32]) {
@@ -418,8 +450,10 @@ impl GenStream {
 
 /// One in-flight generation request on the scheduler thread.
 pub struct Session {
-    /// Kernel decode state (native backend); `None` on the PJRT backend,
-    /// which recomputes from `tokens` every step.
+    /// Kernel decode state (native backend). `None` on the PJRT backend
+    /// (which recomputes from `tokens` every step) — and on the native
+    /// backend while the session is *parked*: newly admitted or preempted
+    /// under memory pressure, waiting for the budget gate to activate it.
     pub state: Option<Box<dyn DecodeState>>,
     /// Prompt followed by the tokens generated so far.
     pub tokens: Vec<i32>,
@@ -430,6 +464,12 @@ pub struct Session {
     pub max_new: usize,
     pub submitted: Instant,
     pub reply: mpsc::Sender<Result<StreamEvent>>,
+    /// Sweep counter value when this session last advanced — the LRU
+    /// ordering the budget preemption evicts by.
+    pub last_step: u64,
+    /// Whether this session's page-aligned prompt prefix has already been
+    /// offered to the prompt-prefix cache (insert once per session).
+    pub prefix_cached: bool,
     /// Set when the client dropped its [`GenStream`] — checked every sweep
     /// so cancelled sessions retire before consuming any further compute,
     /// including mid-prefill.
@@ -455,6 +495,8 @@ impl Session {
             max_new,
             submitted,
             reply,
+            last_step: 0,
+            prefix_cached: false,
             cancel,
         }
     }
@@ -462,6 +504,141 @@ impl Session {
     /// Whether the client hung up (dropped its stream handle).
     pub fn cancelled(&self) -> bool {
         self.cancel.load(Ordering::Relaxed)
+    }
+}
+
+/// Prompt-prefix cache: decode states snapshotted at whole-page prompt
+/// boundaries, keyed by the exact token prefix they ingested. Identical
+/// prompt heads (system prompts, few-shot headers) then cost one
+/// [`DecodeState::fork`] — shared full pages and shared Z-order runs, one
+/// tail-page copy — instead of a re-prefill of the whole prefix. Forked
+/// continuations are bit-identical to fresh prefills (the paged-state
+/// gate), so a cache hit can never change a token stream.
+///
+/// Entries hold real arena pages, so the cache counts toward the
+/// `--kv-mem-budget`; the coordinator sheds LRU entries *before*
+/// preempting live sessions when the budget tightens.
+pub struct PrefixCache {
+    /// Tokens per page — prefixes are cached at multiples of this.
+    page: usize,
+    /// Maximum entries; beyond it the least-recently-used entry is shed.
+    cap: usize,
+    entries: HashMap<Vec<i32>, PrefixEntry>,
+    /// Entry count per prefix length: lookups hash-probe only lengths that
+    /// actually exist, so a miss costs O(distinct lengths) probes instead
+    /// of one O(prompt)-hash per page step down from the full length.
+    lens: BTreeMap<usize, usize>,
+    tick: u64,
+    /// Lookups that found (and forked) a cached prefix.
+    pub hits: u64,
+    /// Total lookups.
+    pub lookups: u64,
+}
+
+struct PrefixEntry {
+    state: Box<dyn DecodeState>,
+    last_used: u64,
+}
+
+impl PrefixCache {
+    pub fn new(page: usize, cap: usize) -> PrefixCache {
+        PrefixCache {
+            page: page.max(1),
+            cap,
+            entries: HashMap::new(),
+            lens: BTreeMap::new(),
+            tick: 0,
+            hits: 0,
+            lookups: 0,
+        }
+    }
+
+    /// The longest cacheable prefix of a `prompt_len`-token prompt: whole
+    /// pages only, and strictly shorter than the prompt — the final
+    /// prompt position must be fed by a live prefill step, because its
+    /// logits produce the session's first generated token.
+    pub fn cacheable_len(&self, prompt_len: usize) -> usize {
+        (prompt_len.saturating_sub(1) / self.page) * self.page
+    }
+
+    /// Fork the state of the longest cached whole-page prefix of
+    /// `tokens`, longest first. Returns `(prefix_len, forked_state)`; the
+    /// session resumes prefill at `prefix_len`.
+    pub fn lookup(&mut self, tokens: &[i32]) -> Option<(usize, Box<dyn DecodeState>)> {
+        self.lookups += 1;
+        self.tick += 1;
+        let max_l = (tokens.len() / self.page) * self.page;
+        if max_l < self.page {
+            return None;
+        }
+        let candidates: Vec<usize> = self.lens.range(..=max_l).rev().map(|(&l, _)| l).collect();
+        for l in candidates {
+            if let Some(e) = self.entries.get_mut(&tokens[..l]) {
+                e.last_used = self.tick;
+                self.hits += 1;
+                return Some((l, e.state.fork()));
+            }
+        }
+        None
+    }
+
+    /// Insert a state snapshot for the exact page-aligned prefix it
+    /// ingested (`state.pos() == prefix.len()`), shedding the LRU entry at
+    /// capacity. Re-inserting an existing prefix refreshes it.
+    pub fn insert(&mut self, prefix: &[i32], state: Box<dyn DecodeState>) {
+        if self.cap == 0 || prefix.is_empty() {
+            return;
+        }
+        debug_assert_eq!(state.pos(), prefix.len());
+        debug_assert_eq!(prefix.len() % self.page, 0);
+        self.tick += 1;
+        if self.entries.len() >= self.cap && !self.entries.contains_key(prefix) {
+            self.evict_lru();
+        }
+        let old = self
+            .entries
+            .insert(prefix.to_vec(), PrefixEntry { state, last_used: self.tick });
+        if old.is_none() {
+            *self.lens.entry(prefix.len()).or_insert(0) += 1;
+        }
+    }
+
+    /// Shed the least-recently-used entry (its pages return to the
+    /// arena); returns whether anything was evicted.
+    pub fn evict_lru(&mut self) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone());
+        match victim {
+            Some(k) => {
+                if let Some(mut e) = self.entries.remove(&k) {
+                    e.state.release();
+                }
+                if let Some(c) = self.lens.get_mut(&k.len()) {
+                    *c -= 1;
+                    if *c == 0 {
+                        self.lens.remove(&k.len());
+                    }
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Arena bytes referenced by the cached states (per-handle view).
+    pub fn state_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.state.state_bytes()).sum()
     }
 }
 
@@ -608,6 +785,101 @@ mod tests {
                 assert!(maxdiff < 1e-5, "{kernel} prefix {l}: {maxdiff}");
             }
         }
+    }
+
+    #[test]
+    fn cacheable_len_is_whole_pages_strictly_inside_the_prompt() {
+        let pc = PrefixCache::new(64, 8);
+        assert_eq!(pc.cacheable_len(0), 0);
+        assert_eq!(pc.cacheable_len(1), 0);
+        assert_eq!(pc.cacheable_len(64), 0); // == prompt_len not allowed
+        assert_eq!(pc.cacheable_len(65), 64);
+        assert_eq!(pc.cacheable_len(128), 64);
+        assert_eq!(pc.cacheable_len(129), 128);
+        assert_eq!(pc.cacheable_len(200), 128);
+    }
+
+    #[test]
+    fn prefix_cache_fork_continues_bit_identical_to_fresh_prefill() {
+        let model = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
+        let toks: Vec<i32> = (0..100).map(|i| (i * 7 + 3) % 32).collect();
+        let page = model.page_tokens();
+        let boundary = (toks.len() / page) * page; // 64
+        // Prefill a state to the page boundary and cache a snapshot.
+        let mut pc = PrefixCache::new(page, 4);
+        let (mut orow, mut logits) = (Vec::new(), Vec::new());
+        let mut st = model.begin();
+        for &t in &toks[..boundary] {
+            model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+        }
+        pc.insert(&toks[..boundary], st.fork());
+        assert_eq!(pc.len(), 1);
+        // A prompt sharing that prefix hits the cache...
+        let (l, mut forked) = pc.lookup(&toks[..toks.len() - 1]).expect("hit");
+        assert_eq!(l, boundary);
+        assert_eq!(pc.hits, 1);
+        // ...and continuing the fork matches a fresh full prefill bit-wise.
+        let (mut orow2, mut logits2) = (Vec::new(), Vec::new());
+        for &t in &toks[boundary..] {
+            model.step_token(forked.as_mut(), t, &mut orow2, &mut logits2);
+        }
+        let mut fresh = model.begin();
+        for &t in &toks {
+            model.step_token(fresh.as_mut(), t, &mut orow, &mut logits);
+        }
+        assert_eq!(logits2, logits);
+        // A prompt diverging before the boundary misses.
+        let mut other = toks.clone();
+        other[3] ^= 1;
+        assert!(pc.lookup(&other[..other.len() - 1]).is_none());
+        assert_eq!(pc.lookups, 2);
+        assert_eq!(pc.hits, 1);
+    }
+
+    #[test]
+    fn prefix_cache_sheds_lru_entries_at_capacity() {
+        let model = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
+        let mut pc = PrefixCache::new(4, 2);
+        let (mut orow, mut logits) = (Vec::new(), Vec::new());
+        let mut mk = |seed: i32| -> (Vec<i32>, Box<dyn DecodeState>) {
+            let toks: Vec<i32> = (0..4).map(|i| (i + seed) % 32).collect();
+            let mut st = model.begin();
+            for &t in &toks {
+                model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+            }
+            (toks, st)
+        };
+        let (t1, s1) = mk(1);
+        let (t2, s2) = mk(2);
+        let (t3, s3) = mk(3);
+        pc.insert(&t1, s1);
+        pc.insert(&t2, s2);
+        // Touch t1 so t2 becomes the LRU entry.
+        let pad1: Vec<i32> = t1.iter().copied().chain([0]).collect();
+        assert!(pc.lookup(&pad1).is_some());
+        pc.insert(&t3, s3);
+        assert_eq!(pc.len(), 2);
+        let pad2: Vec<i32> = t2.iter().copied().chain([0]).collect();
+        let pad3: Vec<i32> = t3.iter().copied().chain([0]).collect();
+        assert!(pc.lookup(&pad2).is_none(), "t2 was LRU and must be shed");
+        assert!(pc.lookup(&pad1).is_some());
+        assert!(pc.lookup(&pad3).is_some());
+        // evict_lru drains the rest.
+        assert!(pc.evict_lru());
+        assert!(pc.evict_lru());
+        assert!(!pc.evict_lru());
+        assert!(pc.is_empty());
+    }
+
+    #[test]
+    fn estimate_state_bytes_rounds_up_to_pages() {
+        let model = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
+        let page = model.page_tokens(); // 64
+        let per_page = page * (16 + 16) * 4;
+        assert_eq!(model.estimate_state_bytes(0), per_page);
+        assert_eq!(model.estimate_state_bytes(1), 2 * per_page);
+        assert_eq!(model.estimate_state_bytes(page), 2 * per_page);
+        assert_eq!(model.estimate_state_bytes(page + 1), 3 * per_page);
     }
 
     #[test]

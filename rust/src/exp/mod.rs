@@ -671,6 +671,7 @@ pub fn decode_batch(opts: &Opts) -> Result<()> {
             vocab: 1024,
             seed: opts.seed,
             max_context: 0,
+            ..Default::default()
         })?;
         for &sess in &session_counts {
             let mut rng = Rng::new(opts.seed ^ 0xBA7C4);
@@ -914,6 +915,257 @@ pub fn pool(opts: &Opts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Mem — paged decode-state memory: paging overhead, prefix-cache speedup,
+// eviction-thrash throughput
+// ---------------------------------------------------------------------------
+
+/// Pre-arena flat `Vec`-backed exact-KV decode state, kept here verbatim as
+/// the baseline the paged refactor is priced against (same arithmetic as
+/// `attention::naive::ExactKvDecode`, contiguous storage instead of pages).
+struct FlatExactKv {
+    d: usize,
+    dv: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    scores: Vec<f32>,
+    t: usize,
+}
+
+impl FlatExactKv {
+    fn new(d: usize, dv: usize) -> FlatExactKv {
+        FlatExactKv { d, dv, k: Vec::new(), v: Vec::new(), scores: Vec::new(), t: 0 }
+    }
+
+    fn step(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32], out: &mut [f32]) {
+        use crate::tensor::dot;
+        let (d, dv) = (self.d, self.dv);
+        self.k.extend_from_slice(k_t);
+        self.v.extend_from_slice(v_t);
+        let t = self.t;
+        self.t += 1;
+        let scale = 1.0 / (d as f32).sqrt();
+        self.scores.clear();
+        let mut maxv = f32::NEG_INFINITY;
+        for j in 0..=t {
+            let s = dot(q_t, &self.k[j * d..(j + 1) * d]) * scale;
+            self.scores.push(s);
+            maxv = maxv.max(s);
+        }
+        let mut z = 0.0;
+        for s in self.scores.iter_mut() {
+            *s = (*s - maxv).exp();
+            z += *s;
+        }
+        let inv = 1.0 / z;
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for j in 0..=t {
+            let a = self.scores[j] * inv;
+            let vr = &self.v[j * dv..(j + 1) * dv];
+            for (o, &vv) in out.iter_mut().zip(vr) {
+                *o += a * vv;
+            }
+        }
+    }
+}
+
+/// `exp mem`: the serving-memory benchmark behind the paged KV arena.
+/// (a) *paged vs flat* per-token decode step cost on the exact-KV state
+/// (the memory-heaviest kernel state — prices the page-indirection
+/// overhead); (b) *prefix-cache hit speedup*: forking a cached page-aligned
+/// prompt prefix vs re-prefilling the whole prompt; (c) *eviction-thrash
+/// throughput*: a session wave generating under a deliberately tight
+/// `--kv-mem-budget` (constant preemption + re-prefill) vs unlimited.
+/// Writes `results/mem.json` and the machine-readable `BENCH_mem.json`.
+pub fn mem(opts: &Opts) -> Result<()> {
+    use crate::coordinator::metrics::Metrics;
+    use crate::coordinator::{
+        NativeDecodeModel, NativeModelConfig, NativeServing, PrefixCache,
+    };
+    use std::sync::{Arc, Mutex};
+
+    let mut rec = BTreeMap::new();
+    let mut bench_rows: Vec<Json> = Vec::new();
+    let budget = Duration::from_millis(300);
+
+    // (a) Paged vs flat per-token step cost.
+    let (d, dv) = (64usize, 64usize);
+    println!("\n== Mem: paged vs flat per-token decode step cost (exact-KV state) ==");
+    println!("{:<8}{:>14}{:>14}{:>10}", "ctx", "flat µs", "paged µs", "ratio");
+    for &n in &[512usize, 2048] {
+        if n > opts.max_len {
+            continue;
+        }
+        let w = Workload::random(n, d, dv, opts.seed);
+        let tail = n - n / 4;
+        let mut out = vec![0f32; dv];
+        let mut flat = FlatExactKv::new(d, dv);
+        for t in 0..tail {
+            flat.step(w.q.row(t), w.k.row(t), w.v.row(t), &mut out);
+        }
+        let t0 = Instant::now();
+        for t in tail..n {
+            flat.step(w.q.row(t), w.k.row(t), w.v.row(t), &mut out);
+        }
+        let flat_us = t0.elapsed().as_secs_f64() * 1e6 / (n - tail) as f64;
+        bench::black_box(&out);
+        let mut st = Naive.begin_decode(d, dv);
+        for t in 0..tail {
+            st.step(w.q.row(t), w.k.row(t), w.v.row(t), &mut out);
+        }
+        let t0 = Instant::now();
+        for t in tail..n {
+            st.step(w.q.row(t), w.k.row(t), w.v.row(t), &mut out);
+        }
+        let paged_us = t0.elapsed().as_secs_f64() * 1e6 / (n - tail) as f64;
+        bench::black_box(&out);
+        let ratio = paged_us / flat_us.max(1e-9);
+        println!("{n:<8}{flat_us:>14.2}{paged_us:>14.2}{ratio:>9.2}x");
+        rec.insert(
+            format!("paged_vs_flat_ctx{n}"),
+            Json::obj(vec![
+                ("flat_us", Json::num(flat_us)),
+                ("paged_us", Json::num(paged_us)),
+            ]),
+        );
+        bench_rows.push(Json::obj(vec![
+            ("bench", Json::str("paged_vs_flat")),
+            ("ctx", Json::num(n as f64)),
+            ("flat_us_per_tok", Json::num(flat_us)),
+            ("paged_us_per_tok", Json::num(paged_us)),
+            ("paged_over_flat", Json::num(ratio)),
+        ]));
+    }
+
+    // (b) Prefix-cache hit speedup: fork the cached page-aligned prompt
+    // prefix vs re-prefilling the full prompt from scratch.
+    let model = NativeDecodeModel::new(NativeModelConfig {
+        kernel: "zeta".into(),
+        d: 64,
+        dv: 64,
+        vocab: 1024,
+        seed: opts.seed,
+        max_context: 0,
+        ..Default::default()
+    })?;
+    let page = model.page_tokens();
+    let prompt: Vec<i32> = (0..4 * page).map(|i| ((i * 31 + 7) % 1024) as i32).collect();
+    let boundary = ((prompt.len() - 1) / page) * page;
+    let (mut orow, mut logits) = (Vec::new(), Vec::new());
+    let mut base = model.begin();
+    for &t in &prompt[..boundary] {
+        model.step_token(base.as_mut(), t, &mut orow, &mut logits);
+    }
+    let mut pc = PrefixCache::new(page, 4);
+    pc.insert(&prompt[..boundary], base.fork());
+    let cold = bench::bench(budget, 4, || {
+        let mut st = model.begin();
+        for &t in &prompt {
+            model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+        }
+        bench::black_box(&logits);
+    });
+    let hit = bench::bench(budget, 4, || {
+        let (l, mut st) = pc.lookup(&prompt[..prompt.len() - 1]).expect("cached prefix");
+        for &t in &prompt[l..] {
+            model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+        }
+        bench::black_box(&logits);
+    });
+    let (cold_us, hit_us) = (cold.median_us(), hit.median_us());
+    println!(
+        "\n== Mem: prompt-prefix cache — {}-token prompt, {boundary}-token cached prefix ==",
+        prompt.len()
+    );
+    println!(
+        "cold prefill {cold_us:.1} µs  vs  fork+tail {hit_us:.1} µs  ({:.2}x speedup)",
+        cold_us / hit_us.max(1e-9)
+    );
+    rec.insert(
+        "prefix_cache".into(),
+        Json::obj(vec![("cold_us", Json::num(cold_us)), ("hit_us", Json::num(hit_us))]),
+    );
+    bench_rows.push(Json::obj(vec![
+        ("bench", Json::str("prefix_cache")),
+        ("prompt_tokens", Json::num(prompt.len() as f64)),
+        ("cached_tokens", Json::num(boundary as f64)),
+        ("cold_us", Json::num(cold_us)),
+        ("hit_us", Json::num(hit_us)),
+        ("speedup", Json::num(cold_us / hit_us.max(1e-9))),
+    ]));
+
+    // (c) Eviction-thrash throughput: a wave of sessions generating under
+    // a tight byte budget (constant LRU preemption + transparent
+    // re-prefill) vs the same wave unconstrained, through the same
+    // `NativeServing::drive_to_completion` harness the paged-state gate
+    // uses.
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|s| (0..100).map(|i| ((i * 13 + s * 29 + 7) % 31) as i32).collect())
+        .collect();
+    let drive = |kv_budget: usize| -> Result<(f64, u64, u64, usize)> {
+        let model = NativeDecodeModel::new(NativeModelConfig {
+            kernel: "naive".into(),
+            seed: opts.seed,
+            max_context: 0,
+            ..Default::default()
+        })?;
+        let mut serving = NativeServing::new(model, kv_budget);
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let t0 = Instant::now();
+        let streams = serving.drive_to_completion(&prompts, 32, &metrics, &Pool::serial());
+        let elapsed = t0.elapsed().as_secs_f64();
+        let tokens: u64 = streams.iter().map(|s| s.len() as u64).sum();
+        let (evictions, hw) = {
+            let m = metrics.lock().unwrap();
+            (m.evictions, m.arena_high_water_bytes)
+        };
+        Ok((tokens as f64 / elapsed.max(1e-9), tokens, evictions, hw))
+    };
+    // ~1.6 sessions' worth of pages: all four admit while small, then
+    // thrash as their contexts grow past the budget.
+    let tight = 26_000usize;
+    let (free_tps, free_toks, _, free_hw) = drive(0)?;
+    let (tight_tps, tight_toks, tight_ev, tight_hw) = drive(tight)?;
+    println!("\n== Mem: eviction-thrash throughput (4 sessions, naive exact-KV) ==");
+    println!(
+        "{:<14}{:>12}{:>12}{:>12}{:>14}",
+        "budget", "tok/s", "tokens", "evictions", "arena hw B"
+    );
+    println!("{:<14}{free_tps:>12.0}{free_toks:>12}{:>12}{free_hw:>14}", "unlimited", 0);
+    println!("{tight:<14}{tight_tps:>12.0}{tight_toks:>12}{tight_ev:>12}{tight_hw:>14}");
+    println!(
+        "thrash cost: {:.2}x slower under the tight budget ({tight_ev} preemptions)",
+        free_tps / tight_tps.max(1e-9)
+    );
+    rec.insert(
+        "eviction_thrash".into(),
+        Json::obj(vec![
+            ("free_toks_per_sec", Json::num(free_tps)),
+            ("tight_toks_per_sec", Json::num(tight_tps)),
+            ("evictions", Json::num(tight_ev as f64)),
+        ]),
+    );
+    bench_rows.push(Json::obj(vec![
+        ("bench", Json::str("eviction_thrash")),
+        ("budget_bytes", Json::num(tight as f64)),
+        ("free_toks_per_sec", Json::num(free_tps)),
+        ("tight_toks_per_sec", Json::num(tight_tps)),
+        ("slowdown", Json::num(free_tps / tight_tps.max(1e-9))),
+        ("evictions", Json::num(tight_ev as f64)),
+        ("free_arena_hw_bytes", Json::num(free_hw as f64)),
+        ("tight_arena_hw_bytes", Json::num(tight_hw as f64)),
+    ]));
+
+    record(opts, "mem", Json::Obj(rec))?;
+    match std::fs::write("BENCH_mem.json", Json::Arr(bench_rows).to_string()) {
+        Ok(()) => println!("wrote BENCH_mem.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_mem.json: {e}"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Table 5 — d_K ablation on ListOps / Image
 // ---------------------------------------------------------------------------
 
@@ -954,6 +1206,7 @@ pub fn all(engine: &Engine, opts: &Opts) -> Result<()> {
     table4(opts)?;
     decode(opts)?;
     pool(opts)?;
+    mem(opts)?;
     table5(engine, opts)?;
     Ok(())
 }

@@ -47,6 +47,21 @@
 //! vs full-recompute per token (`BENCH_decode.json`) and fused vs serial
 //! multi-session sweeps (`BENCH_decode_batch.json`).
 //!
+//! ## Paged decode-state memory
+//!
+//! Every decode state's O(N) storage lives on a shared arena of
+//! fixed-size, refcounted KV pages ([`util::arena::PageArena`],
+//! `--kv-page` tokens per page): [`attention::DecodeState::fork`]
+//! snapshots a stream copy-on-write (full pages and [`zorder::index::ZIndex`]
+//! sorted runs shared by refcount bump, only the tail page copied), the
+//! coordinator serves identical prompt prefixes from a page-aligned
+//! prefix cache ([`coordinator::PrefixCache`]), and `--kv-mem-budget`
+//! gates admission against the arena's live bytes with LRU preemption —
+//! evicted sessions transparently re-prefill with identical output
+//! tokens. `rust/tests/paged_state.rs` is the equivalence gate; `zeta
+//! exp mem` prices paging overhead, prefix-cache speedup and eviction
+//! thrash (`BENCH_mem.json`).
+//!
 //! Substrates implemented in-tree (offline std-only build): JSON, PRNG,
 //! property tests, bench harness, worker pool ([`util`]), Morton codec +
 //! persistent sorted index ([`zorder`]), native CPU attention kernels for

@@ -99,11 +99,12 @@ commands:
   serve  --preset P [--requests N] [--clients C] [--max-delay-ms D]
          [--generate] [--max-new N] [--native] [--native-kernel K]
          [--prefill-budget T] [--max-context N]
+         [--kv-page TOKENS] [--kv-mem-budget BYTES]
   exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--threads T]
          [--verbose]
          NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3, table1, table2,
                  table3, table4, table5, table6, decode, decode_batch,
-                 pool, all}
+                 pool, mem, all}
 
 serving:
   `serve` runs one-shot batched inference by default. With --generate each
@@ -120,6 +121,22 @@ serving:
   --native-kernel picks zeta|naive|flash|mamba, and --max-context caps
   each session's total context (prompt + generated; sessions end with an
   early Done when it fills, 0 = unlimited).
+
+serving memory (native backend):
+  All per-session decode state lives on a shared arena of fixed-size KV
+  pages. --kv-page sets the page size in tokens (default 64): caches
+  grow, fork and release at page granularity, and identical page-aligned
+  prompt prefixes are served from a prefix cache by copy-on-write fork
+  (shared pages bump refcounts) instead of re-prefilling.
+  --kv-mem-budget caps the arena's live bytes across all sessions + the
+  prefix cache (0 = unlimited; must be at least one page): new sessions
+  wait for headroom, and when live pages exceed the budget the scheduler
+  sheds prefix-cache entries first and then preempts the
+  least-recently-stepped session — its pages drop and it transparently
+  re-prefills later with identical output tokens. The serve summary line
+  reports kv_state / arena_hw bytes, prefix_hits and evictions; `exp
+  mem` benchmarks paged vs flat stepping, prefix-cache speedup and
+  eviction thrash (BENCH_mem.json).
 
 parallelism:
   All attention kernels run on a shared worker pool sized by the
@@ -206,6 +223,10 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     // 0 = unlimited).
     let default_ctx = NativeModelConfig::default().max_context;
     let max_context = flag_usize(f, "max-context", default_ctx)?;
+    // KV page size in tokens and the arena byte budget across all live
+    // decode states (native backend; budget 0 = unlimited).
+    let kv_page = flag_usize(f, "kv-page", NativeModelConfig::default().kv_page)?;
+    let kv_mem_budget = flag_usize(f, "kv-mem-budget", 0)?;
     // Native decode engine: forced with --native / --native-kernel, and the
     // fallback whenever the AOT artifacts are absent.
     let native_kernel = f.get("native-kernel").cloned();
@@ -217,6 +238,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         let ncfg = NativeModelConfig {
             kernel: native_kernel.unwrap_or_else(|| "zeta".into()),
             max_context,
+            kv_page,
             ..Default::default()
         };
         if !have_artifacts {
@@ -227,7 +249,13 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         // for at least one new token, as with the engine's seq_len).
         let seq = if max_context > 0 { max_context.min(128) } else { 128 };
         (
-            ServerConfig { native: Some(ncfg), max_delay, prefill_budget, ..Default::default() },
+            ServerConfig {
+                native: Some(ncfg),
+                max_delay,
+                prefill_budget,
+                kv_mem_budget,
+                ..Default::default()
+            },
             seq,
             desc,
         )
@@ -296,7 +324,8 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
     let opts = opts_from_flags(f)?;
-    // fig3 / table3 / table4 / decode / decode_batch / pool need no artifacts
+    // fig3 / table3 / table4 / decode / decode_batch / pool / mem need no
+    // artifacts
     match which {
         "fig3" => return exp::fig3(&opts),
         "table3" => return exp::table3(&opts),
@@ -304,6 +333,7 @@ fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
         "decode" => return exp::decode(&opts),
         "decode_batch" => return exp::decode_batch(&opts),
         "pool" => return exp::pool(&opts),
+        "mem" => return exp::mem(&opts),
         _ => {}
     }
     let engine = Engine::new(zeta::ARTIFACTS_DIR)?;

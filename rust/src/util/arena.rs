@@ -1,0 +1,513 @@
+//! Paged decode-state memory — the L0 storage substrate of the serving
+//! stack.
+//!
+//! Every per-request decode state (KV rows, Morton codes, SSM state) used
+//! to own flat `Vec<f32>` buffers: memory was invisible to the scheduler,
+//! identical prompt prefixes were materialized once per session, and a
+//! preempted session had nothing to give back. [`PageArena`] replaces that
+//! with fixed-size **pages** of `page_tokens` rows each:
+//!
+//! * **Refcounted sharing** — a page handle is an `Arc` ([`PageRef`]).
+//!   Forking a decode state shares every *full* page by bumping refcounts
+//!   and deep-copies only the partial tail page (copy-on-write at page
+//!   granularity), so a prompt-prefix fork costs O(pages) pointer clones
+//!   plus one page copy instead of re-materializing the whole prefix.
+//! * **Free list** — released pages return to a per-size free list and are
+//!   recycled by later allocations, so steady-state serving stops hitting
+//!   the system allocator on the per-token path.
+//! * **Byte accounting** — the arena tracks live bytes (each page counted
+//!   once no matter how many forks share it), the high-water mark, and
+//!   alloc/recycle counters; the coordinator's `--kv-mem-budget` admission
+//!   gate and the serving telemetry read these.
+//!
+//! [`PagedKv`] is the row store built on top: append-only rows of a fixed
+//! width with O(1) row addressing (`page = i / page_rows`), plus
+//! [`PagedKv::fork`] / [`PagedKv::row_mut`] (copy-on-write) and a `Drop`
+//! that returns every page to its arena, so cancelled or preempted
+//! sessions can never leak accounting. [`PagedU32`] stores `u32` Morton
+//! codes in the same f32 pages via lossless bit-casts, so one arena (and
+//! one free list) serves every cache.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default page size in tokens (rows) — the `--kv-page` default.
+pub const DEFAULT_PAGE_TOKENS: usize = 64;
+
+/// One fixed-size arena page. Immutable while shared: appends only ever
+/// write the unshared tail page, and [`PagedKv::row_mut`] copies a shared
+/// page before writing (the copy-on-write contract that keeps forks
+/// bit-exact).
+pub struct Page {
+    data: Box<[f32]>,
+}
+
+impl Page {
+    /// The page's raw element storage.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// Refcounted page handle; clones share the page.
+pub type PageRef = Arc<Page>;
+
+/// Arena counters. `live_bytes` counts each live page exactly once — pages
+/// shared by several forks contribute once — which is what makes the
+/// serving byte budget truthful under prefix sharing.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ArenaStats {
+    /// Bytes in pages currently handed out (each page counted once).
+    pub live_bytes: usize,
+    /// Maximum `live_bytes` ever observed.
+    pub high_water_bytes: usize,
+    /// Bytes parked on the free lists, ready for reuse.
+    pub free_bytes: usize,
+    /// Pages currently handed out.
+    pub live_pages: usize,
+    /// Pages allocated from the system allocator.
+    pub page_allocs: u64,
+    /// Allocations served by recycling a freed page.
+    pub page_reuses: u64,
+}
+
+struct ArenaInner {
+    /// Free lists keyed by page element count (row widths differ between
+    /// caches, so pages come in a handful of size classes).
+    free: HashMap<usize, Vec<Box<[f32]>>>,
+    stats: ArenaStats,
+}
+
+/// Shared arena of fixed-size KV pages. Internally locked, so one arena
+/// can serve decode states stepping on pool worker threads; the lock is
+/// only taken when a page is allocated or released (once per
+/// `page_tokens` appends per stream), never on the per-row read path.
+pub struct PageArena {
+    page_tokens: usize,
+    inner: Mutex<ArenaInner>,
+}
+
+impl PageArena {
+    /// New arena with `page_tokens` rows per page (clamped to >= 1).
+    pub fn new(page_tokens: usize) -> Arc<PageArena> {
+        Arc::new(PageArena {
+            page_tokens: page_tokens.max(1),
+            inner: Mutex::new(ArenaInner { free: HashMap::new(), stats: ArenaStats::default() }),
+        })
+    }
+
+    /// The process-wide default arena ([`DEFAULT_PAGE_TOKENS`] rows per
+    /// page) — what `AttentionImpl::begin_decode` uses when no explicit
+    /// arena is supplied. Servers carry their own arena so `--kv-page` and
+    /// budget accounting stay per-server.
+    pub fn global() -> &'static Arc<PageArena> {
+        static GLOBAL: OnceLock<Arc<PageArena>> = OnceLock::new();
+        GLOBAL.get_or_init(|| PageArena::new(DEFAULT_PAGE_TOKENS))
+    }
+
+    /// Rows per page.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Allocate a page of `elems` f32 elements (recycling a freed page of
+    /// the same size class when one is parked). Recycled pages are *not*
+    /// re-zeroed — every consumer ([`PagedKv`]) writes a row before it can
+    /// be read (`row`/`row_mut` are bounded by the row count, and fork's
+    /// whole-page tail copy only fills slots that are equally unreadable),
+    /// so zeroing would be a second full-page write serialized under the
+    /// arena lock for nothing.
+    pub fn alloc(&self, elems: usize) -> PageRef {
+        let mut inner = self.inner.lock().unwrap();
+        let bytes = elems * 4;
+        let data = match inner.free.get_mut(&elems).and_then(|v| v.pop()) {
+            Some(d) => {
+                inner.stats.free_bytes -= bytes;
+                inner.stats.page_reuses += 1;
+                d
+            }
+            None => {
+                inner.stats.page_allocs += 1;
+                vec![0f32; elems].into_boxed_slice()
+            }
+        };
+        inner.stats.live_pages += 1;
+        inner.stats.live_bytes += bytes;
+        inner.stats.high_water_bytes = inner.stats.high_water_bytes.max(inner.stats.live_bytes);
+        Arc::new(Page { data })
+    }
+
+    /// Drop one handle's reference to a page. The page returns to the free
+    /// list (and leaves the live count) only when this was the last
+    /// reference. All releases run under the arena lock, so the
+    /// last-reference check cannot race between two forks releasing the
+    /// same page.
+    pub fn release(&self, page: PageRef) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Ok(p) = Arc::try_unwrap(page) {
+            let bytes = p.data.len() * 4;
+            inner.stats.live_pages -= 1;
+            inner.stats.live_bytes -= bytes;
+            inner.stats.free_bytes += bytes;
+            inner.free.entry(p.data.len()).or_default().push(p.data);
+        }
+    }
+
+    /// Snapshot of the arena counters.
+    pub fn stats(&self) -> ArenaStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+/// Row-addressable f32 storage: implemented by flat slices (the batch
+/// kernels' buffers) and by [`PagedKv`] (decode states), so one scoring
+/// routine serves both schedules without copying.
+pub trait RowStore {
+    fn row_at(&self, i: usize) -> &[f32];
+}
+
+/// Flat `(len, width)` row-major storage over a borrowed slice.
+pub struct FlatRows<'a> {
+    pub data: &'a [f32],
+    pub width: usize,
+}
+
+impl RowStore for FlatRows<'_> {
+    #[inline]
+    fn row_at(&self, i: usize) -> &[f32] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+}
+
+impl RowStore for PagedKv {
+    #[inline]
+    fn row_at(&self, i: usize) -> &[f32] {
+        self.row(i)
+    }
+}
+
+/// Append-only store of fixed-width f32 rows on arena pages — the decode
+/// states' KV storage. `page_tokens` rows per page, O(1) row addressing,
+/// copy-on-write forks, and `Drop` returns every page to the arena.
+pub struct PagedKv {
+    arena: Arc<PageArena>,
+    width: usize,
+    page_rows: usize,
+    pages: Vec<PageRef>,
+    rows: usize,
+}
+
+impl PagedKv {
+    /// Empty store of `width`-element rows on `arena`'s page size.
+    pub fn new(arena: &Arc<PageArena>, width: usize) -> PagedKv {
+        PagedKv {
+            arena: arena.clone(),
+            width: width.max(1),
+            page_rows: arena.page_tokens(),
+            pages: Vec::new(),
+            rows: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    fn page_elems(&self) -> usize {
+        self.page_rows * self.width
+    }
+
+    /// Append one row. Allocates a fresh page when the tail is full; the
+    /// tail page is always uniquely owned (forks deep-copy it), so the
+    /// write never touches shared storage.
+    pub fn push_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.width);
+        let slot = self.rows % self.page_rows;
+        if slot == 0 {
+            let elems = self.page_elems();
+            self.pages.push(self.arena.alloc(elems));
+        }
+        let page = self.pages.last_mut().expect("tail page pushed above");
+        let data = &mut Arc::get_mut(page)
+            .expect("tail page is uniquely owned (forks deep-copy the tail)")
+            .data;
+        data[slot * self.width..(slot + 1) * self.width].copy_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Row `i` (must be `< len`).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        let p = i / self.page_rows;
+        let slot = i % self.page_rows;
+        &self.pages[p].data[slot * self.width..(slot + 1) * self.width]
+    }
+
+    /// Mutable access to row `i`, copy-on-write: a page still shared with
+    /// a fork is replaced by a private copy before the first write, so the
+    /// fork keeps reading the original values.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        let p = i / self.page_rows;
+        let slot = i % self.page_rows;
+        if Arc::strong_count(&self.pages[p]) > 1 {
+            let mut fresh = self.arena.alloc(self.page_elems());
+            Arc::get_mut(&mut fresh)
+                .expect("fresh page is unshared")
+                .data
+                .copy_from_slice(&self.pages[p].data);
+            let old = std::mem::replace(&mut self.pages[p], fresh);
+            self.arena.release(old);
+        }
+        let page = Arc::get_mut(&mut self.pages[p]).expect("page is private after CoW");
+        &mut page.data[slot * self.width..(slot + 1) * self.width]
+    }
+
+    /// Copy-on-write fork: full pages are shared (refcount bumps — the
+    /// arena's live bytes do not grow), only the partial tail page is
+    /// deep-copied. The fork and the original then append and mutate
+    /// independently while reading identical history.
+    pub fn fork(&self) -> PagedKv {
+        let full = self.rows / self.page_rows;
+        let mut pages: Vec<PageRef> = self.pages[..full.min(self.pages.len())].to_vec();
+        if self.pages.len() > full {
+            let mut fresh = self.arena.alloc(self.page_elems());
+            Arc::get_mut(&mut fresh)
+                .expect("fresh page is unshared")
+                .data
+                .copy_from_slice(&self.pages[full].data);
+            pages.push(fresh);
+        }
+        PagedKv {
+            arena: self.arena.clone(),
+            width: self.width,
+            page_rows: self.page_rows,
+            pages,
+            rows: self.rows,
+        }
+    }
+
+    /// Bytes of arena pages this handle references. Pages shared with
+    /// forks are counted fully in *each* handle; the arena's own
+    /// [`ArenaStats::live_bytes`] counts every live page exactly once.
+    pub fn bytes(&self) -> usize {
+        self.pages.len() * self.page_elems() * 4
+    }
+
+    /// Return every page to the arena and reset to empty.
+    pub fn release(&mut self) {
+        for p in self.pages.drain(..) {
+            self.arena.release(p);
+        }
+        self.rows = 0;
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+/// Append-only store of `u32` values (Morton codes) bit-cast into f32
+/// pages — lossless (`to_bits`/`from_bits` round-trip all 32 bits), and it
+/// keeps every decode-state allocation in one arena.
+pub struct PagedU32 {
+    kv: PagedKv,
+}
+
+impl PagedU32 {
+    pub fn new(arena: &Arc<PageArena>) -> PagedU32 {
+        PagedU32 { kv: PagedKv::new(arena, 1) }
+    }
+
+    pub fn push(&mut self, value: u32) {
+        self.kv.push_row(&[f32::from_bits(value)]);
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        self.kv.row(i)[0].to_bits()
+    }
+
+    pub fn len(&self) -> usize {
+        self.kv.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kv.is_empty()
+    }
+
+    pub fn fork(&self) -> PagedU32 {
+        PagedU32 { kv: self.kv.fork() }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.kv.bytes()
+    }
+
+    pub fn release(&mut self) {
+        self.kv.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_round_trip_across_pages() {
+        let arena = PageArena::new(4);
+        let mut kv = PagedKv::new(&arena, 3);
+        for i in 0..11 {
+            let row = [i as f32, i as f32 + 0.5, -(i as f32)];
+            kv.push_row(&row);
+        }
+        assert_eq!(kv.len(), 11);
+        for i in 0..11 {
+            assert_eq!(kv.row(i), &[i as f32, i as f32 + 0.5, -(i as f32)]);
+        }
+        // 11 rows at 4 rows/page = 3 pages
+        assert_eq!(kv.bytes(), 3 * 4 * 3 * 4);
+        assert_eq!(arena.stats().live_pages, 3);
+    }
+
+    #[test]
+    fn fork_shares_full_pages_and_copies_tail() {
+        let arena = PageArena::new(4);
+        let mut a = PagedKv::new(&arena, 2);
+        for i in 0..10 {
+            a.push_row(&[i as f32, 2.0 * i as f32]);
+        }
+        // 10 rows = 2 full pages + 1 partial tail
+        let live_before = arena.stats().live_bytes;
+        let b = a.fork();
+        // sharing: only the tail page was duplicated
+        let page_bytes = 4 * 2 * 4;
+        assert_eq!(arena.stats().live_bytes, live_before + page_bytes);
+        for i in 0..10 {
+            assert_eq!(a.row(i), b.row(i));
+        }
+        assert!(Arc::ptr_eq(&a.pages[0], &b.pages[0]));
+        assert!(Arc::ptr_eq(&a.pages[1], &b.pages[1]));
+        assert!(!Arc::ptr_eq(&a.pages[2], &b.pages[2]));
+    }
+
+    #[test]
+    fn post_fork_appends_diverge_without_cross_talk() {
+        let arena = PageArena::new(2);
+        let mut a = PagedKv::new(&arena, 1);
+        for i in 0..5 {
+            a.push_row(&[i as f32]);
+        }
+        let mut b = a.fork();
+        a.push_row(&[100.0]);
+        b.push_row(&[200.0]);
+        b.push_row(&[201.0]);
+        assert_eq!(a.len(), 6);
+        assert_eq!(b.len(), 7);
+        assert_eq!(a.row(5), &[100.0]);
+        assert_eq!(b.row(5), &[200.0]);
+        assert_eq!(b.row(6), &[201.0]);
+        // shared history unchanged on both sides
+        for i in 0..5 {
+            assert_eq!(a.row(i), &[i as f32]);
+            assert_eq!(b.row(i), &[i as f32]);
+        }
+    }
+
+    #[test]
+    fn row_mut_copies_shared_pages_before_writing() {
+        let arena = PageArena::new(4);
+        let mut a = PagedKv::new(&arena, 1);
+        for i in 0..8 {
+            a.push_row(&[i as f32]);
+        }
+        let mut b = a.fork();
+        // page 0 is shared; writing through b must not disturb a
+        b.row_mut(1)[0] = 99.0;
+        assert_eq!(a.row(1), &[1.0]);
+        assert_eq!(b.row(1), &[99.0]);
+        // a second write to the now-private page does not copy again
+        let live = arena.stats().live_bytes;
+        b.row_mut(2)[0] = 98.0;
+        assert_eq!(arena.stats().live_bytes, live);
+        assert_eq!(a.row(2), &[2.0]);
+    }
+
+    #[test]
+    fn release_returns_pages_and_free_list_recycles() {
+        let arena = PageArena::new(8);
+        let mut kv = PagedKv::new(&arena, 2);
+        for i in 0..20 {
+            kv.push_row(&[i as f32, 0.0]);
+        }
+        let hw = arena.stats().high_water_bytes;
+        assert!(hw > 0);
+        kv.release();
+        let st = arena.stats();
+        assert_eq!(st.live_bytes, 0);
+        assert_eq!(st.live_pages, 0);
+        assert_eq!(st.free_bytes, hw);
+        assert_eq!(st.high_water_bytes, hw);
+        // a fresh store of the same width recycles the freed pages
+        let mut kv2 = PagedKv::new(&arena, 2);
+        for i in 0..20 {
+            kv2.push_row(&[i as f32, 1.0]);
+        }
+        let st = arena.stats();
+        assert!(st.page_reuses >= 3, "reuses {}", st.page_reuses);
+        assert_eq!(st.live_bytes, hw);
+        assert_eq!(st.high_water_bytes, hw);
+    }
+
+    #[test]
+    fn shared_pages_count_once_and_release_on_last_ref() {
+        let arena = PageArena::new(4);
+        let mut a = PagedKv::new(&arena, 1);
+        for i in 0..4 {
+            a.push_row(&[i as f32]); // exactly one full page
+        }
+        let b = a.fork(); // page shared, no tail to copy
+        let page_bytes = 4 * 4;
+        assert_eq!(arena.stats().live_bytes, page_bytes);
+        drop(a);
+        // b still holds the page: live, not freed
+        assert_eq!(arena.stats().live_bytes, page_bytes);
+        assert_eq!(b.row(3), &[3.0]);
+        drop(b);
+        assert_eq!(arena.stats().live_bytes, 0);
+        assert_eq!(arena.stats().free_bytes, page_bytes);
+    }
+
+    #[test]
+    fn paged_u32_round_trips_all_bit_patterns() {
+        let arena = PageArena::new(3);
+        let mut c = PagedU32::new(&arena);
+        let vals = [0u32, 1, 0x7FFF_FFFF, 0xFFFF_FFFF, 0x8000_0000, 12345, u32::MAX - 1];
+        for &v in &vals {
+            c.push(v);
+        }
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(c.get(i), v);
+        }
+        let f = c.fork();
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(f.get(i), v);
+        }
+    }
+
+    #[test]
+    fn global_arena_uses_default_page_size() {
+        assert_eq!(PageArena::global().page_tokens(), DEFAULT_PAGE_TOKENS);
+    }
+}

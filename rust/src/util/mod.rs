@@ -2,6 +2,7 @@
 //! beyond the `xla` stub and `anyhow`): JSON, PRNG, property tests,
 //! benchmarking, and the shared worker pool every parallel kernel runs on.
 
+pub mod arena;
 pub mod bench;
 pub mod breakeven;
 pub mod json;

@@ -26,15 +26,23 @@
 //! incremental decode (`decode_step`) share one selection routine over this
 //! structure.
 
+use std::sync::Arc;
+
 /// One index entry: `(morton code, original append position)`.
 pub type Entry = (u32, u32);
 
-/// Append-only sorted index over Morton codes (sorted-runs design).
+/// Append-only sorted index over Morton codes (sorted-runs design). Runs
+/// are refcounted (`Arc`), so [`ZIndex::fork`] snapshots the whole index
+/// in O(log N) pointer clones: a forked ZETA decode state shares its
+/// sorted runs with the original up to the fork point instead of
+/// re-sorting the prefix. Runs are immutable once built — appends only
+/// ever *read* existing runs while merging into fresh ones — so sharing
+/// never changes any query result.
 #[derive(Debug, Default, Clone)]
 pub struct ZIndex {
     /// Sorted runs, sizes forming a binary counter (largest first); each
     /// run is ascending in `(code, pos)`.
-    runs: Vec<Vec<Entry>>,
+    runs: Vec<Arc<Vec<Entry>>>,
     len: usize,
 }
 
@@ -53,7 +61,7 @@ impl WindowScratch {
     }
 }
 
-fn merge_runs(a: Vec<Entry>, b: Vec<Entry>) -> Vec<Entry> {
+fn merge_runs(a: &[Entry], b: &[Entry]) -> Vec<Entry> {
     let mut out = Vec::with_capacity(a.len() + b.len());
     let (mut i, mut j) = (0, 0);
     while i < a.len() && j < b.len() {
@@ -109,6 +117,8 @@ impl ZIndex {
 
     /// Append the next key's Morton code; its position is the append index.
     /// Amortized O(log N): merges equal-size runs binary-counter style.
+    /// Merging *reads* the popped runs and builds a fresh one, so runs
+    /// shared with a fork are left untouched (the fork keeps its snapshot).
     pub fn append(&mut self, code: u32) {
         assert!(self.len < u32::MAX as usize, "ZIndex position overflow");
         let pos = self.len as u32;
@@ -119,9 +129,17 @@ impl ZIndex {
                 break;
             }
             let top = self.runs.pop().expect("non-empty checked above");
-            run = merge_runs(top, run);
+            run = merge_runs(&top, &run);
         }
-        self.runs.push(run);
+        self.runs.push(Arc::new(run));
+    }
+
+    /// O(log N) snapshot: the fork shares every run with the original;
+    /// both sides append independently afterwards. Equivalent to a deep
+    /// `clone()` in every observable way (runs are immutable), without
+    /// copying the sorted prefix.
+    pub fn fork(&self) -> ZIndex {
+        self.clone()
     }
 
     /// Global insertion rank of `code`: the number of entries whose code is
@@ -186,7 +204,7 @@ impl ZIndex {
     pub fn sorted_entries(&self) -> Vec<Entry> {
         let mut acc: Vec<Entry> = Vec::new();
         for run in self.runs.iter().rev() {
-            acc = merge_runs(acc, run.clone());
+            acc = merge_runs(&acc, run.as_slice());
         }
         acc
     }
@@ -315,6 +333,47 @@ mod tests {
                         }
                     }
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fork_shares_runs_and_diverges_independently() {
+        prop::check(15, 0x21DE4, |rng| {
+            let n = 8 + rng.usize_below(200);
+            let split = 1 + rng.usize_below(n - 1);
+            let codes: Vec<u32> = (0..n).map(|_| rng.next_u32() % 101).collect();
+            let mut a = ZIndex::from_codes(&codes[..split]);
+            let mut b = a.fork();
+            // the snapshot is literal sharing: every run is the same
+            // allocation (refcount bump, no copied prefix)
+            if a.runs.len() != b.runs.len()
+                || !a.runs.iter().zip(&b.runs).all(|(x, y)| Arc::ptr_eq(x, y))
+            {
+                return Err("fork did not share run storage".into());
+            }
+            // diverge: a continues with the real tail, b with a shifted one
+            for &c in &codes[split..] {
+                a.append(c);
+            }
+            let tail_b: Vec<u32> = codes[split..].iter().map(|c| c ^ 0x55).collect();
+            for &c in &tail_b {
+                b.append(c);
+            }
+            // each side is indistinguishable from a fresh rebuild of its
+            // own full sequence
+            prop::assert_eq_prop(&a.sorted_entries(), &ref_sorted(&codes))?;
+            let seq_b: Vec<u32> =
+                codes[..split].iter().copied().chain(tail_b.iter().copied()).collect();
+            prop::assert_eq_prop(&b.sorted_entries(), &ref_sorted(&seq_b))?;
+            // and windows still match the reference on the forked side
+            let sorted_b = ref_sorted(&seq_b);
+            let mut scratch = WindowScratch::default();
+            let mut got = Vec::new();
+            for probe in [codes[0], codes[split - 1].wrapping_add(1), 7] {
+                b.window_with(probe, 16, &mut scratch, &mut got);
+                prop::assert_eq_prop(&got, &ref_window(&sorted_b, probe, 16))?;
             }
             Ok(())
         });

@@ -133,6 +133,7 @@ fn fused_paths_engage_pool_fanout_and_stay_exact() {
         vocab: 1024,
         seed: 0,
         max_context: 0,
+        ..Default::default()
     })
     .unwrap();
     let pool = Pool::new(4);

@@ -1,0 +1,313 @@
+//! Paged-state equivalence gate (tier-1) — the memory-layer companion of
+//! `decode_equivalence.rs` and `fused_sweep.rs`:
+//!
+//! 1. Moving every kernel's `DecodeState` onto the shared page arena must
+//!    be invisible to the numerics: decode output equals the flat batch
+//!    `forward` row-for-row for all four kernels across the thread matrix
+//!    {1, 2, 4, 8}, and fused `step_batch` sweeps over paged states stay
+//!    bit-identical to serial stepping.
+//! 2. Fork correctness (property test): `fork()` + a divergent
+//!    continuation is bit-equal to a fresh prefill of the same token
+//!    sequence, for all four kernels, with the continuations driven
+//!    through fused sweeps at pool sizes {1, 4} — and forking never
+//!    perturbs the original stream.
+//! 3. Under a deliberately tight `--kv-mem-budget`, preempted-and-resumed
+//!    sessions stream exactly the tokens an unconstrained run produces,
+//!    and pages really return to the arena afterwards.
+
+use std::sync::{Arc, Mutex};
+
+use zeta::attention::{all_impls, decode_full, DecodeStep, Workload};
+use zeta::coordinator::metrics::Metrics;
+use zeta::coordinator::{NativeDecodeModel, NativeModelConfig, NativeServing};
+use zeta::util::pool::Pool;
+
+const TOL: f32 = 1e-4;
+
+#[test]
+fn paged_decode_matches_forward_for_every_kernel_across_threads() {
+    // n spans several ZETA causal chunks (default chunk = 64).
+    let w = Workload::random(192, 16, 8, 42);
+    let dv = w.v.shape[1];
+    for threads in [1usize, 2, 4, 8] {
+        let pool = Pool::new(threads);
+        for imp in all_impls() {
+            let (of, _) = imp.forward_with(&w, &pool);
+            let od = decode_full(imp.as_ref(), &w);
+            for t in 0..w.n() {
+                let diff = of
+                    .row(t)
+                    .iter()
+                    .zip(&od.data[t * dv..(t + 1) * dv])
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    diff < TOL,
+                    "{} threads={threads} row {t}: paged decode diverged by {diff}",
+                    imp.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_step_batch_over_paged_states_is_bitwise_serial() {
+    let (d, dv) = (16usize, 8usize);
+    let n_streams = 5usize;
+    for imp in all_impls() {
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let ws: Vec<Workload> =
+                (0..n_streams).map(|s| Workload::random(64, d, dv, 900 + s as u64)).collect();
+            let mut fused: Vec<_> = (0..n_streams).map(|_| imp.begin_decode(d, dv)).collect();
+            let mut serial: Vec<_> = (0..n_streams).map(|_| imp.begin_decode(d, dv)).collect();
+            let mut of = vec![0f32; n_streams * dv];
+            let mut os = vec![0f32; n_streams * dv];
+            for t in 0..48 {
+                let tt = t % 64;
+                {
+                    let mut batch: Vec<DecodeStep> = fused
+                        .iter_mut()
+                        .zip(of.chunks_mut(dv))
+                        .enumerate()
+                        .map(|(s, (st, orow))| DecodeStep {
+                            state: st.as_mut(),
+                            q: ws[s].q.row(tt),
+                            k: ws[s].k.row(tt),
+                            v: ws[s].v.row(tt),
+                            out: orow,
+                        })
+                        .collect();
+                    imp.step_batch(&mut batch, &pool);
+                }
+                for (s, st) in serial.iter_mut().enumerate() {
+                    st.step(
+                        ws[s].q.row(tt),
+                        ws[s].k.row(tt),
+                        ws[s].v.row(tt),
+                        &mut os[s * dv..(s + 1) * dv],
+                    );
+                }
+                assert_eq!(of, os, "{} threads={threads} t={t}", imp.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn fork_plus_divergent_continuation_matches_fresh_prefill_bitwise() {
+    // The fork contract, per kernel, across pool sizes {1, 4} (the
+    // ZETA_THREADS matrix the serving sweeps run under):
+    //   * continuing a fork on a divergent tail == fresh state fed
+    //     (shared prefix + divergent tail), bit for bit;
+    //   * the original keeps streaming its own tail bit-identically to a
+    //     never-forked control.
+    // The forked continuations run through the fused `step_batch` path so
+    // CoW pages are exercised under pool-parallel stepping.
+    // n leaves room for the deepest fork point (66) + 40 continuation steps.
+    let (d, dv, n) = (8usize, 4usize, 128usize);
+    let n_streams = 4usize;
+    for threads in [1usize, 4] {
+        let pool = Pool::new(threads);
+        for imp in all_impls() {
+            for case in 0..3u64 {
+                let seed = 1000 + 17 * case;
+                let shared: Vec<Workload> =
+                    (0..n_streams).map(|s| Workload::random(n, d, dv, seed + s as u64)).collect();
+                let tails: Vec<Workload> = (0..n_streams)
+                    .map(|s| Workload::random(n, d, dv, seed + 7777 + s as u64))
+                    .collect();
+                // Stagger fork points across chunk boundaries.
+                let splits: Vec<usize> =
+                    (0..n_streams).map(|s| 17 + (case as usize) * 5 + s * 13).collect();
+
+                // Base states ingest their shared prefixes.
+                let mut base: Vec<_> = (0..n_streams).map(|_| imp.begin_decode(d, dv)).collect();
+                let mut sink = vec![0f32; dv];
+                for (s, st) in base.iter_mut().enumerate() {
+                    for t in 0..splits[s] {
+                        st.step(
+                            shared[s].q.row(t),
+                            shared[s].k.row(t),
+                            shared[s].v.row(t),
+                            &mut sink,
+                        );
+                    }
+                }
+                let mut forked: Vec<_> = base.iter().map(|st| st.fork()).collect();
+                for (s, st) in forked.iter().enumerate() {
+                    assert_eq!(st.pos(), splits[s], "{} fork pos", imp.name());
+                }
+
+                // Fresh references: prefix + divergent tail, fed serially.
+                let steps = 40usize;
+                let mut fresh_out = vec![vec![0f32; steps * dv]; n_streams];
+                for s in 0..n_streams {
+                    let mut st = imp.begin_decode(d, dv);
+                    for t in 0..splits[s] {
+                        st.step(
+                            shared[s].q.row(t),
+                            shared[s].k.row(t),
+                            shared[s].v.row(t),
+                            &mut sink,
+                        );
+                    }
+                    for i in 0..steps {
+                        let t = splits[s] + i;
+                        let row = &mut fresh_out[s][i * dv..(i + 1) * dv];
+                        st.step(tails[s].q.row(t), tails[s].k.row(t), tails[s].v.row(t), row);
+                    }
+                }
+
+                // Forked states run the same divergent tails through the
+                // fused sweep.
+                let mut fork_out = vec![0f32; n_streams * dv];
+                for i in 0..steps {
+                    let mut batch: Vec<DecodeStep> = forked
+                        .iter_mut()
+                        .zip(fork_out.chunks_mut(dv))
+                        .enumerate()
+                        .map(|(s, (st, orow))| {
+                            let t = splits[s] + i;
+                            DecodeStep {
+                                state: st.as_mut(),
+                                q: tails[s].q.row(t),
+                                k: tails[s].k.row(t),
+                                v: tails[s].v.row(t),
+                                out: orow,
+                            }
+                        })
+                        .collect();
+                    imp.step_batch(&mut batch, &pool);
+                    drop(batch);
+                    for s in 0..n_streams {
+                        assert_eq!(
+                            &fork_out[s * dv..(s + 1) * dv],
+                            &fresh_out[s][i * dv..(i + 1) * dv],
+                            "{} threads={threads} case={case} stream={s} step={i}: \
+                             fork diverged from fresh prefill",
+                            imp.name()
+                        );
+                    }
+                }
+
+                // The originals continue their own (different) tails and
+                // must match never-forked controls bit for bit.
+                for s in 0..n_streams {
+                    let mut control = imp.begin_decode(d, dv);
+                    for t in 0..splits[s] {
+                        control.step(
+                            shared[s].q.row(t),
+                            shared[s].k.row(t),
+                            shared[s].v.row(t),
+                            &mut sink,
+                        );
+                    }
+                    let mut got = vec![0f32; dv];
+                    let mut want = vec![0f32; dv];
+                    for t in splits[s]..splits[s] + 20 {
+                        base[s].step(
+                            shared[s].q.row(t),
+                            shared[s].k.row(t),
+                            shared[s].v.row(t),
+                            &mut got,
+                        );
+                        control.step(
+                            shared[s].q.row(t),
+                            shared[s].k.row(t),
+                            shared[s].v.row(t),
+                            &mut want,
+                        );
+                        assert_eq!(
+                            got,
+                            want,
+                            "{} threads={threads} case={case} stream={s} t={t}: \
+                             fork perturbed the original",
+                            imp.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Drive a session table through the shared `NativeServing` harness;
+/// returns (per-session token streams, evictions, arena high-water
+/// bytes, arena live bytes at the end).
+fn drive_sessions(
+    kernel: &str,
+    budget: usize,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> (Vec<Vec<i32>>, u64, usize, usize) {
+    let model = NativeDecodeModel::new(NativeModelConfig {
+        kernel: kernel.into(),
+        ..Default::default()
+    })
+    .unwrap();
+    let mut serving = NativeServing::new(model, budget);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let streams = serving.drive_to_completion(prompts, max_new, &metrics, &Pool::serial());
+    let (evictions, high_water) = {
+        let m = metrics.lock().unwrap();
+        (m.evictions, m.arena_high_water_bytes)
+    };
+    let live_after = serving.model().arena().stats().live_bytes;
+    (streams, evictions, high_water, live_after)
+}
+
+#[test]
+fn tight_budget_preemption_streams_identical_tokens() {
+    // Three 100-token prompts generating 20 tokens each on the exact-KV
+    // kernel. The budget admits all three while small, is overrun as the
+    // contexts grow (driving prefix-cache shedding and LRU session
+    // preemption), and every preempted session must transparently
+    // re-prefill — the streams must equal the unconstrained run's exactly.
+    let prompts: Vec<Vec<i32>> = (0..3)
+        .map(|s| (0..100).map(|i| ((i * 13 + s * 29 + 7) % 31) as i32).collect())
+        .collect();
+    let (unconstrained, ev0, hw0, _) = drive_sessions("naive", 0, &prompts, 20);
+    assert_eq!(ev0, 0, "unlimited budget must never preempt");
+    assert!(hw0 > 0);
+    for s in &unconstrained {
+        assert_eq!(s.len(), 20);
+    }
+    // ~1.6 sessions' worth of pages: everything is admitted early (the
+    // estimates fit while contexts are small) and the budget is crossed
+    // mid-generation.
+    let budget = 26_000usize;
+    let (constrained, evictions, hw, _) = drive_sessions("naive", budget, &prompts, 20);
+    assert!(evictions > 0, "tight budget must actually preempt sessions");
+    assert!(hw >= hw0 / 3, "constrained run still allocated real pages");
+    assert_eq!(constrained, unconstrained, "preemption must be invisible in the streams");
+}
+
+#[test]
+fn tight_budget_preemption_is_stream_invisible_for_zeta() {
+    // Same gate on the ZETA kernel: preempting drops the persistent
+    // Z-order index too, and the resume must rebuild it bit-exactly. All
+    // three sessions are admitted in the first sweep (nothing allocated
+    // yet), and their combined growth crosses the budget mid-generation.
+    let prompts: Vec<Vec<i32>> = (0..3)
+        .map(|s| (0..90).map(|i| ((i * 11 + s * 17 + 3) % 31) as i32).collect())
+        .collect();
+    let (unconstrained, _, _, _) = drive_sessions("zeta", 0, &prompts, 16);
+    let (constrained, evictions, _, _) = drive_sessions("zeta", 26_000, &prompts, 16);
+    assert!(evictions > 0, "budget must bite on the zeta states too");
+    assert_eq!(constrained, unconstrained);
+}
+
+#[test]
+fn retired_sessions_return_their_pages_to_the_arena() {
+    // Prompts under one page: no prefix-cache entries are created, so
+    // after every session retires the arena must be completely drained.
+    let prompts: Vec<Vec<i32>> = (0..4).map(|s| vec![(s + 1) as i32; 20]).collect();
+    let (streams, _, hw, live_after) = drive_sessions("zeta", 0, &prompts, 10);
+    assert!(hw > 0, "sessions must have allocated pages");
+    assert_eq!(live_after, 0, "all pages must return to the arena free list");
+    for s in &streams {
+        assert_eq!(s.len(), 10);
+    }
+}
