@@ -20,6 +20,7 @@ use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::{dot, Tensor};
 use crate::util::arena::PageArena;
 use crate::util::pool::{merge_partials, Pool, SharedSlice};
+use crate::util::simd;
 
 pub struct Flash {
     pub block: usize,
@@ -95,9 +96,7 @@ impl Flash {
                                 let corr = (mstat[ri] - mnew).exp();
                                 let orow = &mut oblk[ri * dv..(ri + 1) * dv];
                                 if corr != 1.0 {
-                                    for c in orow.iter_mut() {
-                                        *c *= corr;
-                                    }
+                                    simd::scale(orow, corr);
                                 }
                                 lstat[ri] *= corr;
                                 for (ci, j) in (kb..ke).enumerate() {
@@ -107,10 +106,7 @@ impl Flash {
                                     }
                                     let p = (s - mnew).exp();
                                     lstat[ri] += p;
-                                    let vrow = w.v.row(j);
-                                    for c in 0..dv {
-                                        orow[c] += p * vrow[c];
-                                    }
+                                    simd::axpy(orow, p, w.v.row(j));
                                 }
                                 mstat[ri] = mnew;
                             }
@@ -118,9 +114,7 @@ impl Flash {
                         // normalize + record logsumexp
                         for ri in 0..rows {
                             let inv = 1.0 / lstat[ri];
-                            for c in oblk[ri * dv..(ri + 1) * dv].iter_mut() {
-                                *c *= inv;
-                            }
+                            simd::scale(&mut oblk[ri * dv..(ri + 1) * dv], inv);
                             lblk[ri] = mstat[ri] + lstat[ri].ln();
                         }
                     }
@@ -231,19 +225,10 @@ impl AttentionImpl for Flash {
                                 let da = dot(gi, vj);
                                 let dsij = p * (da - delta[i]) * scale;
                                 // dv_j += p * dout_i
-                                let dvj = &mut dv_local[j * dv..(j + 1) * dv];
-                                for c in 0..dv {
-                                    dvj[c] += p * gi[c];
-                                }
+                                simd::axpy(&mut dv_local[j * dv..(j + 1) * dv], p, gi);
                                 // dq_i += dS_ij k_j ; dk_j += dS_ij q_i
-                                let kj = w.k.row(j);
-                                for c in 0..d {
-                                    dqi[c] += dsij * kj[c];
-                                }
-                                let dkj = &mut dk_local[j * d..(j + 1) * d];
-                                for c in 0..d {
-                                    dkj[c] += dsij * qi[c];
-                                }
+                                simd::axpy(dqi, dsij, w.k.row(j));
+                                simd::axpy(&mut dk_local[j * d..(j + 1) * d], dsij, qi);
                             }
                         }
                     }

@@ -25,6 +25,7 @@ use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::Tensor;
 use crate::util::arena::{PageArena, PagedKv};
 use crate::util::pool::{Pool, SharedSlice};
+use crate::util::simd;
 
 pub struct MambaLite {
     pub n_state: usize,
@@ -45,19 +46,33 @@ fn softplus(x: f32) -> f32 {
     }
 }
 
+/// Per-token decay factors `exp(-dt·a_s)` with `a_s = (s+1)/ns` (the
+/// S4/Mamba-style spread of rates). Hoisted out of the channel loop: one
+/// exp per state per *token* instead of per (channel, state), with the
+/// exact same values the seed recomputed inline.
+fn fill_decay(decay: &mut [f32], dt: f32, ns: usize) {
+    for (s, dec) in decay.iter_mut().enumerate() {
+        let a = (s + 1) as f32 / ns as f32;
+        *dec = (-dt * a).exp();
+    }
+}
+
 /// One channel's recurrence step: advance its hidden-state row by one token
 /// and return the output y contribution. Shared verbatim by the batch
 /// forwards and [`MambaDecode::step`], so decode stays bit-identical to
-/// prefill by construction.
+/// prefill by construction. Runs on the SIMD layer: the carried `hrow`
+/// update is elementwise (bit-identical on every backend); only the
+/// returned readout uses the lane reduction tree.
 #[inline]
-fn scan_channel_step(dt: f32, b: &[f32], c: &[f32], ns: usize, x: f32, hrow: &mut [f32]) -> f32 {
-    let mut acc = 0.0;
-    for s in 0..ns {
-        let a = (s + 1) as f32 / ns as f32;
-        hrow[s] = (-dt * a).exp() * hrow[s] + dt * b[s] * x;
-        acc += c[s] * hrow[s];
-    }
-    acc
+fn scan_channel_step(
+    decay: &[f32],
+    b: &[f32],
+    c: &[f32],
+    dt: f32,
+    x: f32,
+    hrow: &mut [f32],
+) -> f32 {
+    simd::ssm_step(decay, b, c, dt, x, hrow)
 }
 
 impl MambaLite {
@@ -99,14 +114,16 @@ impl MambaLite {
                 let mut h = vec![0f32; nch * ns];
                 let mut b = vec![0f32; ns];
                 let mut c = vec![0f32; ns];
-                st.workspace_bytes += (h.len() + b.len() + c.len()) * 4;
+                let mut decay = vec![0f32; ns];
+                st.workspace_bytes += (h.len() + b.len() + c.len() + decay.len()) * 4;
                 for t in 0..n {
                     let dt = self.gates_into(w, t, &mut b, &mut c);
+                    fill_decay(&mut decay, dt, ns);
                     let vr = w.v.row(t);
                     for (hi, ch) in chs.clone().enumerate() {
                         let x = vr[ch];
                         let hrow = &mut h[hi * ns..(hi + 1) * ns];
-                        let acc = scan_channel_step(dt, &b, &c, ns, x, hrow);
+                        let acc = scan_channel_step(&decay, &b, &c, dt, x, hrow);
                         // Safety: element (t, ch) / trajectory row (t, ch)
                         // belong to this channel chunk only.
                         unsafe {
@@ -142,6 +159,7 @@ pub struct MambaDecode {
     h: PagedKv, // (dv, ns): one row per value channel
     b: Vec<f32>,
     c: Vec<f32>,
+    decay: Vec<f32>,
     t: usize,
 }
 
@@ -165,9 +183,10 @@ impl DecodeState for MambaDecode {
             self.b[s] = k_t[s % d] * 0.5;
             self.c[s] = q_t[s % d] * 0.5;
         }
+        fill_decay(&mut self.decay, dt, ns);
         for (ch, (&x, o)) in v_t.iter().zip(out.iter_mut()).enumerate() {
             let hrow = self.h.row_mut(ch);
-            *o = scan_channel_step(dt, &self.b, &self.c, ns, x, hrow);
+            *o = scan_channel_step(&self.decay, &self.b, &self.c, dt, x, hrow);
         }
         self.t += 1;
     }
@@ -182,7 +201,7 @@ impl DecodeState for MambaDecode {
     }
 
     fn state_bytes(&self) -> usize {
-        self.h.bytes() + (self.b.len() + self.c.len()) * 4
+        self.h.bytes() + (self.b.len() + self.c.len() + self.decay.len()) * 4
     }
 
     fn fork(&self) -> Box<dyn DecodeState> {
@@ -193,6 +212,7 @@ impl DecodeState for MambaDecode {
             h: self.h.fork(),
             b: self.b.clone(),
             c: self.c.clone(),
+            decay: self.decay.clone(),
             t: self.t,
         })
     }
@@ -220,7 +240,16 @@ impl AttentionImpl for MambaLite {
         for _ in 0..dv {
             h.push_row(&zero);
         }
-        Box::new(MambaDecode { ns, d, dv, h, b: vec![0f32; ns], c: vec![0f32; ns], t: 0 })
+        Box::new(MambaDecode {
+            ns,
+            d,
+            dv,
+            h,
+            b: vec![0f32; ns],
+            c: vec![0f32; ns],
+            decay: vec![0f32; ns],
+            t: 0,
+        })
     }
 
     fn forward_with(&self, w: &Workload, pool: &Pool) -> (Tensor, MemReport) {
@@ -238,14 +267,16 @@ impl AttentionImpl for MambaLite {
                 let mut h = vec![0f32; nch * ns];
                 let mut b = vec![0f32; ns];
                 let mut c = vec![0f32; ns];
-                st.workspace_bytes += (h.len() + b.len() + c.len()) * 4;
+                let mut decay = vec![0f32; ns];
+                st.workspace_bytes += (h.len() + b.len() + c.len() + decay.len()) * 4;
                 for t in 0..n {
                     let dt = self.gates_into(w, t, &mut b, &mut c);
+                    fill_decay(&mut decay, dt, ns);
                     let vr = w.v.row(t);
                     for (hi, ch) in chs.clone().enumerate() {
                         let x = vr[ch];
                         let hrow = &mut h[hi * ns..(hi + 1) * ns];
-                        let acc = scan_channel_step(dt, &b, &c, ns, x, hrow);
+                        let acc = scan_channel_step(&decay, &b, &c, dt, x, hrow);
                         // Safety: element (t, ch) owned by this chunk.
                         unsafe { ysh.write(t * dv + ch, acc) };
                     }
@@ -281,21 +312,22 @@ impl AttentionImpl for MambaLite {
                 let mut dh = vec![0f32; nch * ns];
                 let mut b = vec![0f32; ns];
                 let mut c = vec![0f32; ns];
-                st.workspace_bytes += (dh.len() + b.len() + c.len()) * 4;
+                let mut decay = vec![0f32; ns];
+                st.workspace_bytes += (dh.len() + b.len() + c.len() + decay.len()) * 4;
                 for t in (0..n).rev() {
                     let dt = self.gates_into(w, t, &mut b, &mut c);
+                    fill_decay(&mut decay, dt, ns);
                     let g = w.dout.row(t);
                     for (hi, ch) in chs.clone().enumerate() {
                         let dhrow = &mut dh[hi * ns..(hi + 1) * ns];
                         let mut dx = 0.0;
                         for s in 0..ns {
-                            let a = (s + 1) as f32 / ns as f32;
                             // y_t contributes c_s to dh_t
                             dhrow[s] += c[s] * g[ch];
                             // x enters h via dt*b_s
                             dx += dhrow[s] * dt * b[s];
                             // pass adjoint to h_{t-1}
-                            dhrow[s] *= (-dt * a).exp();
+                            dhrow[s] *= decay[s];
                         }
                         // Safety: element (t, ch) owned by this chunk.
                         unsafe { dvsh.write(t * dv + ch, dx) };

@@ -12,6 +12,7 @@ use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::{dot, Tensor};
 use crate::util::arena::{PageArena, PagedKv};
 use crate::util::pool::{merge_partials, Pool, SharedSlice};
+use crate::util::simd;
 
 pub struct Naive;
 
@@ -70,18 +71,12 @@ impl DecodeState for ExactKvDecode {
             z += *s;
         }
         let inv = 1.0 / z;
-        for s in self.scores.iter_mut() {
-            *s *= inv;
-        }
+        simd::scale(&mut self.scores, inv);
         for o in out.iter_mut() {
             *o = 0.0;
         }
         for j in 0..=t {
-            let a = self.scores[j];
-            let vr = self.v.row(j);
-            for (o, &vv) in out.iter_mut().zip(vr) {
-                *o += a * vv;
-            }
+            simd::axpy(out, self.scores[j], self.v.row(j));
         }
     }
 
@@ -147,15 +142,9 @@ impl Naive {
                         z += *v;
                     }
                     let inv = 1.0 / z;
-                    for v in arow[..=i].iter_mut() {
-                        *v *= inv;
-                    }
+                    simd::scale(&mut arow[..=i], inv);
                     for j in 0..=i {
-                        let aij = arow[j];
-                        let vrow = w.v.row(j);
-                        for c in 0..dv {
-                            orow[c] += aij * vrow[c];
-                        }
+                        simd::axpy(orow, arow[j], w.v.row(j));
                     }
                 }
             });
@@ -240,9 +229,7 @@ impl AttentionImpl for Naive {
                             let da = dot(gi, w.v.row(j));
                             dsrow[j] = arow[j] * (da - rowdot);
                             let dvj = &mut dv_local[j * dv..(j + 1) * dv];
-                            for c in 0..dv {
-                                dvj[c] += arow[j] * gi[c];
-                            }
+                            simd::axpy(dvj, arow[j], gi);
                         }
                     }
                 }
@@ -264,10 +251,7 @@ impl AttentionImpl for Naive {
                         if s == 0.0 {
                             continue;
                         }
-                        let kj = w.k.row(j);
-                        for c in 0..d {
-                            dqi[c] += s * kj[c];
-                        }
+                        simd::axpy(dqi, s, w.k.row(j));
                     }
                 }
             });
@@ -285,10 +269,7 @@ impl AttentionImpl for Naive {
                         if s == 0.0 {
                             continue;
                         }
-                        let qi = w.q.row(i);
-                        for c in 0..d {
-                            dkj[c] += s * qi[c];
-                        }
+                        simd::axpy(dkj, s, w.q.row(i));
                     }
                 }
             });

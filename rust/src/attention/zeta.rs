@@ -35,6 +35,7 @@ use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::{sqdist, Tensor};
 use crate::util::arena::{FlatRows, PageArena, PagedKv, PagedU32, RowStore};
 use crate::util::pool::{merge_partials, Pool, SharedSlice};
+use crate::util::simd;
 use crate::zorder;
 use crate::zorder::index::{WindowScratch, ZIndex};
 
@@ -95,8 +96,12 @@ struct Candidates {
 /// buffers and the decode path out of its paged arena caches through the
 /// *same* monomorphized arithmetic (identical op sequence either way, so
 /// the bit-for-bit decode == prefill contract survives the paging).
+///
+/// The distance kernel and the AV accumulation run on the SIMD layer
+/// ([`crate::util::simd`]): one vectorized routine shared by batch-flat and
+/// paged-decode row stores. `pub(crate)` so `exp kernels` can bench it.
 #[allow(clippy::too_many_arguments)]
-fn cauchy_row<KR: RowStore, VR: RowStore>(
+pub(crate) fn cauchy_row<KR: RowStore, VR: RowStore>(
     eps: f32,
     irow: &[u32],
     qi: &[f32],
@@ -128,15 +133,9 @@ fn cauchy_row<KR: RowStore, VR: RowStore>(
     for slot in 0..nc {
         let jj = irow[slot] as usize;
         let a = scores[slot] * inv;
-        let vr = v.row_at(jj);
-        for (o, &vv) in out.iter_mut().zip(vr) {
-            *o += a * vv;
-        }
+        simd::axpy(out, a, v.row_at(jj));
     }
-    let am = sm * inv;
-    for (o, &mv) in out.iter_mut().zip(vm_i) {
-        *o += am * mv;
-    }
+    simd::axpy(out, sm * inv, vm_i);
     z
 }
 

@@ -188,7 +188,11 @@ impl NativeDecodeModel {
     }
 
     /// Readout into a pre-sized `vocab`-length row (the fused sweep's flat
-    /// per-slot logits buffers).
+    /// per-slot logits buffers). Each logit is one [`dot`] against a readout
+    /// row, so the whole vocab·dv matvec rides the SIMD dispatch layer
+    /// ([`crate::util::simd`]): blocked lane sums with a fixed reduction
+    /// tree, identical across thread counts (parallelism here is across
+    /// slots, never within a logit).
     pub fn readout_into(&self, orow: &[f32], logits: &mut [f32]) {
         let dv = self.cfg.dv;
         for (w, l) in logits.iter_mut().enumerate() {

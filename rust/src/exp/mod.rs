@@ -17,10 +17,12 @@ use crate::attention::{decode_full, AttentionImpl, Workload};
 use crate::data::{corpus::CorpusLm, task_for_config};
 use crate::runtime::Engine;
 use crate::trainer::Trainer;
+use crate::util::arena::{FlatRows, RowStore};
 use crate::util::bench;
 use crate::util::json::Json;
 use crate::util::pool::{Pool, SharedSlice};
 use crate::util::rng::Rng;
+use crate::util::simd::{self, Backend};
 use crate::zorder;
 
 /// Options shared by all experiments (CLI flags).
@@ -67,6 +69,18 @@ fn record(opts: &Opts, name: &str, value: Json) -> Result<()> {
     let path = format!("{}/{name}.json", opts.out_dir);
     std::fs::write(&path, value.to_string())?;
     Ok(())
+}
+
+/// Write the machine-readable `BENCH_<name>.json` perf trajectory. These
+/// live at a fixed top-level name (the comparison anchor future PRs diff
+/// against), so an unwritable CWD only warns — the same numbers were
+/// already recorded under `--out-dir` by [`record`].
+fn write_bench(name: &str, rows: Vec<Json>) {
+    let path = format!("BENCH_{name}.json");
+    match std::fs::write(&path, Json::Arr(rows).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
 }
 
 /// Train one preset on its config-matched task, return eval accuracy (cls /
@@ -407,13 +421,8 @@ pub fn table3(opts: &Opts) -> Result<()> {
     println!("(skip = impractical on this testbed, analogous to the paper's OOM rows)");
     record(opts, "table3", Json::Obj(rec))?;
     // Machine-readable perf trajectory (per-kernel ms by N and threads) so
-    // future PRs can diff against this run. Lives at a fixed top-level name
-    // (the comparison anchor), so an unwritable CWD only warns — the
-    // benchmark results above are already recorded under out_dir.
-    match std::fs::write("BENCH_table3.json", Json::Arr(bench_rows).to_string()) {
-        Ok(()) => println!("wrote BENCH_table3.json"),
-        Err(e) => eprintln!("warning: could not write BENCH_table3.json: {e}"),
-    }
+    // future PRs can diff against this run.
+    write_bench("table3", bench_rows);
     Ok(())
 }
 
@@ -622,10 +631,7 @@ pub fn decode(opts: &Opts) -> Result<()> {
     }
     println!("(full = one forward per token; skip = impractical at this N, as in Table 3)");
     record(opts, "decode", Json::Obj(rec))?;
-    match std::fs::write("BENCH_decode.json", Json::Arr(bench_rows).to_string()) {
-        Ok(()) => println!("wrote BENCH_decode.json"),
-        Err(e) => eprintln!("warning: could not write BENCH_decode.json: {e}"),
-    }
+    write_bench("decode", bench_rows);
     decode_batch(opts)
 }
 
@@ -746,10 +752,7 @@ pub fn decode_batch(opts: &Opts) -> Result<()> {
         }
     }
     record(opts, "decode_batch", Json::Obj(rec))?;
-    match std::fs::write("BENCH_decode_batch.json", Json::Arr(bench_rows).to_string()) {
-        Ok(()) => println!("wrote BENCH_decode_batch.json"),
-        Err(e) => eprintln!("warning: could not write BENCH_decode_batch.json: {e}"),
-    }
+    write_bench("decode_batch", bench_rows);
     Ok(())
 }
 
@@ -907,10 +910,339 @@ pub fn pool(opts: &Opts) -> Result<()> {
         ]));
     }
     record(opts, "pool", Json::Obj(rec))?;
-    match std::fs::write("BENCH_pool.json", Json::Arr(bench_rows).to_string()) {
-        Ok(()) => println!("wrote BENCH_pool.json"),
-        Err(e) => eprintln!("warning: could not write BENCH_pool.json: {e}"),
+    write_bench("pool", bench_rows);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Kernels — per-loop micro-bench: seed-exact scalar arm vs SIMD dispatch
+// ---------------------------------------------------------------------------
+
+/// One `exp kernels` table row: per-element timings for a loop at size `n`,
+/// printed and appended to both the `results/kernels.json` record and the
+/// `BENCH_kernels.json` trajectory rows (the scalar baseline travels in
+/// every row, so the trajectory diffs without re-running a baseline).
+fn kernel_row(
+    name: &str,
+    n: usize,
+    elems: f64,
+    scalar: &bench::Stats,
+    vector: &bench::Stats,
+    rec: &mut BTreeMap<String, Json>,
+    rows: &mut Vec<Json>,
+) {
+    let sc_ns = scalar.median_s * 1e9 / elems;
+    let si_ns = vector.median_s * 1e9 / elems;
+    let speedup = sc_ns / si_ns.max(1e-12);
+    println!("{name:<14}{n:<8}{sc_ns:>16.3}{si_ns:>16.3}{speedup:>9.2}x");
+    rec.insert(
+        format!("{name}_n{n}"),
+        Json::obj(vec![
+            ("scalar_ns_per_elem", Json::num(sc_ns)),
+            ("simd_ns_per_elem", Json::num(si_ns)),
+            ("speedup", Json::num(speedup)),
+        ]),
+    );
+    rows.push(Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("n", Json::num(n as f64)),
+        ("backend", Json::str(crate::util::simd::backend_name())),
+        ("lanes", Json::num(crate::util::simd::lanes() as f64)),
+        ("scalar_ns_per_elem", Json::num(sc_ns)),
+        ("simd_ns_per_elem", Json::num(si_ns)),
+        ("speedup", Json::num(speedup)),
+    ]));
+}
+
+/// Seed-exact scalar replica of [`crate::attention::zeta::cauchy_row`],
+/// built from the `_with(Backend::Scalar, ..)` primitives. This is the
+/// baseline column of `exp kernels`; the dispatched real routine is the
+/// other column, so the pair prices exactly the restructuring the SIMD
+/// layer performed on the ZETA scoring row.
+#[allow(clippy::too_many_arguments)]
+fn cauchy_row_scalar(
+    eps: f32,
+    irow: &[u32],
+    qi: &[f32],
+    kl: &FlatRows<'_>,
+    km_i: &[f32],
+    vm_i: &[f32],
+    v: &FlatRows<'_>,
+    scores: &mut [f32],
+    out: &mut [f32],
+) -> f32 {
+    let mut z = 0.0f32;
+    let mut nc = 0usize;
+    for (slot, &j) in irow.iter().enumerate() {
+        if j == u32::MAX {
+            break;
+        }
+        let jj = j as usize;
+        let s = 1.0 / (simd::sqdist_with(Backend::Scalar, qi, kl.row_at(jj)) + eps);
+        scores[slot] = s;
+        z += s;
+        nc = slot + 1;
     }
+    let sm = 1.0 / (simd::sqdist_with(Backend::Scalar, qi, km_i) + eps);
+    z += sm;
+    let inv = 1.0 / z;
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for slot in 0..nc {
+        let jj = irow[slot] as usize;
+        simd::axpy_with(Backend::Scalar, out, scores[slot] * inv, v.row_at(jj));
+    }
+    simd::axpy_with(Backend::Scalar, out, sm * inv, vm_i);
+    z
+}
+
+/// One exact-attention softmax row (the shape of `ExactKvDecode::step` and
+/// `Naive::fwd_full`): score every key, running max, exp-normalize,
+/// AV-accumulate. Backend-parameterized so `exp kernels` prices the same
+/// arithmetic on the scalar and vector arms.
+#[allow(clippy::too_many_arguments)]
+fn softmax_row(
+    be: Backend,
+    q: &[f32],
+    kbuf: &[f32],
+    vbuf: &[f32],
+    d: usize,
+    dv: usize,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    let nk = scores.len();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut maxv = f32::NEG_INFINITY;
+    for j in 0..nk {
+        let s = simd::dot_with(be, q, &kbuf[j * d..(j + 1) * d]) * scale;
+        scores[j] = s;
+        maxv = maxv.max(s);
+    }
+    let mut z = 0.0;
+    for s in scores.iter_mut() {
+        *s = (*s - maxv).exp();
+        z += *s;
+    }
+    let inv = 1.0 / z;
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for j in 0..nk {
+        simd::axpy_with(be, out, scores[j] * inv, &vbuf[j * dv..(j + 1) * dv]);
+    }
+}
+
+/// `exp kernels`: the per-loop micro-benchmark behind the SIMD kernel layer
+/// ([`crate::util::simd`]). For each hot loop — `dot`, `sqdist`, `axpy`,
+/// Morton `interleave`, the mamba `ssm_step`, the ZETA `cauchy_row`, and an
+/// exact-attention softmax row — reports ns/element for the seed-exact
+/// scalar arm vs the dispatched backend at n ∈ {256, 4096, 65536} elements
+/// (small sizes amortized over repetitions so per-call overhead cancels).
+/// Writes `results/kernels.json` and the machine-readable
+/// `BENCH_kernels.json`. Under `ZETA_SIMD=scalar` both columns price the
+/// same loops, so the speedup column pins at ~1 — the self-describing
+/// `backend` field records which regime a trajectory row came from.
+pub fn kernels(opts: &Opts) -> Result<()> {
+    use crate::attention::zeta::cauchy_row;
+    let be = simd::backend();
+    let budget = Duration::from_millis(200);
+    let mut rng = Rng::new(opts.seed ^ 0x51D5);
+    let mut rec = BTreeMap::new();
+    let mut rows: Vec<Json> = Vec::new();
+    println!(
+        "\n== Kernels: per-loop ns/element — scalar arm vs dispatched backend \
+         ({}, {} × f32 lanes) ==",
+        be.name(),
+        be.lanes()
+    );
+    println!(
+        "{:<14}{:<8}{:>16}{:>16}{:>10}",
+        "loop", "n", "scalar ns/el", "simd ns/el", "speedup"
+    );
+    for &n in &[256usize, 4096, 65536] {
+        let reps = (65536 / n).max(1);
+
+        // dot / sqdist: lane reductions over length-n vectors.
+        let mut a = vec![0f32; n];
+        let mut b = vec![0f32; n];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let elems = (reps * n) as f64;
+        let sc = bench::bench(budget, 8, || {
+            let mut y = 0.0;
+            for _ in 0..reps {
+                y += simd::dot_with(Backend::Scalar, &a, &b);
+            }
+            bench::black_box(y);
+        });
+        let si = bench::bench(budget, 8, || {
+            let mut y = 0.0;
+            for _ in 0..reps {
+                y += simd::dot_with(be, &a, &b);
+            }
+            bench::black_box(y);
+        });
+        kernel_row("dot", n, elems, &sc, &si, &mut rec, &mut rows);
+        let sc = bench::bench(budget, 8, || {
+            let mut y = 0.0;
+            for _ in 0..reps {
+                y += simd::sqdist_with(Backend::Scalar, &a, &b);
+            }
+            bench::black_box(y);
+        });
+        let si = bench::bench(budget, 8, || {
+            let mut y = 0.0;
+            for _ in 0..reps {
+                y += simd::sqdist_with(be, &a, &b);
+            }
+            bench::black_box(y);
+        });
+        kernel_row("sqdist", n, elems, &sc, &si, &mut rec, &mut rows);
+
+        // axpy: the AV-accumulate of every attention kernel (elementwise,
+        // so the vector arm is bit-identical — only speed differs).
+        let mut acc = vec![0f32; n];
+        let sc = bench::bench(budget, 8, || {
+            for _ in 0..reps {
+                simd::axpy_with(Backend::Scalar, &mut acc, 0.5, &a);
+            }
+            bench::black_box(&acc);
+        });
+        let si = bench::bench(budget, 8, || {
+            for _ in 0..reps {
+                simd::axpy_with(be, &mut acc, 0.5, &a);
+            }
+            bench::black_box(&acc);
+        });
+        kernel_row("axpy", n, elems, &sc, &si, &mut rec, &mut rows);
+
+        // ssm_step: one mamba channel step over an n-state row (decay < 1
+        // keeps the carried state bounded across benchmark iterations).
+        let mut hrow = vec![0f32; n];
+        let mut bb = vec![0f32; n];
+        let mut cc = vec![0f32; n];
+        rng.fill_normal(&mut hrow, 1.0);
+        rng.fill_normal(&mut bb, 1.0);
+        rng.fill_normal(&mut cc, 1.0);
+        let mut decay = vec![0f32; n];
+        for (s, dec) in decay.iter_mut().enumerate() {
+            *dec = (-0.3 * (s + 1) as f32 / n as f32).exp();
+        }
+        let sc = bench::bench(budget, 8, || {
+            let mut y = 0.0;
+            for _ in 0..reps {
+                y = simd::ssm_step_with(Backend::Scalar, &decay, &bb, &cc, 0.3, 0.9, &mut hrow);
+            }
+            bench::black_box(y);
+        });
+        let si = bench::bench(budget, 8, || {
+            let mut y = 0.0;
+            for _ in 0..reps {
+                y = simd::ssm_step_with(be, &decay, &bb, &cc, 0.3, 0.9, &mut hrow);
+            }
+            bench::black_box(y);
+        });
+        kernel_row("ssm_step", n, elems, &sc, &si, &mut rec, &mut rows);
+
+        // interleave: n Morton codes at d = 3 (the paper's d_K). The fast
+        // path is bit-identical to scalar, so only the timing differs.
+        let bits = zorder::bits_for_dim(3);
+        let mask = (1u32 << bits) - 1;
+        let coords: Vec<u32> = (0..3 * n).map(|_| rng.next_u32() & mask).collect();
+        let sc = bench::bench(budget, 8, || {
+            let mut acc = 0u32;
+            for c in coords.chunks_exact(3) {
+                acc ^= simd::interleave_with(Backend::Scalar, c, bits);
+            }
+            bench::black_box(acc);
+        });
+        let si = bench::bench(budget, 8, || {
+            let mut acc = 0u32;
+            for c in coords.chunks_exact(3) {
+                acc ^= simd::interleave_with(be, c, bits);
+            }
+            bench::black_box(acc);
+        });
+        kernel_row("interleave", n, n as f64, &sc, &si, &mut rec, &mut rows);
+
+        // cauchy_row: the ZETA scoring row (d_k = 3, dv = 64, n/64
+        // candidates) — the dispatched routine vs its scalar replica.
+        let (dk, dv) = (3usize, 64usize);
+        let nc = (n / 64).max(1);
+        let mut qi = vec![0f32; dk];
+        let mut km = vec![0f32; dk];
+        let mut vm = vec![0f32; dv];
+        let mut klbuf = vec![0f32; nc * dk];
+        let mut vbuf = vec![0f32; nc * dv];
+        rng.fill_normal(&mut qi, 1.0);
+        rng.fill_normal(&mut km, 1.0);
+        rng.fill_normal(&mut vm, 1.0);
+        rng.fill_normal(&mut klbuf, 1.0);
+        rng.fill_normal(&mut vbuf, 1.0);
+        let irow: Vec<u32> = (0..nc as u32).collect();
+        let kl = FlatRows { data: &klbuf, width: dk };
+        let vstore = FlatRows { data: &vbuf, width: dv };
+        let mut scores = vec![0f32; nc];
+        let mut orow = vec![0f32; dv];
+        let elems = (reps * nc * (dk + dv)) as f64;
+        let sc = bench::bench(budget, 8, || {
+            let mut z = 0.0;
+            for _ in 0..reps {
+                z = cauchy_row_scalar(
+                    0.5,
+                    &irow,
+                    &qi,
+                    &kl,
+                    &km,
+                    &vm,
+                    &vstore,
+                    &mut scores,
+                    &mut orow,
+                );
+            }
+            bench::black_box(z);
+        });
+        let si = bench::bench(budget, 8, || {
+            let mut z = 0.0;
+            for _ in 0..reps {
+                z = cauchy_row(0.5, &irow, &qi, &kl, &km, &vm, &vstore, &mut scores, &mut orow);
+            }
+            bench::black_box(z);
+        });
+        kernel_row("cauchy_row", n, elems, &sc, &si, &mut rec, &mut rows);
+
+        // softmax row: n/128 keys at d = dv = 64 — the exact-attention
+        // decode-step shape.
+        let nk = (n / 128).max(1);
+        let d = 64usize;
+        let mut q = vec![0f32; d];
+        let mut kbuf = vec![0f32; nk * d];
+        let mut vrows = vec![0f32; nk * dv];
+        rng.fill_normal(&mut q, 1.0);
+        rng.fill_normal(&mut kbuf, 1.0);
+        rng.fill_normal(&mut vrows, 1.0);
+        let mut skey = vec![0f32; nk];
+        let elems = (reps * nk * (d + dv)) as f64;
+        let sc = bench::bench(budget, 8, || {
+            for _ in 0..reps {
+                softmax_row(Backend::Scalar, &q, &kbuf, &vrows, d, dv, &mut skey, &mut orow);
+            }
+            bench::black_box(&orow);
+        });
+        let si = bench::bench(budget, 8, || {
+            for _ in 0..reps {
+                softmax_row(be, &q, &kbuf, &vrows, d, dv, &mut skey, &mut orow);
+            }
+            bench::black_box(&orow);
+        });
+        kernel_row("softmax_row", n, elems, &sc, &si, &mut rec, &mut rows);
+    }
+    rec.insert("backend".into(), Json::str(be.name()));
+    rec.insert("lanes".into(), Json::num(be.lanes() as f64));
+    record(opts, "kernels", Json::Obj(rec))?;
+    write_bench("kernels", rows);
     Ok(())
 }
 
@@ -1158,10 +1490,7 @@ pub fn mem(opts: &Opts) -> Result<()> {
     ]));
 
     record(opts, "mem", Json::Obj(rec))?;
-    match std::fs::write("BENCH_mem.json", Json::Arr(bench_rows).to_string()) {
-        Ok(()) => println!("wrote BENCH_mem.json"),
-        Err(e) => eprintln!("warning: could not write BENCH_mem.json: {e}"),
-    }
+    write_bench("mem", bench_rows);
     Ok(())
 }
 
@@ -1204,6 +1533,7 @@ pub fn all(engine: &Engine, opts: &Opts) -> Result<()> {
     table2(engine, opts)?;
     table3(opts)?;
     table4(opts)?;
+    kernels(opts)?;
     decode(opts)?;
     pool(opts)?;
     mem(opts)?;

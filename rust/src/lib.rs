@@ -62,6 +62,20 @@
 //! exp mem` prices paging overhead, prefix-cache speedup and eviction
 //! thrash (`BENCH_mem.json`).
 //!
+//! ## SIMD kernel layer
+//!
+//! The f32 inner loops of every kernel — Cauchy top-k scoring, exact
+//! softmax rows, flash tiled accumulation, the mamba recurrence, Morton
+//! interleaving, and the dot/readout matvecs — funnel through a portable
+//! lane-op layer ([`util::simd`]). One backend is picked per process at
+//! first use: AVX2 (8 × f32) on x86_64, NEON (4 × f32) on aarch64, or the
+//! seed-exact scalar loops (forced by `ZETA_SIMD=scalar`, the mode the
+//! bitwise-determinism gates pin). Elementwise ops are bit-identical to
+//! scalar on every backend; reductions block by element index with a fixed
+//! lane tree, so results are alignment- and thread-count-independent and
+//! stay within 1e-4 of scalar (`rust/tests/simd_equivalence.rs`). `zeta
+//! exp kernels` prices each loop scalar-vs-SIMD (`BENCH_kernels.json`).
+//!
 //! Substrates implemented in-tree (offline std-only build): JSON, PRNG,
 //! property tests, bench harness, worker pool ([`util`]), Morton codec +
 //! persistent sorted index ([`zorder`]), native CPU attention kernels for

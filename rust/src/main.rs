@@ -103,8 +103,8 @@ commands:
   exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--threads T]
          [--verbose]
          NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3, table1, table2,
-                 table3, table4, table5, table6, decode, decode_batch,
-                 pool, mem, all}
+                 table3, table4, table5, table6, kernels, decode,
+                 decode_batch, pool, mem, all}
 
 serving:
   `serve` runs one-shot batched inference by default. With --generate each
@@ -151,6 +151,16 @@ parallelism:
   multi-session sweeps over a sessions × threads grid), and `exp pool`
   writes BENCH_pool.json (region launch latency: resident team vs scoped
   spawns, plus the fan-out break-even sweep).
+
+simd:
+  The f32 kernel inner loops (Cauchy scoring, softmax rows, the mamba
+  recurrence, Morton interleave, dot/readout matvecs) dispatch once per
+  process to the widest available vector unit — AVX2 (8 × f32) on
+  x86_64, NEON (4 × f32) on aarch64 — with a bit-exact scalar fallback.
+  Set ZETA_SIMD=scalar to force the seed-exact scalar loops (the mode
+  every bitwise-determinism gate pins). `exp kernels` writes
+  BENCH_kernels.json: per-loop ns/element, scalar arm vs the dispatched
+  backend, at n ∈ {256, 4096, 65536}.
 
 `make artifacts` builds the core presets; `make artifacts-full` builds the
 experiment sweeps (required for fig2*/table1/2/5/6).";
@@ -324,12 +334,13 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
     let opts = opts_from_flags(f)?;
-    // fig3 / table3 / table4 / decode / decode_batch / pool / mem need no
-    // artifacts
+    // fig3 / table3 / table4 / kernels / decode / decode_batch / pool / mem
+    // need no artifacts
     match which {
         "fig3" => return exp::fig3(&opts),
         "table3" => return exp::table3(&opts),
         "table4" => return exp::table4(&opts),
+        "kernels" => return exp::kernels(&opts),
         "decode" => return exp::decode(&opts),
         "decode_batch" => return exp::decode_batch(&opts),
         "pool" => return exp::pool(&opts),

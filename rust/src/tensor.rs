@@ -111,27 +111,23 @@ impl fmt::Debug for Tensor {
     }
 }
 
-/// Euclidean squared distance between two equal-length slices.
+/// Euclidean squared distance between two equal-length slices, dispatched
+/// through [`crate::util::simd`]: the scalar backend is the seed loop
+/// bit-for-bit; vector backends block by index with a fixed reduction tree
+/// (alignment-independent, ≤ 1e-4 of scalar).
 #[inline]
 pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0;
-    for i in 0..a.len() {
-        let d = a[i] - b[i];
-        s += d * d;
-    }
-    s
+    crate::util::simd::sqdist(a, b)
 }
 
-/// Dot product.
+/// Dot product, dispatched through [`crate::util::simd`] (same contract as
+/// [`sqdist`]). Every matvec in the crate — readout logits included — rides
+/// this one routine.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0;
-    for i in 0..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+    crate::util::simd::dot(a, b)
 }
 
 #[cfg(test)]

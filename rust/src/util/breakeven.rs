@@ -10,17 +10,24 @@
 //! broadcast: the `exp pool` micro-benchmark (`BENCH_pool.json`) puts the
 //! launch+join handshake at single-digit µs at 4–8 workers, roughly an
 //! order of magnitude below the scoped-spawn baseline it also measures.
-//! The thresholds below are lowered by that measured ratio (16×), so small
-//! fused `step_batch` / `prefill_batch` / readout waves now engage the
-//! pool instead of falling back to serial loops.
+//! That lowered the thresholds ~16× (PR 4).
 //!
-//! | constant | old (scoped spawns) | now (resident team) | unit |
-//! |---|---|---|---|
-//! | [`PARALLEL_STEP_MIN_OPS`]     | 2^17 | 2^13 | est. scalar ops / sweep |
-//! | [`PARALLEL_PREFILL_MIN_OPS`]  | 2^17 | 2^13 | est. scalar ops / wave |
-//! | [`PARALLEL_READOUT_MIN_OPS`]  | 2^18 | 2^14 | scalar ops (slots·vocab·dv) |
-//! | [`PARALLEL_PAD_MIN_ELEMS`]    | 2^20 | 2^16 | i32 token elements |
-//! | [`PARALLEL_SEARCH_MIN_LOOKUPS`] | 256 | 64 | window lookups / phase |
+//! The SIMD kernel layer ([`crate::util::simd`], `exp kernels` /
+//! `BENCH_kernels.json`) then made each estimated "scalar op" ~4× cheaper
+//! in wall-clock on the vector backends: a region that used to carry a
+//! launch-worth of work now finishes inline before the team wakes. The
+//! op-denominated thresholds move back *up* by that kernel speedup so the
+//! break-even stays pinned to wall-clock, not op counts. The pad bound is
+//! memcpy-bound (not vectorized by the kernel layer) and the search bound
+//! counts index-window lookups (select/scan, not lane math), so both stay.
+//!
+//! | constant | spawns | resident (PR 4) | SIMD (now) | unit |
+//! |---|---|---|---|---|
+//! | [`PARALLEL_STEP_MIN_OPS`]     | 2^17 | 2^13 | 2^15 | est. scalar ops / sweep |
+//! | [`PARALLEL_PREFILL_MIN_OPS`]  | 2^17 | 2^13 | 2^15 | est. scalar ops / wave |
+//! | [`PARALLEL_READOUT_MIN_OPS`]  | 2^18 | 2^14 | 2^16 | scalar ops (slots·vocab·dv) |
+//! | [`PARALLEL_PAD_MIN_ELEMS`]    | 2^20 | 2^16 | 2^16 | i32 token elements |
+//! | [`PARALLEL_SEARCH_MIN_LOOKUPS`] | 256 | 64 | 64 | window lookups / phase |
 //!
 //! Every call site funnels through [`fan_out`], and the unit tests here pin
 //! the decision boundary to the documented values — change a threshold and
@@ -28,15 +35,15 @@
 
 /// Minimum estimated scalar ops across a fused cross-stream decode sweep
 /// before [`crate::attention::AttentionImpl::step_batch`] fans out.
-pub const PARALLEL_STEP_MIN_OPS: usize = 1 << 13;
+pub const PARALLEL_STEP_MIN_OPS: usize = 1 << 15;
 
 /// Minimum estimated scalar ops across a batched prefill wave before
 /// `NativeDecodeModel::prefill_batch` fans out.
-pub const PARALLEL_PREFILL_MIN_OPS: usize = 1 << 13;
+pub const PARALLEL_PREFILL_MIN_OPS: usize = 1 << 15;
 
 /// Minimum `slots · vocab · dv` scalar ops before the batched
 /// readout/argmax phase of `NativeDecodeModel::step_batch` fans out.
-pub const PARALLEL_READOUT_MIN_OPS: usize = 1 << 14;
+pub const PARALLEL_READOUT_MIN_OPS: usize = 1 << 16;
 
 /// Minimum total i32 token elements (`rows · seq_len`) before the
 /// coordinator's batch padding fans out off the scheduler thread.
@@ -62,9 +69,9 @@ mod tests {
 
     #[test]
     fn thresholds_match_documented_table() {
-        assert_eq!(PARALLEL_STEP_MIN_OPS, 8192);
-        assert_eq!(PARALLEL_PREFILL_MIN_OPS, 8192);
-        assert_eq!(PARALLEL_READOUT_MIN_OPS, 16384);
+        assert_eq!(PARALLEL_STEP_MIN_OPS, 32768);
+        assert_eq!(PARALLEL_PREFILL_MIN_OPS, 32768);
+        assert_eq!(PARALLEL_READOUT_MIN_OPS, 65536);
         assert_eq!(PARALLEL_PAD_MIN_ELEMS, 65536);
         assert_eq!(PARALLEL_SEARCH_MIN_LOOKUPS, 64);
     }

@@ -1,6 +1,7 @@
 //! Std-only utility substrates (the offline build has no third-party crates
 //! beyond the `xla` stub and `anyhow`): JSON, PRNG, property tests,
-//! benchmarking, and the shared worker pool every parallel kernel runs on.
+//! benchmarking, the shared worker pool every parallel kernel runs on, and
+//! the SIMD dispatch layer every kernel inner loop runs through.
 
 pub mod arena;
 pub mod bench;
@@ -9,3 +10,4 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod simd;

@@ -29,17 +29,15 @@ pub fn quantize(x: f32, lo: f32, hi: f32, bits: u32) -> u32 {
 
 /// Interleave the low `bits` bits of each coordinate (paper Eq. 4):
 /// bit b of coordinate j lands at output position b*d + j.
+///
+/// Dispatched through [`crate::util::simd`]: scalar mode keeps the seed's
+/// bit-by-bit loop, accelerated modes use branch-free magic-shift spreading
+/// for d ≤ 3 — bit-identical on every input (integer math only, pinned by
+/// property tests), so Morton codes never depend on the backend.
 #[inline]
 pub fn interleave(coords: &[u32], bits: u32) -> u32 {
-    let d = coords.len();
-    debug_assert!(bits as usize * d <= 31, "code exceeds 31 bits");
-    let mut z = 0u32;
-    for b in 0..bits {
-        for (j, &c) in coords.iter().enumerate() {
-            z |= ((c >> b) & 1) << (b as usize * d + j);
-        }
-    }
-    z
+    debug_assert!(bits as usize * coords.len() <= 31, "code exceeds 31 bits");
+    crate::util::simd::interleave(coords, bits)
 }
 
 /// Inverse of `interleave`.

@@ -1,0 +1,148 @@
+//! Scalar/SIMD equivalence gate for the lane-op layer (tier-1), the
+//! kernel-level companion of `parallel_determinism.rs`:
+//!
+//! 1. Reductions (`dot`, `sqdist`, the `ssm_step` readout) on the
+//!    dispatched backend must stay within 1e-4 of the seed-exact scalar
+//!    arm at every vector-length remainder `n = lanes·m + r` — the
+//!    blocked main loop and the scalar tail are both exercised for every
+//!    possible split.
+//! 2. Elementwise ops (`axpy`, `scale`, the `ssm_step` carried state) must
+//!    be *bit-identical* to scalar on every backend: one IEEE mul/add per
+//!    element in both modes, so vectorization cannot perturb any
+//!    bitwise-determinism gate built on them.
+//! 3. Morton `interleave` is integer-only — the magic-shift fast path must
+//!    equal the seed's bit-by-bit loop exactly on every input.
+//! 4. Greedy `argmax` stays pinned on NaN / ±inf logits (vectorized
+//!    scoring can surface non-finite values; decoding must not wander).
+
+use zeta::util::prop;
+use zeta::util::rng::Rng;
+use zeta::util::simd::{self, Backend};
+
+/// Relative tolerance for lane-reduction reorderings.
+const TOL: f32 = 1e-4;
+
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= TOL * (1.0 + a.abs())
+}
+
+/// Every vector length that splits differently across the lane blocks:
+/// `n = lanes·m + r` for m in 0..3 and every remainder r.
+fn remainder_lengths() -> Vec<usize> {
+    let lanes = simd::backend().lanes().max(4);
+    (0..3 * lanes + 1).collect()
+}
+
+#[test]
+fn reductions_match_scalar_at_every_remainder() {
+    let be = simd::backend();
+    let mut rng = Rng::new(0xE0_51D0);
+    for n in remainder_lengths() {
+        let mut a = vec![0f32; n];
+        let mut b = vec![0f32; n];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let (ds, dv) = (simd::dot_with(Backend::Scalar, &a, &b), simd::dot_with(be, &a, &b));
+        assert!(close(ds, dv), "dot n={n}: scalar {ds} vs {} {dv}", be.name());
+        let sv = simd::sqdist_with(be, &a, &b);
+        let ss = simd::sqdist_with(Backend::Scalar, &a, &b);
+        assert!(close(ss, sv), "sqdist n={n}: scalar {ss} vs {} {sv}", be.name());
+    }
+}
+
+#[test]
+fn tensor_entry_points_ride_the_dispatch_layer() {
+    // The crate-wide `tensor::dot` / `tensor::sqdist` delegate to the
+    // dispatched ops — same tolerance contract as the primitives.
+    let mut rng = Rng::new(0xE0_51D1);
+    let mut a = vec![0f32; 1021]; // prime length: worst-case tail
+    let mut b = vec![0f32; 1021];
+    rng.fill_normal(&mut a, 1.0);
+    rng.fill_normal(&mut b, 1.0);
+    let d = zeta::tensor::dot(&a, &b);
+    let s = zeta::tensor::sqdist(&a, &b);
+    assert!(close(simd::dot_with(Backend::Scalar, &a, &b), d));
+    assert!(close(simd::sqdist_with(Backend::Scalar, &a, &b), s));
+    // The seed's exact pinned values survive dispatch on every backend.
+    assert_eq!(zeta::tensor::dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    assert_eq!(zeta::tensor::sqdist(&[1.0, 2.0], &[1.0, 4.0]), 4.0);
+}
+
+#[test]
+fn elementwise_ops_are_bit_identical_to_scalar() {
+    let be = simd::backend();
+    let mut rng = Rng::new(0xE0_51D2);
+    for n in remainder_lengths() {
+        let mut x = vec![0f32; n];
+        let mut o = vec![0f32; n];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut o, 1.0);
+        let (mut o1, mut o2) = (o.clone(), o.clone());
+        simd::axpy_with(Backend::Scalar, &mut o1, -0.73, &x);
+        simd::axpy_with(be, &mut o2, -0.73, &x);
+        assert_eq!(o1, o2, "axpy must be bitwise (n={n}, {})", be.name());
+        simd::scale_with(Backend::Scalar, &mut o1, 2.31);
+        simd::scale_with(be, &mut o2, 2.31);
+        assert_eq!(o1, o2, "scale must be bitwise (n={n}, {})", be.name());
+    }
+}
+
+#[test]
+fn ssm_step_state_is_bitwise_and_readout_close() {
+    // The mamba recurrence carries `hrow` across tokens: any bit of drift
+    // there compounds over a sequence, so the state update must be
+    // bit-identical to scalar; only the returned readout (a lane
+    // reduction) gets the tolerance.
+    let be = simd::backend();
+    let mut rng = Rng::new(0xE0_51D3);
+    for ns in remainder_lengths() {
+        let mut b = vec![0f32; ns];
+        let mut c = vec![0f32; ns];
+        let mut h = vec![0f32; ns];
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut c, 1.0);
+        rng.fill_normal(&mut h, 1.0);
+        let mut decay = vec![0f32; ns];
+        for (s, d) in decay.iter_mut().enumerate() {
+            *d = (-0.25 * (s + 1) as f32 / ns.max(1) as f32).exp();
+        }
+        let (mut h1, mut h2) = (h.clone(), h.clone());
+        for step in 0..5 {
+            let y1 = simd::ssm_step_with(Backend::Scalar, &decay, &b, &c, 0.25, 0.8, &mut h1);
+            let y2 = simd::ssm_step_with(be, &decay, &b, &c, 0.25, 0.8, &mut h2);
+            assert_eq!(h1, h2, "carried state drifted (ns={ns}, step={step})");
+            assert!(close(y1, y2), "ssm readout ns={ns} step={step}: {y1} vs {y2}");
+        }
+    }
+}
+
+#[test]
+fn interleave_fast_path_is_bit_identical_for_every_dim() {
+    let be = simd::backend();
+    prop::check(300, 0xE0_51D4, |rng| {
+        let d = 1 + rng.usize_below(6);
+        let bits = zeta::zorder::bits_for_dim(d);
+        let mask = (1u32 << bits) - 1;
+        let coords: Vec<u32> = (0..d).map(|_| rng.next_u32() & mask).collect();
+        let seed_loop = simd::interleave_scalar(&coords, bits);
+        prop::assert_eq_prop(&simd::interleave_with(be, &coords, bits), &seed_loop)?;
+        // The public zorder entry point rides the same dispatch.
+        prop::assert_eq_prop(&zeta::zorder::interleave(&coords, bits), &seed_loop)
+    });
+}
+
+#[test]
+fn argmax_pins_nan_and_inf_logits() {
+    use zeta::coordinator::session::NativeDecodeModel;
+    // NaN never wins, never freezes the scan.
+    assert_eq!(NativeDecodeModel::argmax(&[f32::NAN, 1.0, 2.0]), 2);
+    assert_eq!(NativeDecodeModel::argmax(&[1.0, f32::NAN, 0.5]), 0);
+    assert_eq!(NativeDecodeModel::argmax(&[f32::NAN, f32::NAN]), 0);
+    // -inf loses to any finite logit but beats a NaN slot.
+    assert_eq!(NativeDecodeModel::argmax(&[f32::NEG_INFINITY, -1e30]), 1);
+    assert_eq!(NativeDecodeModel::argmax(&[f32::NAN, f32::NEG_INFINITY]), 1);
+    // +inf wins outright; first maximal wins on a tie of infinities.
+    assert_eq!(NativeDecodeModel::argmax(&[0.0, f32::INFINITY, 1e30]), 1);
+    let twoinf = [f32::INFINITY, f32::INFINITY, 0.0];
+    assert_eq!(NativeDecodeModel::argmax(&twoinf), 0);
+}
