@@ -160,6 +160,42 @@ pub trait DecodeState: Send {
     /// output row for `q_t` into `out` (length `dv`).
     fn step(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32], out: &mut [f32]);
 
+    /// Ingest a run of `n` consecutive tokens in one call: `qs` / `ks` are
+    /// `n` rows of width `qs.len() / n`, `vs` is `n` rows of width
+    /// `out.len()`, and `out` receives the *last* position's output row —
+    /// exactly what a serial [`DecodeState::step`] loop leaves behind.
+    ///
+    /// Contract (the prefill-pipelining gate in
+    /// `rust/tests/prefill_parallel.rs`): the resulting state *and* `out`
+    /// are bit-identical to stepping the same rows one at a time, at every
+    /// pool size. The default is that serial loop; kernels whose prefill
+    /// has internal parallelism override it — ZETA fans the per-position
+    /// candidate search out across frozen index snapshots, which is how a
+    /// single long prompt uses the whole pool during prefill.
+    fn prefill_run(
+        &mut self,
+        n: usize,
+        qs: &[f32],
+        ks: &[f32],
+        vs: &[f32],
+        out: &mut [f32],
+        _pool: &Pool,
+    ) {
+        if n == 0 {
+            return;
+        }
+        let d = qs.len() / n;
+        let dv = out.len();
+        for i in 0..n {
+            self.step(
+                &qs[i * d..(i + 1) * d],
+                &ks[i * d..(i + 1) * d],
+                &vs[i * dv..(i + 1) * dv],
+                out,
+            );
+        }
+    }
+
     /// Tokens ingested so far.
     fn pos(&self) -> usize;
 

@@ -196,14 +196,52 @@ impl ZetaNative {
         }
     }
 
-    /// Chunk-sequential candidate search over one shared persistent index.
+    /// Strictly-causal candidate search over one shared persistent index.
     /// `qcs` holds one query-code set per head sharing this key ordering
     /// ("one sort serves `heads` searches"); `kc` is the shared key codes.
-    /// Within each chunk phase, all (head, query) pairs search the frozen
-    /// index in parallel; between phases the chunk's keys are appended.
-    /// Phases run sequentially and free their scratch at each join, so the
-    /// reported workspace is the *peak* phase, not the sum.
+    ///
+    /// Two schedules of the same selection, chosen by the prefill
+    /// break-even ([`crate::util::breakeven::PARALLEL_PREFILL_SCORE_MIN_LOOKUPS`]):
+    ///
+    /// * **Chunk-sequential** ([`ZetaNative::search_multi_sequential`]) —
+    ///   one pool region per chunk phase, keys appended between phases.
+    ///   Serial at threads = 1 and the inline path for short prompts.
+    /// * **Pipelined** ([`ZetaNative::search_multi_pipelined`]) — all keys
+    ///   appended up front with an O(log N) [`ZIndex::fork`] snapshot at
+    ///   every chunk boundary, then *all* (chunk, head, query) lookups fan
+    ///   out in a single region, each against its chunk's frozen snapshot.
+    ///   Kills the phase-barrier serialization wall on long prompts.
+    ///
+    /// Snapshots are observationally identical to the live index at the
+    /// same prefix length (runs are immutable and `Arc`-shared), and
+    /// [`ZetaNative::select_into`] is shared verbatim, so the two schedules
+    /// produce bit-identical candidate tables — pinned per boundary by
+    /// `rust/tests/prefill_parallel.rs`.
     fn search_multi(&self, qcs: &[&[u32]], kc: &[u32], pool: &Pool) -> (Vec<Candidates>, usize) {
+        use crate::util::breakeven::{fan_out, PARALLEL_PREFILL_SCORE_MIN_LOOKUPS};
+        let n = kc.len();
+        let h = qcs.len();
+        let chunk = self.chunk.max(1);
+        // Queries in chunk 0 have an empty causal prefix and never search.
+        let total = n.saturating_sub(chunk) * h;
+        if fan_out(total, total, pool.threads(), PARALLEL_PREFILL_SCORE_MIN_LOOKUPS) {
+            self.search_multi_pipelined(qcs, kc, pool)
+        } else {
+            self.search_multi_sequential(qcs, kc, pool)
+        }
+    }
+
+    /// Chunk-sequential schedule: within each chunk phase, all (head,
+    /// query) pairs search the frozen index in parallel; between phases the
+    /// chunk's keys are appended. Phases run sequentially and free their
+    /// scratch at each join, so the reported workspace is the *peak*
+    /// phase, not the sum.
+    fn search_multi_sequential(
+        &self,
+        qcs: &[&[u32]],
+        kc: &[u32],
+        pool: &Pool,
+    ) -> (Vec<Candidates>, usize) {
         let n = kc.len();
         let h = qcs.len();
         let chunk = self.chunk.max(1);
@@ -286,6 +324,94 @@ impl ZetaNative {
             }
         }
         let ws = index.bytes() + cand_ws;
+        let cands = tables.into_iter().map(|idx| Candidates { idx, k: kk_cap }).collect();
+        (cands, ws)
+    }
+
+    /// Pipelined sequence-parallel schedule: the cheap serial parts run
+    /// once up front — every key appended chunk by chunk (O(N log N)
+    /// total) with an [`ZIndex::fork`] snapshot captured at each chunk
+    /// boundary (O(log N) `Arc` pointer clones each, the PR 5 substrate) —
+    /// then *every* (chunk, head, query) lookup fans out across the
+    /// resident pool in one region, each query searching its own chunk's
+    /// frozen snapshot. No phase barriers: a worker scoring chunk 1 never
+    /// waits for chunk 40's lookups, so long-prompt wall-clock approaches
+    /// (total lookups) / threads instead of Σ per-phase critical paths.
+    fn search_multi_pipelined(
+        &self,
+        qcs: &[&[u32]],
+        kc: &[u32],
+        pool: &Pool,
+    ) -> (Vec<Candidates>, usize) {
+        let n = kc.len();
+        let h = qcs.len();
+        let chunk = self.chunk.max(1);
+        let kk_cap = self.k;
+        let mut tables: Vec<Vec<u32>> = (0..h).map(|_| vec![u32::MAX; n * kk_cap]).collect();
+
+        // Serial front: append all keys, snapshotting at every boundary.
+        // snaps[j] is the index frozen at exactly (j+1)*chunk keys — the
+        // causal state queries of chunk j+1 must search. The final chunk's
+        // keys still enter the live index (callers account its bytes) but
+        // need no snapshot: no query in this call looks past them.
+        let mut index = ZIndex::new();
+        let mut snaps: Vec<ZIndex> = Vec::with_capacity(n / chunk + 1);
+        let mut cs = 0usize;
+        while cs < n {
+            let ce = (cs + chunk).min(n);
+            for &code in &kc[cs..ce] {
+                index.append(code);
+            }
+            if ce < n {
+                snaps.push(index.fork());
+            }
+            cs = ce;
+        }
+
+        // One region over all scoring items. Mapping interleaves heads so
+        // consecutive items share a query position (and thus a snapshot) —
+        // good locality for the per-worker window scratch.
+        let qstart = chunk.min(n);
+        let span = n - qstart;
+        let total = span * h;
+        let mut cand_ws = 0usize;
+        {
+            let shares: Vec<SharedSlice<u32>> =
+                tables.iter_mut().map(|t| SharedSlice::new(t.as_mut_slice())).collect();
+            let grain = pool.grain(total, 16);
+            let ws: Vec<usize> = pool.run_chunked(total, grain, |queue| {
+                let mut scratch = WindowScratch::default();
+                let mut win: Vec<(u32, u32)> = Vec::with_capacity(self.window);
+                let mut cand: Vec<(u32, u32)> = Vec::with_capacity(self.window);
+                while let Some(items) = queue.next_chunk() {
+                    for item in items {
+                        let i = qstart + item / h;
+                        let head = item % h;
+                        let snap = &snaps[i / chunk - 1];
+                        // Safety: row (head, i) claimed by exactly one chunk.
+                        let irow = unsafe { shares[head].range_mut(i * kk_cap..(i + 1) * kk_cap) };
+                        self.select_into(
+                            qcs[head][i],
+                            snap,
+                            &mut scratch,
+                            &mut win,
+                            &mut cand,
+                            irow,
+                        );
+                    }
+                }
+                (win.capacity() + cand.capacity()) * 8 + scratch.bytes()
+            });
+            cand_ws = cand_ws.max(ws.iter().sum::<usize>());
+        }
+        // Snapshots share every run allocation with the live index (fork
+        // is Arc clones), so their resident cost is O(log N) handles per
+        // boundary — not a second copy of the sorted prefix.
+        let snap_ws = snaps
+            .iter()
+            .map(|s| s.run_count() * std::mem::size_of::<Arc<Vec<(u32, u32)>>>())
+            .sum::<usize>();
+        let ws = index.bytes() + snap_ws + cand_ws;
         let cands = tables.into_iter().map(|idx| Candidates { idx, k: kk_cap }).collect();
         (cands, ws)
     }
@@ -593,6 +719,204 @@ impl DecodeState for ZetaDecode {
             out,
         );
         self.t += 1;
+    }
+
+    /// Pipelined long-prompt prefill: the serial O(N·d) parts of `step` —
+    /// project, encode, cache, history-mean prefix sums — run once up
+    /// front; the index advances chunk by chunk with an O(log N)
+    /// [`ZIndex::fork`] snapshot per boundary; then every position's
+    /// candidate search + Cauchy scoring fans out across the pool, each
+    /// position searching the snapshot frozen at its causal limit. The
+    /// last position runs inline on the state's own scratch, so the
+    /// post-run state (index, `indexed`, caches, running sums, scratch
+    /// rows) is bit-identical to a serial `step` loop — the decode
+    /// continuation after prefill can't tell the schedules apart.
+    ///
+    /// Strict causality is preserved exactly: the live index stops at the
+    /// *last* position's chunk limit, never ahead of it, and each scored
+    /// position only ever sees its own frozen prefix.
+    fn prefill_run(
+        &mut self,
+        n: usize,
+        qs: &[f32],
+        ks: &[f32],
+        vs: &[f32],
+        out: &mut [f32],
+        pool: &Pool,
+    ) {
+        use crate::util::breakeven::{fan_out, PARALLEL_PREFILL_SCORE_MIN_LOOKUPS};
+        if n == 0 {
+            return;
+        }
+        let d = qs.len() / n;
+        let dv = self.dv;
+        // Below the break-even (or on a serial pool) the inline step loop
+        // is faster and trivially bit-identical; only the last position's
+        // output survives either way.
+        if !fan_out(n - 1, n, pool.threads(), PARALLEL_PREFILL_SCORE_MIN_LOOKUPS) {
+            for i in 0..n {
+                self.step(
+                    &qs[i * d..(i + 1) * d],
+                    &ks[i * d..(i + 1) * d],
+                    &vs[i * dv..(i + 1) * dv],
+                    out,
+                );
+            }
+            return;
+        }
+        debug_assert_eq!(vs.len(), n * dv);
+        debug_assert_eq!(out.len(), dv);
+        let dk = self.cfg.d_k;
+        let dcopy = dk.min(self.d);
+        let t0 = self.t;
+        let chunk = self.cfg.chunk.max(1);
+
+        // ---- Serial front: project/encode/cache every key and prefix-scan
+        // the history means — the same arithmetic in the same order as
+        // `step`, hoisted out of the per-token loop. Per-position means and
+        // query codes are kept for the scoring fan-out below.
+        let mut qlow_all = vec![0f32; n * dk];
+        let mut qc_all = vec![0u32; n];
+        let mut km_all = vec![0f32; n * dk];
+        let mut vm_all = vec![0f32; n * dv];
+        for i in 0..n {
+            let t = t0 + i;
+            for x in self.klow.iter_mut() {
+                *x = 0.0;
+            }
+            self.klow[..dcopy].copy_from_slice(&ks[i * d..i * d + dcopy]);
+            let code = zorder::encode_point(&self.klow, self.cfg.range, self.bits);
+            self.codes.push(code);
+            self.kl.push_row(&self.klow);
+            let v_t = &vs[i * dv..(i + 1) * dv];
+            self.vcache.push_row(v_t);
+            for c in 0..dk {
+                self.ksum[c] += self.klow[c];
+                km_all[i * dk + c] = self.ksum[c] / (t + 1) as f32;
+            }
+            for c in 0..dv {
+                self.vsum[c] += v_t[c];
+                vm_all[i * dv + c] = self.vsum[c] / (t + 1) as f32;
+            }
+            let ql = &mut qlow_all[i * dk..(i + 1) * dk];
+            ql[..dcopy].copy_from_slice(&qs[i * d..i * d + dcopy]);
+            qc_all[i] = zorder::encode_point(ql, self.cfg.range, self.bits);
+        }
+
+        // ---- Snapshot ladder: advance the index to each chunk boundary a
+        // position in this run needs, forking at every rung. The live
+        // index stops at the last position's limit — exactly where serial
+        // stepping leaves `indexed` (appending further would leak future
+        // keys into the next step's selection).
+        let t_last = t0 + n - 1;
+        let l_first = (t0 / chunk) * chunk;
+        let l_last = (t_last / chunk) * chunk;
+        let mut snaps: Vec<ZIndex> = Vec::with_capacity((l_last - l_first) / chunk + 1);
+        let mut l = l_first;
+        loop {
+            while self.indexed < l {
+                self.index.append(self.codes.get(self.indexed));
+                self.indexed += 1;
+            }
+            snaps.push(self.index.fork());
+            if l >= l_last {
+                break;
+            }
+            l += chunk;
+        }
+
+        // ---- One region: score every position but the last against its
+        // frozen snapshot. Non-final output rows are computed and dropped —
+        // prefill surfaces only the last row, and doing the same
+        // per-position work as the serial schedule keeps threads = 1
+        // within noise of sequential while every thread count stays
+        // bitwise identical (per-position math is untouched and
+        // independent).
+        if n > 1 {
+            let m = n - 1;
+            let cfg = &self.cfg;
+            let kl = &self.kl;
+            let vcache = &self.vcache;
+            let snaps_ref = &snaps;
+            let qlow_ref = &qlow_all;
+            let qc_ref = &qc_all;
+            let km_ref = &km_all;
+            let vm_ref = &vm_all;
+            pool.run_chunked(m, pool.grain(m, 16), |queue| {
+                let mut scratch = WindowScratch::default();
+                let mut win: Vec<(u32, u32)> = Vec::with_capacity(cfg.window);
+                let mut cand: Vec<(u32, u32)> = Vec::with_capacity(cfg.window);
+                let mut irow = vec![u32::MAX; cfg.k];
+                let mut scores = vec![0f32; cfg.k];
+                let mut orow = vec![0f32; dv];
+                while let Some(items) = queue.next_chunk() {
+                    for i in items {
+                        let t = t0 + i;
+                        let limit = (t / chunk) * chunk;
+                        for s in irow.iter_mut() {
+                            *s = u32::MAX;
+                        }
+                        if limit > 0 {
+                            let snap = &snaps_ref[(limit - l_first) / chunk];
+                            cfg.select_into(
+                                qc_ref[i],
+                                snap,
+                                &mut scratch,
+                                &mut win,
+                                &mut cand,
+                                &mut irow,
+                            );
+                        }
+                        cauchy_row(
+                            cfg.eps,
+                            &irow,
+                            &qlow_ref[i * dk..(i + 1) * dk],
+                            kl,
+                            &km_ref[i * dk..(i + 1) * dk],
+                            &vm_ref[i * dv..(i + 1) * dv],
+                            vcache,
+                            &mut scores,
+                            &mut orow,
+                        );
+                    }
+                }
+            });
+        }
+
+        // ---- Last position inline on the state's own persistent buffers,
+        // leaving qlow/klow/km_t/vm_t/irow/scores and the window scratch
+        // exactly as a serial step loop would.
+        let i = n - 1;
+        self.km_t.copy_from_slice(&km_all[i * dk..(i + 1) * dk]);
+        self.vm_t.copy_from_slice(&vm_all[i * dv..(i + 1) * dv]);
+        self.qlow.copy_from_slice(&qlow_all[i * dk..(i + 1) * dk]);
+        for s in self.irow.iter_mut() {
+            *s = u32::MAX;
+        }
+        if l_last > 0 {
+            // The live index sits at exactly l_last keys — the last
+            // position's frozen prefix.
+            self.cfg.select_into(
+                qc_all[i],
+                &self.index,
+                &mut self.scratch,
+                &mut self.win,
+                &mut self.cand,
+                &mut self.irow,
+            );
+        }
+        cauchy_row(
+            self.cfg.eps,
+            &self.irow,
+            &self.qlow,
+            &self.kl,
+            &self.km_t,
+            &self.vm_t,
+            &self.vcache,
+            &mut self.scores,
+            out,
+        );
+        self.t += n;
     }
 
     fn pos(&self) -> usize {

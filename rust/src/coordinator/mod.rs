@@ -97,10 +97,13 @@ enum Request {
 /// backend takes its batch from the preset's compiled graph).
 const NATIVE_MAX_BATCH: usize = 8;
 
-/// Prompt tokens ingested per session per sweep while prefilling — the
-/// per-session micro-batch that keeps one long prompt from monopolizing a
-/// sweep (the *global* cap across sessions is `ServerConfig::prefill_budget`).
-const PREFILL_CHUNK: usize = 32;
+/// Default prefill chunk (`ServerConfig::prefill_chunk` / `--prefill-chunk`):
+/// the round-robin grant size, in prompt tokens, of the per-sweep prefill
+/// allocator. Chunks keep a burst of long prompts fair in arrival order;
+/// once every prefilling session holds a chunk, leftover budget keeps
+/// flowing, so a lone long prompt takes *many* chunks per sweep through the
+/// pipelined kernel path instead of serializing one micro-batch per sweep.
+const DEFAULT_PREFILL_CHUNK: usize = 32;
 
 /// Default global per-sweep prefill-token budget (`ServerConfig::prefill_budget`).
 const DEFAULT_PREFILL_BUDGET: usize = 256;
@@ -120,11 +123,17 @@ pub struct ServerConfig {
     /// (0 = the process-global pool, i.e. `ZETA_THREADS` / auto-detect).
     pub threads: usize,
     /// Global cap on prompt tokens ingested per scheduler sweep, summed
-    /// across *all* prefilling sessions (native backend). Sessions beyond
-    /// the budget wait in arrival order, so a burst of long prompts cannot
-    /// starve the decode wave's token cadence. Each session is still
-    /// individually capped at `PREFILL_CHUNK` per sweep. 0 = unlimited.
+    /// across *all* prefilling sessions (native backend). The budget is
+    /// dealt out round-robin in `prefill_chunk`-token grants in arrival
+    /// order, so a burst of long prompts cannot starve the decode wave's
+    /// token cadence — but when budget is left after every session holds a
+    /// grant, sessions keep accumulating chunks (the pipelined long-prompt
+    /// path). 0 = unlimited.
     pub prefill_budget: usize,
+    /// Round-robin grant size of the per-sweep prefill allocator
+    /// (`--prefill-chunk`), in prompt tokens. Must be >= 1 — rejected at
+    /// startup otherwise. Default [`DEFAULT_PREFILL_CHUNK`].
+    pub prefill_chunk: usize,
     /// Byte budget (`--kv-mem-budget`) over the native backend's page
     /// arena — the KV/code/state rows of every live session *and* the
     /// prompt-prefix cache. (Arena pages are the dominant share of decode
@@ -152,6 +161,7 @@ impl Default for ServerConfig {
             seed: 0,
             threads: 0,
             prefill_budget: DEFAULT_PREFILL_BUDGET,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
             kv_mem_budget: 0,
             native: None,
         }
@@ -245,6 +255,11 @@ impl Server {
     /// trainer checkpoint) are supplied. With `cfg.native` set, the server
     /// needs no artifacts at all.
     pub fn start(cfg: ServerConfig, params: Option<Vec<HostTensor>>) -> Result<Server> {
+        // Flag sanity up front: a zero grant size would make the prefill
+        // allocator spin without ever feeding a session.
+        if cfg.prefill_chunk == 0 {
+            bail!("--prefill-chunk must be at least 1 token per grant");
+        }
         // Budget sanity up front: a budget smaller than a single KV page
         // would admit sessions that can never allocate their first page.
         if let Some(ncfg) = &cfg.native {
@@ -285,7 +300,11 @@ impl Server {
                     match &cfg2.native {
                         Some(ncfg) => {
                             let model = NativeDecodeModel::new(ncfg.clone())?;
-                            let serving = NativeServing::new(model, cfg2.kv_mem_budget);
+                            let serving = NativeServing::new(
+                                model,
+                                cfg2.kv_mem_budget,
+                                cfg2.prefill_chunk,
+                            );
                             Ok((None, Backend::Native(serving), NATIVE_MAX_BATCH))
                         }
                         None => {
@@ -652,15 +671,18 @@ pub struct NativeServing {
     prefix: PrefixCache,
     /// Arena byte budget across every live decode state (0 = unlimited).
     budget: usize,
+    /// Round-robin grant size of the per-sweep prefill allocator
+    /// (`ServerConfig::prefill_chunk`), in prompt tokens (>= 1).
+    prefill_chunk: usize,
     /// Monotonic sweep counter; stamps [`Session::last_step`] so the
     /// budget preemption can evict the least-recently-stepped session.
     sweep_no: u64,
 }
 
 impl NativeServing {
-    pub fn new(model: NativeDecodeModel, budget: usize) -> NativeServing {
+    pub fn new(model: NativeDecodeModel, budget: usize, prefill_chunk: usize) -> NativeServing {
         let prefix = PrefixCache::new(model.page_tokens(), PREFIX_CACHE_CAP);
-        NativeServing { model, prefix, budget, sweep_no: 0 }
+        NativeServing { model, prefix, budget, prefill_chunk: prefill_chunk.max(1), sweep_no: 0 }
     }
 
     pub fn model(&self) -> &NativeDecodeModel {
@@ -844,10 +866,13 @@ impl NativeServing {
     ///    (prefix-cache shedding, then LRU session preemption), and parked
     ///    sessions are activated while the budget has headroom — via a
     ///    prompt-prefix-cache fork when their prompt head is cached.
-    /// 3. The active sessions partition into a *prefill wave* — bounded
-    ///    per session by `PREFILL_CHUNK` and globally by `prefill_budget`,
-    ///    so a burst of long prompts cannot starve decode cadence — and a
-    ///    *decode wave*.
+    /// 3. The active sessions partition into a *prefill wave* and a
+    ///    *decode wave*. The global `prefill_budget` is dealt out
+    ///    round-robin in `prefill_chunk`-token grants in arrival order, so
+    ///    a burst of long prompts cannot starve decode cadence; leftover
+    ///    budget keeps flowing once every session holds a grant, so a lone
+    ///    long prompt ingests many chunks per sweep through the pipelined
+    ///    prefill path instead of one micro-batch per sweep.
     /// 4. The prefill wave runs through
     ///    [`NativeDecodeModel::prefill_batch`] (across-session
     ///    pool-parallel; sessions whose prompt completes emit their first
@@ -884,9 +909,9 @@ impl NativeServing {
         // Partition the active sessions into the budgeted prefill wave and
         // the fused decode wave. Indices stay valid for the whole sweep:
         // retirement happens at the end.
-        let mut prefill: Vec<(usize, usize)> = Vec::new(); // (session idx, tokens)
         let mut decode: Vec<usize> = Vec::new();
-        let mut remaining = if prefill_budget == 0 { usize::MAX } else { prefill_budget };
+        // (session idx, this sweep's cap, tokens allocated so far)
+        let mut want: Vec<(usize, usize, usize)> = Vec::new();
         for (idx, s) in sessions.iter().enumerate() {
             if s.state.is_none() {
                 continue; // parked under the memory budget
@@ -902,17 +927,37 @@ impl NativeServing {
                         cap = cap.min(cl - s.fed);
                     }
                 }
-                let take = cap.min(PREFILL_CHUNK).min(remaining);
-                if take > 0 {
-                    remaining -= take;
-                    prefill.push((idx, take));
-                }
-                // take == 0: budget exhausted — the session waits its turn
-                // (arrival order keeps the wave fair across sweeps).
+                want.push((idx, cap, 0));
             } else {
                 decode.push(idx);
             }
         }
+        // Deal the budget out in `prefill_chunk`-token grants, round-robin
+        // in arrival order: the first round reproduces the classic
+        // one-chunk-per-session fairness, further rounds let leftover
+        // budget accumulate on still-hungry sessions (each session stays
+        // one contiguous token run — a single `prefill_batch` slot feeding
+        // the pipelined kernel path). A session granted nothing waits its
+        // turn; arrival order keeps the wave fair across sweeps.
+        let mut remaining = if prefill_budget == 0 { usize::MAX } else { prefill_budget };
+        let mut granted = true;
+        while remaining > 0 && granted {
+            granted = false;
+            for w in want.iter_mut() {
+                let grant = self.prefill_chunk.min(w.1 - w.2).min(remaining);
+                if grant > 0 {
+                    w.2 += grant;
+                    remaining -= grant;
+                    granted = true;
+                }
+                if remaining == 0 {
+                    break;
+                }
+            }
+        }
+        // (session idx, tokens granted this sweep)
+        let prefill: Vec<(usize, usize)> =
+            want.into_iter().filter(|w| w.2 > 0).map(|w| (w.0, w.2)).collect();
 
         let mut retire_done: Vec<usize> = Vec::new();
         let mut retire_silent: Vec<usize> = Vec::new();
@@ -1434,7 +1479,7 @@ mod tests {
             Some(model.begin()),
             cancel,
         )];
-        let mut serving = NativeServing::new(model, 0);
+        let mut serving = NativeServing::new(model, 0, DEFAULT_PREFILL_CHUNK);
         let mut scratch = StepScratch::default();
         let pool = Pool::serial();
         serving.sweep(&mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
@@ -1464,7 +1509,7 @@ mod tests {
             Some(model.begin()),
             cancel,
         )];
-        let mut serving = NativeServing::new(model, 0);
+        let mut serving = NativeServing::new(model, 0, DEFAULT_PREFILL_CHUNK);
         let mut scratch = StepScratch::default();
         let pool = Pool::serial();
         serving.sweep(&mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
@@ -1479,8 +1524,9 @@ mod tests {
     #[test]
     fn prefill_budget_bounds_per_sweep_prompt_work() {
         // Three 100-token prompts under a 40-token global budget: the
-        // first session gets its full 32-token chunk, the second the 8
-        // remaining budget tokens, the third waits.
+        // round-robin allocator grants the first session a full
+        // `DEFAULT_PREFILL_CHUNK` (32), the second the 8 remaining budget
+        // tokens, and the third waits.
         let model = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let depth = Arc::new(AtomicUsize::new(3));
@@ -1498,18 +1544,21 @@ mod tests {
                 Arc::new(AtomicBool::new(false)),
             ));
         }
-        let mut serving = NativeServing::new(model, 0);
+        let mut serving = NativeServing::new(model, 0, DEFAULT_PREFILL_CHUNK);
         let mut scratch = StepScratch::default();
         let pool = Pool::serial();
         serving.sweep(&mut sessions, &metrics, &depth, &mut scratch, &pool, 40);
         let fed: Vec<usize> = sessions.iter().map(|s| s.fed).collect();
         assert_eq!(fed, vec![32, 8, 0]);
-        // Unlimited budget (0): every session advances a full chunk.
+        // Unlimited budget (0): round-robin grants keep cycling until every
+        // session hits its per-sweep cap — here the 64-token prefix-cache
+        // boundary of the 100-token prompt — so a lone long prompt no longer
+        // serializes one chunk per sweep.
         serving.sweep(&mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
         let fed: Vec<usize> = sessions.iter().map(|s| s.fed).collect();
-        assert_eq!(fed, vec![64, 40, 32]);
-        // The first session crossed the 64-token page boundary: its
-        // page-aligned prompt prefix is now snapshotted in the cache.
+        assert_eq!(fed, vec![64, 64, 64]);
+        // All three sessions crossed the 64-token page boundary with the
+        // same prompt: one shared page-aligned prefix snapshot in the cache.
         assert_eq!(serving.prefix_cache().len(), 1);
     }
 
@@ -1551,6 +1600,52 @@ mod tests {
         }
         let err = Server::start(cfg, None).unwrap_err().to_string();
         assert!(err.contains("kv-page"), "{err}");
+    }
+
+    #[test]
+    fn prefill_chunk_of_zero_is_rejected_with_clear_error() {
+        // A zero grant size would make the round-robin allocator spin
+        // forever without feeding anyone — reject it at startup, like
+        // --kv-mem-budget below one page.
+        let mut cfg = native_cfg("zeta");
+        cfg.prefill_chunk = 0;
+        let err = Server::start(cfg, None).unwrap_err().to_string();
+        assert!(err.contains("prefill-chunk"), "{err}");
+        // The smallest useful grant (1 token) is accepted.
+        let mut cfg = native_cfg("zeta");
+        cfg.prefill_chunk = 1;
+        let srv = Server::start(cfg, None).unwrap();
+        srv.shutdown();
+    }
+
+    #[test]
+    fn custom_prefill_chunk_drives_round_robin_grants() {
+        // chunk = 16 under a 40-token budget: the allocator hands out
+        // 16, 16, then the 8 leftover tokens — a smaller grant size
+        // interleaves sessions more fairly than the default 32.
+        let model = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let depth = Arc::new(AtomicUsize::new(3));
+        let mut rxs = Vec::new();
+        let mut sessions = Vec::new();
+        for _ in 0..3 {
+            let (tx, rx) = mpsc::channel();
+            rxs.push(rx);
+            sessions.push(Session::new(
+                vec![7; 100],
+                4,
+                Instant::now(),
+                tx,
+                Some(model.begin()),
+                Arc::new(AtomicBool::new(false)),
+            ));
+        }
+        let mut serving = NativeServing::new(model, 0, 16);
+        let mut scratch = StepScratch::default();
+        let pool = Pool::serial();
+        serving.sweep(&mut sessions, &metrics, &depth, &mut scratch, &pool, 40);
+        let fed: Vec<usize> = sessions.iter().map(|s| s.fed).collect();
+        assert_eq!(fed, vec![16, 16, 8]);
     }
 
     #[test]

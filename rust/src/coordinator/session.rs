@@ -331,45 +331,61 @@ impl NativeDecodeModel {
             let ish = SharedSlice::new(items);
             let nsh = SharedSlice::new(&mut scratch.next);
             pool.run_chunked(n, 1, |queue| {
-                let mut orow = vec![0f32; self.cfg.dv];
+                let mut emb = PrefillEmbed::default();
                 let mut logits = Vec::new();
                 while let Some(slots) = queue.next_chunk() {
                     for i in slots {
                         // Safety: slot i is claimed by exactly one chunk,
                         // and every slot owns a distinct state.
                         let it = unsafe { &mut ish.range_mut(i..i + 1)[0] };
-                        let nx = self.prefill_slot(it, &mut orow, &mut logits);
+                        let nx = self.prefill_slot(it, &mut emb, &mut logits, pool);
                         unsafe { nsh.write(i, nx) };
                     }
                 }
             });
         } else {
-            let mut orow = vec![0f32; self.cfg.dv];
+            // Single-slot and below-break-even waves run here with the
+            // *real* pool: a lone long prompt still fans out inside
+            // `prefill_run` (the pipelined ZETA path), which is what lets
+            // one session's prefill use every worker.
+            let mut emb = PrefillEmbed::default();
             let mut logits = Vec::new();
             for (i, it) in items.iter_mut().enumerate() {
-                scratch.next[i] = self.prefill_slot(it, &mut orow, &mut logits);
+                scratch.next[i] = self.prefill_slot(it, &mut emb, &mut logits, pool);
             }
         }
     }
 
-    /// Feed one slot's prompt tokens; returns the argmax of the final
-    /// logits when the slot emits, else -1.
+    /// Feed one slot's prompt tokens through the state's run-at-a-time
+    /// prefill entry ([`DecodeState::prefill_run`] — the serial step loop
+    /// for most kernels, the pipelined snapshot-scored path for ZETA);
+    /// returns the argmax of the final logits when the slot emits, else -1.
     fn prefill_slot(
         &self,
         it: &mut PrefillStep<'_>,
-        orow: &mut Vec<f32>,
+        emb: &mut PrefillEmbed,
         logits: &mut Vec<f32>,
+        pool: &Pool,
     ) -> i32 {
-        orow.resize(self.cfg.dv, 0.0);
-        let last = it.tokens.len();
-        for (i, &tok) in it.tokens.iter().enumerate() {
-            let (q, k, v) = self.embed_rows(tok);
-            it.state.step(q, k, v, orow);
-            if it.emit && i + 1 == last {
-                self.readout(orow, logits);
-            }
+        let (d, dv) = (self.cfg.d, self.cfg.dv);
+        emb.orow.resize(dv, 0.0);
+        let m = it.tokens.len();
+        if m == 0 {
+            return -1;
         }
-        if it.emit && last > 0 {
+        emb.qs.clear();
+        emb.ks.clear();
+        emb.vs.clear();
+        for &tok in it.tokens {
+            let (q, k, v) = self.embed_rows(tok);
+            emb.qs.extend_from_slice(q);
+            emb.ks.extend_from_slice(k);
+            emb.vs.extend_from_slice(v);
+        }
+        debug_assert_eq!(emb.qs.len(), m * d);
+        it.state.prefill_run(m, &emb.qs, &emb.ks, &emb.vs, &mut emb.orow, pool);
+        if it.emit {
+            self.readout(&emb.orow, logits);
             Self::argmax(logits)
         } else {
             -1
@@ -404,6 +420,18 @@ pub struct StepScratch {
     /// Per-slot argmax token after a fused call (-1 for prefill slots that
     /// did not finish their prompt).
     pub next: Vec<i32>,
+}
+
+/// Per-worker embed buffers for one prefill slot: the slot's whole token
+/// run is embedded into flat q/k/v row blocks so the state ingests it in
+/// one [`crate::attention::DecodeState::prefill_run`] call (reused across
+/// slots — no per-slot allocation churn).
+#[derive(Default)]
+struct PrefillEmbed {
+    qs: Vec<f32>,
+    ks: Vec<f32>,
+    vs: Vec<f32>,
+    orow: Vec<f32>,
 }
 
 /// Events on a generation stream, in order: `max_new` `Token`s, then one

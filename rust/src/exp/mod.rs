@@ -757,6 +757,150 @@ pub fn decode_batch(opts: &Opts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Prefill — pipelined sequence-parallel prompt scoring vs the serial wall
+// ---------------------------------------------------------------------------
+
+/// `exp prefill`: time-to-first-token for one long prompt through the
+/// serving prefill path. The sequential arm feeds the whole prompt through
+/// `prefill_batch` on a 1-thread pool: the fan-out gate keeps it on the
+/// inline chunk-sequential step loop, i.e. the pre-pipelining
+/// serialization wall. The pipelined arm runs the same call on a t-thread
+/// pool, which Morton-encodes and appends all keys up front, snapshots the
+/// Z-order index at every chunk boundary (`ZIndex::fork`, O(log N) each),
+/// and fans all (chunk, head, query) scoring across the resident team in
+/// one region (break-even:
+/// [`crate::util::breakeven::PARALLEL_PREFILL_SCORE_MIN_LOOKUPS`]). An
+/// equivalence gate first proves both schedules hand decode the same
+/// state: same first token, then eight bitwise-identical greedy
+/// continuation steps. Writes `results/prefill.json` and the
+/// machine-readable `BENCH_prefill.json`; `seq_ms` is the shared serial
+/// baseline repeated in every row, the same convention as
+/// `BENCH_kernels.json`.
+pub fn prefill(opts: &Opts) -> Result<()> {
+    use crate::coordinator::session::{
+        NativeDecodeModel, NativeModelConfig, PrefillStep, StepScratch,
+    };
+
+    let lens: Vec<usize> =
+        [4096usize, 16384, 65536].into_iter().filter(|&n| n <= opts.max_len).collect();
+    if lens.is_empty() {
+        bail!("exp prefill needs --max-len >= 4096");
+    }
+    let tcounts = [1usize, 2, 4, 8];
+    let model = NativeDecodeModel::new(NativeModelConfig {
+        kernel: "zeta".into(),
+        d: 64,
+        dv: 64,
+        vocab: 1024,
+        seed: opts.seed,
+        max_context: 0,
+        ..Default::default()
+    })?;
+    let mut rng = Rng::new(opts.seed ^ 0x9EF1);
+    let max_n = *lens.iter().max().unwrap();
+    let prompt: Vec<i32> = (0..max_n).map(|_| rng.below(1024) as i32).collect();
+
+    // Equivalence gate: the pipelined schedule must leave exactly the
+    // decode state the serial per-token step loop would have.
+    {
+        let n = lens[0];
+        let (mut orow, mut la, mut lb) = (Vec::new(), Vec::new(), Vec::new());
+        let mut a = model.begin();
+        for &tok in &prompt[..n] {
+            model.step_token(a.as_mut(), tok, &mut orow, &mut la);
+        }
+        let mut b = model.begin();
+        let mut scratch = StepScratch::default();
+        let pool = Pool::new(4);
+        {
+            let mut items = vec![PrefillStep {
+                state: b.as_mut(),
+                tokens: &prompt[..n],
+                emit: true,
+            }];
+            model.prefill_batch(&mut items, &mut scratch, &pool);
+        }
+        let mut tok_a = NativeDecodeModel::argmax(&la);
+        let mut tok_b = scratch.next[0];
+        if tok_a != tok_b {
+            bail!("prefill equivalence gate failed: first token {tok_b} != serial {tok_a}");
+        }
+        for step in 0..8 {
+            model.step_token(a.as_mut(), tok_a, &mut orow, &mut la);
+            model.step_token(b.as_mut(), tok_b, &mut orow, &mut lb);
+            if la != lb {
+                bail!("prefill equivalence gate failed: logits diverge at decode step {step}");
+            }
+            tok_a = NativeDecodeModel::argmax(&la);
+            tok_b = NativeDecodeModel::argmax(&lb);
+        }
+        println!(
+            "equivalence zeta   ✓ (pipelined prefill == serial step loop, {n} prompt tokens \
+             + 8 decode steps bitwise)"
+        );
+    }
+
+    println!(
+        "\n== Prefill: time-to-first-token — pipelined sequence-parallel scoring vs the \
+         serial chunk loop =="
+    );
+    println!(
+        "{:<8}{:<8}{:<5}{:>12}{:>12}{:>10}",
+        "kernel", "N", "thr", "seq ms", "pipe ms", "speedup"
+    );
+    let mut rec = BTreeMap::new();
+    let mut bench_rows: Vec<Json> = Vec::new();
+    for &n in &lens {
+        // One TTFT sample: fresh state, whole prompt, one emitted token.
+        // Short prompts take the best of two runs to damp scheduler noise.
+        let ttft = |pool: &Pool| -> f64 {
+            let reps = if n <= 4096 { 2 } else { 1 };
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let mut st = model.begin();
+                let mut scratch = StepScratch::default();
+                let t0 = Instant::now();
+                {
+                    let mut items = vec![PrefillStep {
+                        state: st.as_mut(),
+                        tokens: &prompt[..n],
+                        emit: true,
+                    }];
+                    model.prefill_batch(&mut items, &mut scratch, pool);
+                }
+                best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+                bench::black_box(&scratch.next);
+            }
+            best
+        };
+        let seq_ms = ttft(&Pool::serial());
+        for &t in &tcounts {
+            let pool = Pool::new(t);
+            let pipe_ms = ttft(&pool);
+            let speedup = seq_ms / pipe_ms.max(1e-9);
+            println!("{:<8}{n:<8}{t:<5}{seq_ms:>12.1}{pipe_ms:>12.1}{speedup:>9.2}x", "zeta");
+            rec.insert(
+                format!("zeta_n{n}_t{t}"),
+                Json::obj(vec![("seq_ms", Json::num(seq_ms)), ("pipe_ms", Json::num(pipe_ms))]),
+            );
+            bench_rows.push(Json::obj(vec![
+                ("bench", Json::str("prefill")),
+                ("kernel", Json::str("zeta")),
+                ("n", Json::num(n as f64)),
+                ("threads", Json::num(t as f64)),
+                ("seq_ms", Json::num(seq_ms)),
+                ("pipe_ms", Json::num(pipe_ms)),
+                ("speedup", Json::num(speedup)),
+            ]));
+        }
+    }
+    println!("(seq = prefill_batch on a 1-thread pool: the inline chunk-sequential step loop)");
+    record(opts, "prefill", Json::Obj(rec))?;
+    write_bench("prefill", bench_rows);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Pool — parallel-region launch latency: resident team vs scoped spawns
 // ---------------------------------------------------------------------------
 
@@ -1442,7 +1586,7 @@ pub fn mem(opts: &Opts) -> Result<()> {
             max_context: 0,
             ..Default::default()
         })?;
-        let mut serving = NativeServing::new(model, kv_budget);
+        let mut serving = NativeServing::new(model, kv_budget, 32);
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let t0 = Instant::now();
         let streams = serving.drive_to_completion(&prompts, 32, &metrics, &Pool::serial());
@@ -1535,6 +1679,7 @@ pub fn all(engine: &Engine, opts: &Opts) -> Result<()> {
     table4(opts)?;
     kernels(opts)?;
     decode(opts)?;
+    prefill(opts)?;
     pool(opts)?;
     mem(opts)?;
     table5(engine, opts)?;

@@ -37,15 +37,33 @@
 //! history-mean state, so each generated token costs O(log N + k) instead
 //! of an O(N log N) re-sort. The coordinator turns `generate` requests
 //! into [`coordinator::session::Session`]s and continuously batches them:
-//! every sweep runs a prefill wave (per-session `PREFILL_CHUNK` micro-
-//! batches under a *global* per-sweep prefill-token budget) and a *fused
-//! decode wave* — one pool-parallel [`attention::AttentionImpl::step_batch`]
+//! every sweep runs a prefill wave (round-robin `--prefill-chunk` token
+//! grants across still-prefilling sessions under a *global* per-sweep
+//! prefill-token budget) and a *fused decode wave* — one pool-parallel
+//! [`attention::AttentionImpl::step_batch`]
 //! kernel call across all ready sessions — interleaved with one-shot infer
 //! batches. `rust/tests/decode_equivalence.rs` pins decode output to the
 //! full-sequence forward row-for-row, `rust/tests/fused_sweep.rs` pins
 //! fused sweeps to serial stepping; `zeta exp decode` prices incremental
 //! vs full-recompute per token (`BENCH_decode.json`) and fused vs serial
 //! multi-session sweeps (`BENCH_decode_batch.json`).
+//!
+//! ## Pipelined long-context prefill
+//!
+//! A long prompt's chunk phases used to serialize — each chunk's scoring
+//! blocked the next chunk's index appends. The pipelined schedule splits
+//! the true dependency: a serial front Morton-encodes and appends all
+//! keys chunk-by-chunk, freezing an O(log N)-cost
+//! [`zorder::index::ZIndex::fork`] snapshot at every chunk boundary, then
+//! *all* (chunk, head, query) scoring fans out in one pool region, each
+//! query searching its chunk's frozen snapshot. The same restructuring
+//! drives [`attention::AttentionImpl::forward_with`] for ZETA and the
+//! serving-side [`attention::DecodeState::prefill_run`] ingest; both are
+//! bit-identical to the sequential schedule (tier-1 gate
+//! `rust/tests/prefill_parallel.rs`) and gated on
+//! [`util::breakeven::PARALLEL_PREFILL_SCORE_MIN_LOOKUPS`]. `zeta exp
+//! prefill` prices TTFT at {4k, 16k, 64k} tokens × {1, 2, 4, 8} threads
+//! (`BENCH_prefill.json`).
 //!
 //! ## Paged decode-state memory
 //!

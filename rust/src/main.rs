@@ -98,22 +98,27 @@ commands:
   train  --preset P [--steps N] [--seed S] [--ckpt PATH] [--eval-batches B]
   serve  --preset P [--requests N] [--clients C] [--max-delay-ms D]
          [--generate] [--max-new N] [--native] [--native-kernel K]
-         [--prefill-budget T] [--max-context N]
-         [--kv-page TOKENS] [--kv-mem-budget BYTES]
+         [--prefill-budget T] [--prefill-chunk T] [--prompt-len N]
+         [--max-context N] [--kv-page TOKENS] [--kv-mem-budget BYTES]
   exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--threads T]
          [--verbose]
          NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3, table1, table2,
                  table3, table4, table5, table6, kernels, decode,
-                 decode_batch, pool, mem, all}
+                 decode_batch, prefill, pool, mem, all}
 
 serving:
   `serve` runs one-shot batched inference by default. With --generate each
   request becomes a streaming generation session. On the native backend
   every scheduler sweep splits the live sessions into a prefill wave —
-  bounded globally by --prefill-budget prompt tokens per sweep (0 =
-  unlimited), so bursts of long prompts cannot starve token cadence — and
-  a *fused decode wave*: one pool-parallel step_batch kernel call across
-  all ready sessions. (The PJRT backend decodes by full-recompute forward
+  prompt tokens are granted round-robin in --prefill-chunk slices
+  (default 32, must be >= 1) under the global --prefill-budget cap per
+  sweep (0 = unlimited), so bursts of long prompts cannot starve token
+  cadence while a lone long prompt still prefills in one sweep through
+  the pipelined sequence-parallel kernel path — and a *fused decode
+  wave*: one pool-parallel step_batch kernel call across all ready
+  sessions. --prompt-len N fixes every request's prompt length instead
+  of sampling short prompts (long-context prefill smokes pair it with
+  --max-context 0). (The PJRT backend decodes by full-recompute forward
   batches; --prefill-budget and --max-context apply to native serving.)
   --native (or missing artifacts) serves with the in-process native decode
   engine — per-request kernel decode state (ZETA: persistent Z-order
@@ -148,9 +153,13 @@ parallelism:
   writes the machine-readable BENCH_table3.json perf trajectory, `exp
   decode` writes BENCH_decode.json (incremental vs full-recompute
   per-token cost) plus BENCH_decode_batch.json (fused vs serial
-  multi-session sweeps over a sessions × threads grid), and `exp pool`
-  writes BENCH_pool.json (region launch latency: resident team vs scoped
-  spawns, plus the fan-out break-even sweep).
+  multi-session sweeps over a sessions × threads grid), `exp prefill`
+  writes BENCH_prefill.json (long-prompt time-to-first-token: pipelined
+  sequence-parallel prefill — index snapshots at every chunk boundary,
+  all scoring fanned out in one region — vs the serial chunk loop, over
+  a prompt-length × threads grid), and `exp pool` writes BENCH_pool.json
+  (region launch latency: resident team vs scoped spawns, plus the
+  fan-out break-even sweep).
 
 simd:
   The f32 kernel inner loops (Cauchy scoring, softmax rows, the mamba
@@ -229,6 +238,13 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     // (native backend; 0 = unlimited).
     let default_budget = ServerConfig::default().prefill_budget;
     let prefill_budget = flag_usize(f, "prefill-budget", default_budget)?;
+    // Round-robin prompt-token grant size per prefilling session per sweep
+    // (native backend; must be >= 1 — Server::start rejects 0).
+    let default_chunk = ServerConfig::default().prefill_chunk;
+    let prefill_chunk = flag_usize(f, "prefill-chunk", default_chunk)?;
+    // Fixed prompt length for every request (0 = sample short prompts).
+    // Long-context prefill smokes combine this with --max-context 0.
+    let prompt_len = flag_usize(f, "prompt-len", 0)?;
     // Per-session context cap, prompt + generated (native backend;
     // 0 = unlimited).
     let default_ctx = NativeModelConfig::default().max_context;
@@ -263,6 +279,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
                 native: Some(ncfg),
                 max_delay,
                 prefill_budget,
+                prefill_chunk,
                 kv_mem_budget,
                 ..Default::default()
             },
@@ -275,6 +292,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
             preset: preset.clone(),
             max_delay,
             prefill_budget,
+            prefill_chunk,
             ..Default::default()
         };
         (cfg, seq, format!("preset {preset}"))
@@ -305,8 +323,14 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
                 // Generation needs room for new tokens in the context, so
                 // generate-mode prompts additionally stay below seq.
                 let lo = seq.min(8).max(1);
-                let mut len = if seq > lo { lo + rng.usize_below(seq - lo) } else { lo };
-                if generate {
+                let mut len = if prompt_len > 0 {
+                    prompt_len
+                } else if seq > lo {
+                    lo + rng.usize_below(seq - lo)
+                } else {
+                    lo
+                };
+                if generate && prompt_len == 0 {
                     len = len.min(seq.saturating_sub(1)).max(1);
                 }
                 let toks: Vec<i32> = (0..len).map(|_| 1 + rng.below(200) as i32).collect();
@@ -334,8 +358,8 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
     let opts = opts_from_flags(f)?;
-    // fig3 / table3 / table4 / kernels / decode / decode_batch / pool / mem
-    // need no artifacts
+    // fig3 / table3 / table4 / kernels / decode / decode_batch / prefill /
+    // pool / mem need no artifacts
     match which {
         "fig3" => return exp::fig3(&opts),
         "table3" => return exp::table3(&opts),
@@ -343,6 +367,7 @@ fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
         "kernels" => return exp::kernels(&opts),
         "decode" => return exp::decode(&opts),
         "decode_batch" => return exp::decode_batch(&opts),
+        "prefill" => return exp::prefill(&opts),
         "pool" => return exp::pool(&opts),
         "mem" => return exp::mem(&opts),
         _ => {}

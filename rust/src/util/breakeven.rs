@@ -21,6 +21,13 @@
 //! memcpy-bound (not vectorized by the kernel layer) and the search bound
 //! counts index-window lookups (select/scan, not lane math), so both stay.
 //!
+//! The pipelined prefill path (PR 7) scores *every* chunk phase of a long
+//! prompt in one region instead of one region per phase, so its bound is
+//! denominated in window lookups across the whole run, not per phase: a
+//! run has to carry at least a few phases' worth of lookups (4× the
+//! per-phase bound) before snapshotting the index at every chunk boundary
+//! and waking the team beats the inline chunk-sequential loop.
+//!
 //! | constant | spawns | resident (PR 4) | SIMD (now) | unit |
 //! |---|---|---|---|---|
 //! | [`PARALLEL_STEP_MIN_OPS`]     | 2^17 | 2^13 | 2^15 | est. scalar ops / sweep |
@@ -28,6 +35,7 @@
 //! | [`PARALLEL_READOUT_MIN_OPS`]  | 2^18 | 2^14 | 2^16 | scalar ops (slots·vocab·dv) |
 //! | [`PARALLEL_PAD_MIN_ELEMS`]    | 2^20 | 2^16 | 2^16 | i32 token elements |
 //! | [`PARALLEL_SEARCH_MIN_LOOKUPS`] | 256 | 64 | 64 | window lookups / phase |
+//! | [`PARALLEL_PREFILL_SCORE_MIN_LOOKUPS`] | — | — | 256 | window lookups / prefill run |
 //!
 //! Every call site funnels through [`fan_out`], and the unit tests here pin
 //! the decision boundary to the documented values — change a threshold and
@@ -54,6 +62,14 @@ pub const PARALLEL_PAD_MIN_ELEMS: usize = 1 << 16;
 /// top-k select, far heavier than one scalar op — hence the smaller bound).
 pub const PARALLEL_SEARCH_MIN_LOOKUPS: usize = 64;
 
+/// Minimum `(chunk, head, query)` window lookups across a whole pipelined
+/// prefill run before the sequence-parallel path snapshots the index at
+/// every chunk boundary and fans all scoring out in one region (PR 7).
+/// Small prompts stay on the inline chunk-sequential loop — 4× the
+/// per-phase search bound, since the pipelined schedule also pays the
+/// O(log N) `ZIndex::fork` per chunk boundary up front.
+pub const PARALLEL_PREFILL_SCORE_MIN_LOOKUPS: usize = 256;
+
 /// The single inline-vs-fan-out decision: a region is worth waking the
 /// resident team when it has at least two independent slots, the pool has
 /// more than one thread, and the estimated work clears the call site's
@@ -74,6 +90,7 @@ mod tests {
         assert_eq!(PARALLEL_READOUT_MIN_OPS, 65536);
         assert_eq!(PARALLEL_PAD_MIN_ELEMS, 65536);
         assert_eq!(PARALLEL_SEARCH_MIN_LOOKUPS, 64);
+        assert_eq!(PARALLEL_PREFILL_SCORE_MIN_LOOKUPS, 256);
     }
 
     #[test]
@@ -84,6 +101,7 @@ mod tests {
             PARALLEL_READOUT_MIN_OPS,
             PARALLEL_PAD_MIN_ELEMS,
             PARALLEL_SEARCH_MIN_LOOKUPS,
+            PARALLEL_PREFILL_SCORE_MIN_LOOKUPS,
         ] {
             assert!(!fan_out(2, min - 1, 4, min), "one op under the break-even must stay inline");
             assert!(fan_out(2, min, 4, min), "at the break-even the region must fan out");

@@ -380,6 +380,61 @@ mod tests {
     }
 
     #[test]
+    fn boundary_snapshots_answer_windows_like_the_live_prefix() {
+        // The pipelined prefill contract (PR 7): a `fork()` frozen at every
+        // chunk edge must answer every window byte-identically to the live
+        // index at the same prefix length — i.e. to a full rebuild of that
+        // prefix — even as the original keeps appending far past the
+        // snapshot.
+        prop::check(12, 0x21DE5, |rng| {
+            let chunk = [4usize, 8, 16, 32][rng.usize_below(4)];
+            let n = chunk + 1 + rng.usize_below(300);
+            let dup_heavy = rng.below(2) == 0;
+            let codes: Vec<u32> = (0..n)
+                .map(|_| {
+                    if dup_heavy {
+                        rng.next_u32() % 31
+                    } else {
+                        rng.next_u32() & 0x7FFF_FFFF
+                    }
+                })
+                .collect();
+            let mut live = ZIndex::new();
+            let mut snaps: Vec<(usize, ZIndex)> = Vec::new();
+            for (t, &c) in codes.iter().enumerate() {
+                live.append(c);
+                if (t + 1) % chunk == 0 {
+                    snaps.push((t + 1, live.fork()));
+                }
+            }
+            let mut scratch = WindowScratch::default();
+            let mut got = Vec::new();
+            for (prefix, snap) in &snaps {
+                let sorted = ref_sorted(&codes[..*prefix]);
+                prop::assert_eq_prop(&snap.sorted_entries(), &sorted)?;
+                for w in [1usize, 2, 8, 64] {
+                    let probes = [
+                        codes[rng.usize_below(*prefix)],
+                        codes[rng.usize_below(*prefix)].wrapping_add(1),
+                        rng.next_u32() & 0x7FFF_FFFF,
+                    ];
+                    for probe in probes {
+                        snap.window_with(probe, w, &mut scratch, &mut got);
+                        let want = ref_window(&sorted, probe, w);
+                        if got != want {
+                            return Err(format!(
+                                "chunk {chunk} prefix {prefix} w {w} probe {probe}: \
+                                 {got:?} != {want:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn rank_matches_partition_point() {
         prop::check(30, 0x21DE3, |rng| {
             let n = 1 + rng.usize_below(200);

@@ -185,10 +185,10 @@ fn fused_paths_engage_pool_fanout_and_stay_exact() {
 
 #[test]
 fn fused_sweep_streams_match_serial_reference_per_kernel() {
-    // Mixed prompt lengths: several prompts span multiple PREFILL_CHUNK
-    // micro-batches and, under a 48-token global prefill budget, contend
-    // for the same sweep — so prefill and decode waves genuinely mix while
-    // earlier sessions are already streaming tokens.
+    // Mixed prompt lengths: several prompts span multiple round-robin
+    // prefill-chunk grants and, under a 48-token global prefill budget,
+    // contend for the same sweep — so prefill and decode waves genuinely
+    // mix while earlier sessions are already streaming tokens.
     let prompts: Vec<Vec<i32>> = vec![
         (0..70).map(|i| (i * 7 + 3) % 31).collect(),
         vec![5, 9, 13, 2, 2, 7],

@@ -247,7 +247,7 @@ fn drive_sessions(
         ..Default::default()
     })
     .unwrap();
-    let mut serving = NativeServing::new(model, budget);
+    let mut serving = NativeServing::new(model, budget, 32);
     let metrics = Arc::new(Mutex::new(Metrics::new()));
     let streams = serving.drive_to_completion(prompts, max_new, &metrics, &Pool::serial());
     let (evictions, high_water) = {

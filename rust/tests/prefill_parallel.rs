@@ -1,0 +1,188 @@
+//! Pipelined prefill equivalence gate (tier-1), the long-prompt companion
+//! of `fused_sweep.rs` and `parallel_determinism.rs`:
+//!
+//! 1. Kernel level: the ZETA chunk-phase forward — which above the
+//!    `PARALLEL_PREFILL_SCORE_MIN_LOOKUPS` break-even Morton-encodes all
+//!    keys up front, snapshots the index at every chunk boundary and fans
+//!    all (chunk, head, query) scoring out in one region — must be
+//!    *bit-identical* to the serial chunk-sequential schedule across the
+//!    thread matrix {2, 4, 8} and multiple chunk sizes.
+//! 2. Index level: a `ZIndex::fork` captured at every chunk boundary must
+//!    answer windows byte-identically to a live index rebuilt at the same
+//!    prefix length — the invariant the pipelined scorers lean on while
+//!    later chunks keep appending.
+//! 3. Serving level: a single long prompt through `prefill_batch` (the
+//!    coordinator's prefill wave) must hand decode exactly the state the
+//!    serial per-token step loop would have — same first token, then
+//!    bitwise-identical continuation logits — for all four kernels across
+//!    threads {1, 2, 4, 8}.
+//! 4. Server level: a long-prompt generation stream through the full
+//!    scheduler equals the serial full-recompute reference per kernel.
+
+use zeta::attention::zeta::ZetaNative;
+use zeta::attention::{AttentionImpl, DecodeState, Workload};
+use zeta::coordinator::session::{NativeDecodeModel, NativeModelConfig, PrefillStep, StepScratch};
+use zeta::coordinator::{Server, ServerConfig};
+use zeta::util::pool::Pool;
+use zeta::util::rng::Rng;
+use zeta::zorder::index::{WindowScratch, ZIndex};
+
+#[test]
+fn zeta_pipelined_forward_is_bitwise_identical_to_serial() {
+    // n - chunk lookups per head >= 256, so every threads>1 run takes the
+    // pipelined snapshot schedule while threads=1 stays chunk-sequential.
+    let w = Workload::random(2048, 32, 16, 0x9E7A);
+    for chunk in [32usize, 64] {
+        let imp = ZetaNative { chunk, ..ZetaNative::default() };
+        let (serial, _) = imp.forward_with(&w, &Pool::new(1));
+        for threads in [2usize, 4, 8] {
+            let (par, _) = imp.forward_with(&w, &Pool::new(threads));
+            assert_eq!(
+                serial.data, par.data,
+                "pipelined forward diverged: chunk={chunk} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn zindex_boundary_snapshots_match_live_windows() {
+    // The pipelined scorer freezes a fork at every chunk boundary while the
+    // append loop races ahead: each fork must answer every window exactly
+    // like an index that simply stopped at that prefix.
+    let chunk = 64usize;
+    let n = 1024usize;
+    let mut rng = Rng::new(0xF02C);
+    let codes: Vec<u32> = (0..n).map(|_| rng.below(1 << 24) as u32).collect();
+    let mut live = ZIndex::new();
+    let mut snaps: Vec<(usize, ZIndex)> = Vec::new();
+    for (t, &c) in codes.iter().enumerate() {
+        live.append(c);
+        if (t + 1) % chunk == 0 {
+            snaps.push((t + 1, live.fork()));
+        }
+    }
+    let mut scratch = WindowScratch::default();
+    let (mut got, mut want) = (Vec::new(), Vec::new());
+    for (prefix, snap) in &snaps {
+        let rebuilt = ZIndex::from_codes(&codes[..*prefix]);
+        assert_eq!(snap.len(), *prefix);
+        assert_eq!(snap.sorted_entries(), rebuilt.sorted_entries(), "prefix {prefix}");
+        for probe in codes.iter().step_by(37).chain([0, u32::MAX].iter()) {
+            for window in [8usize, 64] {
+                snap.window_with(*probe, window, &mut scratch, &mut got);
+                rebuilt.window_with(*probe, window, &mut scratch, &mut want);
+                assert_eq!(got, want, "prefix {prefix} probe {probe} window {window}");
+            }
+        }
+    }
+}
+
+/// Serial per-token reference prefill: the exact schedule
+/// `DecodeState::prefill_run` replaces. Returns the live state and the
+/// logits after the final prompt token.
+fn serial_prefill(model: &NativeDecodeModel, prompt: &[i32]) -> (Box<dyn DecodeState>, Vec<f32>) {
+    let mut st = model.begin();
+    let (mut orow, mut logits) = (Vec::new(), Vec::new());
+    for &tok in prompt {
+        model.step_token(st.as_mut(), tok, &mut orow, &mut logits);
+    }
+    (st, logits)
+}
+
+#[test]
+fn prefill_batch_matches_serial_step_loop_for_every_kernel_across_threads() {
+    // A prompt far above the pipelined break-even: the handoff at the
+    // prompt/decode boundary must be bitwise — same first token, then
+    // eight bitwise-identical greedy decode steps.
+    let n = 640usize;
+    let prompt: Vec<i32> = (0..n).map(|t| ((t * 31 + 7) % 256) as i32).collect();
+    for kernel in ["zeta", "naive", "flash", "mamba"] {
+        let model = NativeDecodeModel::new(NativeModelConfig {
+            kernel: kernel.into(),
+            d: 32,
+            dv: 32,
+            vocab: 256,
+            seed: 0,
+            max_context: 0,
+            ..Default::default()
+        })
+        .unwrap();
+        let ref_first = {
+            let (_, logits) = serial_prefill(&model, &prompt);
+            NativeDecodeModel::argmax(&logits)
+        };
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let mut st = model.begin();
+            let mut scratch = StepScratch::default();
+            {
+                let mut items = vec![PrefillStep {
+                    state: st.as_mut(),
+                    tokens: prompt.as_slice(),
+                    emit: true,
+                }];
+                model.prefill_batch(&mut items, &mut scratch, &pool);
+            }
+            assert_eq!(scratch.next[0], ref_first, "{kernel} threads={threads}: first token");
+            // Continue both states greedily; logits must stay bit-equal.
+            let (mut ref_state, _) = serial_prefill(&model, &prompt);
+            let (mut orow, mut la, mut lb) = (Vec::new(), Vec::new(), Vec::new());
+            let mut tok = ref_first;
+            for step in 0..8 {
+                model.step_token(ref_state.as_mut(), tok, &mut orow, &mut la);
+                model.step_token(st.as_mut(), tok, &mut orow, &mut lb);
+                assert_eq!(la, lb, "{kernel} threads={threads}: decode step {step}");
+                tok = NativeDecodeModel::argmax(&la);
+            }
+        }
+    }
+}
+
+fn native_cfg(kernel: &str, threads: usize) -> ServerConfig {
+    ServerConfig {
+        native: Some(NativeModelConfig { kernel: kernel.into(), ..Default::default() }),
+        threads,
+        prefill_budget: 0,
+        max_delay: std::time::Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+/// Serial greedy reference stream, as in `fused_sweep.rs`.
+fn reference_stream(kernel: &str, prompt: &[i32], max_new: usize) -> Vec<i32> {
+    let model = NativeDecodeModel::new(NativeModelConfig {
+        kernel: kernel.into(),
+        ..Default::default()
+    })
+    .unwrap();
+    let (mut st, mut logits) = serial_prefill(&model, prompt);
+    let mut orow = Vec::new();
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let t = NativeDecodeModel::argmax(&logits);
+        out.push(t);
+        if out.len() < max_new {
+            model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+        }
+    }
+    out
+}
+
+#[test]
+fn long_prompt_server_stream_matches_serial_reference_per_kernel() {
+    // An unbudgeted prefill wave feeds the whole long prompt in one sweep
+    // through the pipelined path; the stream must equal the serial
+    // per-token reference regardless of pool size.
+    let prompt: Vec<i32> = (0..1200).map(|t| ((t * 13 + 5) % 31) as i32).collect();
+    for kernel in ["zeta", "naive", "flash", "mamba"] {
+        let want = reference_stream(kernel, &prompt, 6);
+        for threads in [1usize, 8] {
+            let srv = Server::start(native_cfg(kernel, threads), None).unwrap();
+            let c = srv.client();
+            let got = c.generate(prompt.clone(), 6).unwrap().collect_tokens().unwrap();
+            srv.shutdown();
+            assert_eq!(got, want, "{kernel} threads={threads}");
+        }
+    }
+}
