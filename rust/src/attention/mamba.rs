@@ -151,7 +151,10 @@ impl MambaLite {
 /// same sequence of operations as the batch forward, so decode outputs are
 /// bit-identical to prefill. The hidden state lives on arena pages (one
 /// `n_state`-wide row per channel): a fork shares the pages until either
-/// side's next step, whose `row_mut` copy-on-write privatizes them.
+/// side's next step, whose copy-on-write `update_row` privatizes them. On
+/// a quantized arena the recurrence is carried *through* the codec — each
+/// step decodes the row, advances it, and re-encodes — so a fork and its
+/// original evolve from identical (quantized) state.
 pub struct MambaDecode {
     ns: usize,
     d: usize,
@@ -160,6 +163,7 @@ pub struct MambaDecode {
     b: Vec<f32>,
     c: Vec<f32>,
     decay: Vec<f32>,
+    scratch: Vec<f32>,
     t: usize,
 }
 
@@ -184,9 +188,10 @@ impl DecodeState for MambaDecode {
             self.c[s] = q_t[s % d] * 0.5;
         }
         fill_decay(&mut self.decay, dt, ns);
+        let (decay, b, c) = (&self.decay, &self.b, &self.c);
+        let (h, scratch) = (&mut self.h, &mut self.scratch);
         for (ch, (&x, o)) in v_t.iter().zip(out.iter_mut()).enumerate() {
-            let hrow = self.h.row_mut(ch);
-            *o = scan_channel_step(&self.decay, &self.b, &self.c, dt, x, hrow);
+            *o = h.update_row(ch, scratch, |hrow| scan_channel_step(decay, b, c, dt, x, hrow));
         }
         self.t += 1;
     }
@@ -213,6 +218,7 @@ impl DecodeState for MambaDecode {
             b: self.b.clone(),
             c: self.c.clone(),
             decay: self.decay.clone(),
+            scratch: Vec::new(),
             t: self.t,
         })
     }
@@ -248,6 +254,7 @@ impl AttentionImpl for MambaLite {
             b: vec![0f32; ns],
             c: vec![0f32; ns],
             decay: vec![0f32; ns],
+            scratch: Vec::new(),
             t: 0,
         })
     }

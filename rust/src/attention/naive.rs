@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use super::{AttentionImpl, DecodeState, Grads, MemReport, Workload};
 use crate::tensor::{dot, Tensor};
-use crate::util::arena::{PageArena, PagedKv};
+use crate::util::arena::{PageArena, PagedKv, RowStore};
 use crate::util::pool::{merge_partials, Pool, SharedSlice};
 use crate::util::simd;
 
@@ -61,7 +61,7 @@ impl DecodeState for ExactKvDecode {
         self.scores.clear();
         let mut maxv = f32::NEG_INFINITY;
         for j in 0..=t {
-            let s = dot(q_t, self.k.row(j)) * scale;
+            let s = self.k.dot_row(j, q_t) * scale;
             self.scores.push(s);
             maxv = maxv.max(s);
         }
@@ -76,7 +76,7 @@ impl DecodeState for ExactKvDecode {
             *o = 0.0;
         }
         for j in 0..=t {
-            simd::axpy(out, self.scores[j], self.v.row(j));
+            self.v.axpy_row(j, self.scores[j], out);
         }
     }
 

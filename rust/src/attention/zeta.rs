@@ -97,9 +97,11 @@ struct Candidates {
 /// *same* monomorphized arithmetic (identical op sequence either way, so
 /// the bit-for-bit decode == prefill contract survives the paging).
 ///
-/// The distance kernel and the AV accumulation run on the SIMD layer
-/// ([`crate::util::simd`]): one vectorized routine shared by batch-flat and
-/// paged-decode row stores. `pub(crate)` so `exp kernels` can bench it.
+/// The distance kernel and the AV accumulation run through the stores'
+/// codec-aware [`RowStore`] lane ops (backed by [`crate::util::simd`]):
+/// flat f32 buffers lower to the plain vector routines, quantized paged
+/// caches dequantize-and-score in the same pass. `pub(crate)` so
+/// `exp kernels` can bench it.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn cauchy_row<KR: RowStore, VR: RowStore>(
     eps: f32,
@@ -119,7 +121,7 @@ pub(crate) fn cauchy_row<KR: RowStore, VR: RowStore>(
             break;
         }
         let jj = j as usize;
-        let s = 1.0 / (sqdist(qi, kl.row_at(jj)) + eps);
+        let s = 1.0 / (kl.sqdist_row(jj, qi) + eps);
         scores[slot] = s;
         z += s;
         nc = slot + 1;
@@ -133,7 +135,7 @@ pub(crate) fn cauchy_row<KR: RowStore, VR: RowStore>(
     for slot in 0..nc {
         let jj = irow[slot] as usize;
         let a = scores[slot] * inv;
-        simd::axpy(out, a, v.row_at(jj));
+        v.axpy_row(jj, a, out);
     }
     simd::axpy(out, sm * inv, vm_i);
     z

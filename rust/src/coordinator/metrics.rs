@@ -30,6 +30,13 @@ pub struct Metrics {
     pub arena_live_bytes: usize,
     /// High-water mark of the serving page arena's live bytes.
     pub arena_high_water_bytes: usize,
+    /// Pages currently live on the serving arena (secondary gauge — the
+    /// byte gauges above are the primary telemetry, since page size varies
+    /// with `--kv-page` and bytes/page with `--kv-quant`).
+    pub arena_live_pages: usize,
+    /// Most sessions ever simultaneously active (admitted, unparked) — how
+    /// far the `--kv-mem-budget` admission gate actually stretched.
+    pub peak_active_sessions: usize,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -135,9 +142,15 @@ impl Metrics {
         }
         if self.arena_high_water_bytes > 0 {
             s.push_str(&format!(
-                " kv_state={}B arena_hw={}B",
-                self.kv_state_bytes, self.arena_high_water_bytes
+                " kv_state={}B arena_live={}B arena_hw={}B arena_pages={}",
+                self.kv_state_bytes,
+                self.arena_live_bytes,
+                self.arena_high_water_bytes,
+                self.arena_live_pages
             ));
+        }
+        if self.peak_active_sessions > 0 {
+            s.push_str(&format!(" peak_active={}", self.peak_active_sessions));
         }
         if self.prefix_hits > 0 {
             s.push_str(&format!(" prefix_hits={}", self.prefix_hits));
@@ -179,6 +192,21 @@ mod tests {
         m.record_batch(8);
         m.record_batch(4);
         assert_eq!(m.mean_batch_size(), 6.0);
+    }
+
+    #[test]
+    fn summary_reports_arena_bytes_with_page_count_secondary() {
+        let mut m = Metrics::new();
+        m.kv_state_bytes = 1024;
+        m.arena_live_bytes = 2048;
+        m.arena_high_water_bytes = 4096;
+        m.arena_live_pages = 2;
+        m.peak_active_sessions = 3;
+        let s = m.summary();
+        assert!(s.contains("arena_live=2048B"), "{s}");
+        assert!(s.contains("arena_hw=4096B"), "{s}");
+        assert!(s.contains("arena_pages=2"), "{s}");
+        assert!(s.contains("peak_active=3"), "{s}");
     }
 
     #[test]

@@ -56,6 +56,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::attention::DecodeState;
 use crate::runtime::{Engine, HostTensor};
+use crate::util::arena::KvQuant;
 use crate::util::breakeven::{fan_out, PARALLEL_PAD_MIN_ELEMS};
 use crate::util::pool::{Pool, SharedSlice};
 use batcher::{Batcher, Decision};
@@ -266,16 +267,25 @@ impl Server {
             if ncfg.kv_page == 0 {
                 bail!("--kv-page must be at least 1 token per page");
             }
+            let quant = KvQuant::parse(&ncfg.kv_quant).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown KV codec {:?} for --kv-quant (want {})",
+                    ncfg.kv_quant,
+                    KvQuant::ACCEPTED
+                )
+            })?;
             if cfg.kv_mem_budget > 0 {
-                let page_bytes = ncfg.kv_page * ncfg.d.max(ncfg.dv) * 4;
+                // Page bytes at the selected codec's encoded row width.
+                let words = quant.enc_row_elems(ncfg.d.max(ncfg.dv));
+                let page_bytes = ncfg.kv_page * words * 4;
                 if cfg.kv_mem_budget < page_bytes {
                     bail!(
                         "--kv-mem-budget {} B is smaller than one KV page \
-                         ({page_bytes} B = {} tokens x {} floats x 4 B): no session \
+                         ({page_bytes} B = {} tokens x {words} {} words x 4 B): no session \
                          could ever allocate its first page",
                         cfg.kv_mem_budget,
                         ncfg.kv_page,
-                        ncfg.d.max(ncfg.dv)
+                        quant.name()
                     );
                 }
             }
@@ -843,9 +853,12 @@ impl NativeServing {
 
     /// Refresh the serving-memory gauges: aggregate per-session
     /// `state_bytes` (plus the prefix cache's share) and the arena's
-    /// live / high-water counters.
+    /// live / high-water counters — all in bytes, with the page count as a
+    /// secondary gauge, so telemetry compares across `--kv-page` sizes and
+    /// `--kv-quant` codecs.
     fn publish_memory_metrics(&self, sessions: &[Session], metrics: &Arc<Mutex<Metrics>>) {
         let stats = self.model.arena().stats();
+        let active = sessions.iter().filter(|s| s.state.is_some()).count();
         let mut m = metrics.lock().unwrap();
         m.kv_state_bytes = sessions
             .iter()
@@ -855,7 +868,9 @@ impl NativeServing {
             + self.prefix.state_bytes();
         m.arena_live_bytes = stats.live_bytes;
         m.arena_high_water_bytes = stats.high_water_bytes;
+        m.arena_live_pages = stats.live_pages;
         m.prefix_hits = self.prefix.hits;
+        m.peak_active_sessions = m.peak_active_sessions.max(active);
     }
 
     /// Continuous-batching sweep on the native backend, fused across
@@ -1600,6 +1615,42 @@ mod tests {
         }
         let err = Server::start(cfg, None).unwrap_err().to_string();
         assert!(err.contains("kv-page"), "{err}");
+    }
+
+    #[test]
+    fn invalid_kv_quant_is_rejected_with_codec_listing() {
+        // Satellite: a typo'd codec must fail at startup with the accepted
+        // spellings, mirroring the --kv-page/--kv-mem-budget rejections.
+        let mut cfg = native_cfg("zeta");
+        if let Some(n) = cfg.native.as_mut() {
+            n.kv_quant = "fp16".into();
+        }
+        let err = Server::start(cfg, None).unwrap_err().to_string();
+        assert!(err.contains("--kv-quant"), "{err}");
+        assert!(err.contains(KvQuant::ACCEPTED), "must list accepted codecs: {err}");
+        // Every accepted codec starts.
+        for good in ["f32", "f16", "int8"] {
+            let mut cfg = native_cfg("zeta");
+            if let Some(n) = cfg.native.as_mut() {
+                n.kv_quant = good.into();
+            }
+            let srv = Server::start(cfg, None).unwrap();
+            srv.shutdown();
+        }
+        // The one-page minimum budget scales with the codec: 64 tokens x
+        // 16-wide rows encode to 8 words under f16, so half the f32 floor
+        // is accepted there but still rejected under f32.
+        let mut cfg = native_cfg("zeta");
+        cfg.kv_mem_budget = 64 * 8 * 4;
+        let err = Server::start(cfg, None).unwrap_err().to_string();
+        assert!(err.contains("one KV page"), "{err}");
+        let mut cfg = native_cfg("zeta");
+        cfg.kv_mem_budget = 64 * 8 * 4;
+        if let Some(n) = cfg.native.as_mut() {
+            n.kv_quant = "f16".into();
+        }
+        let srv = Server::start(cfg, None).unwrap();
+        srv.shutdown();
     }
 
     #[test]

@@ -25,7 +25,7 @@ use anyhow::{bail, Result};
 
 use crate::attention::{kernel_by_name, AttentionImpl, DecodeState, DecodeStep, Workload};
 use crate::tensor::{dot, Tensor};
-use crate::util::arena::{PageArena, DEFAULT_PAGE_TOKENS};
+use crate::util::arena::{KvQuant, PageArena, DEFAULT_PAGE_TOKENS};
 use crate::util::breakeven::{fan_out, PARALLEL_PREFILL_MIN_OPS, PARALLEL_READOUT_MIN_OPS};
 use crate::util::pool::{Pool, SharedSlice};
 use crate::util::rng::Rng;
@@ -54,6 +54,11 @@ pub struct NativeModelConfig {
     /// pages of this many rows, and the prompt-prefix cache snapshots at
     /// whole-page boundaries. Must be >= 1.
     pub kv_page: usize,
+    /// KV page element codec (`--kv-quant`): `"f32"` (bit-exact default),
+    /// `"f16"`, or `"int8"` (per-row scale). Quantized codecs shrink
+    /// per-token page bytes 2–4×, stretching a fixed `--kv-mem-budget` by
+    /// the same factor at a bounded decode tolerance.
+    pub kv_quant: String,
 }
 
 impl Default for NativeModelConfig {
@@ -66,6 +71,7 @@ impl Default for NativeModelConfig {
             seed: 0,
             max_context: 4096,
             kv_page: DEFAULT_PAGE_TOKENS,
+            kv_quant: "f32".into(),
         }
     }
 }
@@ -98,10 +104,17 @@ impl NativeDecodeModel {
         if cfg.kv_page == 0 {
             bail!("--kv-page must be at least 1 token per page");
         }
+        let quant = KvQuant::parse(&cfg.kv_quant).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown KV codec {:?} for --kv-quant (want {})",
+                cfg.kv_quant,
+                KvQuant::ACCEPTED
+            )
+        })?;
         let imp = kernel_by_name(&cfg.kernel).ok_or_else(|| {
             anyhow::anyhow!("unknown native kernel {:?} (want zeta|naive|flash|mamba)", cfg.kernel)
         })?;
-        let arena = PageArena::new(cfg.kv_page);
+        let arena = PageArena::new_quant(cfg.kv_page, quant);
         let mut rng = Rng::new(cfg.seed ^ 0x5E55_1015);
         let mut qe = vec![0f32; cfg.vocab * cfg.d];
         let mut ke = vec![0f32; cfg.vocab * cfg.d];
@@ -138,15 +151,20 @@ impl NativeDecodeModel {
     }
 
     /// Upper-ish bound on the arena bytes a session holding `tokens` of
-    /// context needs: one `(d + dv)`-float row per token rounded up to
-    /// whole pages, plus one page of slack for code/index storage. The
-    /// budget admission gate compares this against the arena's live
-    /// bytes; over-estimating only delays admission (never corrupts it),
-    /// and the preemption path reclaims any overshoot.
+    /// context needs: one d-row plus one dv-row per token at the arena
+    /// codec's encoded width, rounded up to whole pages, plus one page of
+    /// slack for code/index storage. The budget admission gate compares
+    /// this against the arena's live bytes; over-estimating only delays
+    /// admission (never corrupts it), and the preemption path reclaims any
+    /// overshoot. Codec-aware: under `--kv-quant f16`/`int8` the estimate
+    /// shrinks with the pages, which is exactly what stretches admission
+    /// at a fixed `--kv-mem-budget`.
     pub fn estimate_state_bytes(&self, tokens: usize) -> usize {
         let page = self.arena.page_tokens();
         let pages = tokens.div_ceil(page) + 1;
-        pages * page * (self.cfg.d + self.cfg.dv) * 4
+        let quant = self.arena.quant();
+        let row_elems = quant.enc_row_elems(self.cfg.d) + quant.enc_row_elems(self.cfg.dv);
+        pages * page * row_elems * 4
     }
 
     /// Fresh per-request decode state (the kernel-level KV cache) on the
@@ -682,6 +700,34 @@ mod tests {
     fn model_rejects_unknown_kernel() {
         let cfg = NativeModelConfig { kernel: "transformer".into(), ..Default::default() };
         assert!(NativeDecodeModel::new(cfg).is_err());
+    }
+
+    #[test]
+    fn model_rejects_unknown_kv_quant_listing_codecs() {
+        for bad in ["fp16", "q8", "F32", ""] {
+            let cfg = NativeModelConfig { kv_quant: bad.into(), ..Default::default() };
+            let err = NativeDecodeModel::new(cfg).expect_err("codec must be rejected").to_string();
+            assert!(err.contains("--kv-quant"), "{err}");
+            assert!(err.contains(KvQuant::ACCEPTED), "must list accepted codecs: {err}");
+        }
+        for good in ["f32", "f16", "int8"] {
+            let cfg = NativeModelConfig { kv_quant: good.into(), ..Default::default() };
+            assert!(NativeDecodeModel::new(cfg).is_ok(), "{good} must be accepted");
+        }
+    }
+
+    #[test]
+    fn estimate_state_bytes_shrinks_with_codec() {
+        let mk = |q: &str| {
+            let cfg = NativeModelConfig { kv_quant: q.into(), ..Default::default() };
+            NativeDecodeModel::new(cfg).unwrap()
+        };
+        let (f32m, f16m, i8m) = (mk("f32"), mk("f16"), mk("int8"));
+        let page = f32m.page_tokens();
+        // d = dv = 16: words/row-pair are 32 (f32), 16 (f16), 10 (int8).
+        assert_eq!(f32m.estimate_state_bytes(1), 2 * page * 32 * 4);
+        assert_eq!(f16m.estimate_state_bytes(1), 2 * page * 16 * 4);
+        assert_eq!(i8m.estimate_state_bytes(1), 2 * page * 10 * 4);
     }
 
     #[test]

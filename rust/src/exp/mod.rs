@@ -17,7 +17,7 @@ use crate::attention::{decode_full, AttentionImpl, Workload};
 use crate::data::{corpus::CorpusLm, task_for_config};
 use crate::runtime::Engine;
 use crate::trainer::Trainer;
-use crate::util::arena::{FlatRows, RowStore};
+use crate::util::arena::{FlatRows, KvQuant, PageArena, DEFAULT_PAGE_TOKENS};
 use crate::util::bench;
 use crate::util::json::Json;
 use crate::util::pool::{Pool, SharedSlice};
@@ -1245,6 +1245,45 @@ pub fn kernels(opts: &Opts) -> Result<()> {
         });
         kernel_row("sqdist", n, elems, &sc, &si, &mut rec, &mut rows);
 
+        // dequant reductions: the quantized-page scoring path (--kv-quant)
+        // — dot straight out of f16- / int8-packed rows, scalar vs lanes.
+        let mut encf16 = vec![0f32; KvQuant::F16.enc_row_elems(n)];
+        let mut enci8 = vec![0f32; KvQuant::Int8.enc_row_elems(n)];
+        KvQuant::F16.encode_row(&b, &mut encf16);
+        KvQuant::Int8.encode_row(&b, &mut enci8);
+        let i8scale = enci8[0];
+        let i8body = &enci8[1..];
+        let sc = bench::bench(budget, 8, || {
+            let mut y = 0.0;
+            for _ in 0..reps {
+                y += simd::dot_dequant_f16_with(Backend::Scalar, &a, &encf16);
+            }
+            bench::black_box(y);
+        });
+        let si = bench::bench(budget, 8, || {
+            let mut y = 0.0;
+            for _ in 0..reps {
+                y += simd::dot_dequant_f16_with(be, &a, &encf16);
+            }
+            bench::black_box(y);
+        });
+        kernel_row("dot_dq_f16", n, elems, &sc, &si, &mut rec, &mut rows);
+        let sc = bench::bench(budget, 8, || {
+            let mut y = 0.0;
+            for _ in 0..reps {
+                y += simd::dot_dequant_i8_with(Backend::Scalar, &a, i8body, i8scale);
+            }
+            bench::black_box(y);
+        });
+        let si = bench::bench(budget, 8, || {
+            let mut y = 0.0;
+            for _ in 0..reps {
+                y += simd::dot_dequant_i8_with(be, &a, i8body, i8scale);
+            }
+            bench::black_box(y);
+        });
+        kernel_row("dot_dq_i8", n, elems, &sc, &si, &mut rec, &mut rows);
+
         // axpy: the AV-accumulate of every attention kernel (elementwise,
         // so the vector arm is bit-identical — only speed differs).
         let mut acc = vec![0f32; n];
@@ -1632,6 +1671,56 @@ pub fn mem(opts: &Opts) -> Result<()> {
         ("free_arena_hw_bytes", Json::num(free_hw as f64)),
         ("tight_arena_hw_bytes", Json::num(tight_hw as f64)),
     ]));
+
+    // (d) KV codec matrix: per-codec paged step cost and bytes/token on
+    // the exact-KV state, plus admission headroom at a fixed byte budget
+    // (the --kv-quant economics). The f32 row is the same measurement as
+    // paged_vs_flat's paged column — the pre-codec baseline.
+    let n = 512usize.min(opts.max_len.max(128));
+    println!("\n== Mem: KV codec matrix (exact-KV state, ctx {n}) ==");
+    println!("{:<8}{:>14}{:>14}{:>16}", "codec", "step µs/tok", "bytes/tok", "sessions@1MiB");
+    let wq = Workload::random(n, d, dv, opts.seed);
+    for quant in [KvQuant::F32, KvQuant::F16, KvQuant::Int8] {
+        let arena = PageArena::new_quant(DEFAULT_PAGE_TOKENS, quant);
+        let mut st = Naive.begin_decode_in(d, dv, &arena);
+        let mut out = vec![0f32; dv];
+        let tail = n - n / 4;
+        for t in 0..tail {
+            st.step(wq.q.row(t), wq.k.row(t), wq.v.row(t), &mut out);
+        }
+        let t0 = Instant::now();
+        for t in tail..n {
+            st.step(wq.q.row(t), wq.k.row(t), wq.v.row(t), &mut out);
+        }
+        let step_us = t0.elapsed().as_secs_f64() * 1e6 / (n - tail) as f64;
+        bench::black_box(&out);
+        let bytes_per_tok = arena.stats().live_bytes as f64 / n as f64;
+        // Admission headroom: how many ~100-token sessions the byte-budget
+        // gate admits into 1 MiB, using the same codec-aware estimate the
+        // scheduler uses.
+        let qmodel = NativeDecodeModel::new(NativeModelConfig {
+            kv_quant: quant.name().into(),
+            ..Default::default()
+        })?;
+        let sessions = (1usize << 20) / qmodel.estimate_state_bytes(100).max(1);
+        println!("{:<8}{step_us:>14.2}{bytes_per_tok:>14.1}{sessions:>16}", quant.name());
+        rec.insert(
+            format!("quant_{}", quant.name()),
+            Json::obj(vec![
+                ("step_us_per_tok", Json::num(step_us)),
+                ("bytes_per_tok", Json::num(bytes_per_tok)),
+                ("sessions_at_1mib_100tok", Json::num(sessions as f64)),
+            ]),
+        );
+        bench_rows.push(Json::obj(vec![
+            ("bench", Json::str("quant_matrix")),
+            ("codec", Json::str(quant.name())),
+            ("ctx", Json::num(n as f64)),
+            ("step_us_per_tok", Json::num(step_us)),
+            ("bytes_per_tok", Json::num(bytes_per_tok)),
+            ("sessions_at_1mib_100tok", Json::num(sessions as f64)),
+        ]));
+    }
 
     record(opts, "mem", Json::Obj(rec))?;
     write_bench("mem", bench_rows);

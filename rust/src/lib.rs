@@ -80,6 +80,20 @@
 //! exp mem` prices paging overhead, prefix-cache speedup and eviction
 //! thrash (`BENCH_mem.json`).
 //!
+//! ## Precision-polymorphic KV pages
+//!
+//! Pages carry a per-store element codec ([`util::arena::KvQuant`],
+//! `--kv-quant f32|f16|int8`): `f32` is the bit-exact default, `f16`
+//! packs two IEEE halfs per word, `int8` stores a per-row scale plus four
+//! symmetric int8 lanes per word. Kernels score straight out of the
+//! packed pages through the codec-aware [`util::arena::RowStore`] lane
+//! ops (`dot`/`sqdist`/`axpy` `_dequant_*` in [`util::simd`]) — no
+//! dequantized materialization — and byte accounting, copy-on-write
+//! forking and the admission estimate all shrink with the codec, so a
+//! fixed `--kv-mem-budget` admits 2–4× the sessions. Quantized decode is
+//! tolerance-gated against f32 (`rust/tests/quant_state.rs`); the f32
+//! path stays bitwise.
+//!
 //! ## SIMD kernel layer
 //!
 //! The f32 inner loops of every kernel — Cauchy top-k scoring, exact

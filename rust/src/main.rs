@@ -100,6 +100,7 @@ commands:
          [--generate] [--max-new N] [--native] [--native-kernel K]
          [--prefill-budget T] [--prefill-chunk T] [--prompt-len N]
          [--max-context N] [--kv-page TOKENS] [--kv-mem-budget BYTES]
+         [--kv-quant f32|f16|int8]
   exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--threads T]
          [--verbose]
          NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3, table1, table2,
@@ -138,10 +139,17 @@ serving memory (native backend):
   wait for headroom, and when live pages exceed the budget the scheduler
   sheds prefix-cache entries first and then preempts the
   least-recently-stepped session — its pages drop and it transparently
-  re-prefills later with identical output tokens. The serve summary line
-  reports kv_state / arena_hw bytes, prefix_hits and evictions; `exp
-  mem` benchmarks paged vs flat stepping, prefix-cache speedup and
-  eviction thrash (BENCH_mem.json).
+  re-prefills later with identical output tokens. --kv-quant picks the
+  page element codec (default f32 = bit-exact): f16 halves page bytes,
+  int8 (per-row scale) quarters the wide rows, so the same
+  --kv-mem-budget admits 2-4x the sessions; quantized decode is
+  tolerance-gated rather than bitwise (kernels score straight out of the
+  packed pages through dequantizing SIMD lane ops). The serve summary
+  line reports kv_state / arena_live / arena_hw bytes (plus a live page
+  count), prefix_hits and evictions; `exp mem` benchmarks paged vs flat
+  stepping, prefix-cache speedup, eviction thrash and the per-codec
+  step-cost / bytes-per-token / admission-headroom matrix
+  (BENCH_mem.json).
 
 parallelism:
   All attention kernels run on a shared worker pool sized by the
@@ -253,6 +261,9 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     // decode states (native backend; budget 0 = unlimited).
     let kv_page = flag_usize(f, "kv-page", NativeModelConfig::default().kv_page)?;
     let kv_mem_budget = flag_usize(f, "kv-mem-budget", 0)?;
+    // KV page element codec: f32 (bit-exact default) | f16 | int8.
+    // Validated at Server::start, which lists the accepted codecs.
+    let kv_quant = f.get("kv-quant").cloned().unwrap_or_else(|| "f32".into());
     // Native decode engine: forced with --native / --native-kernel, and the
     // fallback whenever the AOT artifacts are absent.
     let native_kernel = f.get("native-kernel").cloned();
@@ -265,6 +276,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
             kernel: native_kernel.unwrap_or_else(|| "zeta".into()),
             max_context,
             kv_page,
+            kv_quant,
             ..Default::default()
         };
         if !have_artifacts {

@@ -20,6 +20,15 @@
 //!   alloc/recycle counters; the coordinator's `--kv-mem-budget` admission
 //!   gate and the serving telemetry read these.
 //!
+//! * **Element codecs** — pages store raw f32 words, but a [`KvQuant`]
+//!   codec decides how row elements are packed into them: bit-exact `f32`,
+//!   two IEEE halfs per word (`f16`), or a per-row scale plus four
+//!   symmetric int8 lanes per word (`int8`). Quantized rows are scored in
+//!   place by the [`RowStore`] lane ops, and the byte accounting above is
+//!   codec-accurate (a page of f16 rows is half the bytes of its f32
+//!   twin), which is what lets `--kv-quant` stretch a fixed
+//!   `--kv-mem-budget` 2–4× in admitted sessions.
+//!
 //! [`PagedKv`] is the row store built on top: append-only rows of a fixed
 //! width with O(1) row addressing (`page = i / page_rows`), plus
 //! [`PagedKv::fork`] / [`PagedKv::row_mut`] (copy-on-write) and a `Drop`
@@ -28,11 +37,119 @@
 //! codes in the same f32 pages via lossless bit-casts, so one arena (and
 //! one free list) serves every cache.
 
+use crate::util::simd;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// Default page size in tokens (rows) — the `--kv-page` default.
 pub const DEFAULT_PAGE_TOKENS: usize = 64;
+
+/// Element codec for [`PagedKv`] pages. Pages are always f32 words in the
+/// arena (one free list serves every codec); the codec decides how row
+/// elements pack into those words:
+///
+/// * [`KvQuant::F32`] — one element per word, bit-exact (the default).
+/// * [`KvQuant::F16`] — two IEEE-754 half elements per word (low half
+///   first; round-to-nearest-even, finite overflow saturates to ±65504).
+/// * [`KvQuant::Int8`] — one per-row f32 scale word, then four symmetric
+///   int8 elements per word (little-endian lanes; `scale = max|x| / 127`).
+///
+/// Encoding is deterministic — the same row always produces the same
+/// words — so forked and budget-replayed sessions reproduce their streams
+/// exactly even on lossy codecs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvQuant {
+    F32,
+    F16,
+    Int8,
+}
+
+impl KvQuant {
+    /// Accepted `--kv-quant` spellings, for startup error messages.
+    pub const ACCEPTED: &'static str = "f32 | f16 | int8";
+
+    /// Parse a codec name as accepted by `--kv-quant`.
+    pub fn parse(s: &str) -> Option<KvQuant> {
+        match s {
+            "f32" => Some(KvQuant::F32),
+            "f16" => Some(KvQuant::F16),
+            "int8" => Some(KvQuant::Int8),
+            _ => None,
+        }
+    }
+
+    /// Canonical codec name (the `--kv-quant` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            KvQuant::F32 => "f32",
+            KvQuant::F16 => "f16",
+            KvQuant::Int8 => "int8",
+        }
+    }
+
+    /// Encoded words (f32 storage elements) per `width`-element row.
+    pub fn enc_row_elems(self, width: usize) -> usize {
+        match self {
+            KvQuant::F32 => width,
+            KvQuant::F16 => width.div_ceil(2),
+            KvQuant::Int8 => 1 + width.div_ceil(4),
+        }
+    }
+
+    /// Encode one row into `enc` (exactly `enc_row_elems(row.len())`
+    /// words).
+    pub fn encode_row(self, row: &[f32], enc: &mut [f32]) {
+        debug_assert_eq!(enc.len(), self.enc_row_elems(row.len()));
+        match self {
+            KvQuant::F32 => enc.copy_from_slice(row),
+            KvQuant::F16 => {
+                for (wi, pair) in row.chunks(2).enumerate() {
+                    let lo = simd::f16_bits(pair[0]) as u32;
+                    let hi = if pair.len() > 1 { simd::f16_bits(pair[1]) as u32 } else { 0 };
+                    enc[wi] = f32::from_bits(lo | (hi << 16));
+                }
+            }
+            KvQuant::Int8 => {
+                let maxabs = row.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                let scale = maxabs / 127.0;
+                let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+                enc[0] = scale;
+                for (wi, quad) in row.chunks(4).enumerate() {
+                    let mut w = 0u32;
+                    for (bi, &x) in quad.iter().enumerate() {
+                        let q = (x * inv).round().clamp(-127.0, 127.0) as i8;
+                        w |= ((q as u8) as u32) << (8 * bi);
+                    }
+                    enc[1 + wi] = f32::from_bits(w);
+                }
+            }
+        }
+    }
+
+    /// Decode one encoded row into `row` — the inverse of
+    /// [`KvQuant::encode_row`] up to the codec's quantization error (exact
+    /// for `F32`).
+    pub fn decode_row(self, enc: &[f32], row: &mut [f32]) {
+        debug_assert_eq!(enc.len(), self.enc_row_elems(row.len()));
+        match self {
+            KvQuant::F32 => row.copy_from_slice(enc),
+            KvQuant::F16 => {
+                for (i, x) in row.iter_mut().enumerate() {
+                    let w = enc[i / 2].to_bits();
+                    let h = if i % 2 == 0 { w as u16 } else { (w >> 16) as u16 };
+                    *x = simd::f16_to_f32(h);
+                }
+            }
+            KvQuant::Int8 => {
+                let scale = enc[0];
+                for (i, x) in row.iter_mut().enumerate() {
+                    let q = (enc[1 + i / 4].to_bits() >> (8 * (i % 4))) as u8 as i8;
+                    *x = q as f32 * scale;
+                }
+            }
+        }
+    }
+}
 
 /// One fixed-size arena page. Immutable while shared: appends only ever
 /// write the unshared tail page, and [`PagedKv::row_mut`] copies a shared
@@ -84,14 +201,23 @@ struct ArenaInner {
 /// `page_tokens` appends per stream), never on the per-row read path.
 pub struct PageArena {
     page_tokens: usize,
+    quant: KvQuant,
     inner: Mutex<ArenaInner>,
 }
 
 impl PageArena {
-    /// New arena with `page_tokens` rows per page (clamped to >= 1).
+    /// New arena with `page_tokens` rows per page (clamped to >= 1) and
+    /// the bit-exact [`KvQuant::F32`] codec.
     pub fn new(page_tokens: usize) -> Arc<PageArena> {
+        PageArena::new_quant(page_tokens, KvQuant::F32)
+    }
+
+    /// New arena whose [`PagedKv`] stores default to `quant` — what
+    /// `--kv-quant` selects server-wide.
+    pub fn new_quant(page_tokens: usize, quant: KvQuant) -> Arc<PageArena> {
         Arc::new(PageArena {
             page_tokens: page_tokens.max(1),
+            quant,
             inner: Mutex::new(ArenaInner { free: HashMap::new(), stats: ArenaStats::default() }),
         })
     }
@@ -108,6 +234,11 @@ impl PageArena {
     /// Rows per page.
     pub fn page_tokens(&self) -> usize {
         self.page_tokens
+    }
+
+    /// Element codec newly created [`PagedKv`] stores inherit.
+    pub fn quant(&self) -> KvQuant {
+        self.quant
     }
 
     /// Allocate a page of `elems` f32 elements (recycling a freed page of
@@ -159,11 +290,20 @@ impl PageArena {
     }
 }
 
-/// Row-addressable f32 storage: implemented by flat slices (the batch
-/// kernels' buffers) and by [`PagedKv`] (decode states), so one scoring
-/// routine serves both schedules without copying.
+/// Row-addressable storage scored through codec-aware lane ops:
+/// implemented by flat f32 slices (the batch kernels' buffers) and by
+/// [`PagedKv`] (decode states, possibly quantized), so one scoring routine
+/// serves both schedules — and every codec — without materializing
+/// dequantized rows. On `F32` storage each op lowers to exactly the
+/// `util::simd` call the pre-codec kernels made, keeping that path
+/// bit-identical.
 pub trait RowStore {
-    fn row_at(&self, i: usize) -> &[f32];
+    /// Squared Euclidean distance between `q` and row `i`.
+    fn sqdist_row(&self, i: usize, q: &[f32]) -> f32;
+    /// Dot product of `q` and row `i`.
+    fn dot_row(&self, i: usize, q: &[f32]) -> f32;
+    /// `out += a * row_i`.
+    fn axpy_row(&self, i: usize, a: f32, out: &mut [f32]);
 }
 
 /// Flat `(len, width)` row-major storage over a borrowed slice.
@@ -172,17 +312,66 @@ pub struct FlatRows<'a> {
     pub width: usize,
 }
 
+impl FlatRows<'_> {
+    /// Row `i` as a raw f32 slice (flat storage is always unquantized).
+    #[inline]
+    pub fn row_at(&self, i: usize) -> &[f32] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+}
+
 impl RowStore for FlatRows<'_> {
     #[inline]
-    fn row_at(&self, i: usize) -> &[f32] {
-        &self.data[i * self.width..(i + 1) * self.width]
+    fn sqdist_row(&self, i: usize, q: &[f32]) -> f32 {
+        simd::sqdist(q, self.row_at(i))
+    }
+
+    #[inline]
+    fn dot_row(&self, i: usize, q: &[f32]) -> f32 {
+        simd::dot(q, self.row_at(i))
+    }
+
+    #[inline]
+    fn axpy_row(&self, i: usize, a: f32, out: &mut [f32]) {
+        simd::axpy(out, a, self.row_at(i));
     }
 }
 
 impl RowStore for PagedKv {
     #[inline]
-    fn row_at(&self, i: usize) -> &[f32] {
-        self.row(i)
+    fn sqdist_row(&self, i: usize, q: &[f32]) -> f32 {
+        match self.quant {
+            KvQuant::F32 => simd::sqdist(q, self.raw_row(i)),
+            KvQuant::F16 => simd::sqdist_dequant_f16(q, self.raw_row(i)),
+            KvQuant::Int8 => {
+                let raw = self.raw_row(i);
+                simd::sqdist_dequant_i8(q, &raw[1..], raw[0])
+            }
+        }
+    }
+
+    #[inline]
+    fn dot_row(&self, i: usize, q: &[f32]) -> f32 {
+        match self.quant {
+            KvQuant::F32 => simd::dot(q, self.raw_row(i)),
+            KvQuant::F16 => simd::dot_dequant_f16(q, self.raw_row(i)),
+            KvQuant::Int8 => {
+                let raw = self.raw_row(i);
+                simd::dot_dequant_i8(q, &raw[1..], raw[0])
+            }
+        }
+    }
+
+    #[inline]
+    fn axpy_row(&self, i: usize, a: f32, out: &mut [f32]) {
+        match self.quant {
+            KvQuant::F32 => simd::axpy(out, a, self.raw_row(i)),
+            KvQuant::F16 => simd::axpy_dequant_f16(out, a, self.raw_row(i)),
+            KvQuant::Int8 => {
+                let raw = self.raw_row(i);
+                simd::axpy_dequant_i8(out, a, &raw[1..], raw[0]);
+            }
+        }
     }
 }
 
@@ -192,17 +381,29 @@ impl RowStore for PagedKv {
 pub struct PagedKv {
     arena: Arc<PageArena>,
     width: usize,
+    enc_width: usize,
+    quant: KvQuant,
     page_rows: usize,
     pages: Vec<PageRef>,
     rows: usize,
 }
 
 impl PagedKv {
-    /// Empty store of `width`-element rows on `arena`'s page size.
+    /// Empty store of `width`-element rows on `arena`'s page size, using
+    /// the arena's default codec.
     pub fn new(arena: &Arc<PageArena>, width: usize) -> PagedKv {
+        PagedKv::with_quant(arena, width, arena.quant())
+    }
+
+    /// Empty store with an explicit element codec, overriding the arena's
+    /// default ([`PagedU32`] forces `F32` so its bit-casts stay lossless).
+    pub fn with_quant(arena: &Arc<PageArena>, width: usize, quant: KvQuant) -> PagedKv {
+        let width = width.max(1);
         PagedKv {
             arena: arena.clone(),
-            width: width.max(1),
+            width,
+            enc_width: quant.enc_row_elems(width),
+            quant,
             page_rows: arena.page_tokens(),
             pages: Vec::new(),
             rows: 0,
@@ -221,8 +422,13 @@ impl PagedKv {
         self.width
     }
 
+    /// This store's element codec.
+    pub fn quant(&self) -> KvQuant {
+        self.quant
+    }
+
     fn page_elems(&self) -> usize {
-        self.page_rows * self.width
+        self.page_rows * self.enc_width
     }
 
     /// Append one row. Allocates a fresh page when the tail is full; the
@@ -239,23 +445,48 @@ impl PagedKv {
         let data = &mut Arc::get_mut(page)
             .expect("tail page is uniquely owned (forks deep-copy the tail)")
             .data;
-        data[slot * self.width..(slot + 1) * self.width].copy_from_slice(row);
+        let quant = self.quant;
+        quant.encode_row(row, &mut data[slot * self.enc_width..(slot + 1) * self.enc_width]);
         self.rows += 1;
     }
 
-    /// Row `i` (must be `< len`).
+    /// Row `i` as raw f32 elements — only meaningful on the bit-exact
+    /// `F32` codec; quantized stores read through the [`RowStore`] lane
+    /// ops or [`PagedKv::decode_row_into`].
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.quant, KvQuant::F32, "row() reads raw f32 elements");
+        self.raw_row(i)
+    }
+
+    /// The encoded words of row `i` (codec-dependent layout; equals the
+    /// row itself on `F32`).
+    #[inline]
+    pub fn raw_row(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.rows);
         let p = i / self.page_rows;
         let slot = i % self.page_rows;
-        &self.pages[p].data[slot * self.width..(slot + 1) * self.width]
+        &self.pages[p].data[slot * self.enc_width..(slot + 1) * self.enc_width]
+    }
+
+    /// Decode row `i` into `out` (`width` elements; exact on `F32`).
+    pub fn decode_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.width);
+        self.quant.decode_row(self.raw_row(i), out);
     }
 
     /// Mutable access to row `i`, copy-on-write: a page still shared with
     /// a fork is replaced by a private copy before the first write, so the
-    /// fork keeps reading the original values.
+    /// fork keeps reading the original values. `F32` only — quantized
+    /// stores mutate through [`PagedKv::update_row`].
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert_eq!(self.quant, KvQuant::F32, "row_mut() writes raw f32 elements");
+        self.enc_row_mut(i)
+    }
+
+    /// CoW access to the encoded words of row `i` (see [`PagedKv::row_mut`]
+    /// for the sharing contract).
+    fn enc_row_mut(&mut self, i: usize) -> &mut [f32] {
         debug_assert!(i < self.rows);
         let p = i / self.page_rows;
         let slot = i % self.page_rows;
@@ -269,7 +500,30 @@ impl PagedKv {
             self.arena.release(old);
         }
         let page = Arc::get_mut(&mut self.pages[p]).expect("page is private after CoW");
-        &mut page.data[slot * self.width..(slot + 1) * self.width]
+        &mut page.data[slot * self.enc_width..(slot + 1) * self.enc_width]
+    }
+
+    /// Read-modify-write row `i` through the codec, copy-on-write like
+    /// [`PagedKv::row_mut`]. `F32` edits in place; quantized codecs decode
+    /// into `scratch`, apply `f`, and re-encode — so the closure always
+    /// sees the row exactly as the next reader will (quantization error
+    /// included), which keeps recurrences carried this way deterministic
+    /// across forks and replays.
+    pub fn update_row<R>(
+        &mut self,
+        i: usize,
+        scratch: &mut Vec<f32>,
+        f: impl FnOnce(&mut [f32]) -> R,
+    ) -> R {
+        if self.quant == KvQuant::F32 {
+            return f(self.enc_row_mut(i));
+        }
+        scratch.resize(self.width, 0.0);
+        self.quant.decode_row(self.raw_row(i), scratch);
+        let r = f(&mut scratch[..]);
+        let quant = self.quant;
+        quant.encode_row(&scratch[..], self.enc_row_mut(i));
+        r
     }
 
     /// Copy-on-write fork: full pages are shared (refcount bumps — the
@@ -290,6 +544,8 @@ impl PagedKv {
         PagedKv {
             arena: self.arena.clone(),
             width: self.width,
+            enc_width: self.enc_width,
+            quant: self.quant,
             page_rows: self.page_rows,
             pages,
             rows: self.rows,
@@ -327,7 +583,9 @@ pub struct PagedU32 {
 
 impl PagedU32 {
     pub fn new(arena: &Arc<PageArena>) -> PagedU32 {
-        PagedU32 { kv: PagedKv::new(arena, 1) }
+        // Always F32: the bit-cast round trip must stay lossless even on a
+        // quantized arena.
+        PagedU32 { kv: PagedKv::with_quant(arena, 1, KvQuant::F32) }
     }
 
     pub fn push(&mut self, value: u32) {
@@ -509,5 +767,101 @@ mod tests {
     #[test]
     fn global_arena_uses_default_page_size() {
         assert_eq!(PageArena::global().page_tokens(), DEFAULT_PAGE_TOKENS);
+        assert_eq!(PageArena::global().quant(), KvQuant::F32);
+    }
+
+    #[test]
+    fn quant_parse_and_row_elems() {
+        assert_eq!(KvQuant::parse("f32"), Some(KvQuant::F32));
+        assert_eq!(KvQuant::parse("f16"), Some(KvQuant::F16));
+        assert_eq!(KvQuant::parse("int8"), Some(KvQuant::Int8));
+        assert_eq!(KvQuant::parse("fp8"), None);
+        assert_eq!(KvQuant::parse(""), None);
+        assert_eq!(KvQuant::F16.name(), "f16");
+        assert_eq!(KvQuant::F32.enc_row_elems(16), 16);
+        assert_eq!(KvQuant::F16.enc_row_elems(16), 8);
+        assert_eq!(KvQuant::F16.enc_row_elems(5), 3);
+        assert_eq!(KvQuant::Int8.enc_row_elems(16), 5);
+        assert_eq!(KvQuant::Int8.enc_row_elems(5), 3);
+        assert_eq!(KvQuant::Int8.enc_row_elems(1), 2);
+    }
+
+    #[test]
+    fn quantized_rows_round_trip_within_tolerance() {
+        for (quant, tol) in [(KvQuant::F16, 1e-3f32), (KvQuant::Int8, 1.6e-2f32)] {
+            let arena = PageArena::new_quant(4, quant);
+            assert_eq!(arena.quant(), quant);
+            let mut kv = PagedKv::new(&arena, 3);
+            assert_eq!(kv.quant(), quant);
+            let rows: Vec<[f32; 3]> = (0..11)
+                .map(|i| [(i as f32) * 0.37 - 1.5, (i as f32).sin(), -(i as f32) * 0.11])
+                .collect();
+            for r in &rows {
+                kv.push_row(r);
+            }
+            let mut out = [0f32; 3];
+            for (i, r) in rows.iter().enumerate() {
+                kv.decode_row_into(i, &mut out);
+                for (a, b) in r.iter().zip(out.iter()) {
+                    let err = (a - b).abs();
+                    assert!(err <= tol * (1.0 + a.abs()), "{quant:?} row {i}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_bytes_shrink_and_account_exactly() {
+        let arenas = [
+            PageArena::new(4),
+            PageArena::new_quant(4, KvQuant::F16),
+            PageArena::new_quant(4, KvQuant::Int8),
+        ];
+        // 9 rows of width 16 at 4 rows/page = 3 pages; words/row: 16, 8, 5.
+        let words = [16usize, 8, 5];
+        for (arena, w) in arenas.iter().zip(words) {
+            let mut kv = PagedKv::new(arena, 16);
+            for i in 0..9 {
+                kv.push_row(&[i as f32 * 0.1; 16]);
+            }
+            assert_eq!(kv.bytes(), 3 * 4 * w * 4);
+            assert_eq!(arena.stats().live_bytes, kv.bytes());
+            assert_eq!(arena.stats().high_water_bytes, kv.bytes());
+        }
+    }
+
+    #[test]
+    fn update_row_is_cow_isolated_on_quantized_forks() {
+        let arena = PageArena::new_quant(4, KvQuant::F16);
+        let mut a = PagedKv::new(&arena, 2);
+        for i in 0..8 {
+            a.push_row(&[i as f32, 0.5]);
+        }
+        let mut b = a.fork();
+        let mut scratch = Vec::new();
+        let mut before = [0f32; 2];
+        a.decode_row_into(1, &mut before);
+        b.update_row(1, &mut scratch, |row| row[0] = 99.0);
+        let mut out = [0f32; 2];
+        a.decode_row_into(1, &mut out);
+        assert_eq!(out, before, "fork write must not disturb the original");
+        b.decode_row_into(1, &mut out);
+        // 99.0 and 0.5 are exactly representable in f16.
+        assert_eq!(out, [99.0, 0.5]);
+        // 2 shared pages + 1 CoW copy, each 4 rows × 1 word × 4 bytes.
+        assert_eq!(arena.stats().live_bytes, 3 * 4 * 4);
+    }
+
+    #[test]
+    fn paged_u32_is_lossless_on_quantized_arenas() {
+        let arena = PageArena::new_quant(3, KvQuant::Int8);
+        let mut c = PagedU32::new(&arena);
+        let vals = [0u32, 0xFFFF_FFFF, 0x8000_0001, 7];
+        for &v in &vals {
+            c.push(v);
+        }
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(c.get(i), v);
+        }
     }
 }

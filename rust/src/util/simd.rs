@@ -230,6 +230,255 @@ fn scale_scalar(out: &mut [f32], s: f32) {
 }
 
 // ---------------------------------------------------------------------------
+// f16 codec (hand-rolled IEEE binary16 <-> f32 conversions)
+// ---------------------------------------------------------------------------
+
+/// Round an f32 to IEEE binary16 bits: round-to-nearest-even, values beyond
+/// the f16 range saturate to ±65504 (the largest finite f16) instead of
+/// overflowing to infinity, so decoding an encoded page can never introduce
+/// non-finite values the f32 path did not have. NaN maps to a quiet NaN.
+/// Deterministic — re-encoding the same f32 always yields the same bits,
+/// which is what keeps quantized forks byte-identical to fresh prefills.
+pub fn f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        return if man == 0 { sign | 0x7C00 } else { sign | 0x7E00 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7BFF; // saturate to the largest finite f16
+    }
+    if e <= 0 {
+        // Subnormal (or zero) in f16: shift the significand (implicit bit
+        // included) into place, rounding the dropped bits to nearest-even.
+        if e < -10 {
+            return sign; // underflows to ±0
+        }
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = match rem.cmp(&halfway) {
+            std::cmp::Ordering::Greater => half + 1,
+            std::cmp::Ordering::Equal => half + (half & 1),
+            std::cmp::Ordering::Less => half,
+        };
+        return sign | rounded as u16;
+    }
+    // Normal: top 10 mantissa bits, round-to-nearest-even; a rounding carry
+    // propagates into the exponent naturally (0x3FF -> next exponent).
+    let half = man >> 13;
+    let rem = man & 0x1FFF;
+    let mut h = ((e as u32) << 10) | half;
+    match rem.cmp(&0x1000) {
+        std::cmp::Ordering::Greater => h += 1,
+        std::cmp::Ordering::Equal => h += h & 1,
+        std::cmp::Ordering::Less => {}
+    }
+    if (h & 0x7FFF) >= 0x7C00 {
+        return sign | 0x7BFF; // rounding carried into infinity: saturate
+    }
+    sign | h as u16
+}
+
+/// Exact IEEE binary16 -> f32 conversion (every f16 value is representable).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // Subnormal: renormalize. The leading set bit of `man` (position
+        // 10-shift) becomes the implicit bit.
+        let shift = man.leading_zeros() - 21; // 1..=10
+        let man23 = (man << (13 + shift)) & 0x007F_FFFF;
+        return f32::from_bits(sign | ((113 - shift) << 23) | man23);
+    }
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13)); // inf / NaN
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// Decode logical element `i` of an f16-packed row: two halves per f32
+/// word, element `2w` in the low 16 bits of word `w`, `2w+1` in the high.
+#[inline]
+fn f16_lane(enc: &[f32], i: usize) -> f32 {
+    let w = enc[i / 2].to_bits();
+    f16_to_f32(if i % 2 == 0 { w as u16 } else { (w >> 16) as u16 })
+}
+
+/// Unscaled logical element `i` of an int8-packed row: four two's-complement
+/// bytes per f32 word, element `4w+b` in byte `b` (little-endian lanes).
+#[inline]
+fn i8_lane(enc: &[f32], i: usize) -> f32 {
+    ((enc[i / 4].to_bits() >> (8 * (i % 4))) as u8 as i8) as f32
+}
+
+// ---------------------------------------------------------------------------
+// Dequant-and-score ops (quantized KV pages)
+//
+// `enc` holds packed words (see `f16_lane`/`i8_lane` for the layouts); the
+// logical length is `q.len()` / `out.len()`. Per-lane decoding is exact and
+// identical on every backend (bit manipulation for f16, exact i8->f32
+// conversion plus one IEEE mul by the row scale for int8), so the
+// determinism contract matches the f32 ops: elementwise dequant-axpy is
+// bit-identical to scalar, dequant reductions block by element index and
+// collapse through the same fixed lane trees.
+// ---------------------------------------------------------------------------
+
+/// `Σ q[i]·dec16(enc)[i]` — dot against an f16-packed row.
+#[inline]
+pub fn dot_dequant_f16(q: &[f32], enc: &[f32]) -> f32 {
+    dispatch!(backend(), dot_dequant_f16_scalar(q, enc), vecimpl::dot_dequant_f16(q, enc))
+}
+
+/// [`dot_dequant_f16`] on an explicit backend (benches/tests only).
+pub fn dot_dequant_f16_with(be: Backend, q: &[f32], enc: &[f32]) -> f32 {
+    dispatch!(checked(be), dot_dequant_f16_scalar(q, enc), vecimpl::dot_dequant_f16(q, enc))
+}
+
+fn dot_dequant_f16_scalar(q: &[f32], enc: &[f32]) -> f32 {
+    let mut s = 0.0;
+    for (i, &qi) in q.iter().enumerate() {
+        s += qi * f16_lane(enc, i);
+    }
+    s
+}
+
+/// `Σ (q[i]−dec16(enc)[i])²` — Cauchy distance against an f16-packed row.
+#[inline]
+pub fn sqdist_dequant_f16(q: &[f32], enc: &[f32]) -> f32 {
+    dispatch!(backend(), sqdist_dequant_f16_scalar(q, enc), vecimpl::sqdist_dequant_f16(q, enc))
+}
+
+/// [`sqdist_dequant_f16`] on an explicit backend (benches/tests only).
+pub fn sqdist_dequant_f16_with(be: Backend, q: &[f32], enc: &[f32]) -> f32 {
+    dispatch!(checked(be), sqdist_dequant_f16_scalar(q, enc), vecimpl::sqdist_dequant_f16(q, enc))
+}
+
+fn sqdist_dequant_f16_scalar(q: &[f32], enc: &[f32]) -> f32 {
+    let mut s = 0.0;
+    for (i, &qi) in q.iter().enumerate() {
+        let d = qi - f16_lane(enc, i);
+        s += d * d;
+    }
+    s
+}
+
+/// `out[i] += a·dec16(enc)[i]` — AV-accumulate from an f16-packed row.
+#[inline]
+pub fn axpy_dequant_f16(out: &mut [f32], a: f32, enc: &[f32]) {
+    dispatch!(
+        backend(),
+        axpy_dequant_f16_scalar(out, a, enc),
+        vecimpl::axpy_dequant_f16(out, a, enc)
+    )
+}
+
+/// [`axpy_dequant_f16`] on an explicit backend (benches/tests only).
+pub fn axpy_dequant_f16_with(be: Backend, out: &mut [f32], a: f32, enc: &[f32]) {
+    dispatch!(
+        checked(be),
+        axpy_dequant_f16_scalar(out, a, enc),
+        vecimpl::axpy_dequant_f16(out, a, enc)
+    )
+}
+
+fn axpy_dequant_f16_scalar(out: &mut [f32], a: f32, enc: &[f32]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o += a * f16_lane(enc, i);
+    }
+}
+
+/// `Σ q[i]·(dec8(enc)[i]·scale)` — dot against an int8-packed row with its
+/// per-row scale.
+#[inline]
+pub fn dot_dequant_i8(q: &[f32], enc: &[f32], scale: f32) -> f32 {
+    dispatch!(
+        backend(),
+        dot_dequant_i8_scalar(q, enc, scale),
+        vecimpl::dot_dequant_i8(q, enc, scale)
+    )
+}
+
+/// [`dot_dequant_i8`] on an explicit backend (benches/tests only).
+pub fn dot_dequant_i8_with(be: Backend, q: &[f32], enc: &[f32], scale: f32) -> f32 {
+    dispatch!(
+        checked(be),
+        dot_dequant_i8_scalar(q, enc, scale),
+        vecimpl::dot_dequant_i8(q, enc, scale)
+    )
+}
+
+fn dot_dequant_i8_scalar(q: &[f32], enc: &[f32], scale: f32) -> f32 {
+    let mut s = 0.0;
+    for (i, &qi) in q.iter().enumerate() {
+        s += qi * (i8_lane(enc, i) * scale);
+    }
+    s
+}
+
+/// `Σ (q[i]−dec8(enc)[i]·scale)²` — Cauchy distance against an int8 row.
+#[inline]
+pub fn sqdist_dequant_i8(q: &[f32], enc: &[f32], scale: f32) -> f32 {
+    dispatch!(
+        backend(),
+        sqdist_dequant_i8_scalar(q, enc, scale),
+        vecimpl::sqdist_dequant_i8(q, enc, scale)
+    )
+}
+
+/// [`sqdist_dequant_i8`] on an explicit backend (benches/tests only).
+pub fn sqdist_dequant_i8_with(be: Backend, q: &[f32], enc: &[f32], scale: f32) -> f32 {
+    dispatch!(
+        checked(be),
+        sqdist_dequant_i8_scalar(q, enc, scale),
+        vecimpl::sqdist_dequant_i8(q, enc, scale)
+    )
+}
+
+fn sqdist_dequant_i8_scalar(q: &[f32], enc: &[f32], scale: f32) -> f32 {
+    let mut s = 0.0;
+    for (i, &qi) in q.iter().enumerate() {
+        let d = qi - i8_lane(enc, i) * scale;
+        s += d * d;
+    }
+    s
+}
+
+/// `out[i] += a·(dec8(enc)[i]·scale)` — AV-accumulate from an int8 row.
+#[inline]
+pub fn axpy_dequant_i8(out: &mut [f32], a: f32, enc: &[f32], scale: f32) {
+    dispatch!(
+        backend(),
+        axpy_dequant_i8_scalar(out, a, enc, scale),
+        vecimpl::axpy_dequant_i8(out, a, enc, scale)
+    )
+}
+
+/// [`axpy_dequant_i8`] on an explicit backend (benches/tests only).
+pub fn axpy_dequant_i8_with(be: Backend, out: &mut [f32], a: f32, enc: &[f32], scale: f32) {
+    dispatch!(
+        checked(be),
+        axpy_dequant_i8_scalar(out, a, enc, scale),
+        vecimpl::axpy_dequant_i8(out, a, enc, scale)
+    )
+}
+
+fn axpy_dequant_i8_scalar(out: &mut [f32], a: f32, enc: &[f32], scale: f32) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o += a * (i8_lane(enc, i) * scale);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Mamba recurrence step
 // ---------------------------------------------------------------------------
 
@@ -477,6 +726,162 @@ mod vecimpl {
         }
         s
     }
+
+    /// Decode one lane block of an f16-packed row into `buf`. The per-lane
+    /// conversion is the scalar bit-exact decode (no F16C dependency — AVX2
+    /// does not imply it); the arithmetic and reduction tree downstream are
+    /// the same vector ops as the f32 arms.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_f16x8(enc: &[f32], i: usize, buf: &mut [f32; LANES]) -> __m256 {
+        for (l, b) in buf.iter_mut().enumerate() {
+            *b = super::f16_lane(enc, i + l);
+        }
+        _mm256_loadu_ps(buf.as_ptr())
+    }
+
+    /// Load 8 consecutive int8 elements starting at element `i` (a multiple
+    /// of 8, so two whole packed words) and widen to f32 exactly. x86 is
+    /// little-endian, so the packed u32 words are byte-contiguous.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_i8x8(enc: &[f32], i: usize) -> __m256 {
+        let p = (enc.as_ptr() as *const u8).add(i);
+        let v8 = _mm_loadl_epi64(p as *const __m128i);
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(v8))
+    }
+
+    /// # Safety
+    /// Caller must guarantee AVX2 is available on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_dequant_f16(q: &[f32], enc: &[f32]) -> f32 {
+        let n = q.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut buf = [0f32; LANES];
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = load_f16x8(enc, i, &mut buf);
+            let vq = _mm256_loadu_ps(q.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(vq, vx));
+            i += LANES;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += q[i] * super::f16_lane(enc, i);
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must guarantee AVX2 is available on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sqdist_dequant_f16(q: &[f32], enc: &[f32]) -> f32 {
+        let n = q.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut buf = [0f32; LANES];
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = load_f16x8(enc, i, &mut buf);
+            let vq = _mm256_loadu_ps(q.as_ptr().add(i));
+            let d = _mm256_sub_ps(vq, vx);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+            i += LANES;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            let d = q[i] - super::f16_lane(enc, i);
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must guarantee AVX2 is available on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_dequant_f16(out: &mut [f32], a: f32, enc: &[f32]) {
+        let n = out.len();
+        let va = _mm256_set1_ps(a);
+        let mut buf = [0f32; LANES];
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = load_f16x8(enc, i, &mut buf);
+            let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(vo, _mm256_mul_ps(va, vx)));
+            i += LANES;
+        }
+        while i < n {
+            out[i] += a * super::f16_lane(enc, i);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must guarantee AVX2 is available on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_dequant_i8(q: &[f32], enc: &[f32], scale: f32) -> f32 {
+        let n = q.len();
+        let vs = _mm256_set1_ps(scale);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_mul_ps(load_i8x8(enc, i), vs);
+            let vq = _mm256_loadu_ps(q.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(vq, vx));
+            i += LANES;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += q[i] * (super::i8_lane(enc, i) * scale);
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must guarantee AVX2 is available on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sqdist_dequant_i8(q: &[f32], enc: &[f32], scale: f32) -> f32 {
+        let n = q.len();
+        let vs = _mm256_set1_ps(scale);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_mul_ps(load_i8x8(enc, i), vs);
+            let vq = _mm256_loadu_ps(q.as_ptr().add(i));
+            let d = _mm256_sub_ps(vq, vx);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+            i += LANES;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            let d = q[i] - super::i8_lane(enc, i) * scale;
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must guarantee AVX2 is available on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_dequant_i8(out: &mut [f32], a: f32, enc: &[f32], scale: f32) {
+        let n = out.len();
+        let va = _mm256_set1_ps(a);
+        let vs = _mm256_set1_ps(scale);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_mul_ps(load_i8x8(enc, i), vs);
+            let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(vo, _mm256_mul_ps(va, vx)));
+            i += LANES;
+        }
+        while i < n {
+            out[i] += a * (super::i8_lane(enc, i) * scale);
+            i += 1;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -617,6 +1022,161 @@ mod vecimpl {
         }
         s
     }
+
+    /// Decode one lane block of an f16-packed row into `buf` (scalar
+    /// bit-exact decode per lane, vector math downstream — same contract as
+    /// the AVX2 module).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn load_f16x4(enc: &[f32], i: usize, buf: &mut [f32; LANES]) -> float32x4_t {
+        for (l, b) in buf.iter_mut().enumerate() {
+            *b = super::f16_lane(enc, i + l);
+        }
+        vld1q_f32(buf.as_ptr())
+    }
+
+    /// Widen the 4 int8 elements of one packed word to f32 exactly. `i` is
+    /// a multiple of 4 inside the blocked loops, so the block is exactly
+    /// word `i / 4`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn i8x4_to_f32(w: u32) -> float32x4_t {
+        let v8 = vcreate_s8(w as u64);
+        let v16 = vget_low_s16(vmovl_s8(v8));
+        vcvtq_f32_s32(vmovl_s16(v16))
+    }
+
+    /// # Safety
+    /// Caller must guarantee NEON is available on the running CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_dequant_f16(q: &[f32], enc: &[f32]) -> f32 {
+        let n = q.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut buf = [0f32; LANES];
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = load_f16x4(enc, i, &mut buf);
+            let vq = vld1q_f32(q.as_ptr().add(i));
+            acc = vaddq_f32(acc, vmulq_f32(vq, vx));
+            i += LANES;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += q[i] * super::f16_lane(enc, i);
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must guarantee NEON is available on the running CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sqdist_dequant_f16(q: &[f32], enc: &[f32]) -> f32 {
+        let n = q.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut buf = [0f32; LANES];
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = load_f16x4(enc, i, &mut buf);
+            let vq = vld1q_f32(q.as_ptr().add(i));
+            let d = vsubq_f32(vq, vx);
+            acc = vaddq_f32(acc, vmulq_f32(d, d));
+            i += LANES;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            let d = q[i] - super::f16_lane(enc, i);
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must guarantee NEON is available on the running CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_dequant_f16(out: &mut [f32], a: f32, enc: &[f32]) {
+        let n = out.len();
+        let va = vdupq_n_f32(a);
+        let mut buf = [0f32; LANES];
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = load_f16x4(enc, i, &mut buf);
+            let vo = vld1q_f32(out.as_ptr().add(i));
+            vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(vo, vmulq_f32(va, vx)));
+            i += LANES;
+        }
+        while i < n {
+            out[i] += a * super::f16_lane(enc, i);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must guarantee NEON is available on the running CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_dequant_i8(q: &[f32], enc: &[f32], scale: f32) -> f32 {
+        let n = q.len();
+        let vs = vdupq_n_f32(scale);
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = vmulq_f32(i8x4_to_f32(enc[i / 4].to_bits()), vs);
+            let vq = vld1q_f32(q.as_ptr().add(i));
+            acc = vaddq_f32(acc, vmulq_f32(vq, vx));
+            i += LANES;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += q[i] * (super::i8_lane(enc, i) * scale);
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must guarantee NEON is available on the running CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sqdist_dequant_i8(q: &[f32], enc: &[f32], scale: f32) -> f32 {
+        let n = q.len();
+        let vs = vdupq_n_f32(scale);
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = vmulq_f32(i8x4_to_f32(enc[i / 4].to_bits()), vs);
+            let vq = vld1q_f32(q.as_ptr().add(i));
+            let d = vsubq_f32(vq, vx);
+            acc = vaddq_f32(acc, vmulq_f32(d, d));
+            i += LANES;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            let d = q[i] - super::i8_lane(enc, i) * scale;
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must guarantee NEON is available on the running CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_dequant_i8(out: &mut [f32], a: f32, enc: &[f32], scale: f32) {
+        let n = out.len();
+        let va = vdupq_n_f32(a);
+        let vs = vdupq_n_f32(scale);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = vmulq_f32(i8x4_to_f32(enc[i / 4].to_bits()), vs);
+            let vo = vld1q_f32(out.as_ptr().add(i));
+            vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(vo, vmulq_f32(va, vx)));
+            i += LANES;
+        }
+        while i < n {
+            out[i] += a * (super::i8_lane(enc, i) * scale);
+            i += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -722,6 +1282,130 @@ mod tests {
             let b = interleave_with(be, &masked, bits);
             prop::assert_eq_prop(&a, &b)
         });
+    }
+
+    fn pack_f16_row(row: &[f32]) -> Vec<f32> {
+        let mut enc = vec![0f32; row.len().div_ceil(2)];
+        for (i, &x) in row.iter().enumerate() {
+            let w = enc[i / 2].to_bits() | ((f16_bits(x) as u32) << (16 * (i % 2)));
+            enc[i / 2] = f32::from_bits(w);
+        }
+        enc
+    }
+
+    fn pack_i8_row(row: &[f32]) -> (Vec<f32>, f32) {
+        let maxabs = row.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let scale = maxabs / 127.0;
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let mut enc = vec![0f32; row.len().div_ceil(4)];
+        for (i, &x) in row.iter().enumerate() {
+            let q = (x * inv).round().clamp(-127.0, 127.0) as i8;
+            let w = enc[i / 4].to_bits() | (((q as u8) as u32) << (8 * (i % 4)));
+            enc[i / 4] = f32::from_bits(w);
+        }
+        (enc, scale)
+    }
+
+    #[test]
+    fn f16_codec_round_trips_all_finite_patterns() {
+        // Every finite f16 is exactly representable in f32, so decode→encode
+        // must be the identity over the whole finite bit space.
+        for h in 0..=u16::MAX {
+            if (h >> 10) & 0x1F == 0x1F {
+                continue; // inf / NaN payloads don't round-trip by design
+            }
+            let x = f16_to_f32(h);
+            assert_eq!(f16_bits(x), h, "h={h:#06x} x={x}");
+        }
+    }
+
+    #[test]
+    fn f16_codec_pins_known_values() {
+        assert_eq!(f16_bits(1.0), 0x3C00);
+        assert_eq!(f16_bits(0.5), 0x3800);
+        assert_eq!(f16_bits(-2.5), 0xC100);
+        assert_eq!(f16_bits(65504.0), 0x7BFF);
+        // Finite overflow saturates to the largest finite f16, never inf.
+        assert_eq!(f16_bits(1e9), 0x7BFF);
+        assert_eq!(f16_bits(-1e9), 0xFBFF);
+        assert_eq!(f16_bits(f32::NAN), 0x7E00);
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f16_bits(-0.0).to_be_bytes(), [0x80, 0x00]);
+    }
+
+    #[test]
+    fn scalar_dequant_matches_explicit_decode() {
+        let mut rng = Rng::new(0x51D5);
+        for n in [1usize, 5, 8, 13] {
+            let mut q = vec![0f32; n];
+            let mut row = vec![0f32; n];
+            rng.fill_normal(&mut q, 1.0);
+            rng.fill_normal(&mut row, 1.0);
+            let f16 = pack_f16_row(&row);
+            let (i8e, scale) = pack_i8_row(&row);
+            let dec16: Vec<f32> = row.iter().map(|&x| f16_to_f32(f16_bits(x))).collect();
+            let dec8: Vec<f32> = row
+                .iter()
+                .map(|&x| {
+                    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+                    ((x * inv).round().clamp(-127.0, 127.0) as i8) as f32 * scale
+                })
+                .collect();
+            let mut s16 = 0f32;
+            let mut s8 = 0f32;
+            for i in 0..n {
+                s16 += q[i] * dec16[i];
+                s8 += q[i] * dec8[i];
+            }
+            assert_eq!(dot_dequant_f16_with(Backend::Scalar, &q, &f16), s16, "f16 n={n}");
+            assert_eq!(dot_dequant_i8_with(Backend::Scalar, &q, &i8e, scale), s8, "i8 n={n}");
+        }
+    }
+
+    #[test]
+    fn dequant_reductions_match_scalar_at_every_remainder() {
+        let be = backend();
+        let mut rng = Rng::new(0x51D4);
+        for n in 1..(2 * be.lanes().max(4) + 3) {
+            let mut q = vec![0f32; n];
+            let mut row = vec![0f32; n];
+            rng.fill_normal(&mut q, 1.0);
+            rng.fill_normal(&mut row, 1.0);
+            let f16 = pack_f16_row(&row);
+            let (i8e, scale) = pack_i8_row(&row);
+            let close = |tag: &str, s: f32, v: f32| {
+                assert!((s - v).abs() <= 1e-4 * (1.0 + s.abs()), "{tag} n={n}: {s} vs {v}");
+            };
+            let s = dot_dequant_f16_with(Backend::Scalar, &q, &f16);
+            close("dot_f16", s, dot_dequant_f16_with(be, &q, &f16));
+            let s = sqdist_dequant_f16_with(Backend::Scalar, &q, &f16);
+            close("sqdist_f16", s, sqdist_dequant_f16_with(be, &q, &f16));
+            let s = dot_dequant_i8_with(Backend::Scalar, &q, &i8e, scale);
+            close("dot_i8", s, dot_dequant_i8_with(be, &q, &i8e, scale));
+            let s = sqdist_dequant_i8_with(Backend::Scalar, &q, &i8e, scale);
+            close("sqdist_i8", s, sqdist_dequant_i8_with(be, &q, &i8e, scale));
+        }
+    }
+
+    #[test]
+    fn dequant_axpy_is_bit_identical_to_scalar() {
+        let be = backend();
+        let mut rng = Rng::new(0x51D6);
+        for n in 1..(2 * be.lanes().max(4) + 3) {
+            let mut row = vec![0f32; n];
+            let mut o = vec![0f32; n];
+            rng.fill_normal(&mut row, 1.0);
+            rng.fill_normal(&mut o, 1.0);
+            let f16 = pack_f16_row(&row);
+            let (i8e, scale) = pack_i8_row(&row);
+            let (mut o1, mut o2) = (o.clone(), o.clone());
+            axpy_dequant_f16_with(Backend::Scalar, &mut o1, 0.37, &f16);
+            axpy_dequant_f16_with(be, &mut o2, 0.37, &f16);
+            assert_eq!(o1, o2, "axpy_f16 n={n}");
+            axpy_dequant_i8_with(Backend::Scalar, &mut o1, 0.37, &i8e, scale);
+            axpy_dequant_i8_with(be, &mut o2, 0.37, &i8e, scale);
+            assert_eq!(o1, o2, "axpy_i8 n={n}");
+        }
     }
 
     #[test]

@@ -14,12 +14,17 @@
 //! 3. Under a deliberately tight `--kv-mem-budget`, preempted-and-resumed
 //!    sessions stream exactly the tokens an unconstrained run produces,
 //!    and pages really return to the arena afterwards.
+//! 4. Byte accounting stays exact per element codec (`--kv-quant`):
+//!    fork-shared pages are counted once, the high-water mark is monotone
+//!    under fork/append churn, and quantized arenas drain completely on
+//!    retirement.
 
 use std::sync::{Arc, Mutex};
 
 use zeta::attention::{all_impls, decode_full, DecodeStep, Workload};
 use zeta::coordinator::metrics::Metrics;
 use zeta::coordinator::{NativeDecodeModel, NativeModelConfig, NativeServing};
+use zeta::util::arena::{KvQuant, PageArena, PagedKv};
 use zeta::util::pool::Pool;
 
 const TOL: f32 = 1e-4;
@@ -242,8 +247,20 @@ fn drive_sessions(
     prompts: &[Vec<i32>],
     max_new: usize,
 ) -> (Vec<Vec<i32>>, u64, usize, usize) {
+    drive_sessions_q(kernel, "f32", budget, prompts, max_new)
+}
+
+/// Like [`drive_sessions`], with an explicit `--kv-quant` codec.
+fn drive_sessions_q(
+    kernel: &str,
+    kv_quant: &str,
+    budget: usize,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> (Vec<Vec<i32>>, u64, usize, usize) {
     let model = NativeDecodeModel::new(NativeModelConfig {
         kernel: kernel.into(),
+        kv_quant: kv_quant.into(),
         ..Default::default()
     })
     .unwrap();
@@ -309,5 +326,74 @@ fn retired_sessions_return_their_pages_to_the_arena() {
     assert_eq!(live_after, 0, "all pages must return to the arena free list");
     for s in &streams {
         assert_eq!(s.len(), 10);
+    }
+}
+
+#[test]
+fn fork_heavy_byte_accounting_is_exact_per_codec() {
+    // The codec changes bytes/page but must not change the accounting
+    // rules: fork-shared pages count once, the high-water mark is
+    // monotone and never below live, and every page returns on drop.
+    for quant in [KvQuant::F32, KvQuant::F16, KvQuant::Int8] {
+        let arena = PageArena::new_quant(4, quant);
+        let width = 8usize;
+        let page_bytes = 4 * quant.enc_row_elems(width) * 4;
+        let mut base = PagedKv::new(&arena, width);
+        let row: Vec<f32> = (0..width).map(|i| 0.25 * i as f32 - 0.5).collect();
+        for _ in 0..16 {
+            base.push_row(&row); // 16 rows = exactly 4 full pages
+        }
+        assert_eq!(arena.stats().live_bytes, 4 * page_bytes, "{quant:?}: base pages");
+
+        // Eight forks share every (full) page: live bytes must not move.
+        let mut forks: Vec<PagedKv> = (0..8).map(|_| base.fork()).collect();
+        assert_eq!(
+            arena.stats().live_bytes,
+            4 * page_bytes,
+            "{quant:?}: fork-shared pages must be counted once"
+        );
+
+        // Each fork appends one row, opening one private tail page; the
+        // high-water mark must rise monotonically and dominate live.
+        let mut hw = arena.stats().high_water_bytes;
+        for f in forks.iter_mut() {
+            f.push_row(&row);
+            let st = arena.stats();
+            assert!(st.high_water_bytes >= hw, "{quant:?}: high-water must be monotone");
+            assert!(st.high_water_bytes >= st.live_bytes, "{quant:?}: high-water below live");
+            hw = st.high_water_bytes;
+        }
+        assert_eq!(
+            arena.stats().live_bytes,
+            (4 + 8) * page_bytes,
+            "{quant:?}: one private tail page per fork"
+        );
+
+        // Retirement: forks return their tails, then the base returns the
+        // shared pages — the arena must be fully drained onto free lists.
+        drop(forks);
+        assert_eq!(arena.stats().live_bytes, 4 * page_bytes, "{quant:?}: fork tails returned");
+        drop(base);
+        let st = arena.stats();
+        assert_eq!(st.live_bytes, 0, "{quant:?}: pages must fully return on retirement");
+        assert_eq!(st.live_pages, 0, "{quant:?}: no live pages after retirement");
+        assert_eq!(st.free_bytes, hw, "{quant:?}: every allocated byte parked on free lists");
+    }
+}
+
+#[test]
+fn quantized_sessions_return_their_pages_after_retirement() {
+    // The serving-layer drain gate, repeated on the quantized codecs:
+    // high-water shrinks with the codec and the arena still fully drains.
+    let prompts: Vec<Vec<i32>> = (0..4).map(|s| vec![(s + 1) as i32; 20]).collect();
+    let (_, _, hw_f32, _) = drive_sessions_q("naive", "f32", 0, &prompts, 10);
+    for codec in ["f16", "int8"] {
+        let (streams, _, hw, live_after) = drive_sessions_q("naive", codec, 0, &prompts, 10);
+        assert!(hw > 0, "{codec}: sessions must have allocated pages");
+        assert!(hw < hw_f32, "{codec}: quantized pages must be smaller than f32 pages");
+        assert_eq!(live_after, 0, "{codec}: all pages must return to the arena");
+        for s in &streams {
+            assert_eq!(s.len(), 10);
+        }
     }
 }

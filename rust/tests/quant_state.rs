@@ -1,0 +1,275 @@
+//! Precision-polymorphic KV gate (tier-1) — the `--kv-quant` companion of
+//! `paged_state.rs`:
+//!
+//! 1. The `f32` codec is a pure refactor: explicitly selecting it produces
+//!    token streams bit-identical to the default configuration for all
+//!    four kernels across the thread matrix {1, 2, 4, 8}.
+//! 2. Quantized decode is tolerance-gated: stepping a kernel on an
+//!    `f16`/`int8` arena stays within an asserted per-codec bound of the
+//!    f32 reference (selection in the ZETA kernel reads the unquantized
+//!    Morton index, so only the scoring error is codec-dependent; the
+//!    mamba recurrence carries its state *through* the codec each step).
+//! 3. Forks on quantized arenas are exact: the codecs encode
+//!    deterministically, so a fork + divergent continuation is bit-equal
+//!    to a fresh prefill of the same tokens — quantization error included.
+//! 4. The smaller codecs really stretch admission: at an identical
+//!    `--kv-mem-budget`, an int8 server sustains at least twice the
+//!    concurrently active sessions of an f32 server, with every stream
+//!    still matching its own unconstrained reference.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use zeta::attention::{all_impls, Workload};
+use zeta::coordinator::metrics::Metrics;
+use zeta::coordinator::session::StepScratch;
+use zeta::coordinator::{NativeDecodeModel, NativeModelConfig, NativeServing, Session, StreamEvent};
+use zeta::util::arena::{KvQuant, PageArena};
+use zeta::util::pool::Pool;
+
+/// Decode tolerance vs the f32 reference, per codec, relative to the
+/// reference stream's magnitude (`bound = TOL * (1 + max|ref|)`). f16
+/// carries ~2^-11 relative element error, int8 ~1/254 of each row's
+/// max-abs; the bounds leave headroom for the mamba recurrence, which
+/// re-quantizes its state every step and compounds the error by
+/// ~1/(1-decay).
+const F16_TOL: f32 = 2e-2;
+const INT8_TOL: f32 = 2.5e-1;
+
+fn serve_streams(
+    kernel: &str,
+    kv_quant: Option<&str>,
+    threads: usize,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> Vec<Vec<i32>> {
+    let mut cfg = NativeModelConfig { kernel: kernel.into(), ..Default::default() };
+    if let Some(q) = kv_quant {
+        cfg.kv_quant = q.into();
+    }
+    let model = NativeDecodeModel::new(cfg).unwrap();
+    let mut serving = NativeServing::new(model, 0, 32);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    serving.drive_to_completion(prompts, max_new, &metrics, &Pool::new(threads))
+}
+
+#[test]
+fn f32_codec_streams_are_bit_identical_for_every_kernel_across_threads() {
+    // `--kv-quant f32` must be indistinguishable from a server that never
+    // heard of codecs: same streams as the default config, for every
+    // kernel, at every pool size the serving sweeps run under.
+    let prompts: Vec<Vec<i32>> = (0..3)
+        .map(|s| (0..70).map(|i| ((i * 7 + s * 19 + 5) % 31) as i32).collect())
+        .collect();
+    for kernel in ["zeta", "naive", "flash", "mamba"] {
+        let baseline = serve_streams(kernel, None, 1, &prompts, 12);
+        for threads in [1usize, 2, 4, 8] {
+            let explicit = serve_streams(kernel, Some("f32"), threads, &prompts, 12);
+            assert_eq!(
+                explicit, baseline,
+                "{kernel} threads={threads}: explicit f32 codec changed the streams"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_decode_stays_within_per_codec_tolerance_of_f32() {
+    // n spans a ZETA causal chunk boundary; page 16 keeps several pages in
+    // play so the error really flows through paged storage.
+    let (n, d, dv) = (96usize, 16usize, 8usize);
+    let w = Workload::random(n, d, dv, 4242);
+    for imp in all_impls() {
+        let fa = PageArena::new_quant(16, KvQuant::F32);
+        let mut rs = imp.begin_decode_in(d, dv, &fa);
+        let mut refs = vec![0f32; n * dv];
+        for t in 0..n {
+            rs.step(w.q.row(t), w.k.row(t), w.v.row(t), &mut refs[t * dv..(t + 1) * dv]);
+        }
+        let ref_inf = refs.iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert!(ref_inf.is_finite());
+        for (quant, tol) in [(KvQuant::F16, F16_TOL), (KvQuant::Int8, INT8_TOL)] {
+            let arena = PageArena::new_quant(16, quant);
+            let mut st = imp.begin_decode_in(d, dv, &arena);
+            let mut out = vec![0f32; dv];
+            let mut worst = 0f32;
+            for t in 0..n {
+                st.step(w.q.row(t), w.k.row(t), w.v.row(t), &mut out);
+                for (a, b) in out.iter().zip(&refs[t * dv..(t + 1) * dv]) {
+                    assert!(a.is_finite(), "{} {quant:?} t={t}: non-finite output", imp.name());
+                    worst = worst.max((a - b).abs());
+                }
+            }
+            let bound = tol * (1.0 + ref_inf);
+            assert!(
+                worst <= bound,
+                "{} {quant:?}: |quantized - f32| = {worst} exceeds {bound}",
+                imp.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_fork_continuation_is_bit_equal_to_fresh_prefill() {
+    // Deterministic encoding makes forks exact *on the codec's own
+    // stream*: a fork + divergent tail replays the identical encode/decode
+    // arithmetic a fresh prefill runs, so the outputs match bit for bit —
+    // quantization error and all.
+    let (n, d, dv) = (96usize, 16usize, 8usize);
+    let steps = 30usize;
+    for quant in [KvQuant::F16, KvQuant::Int8] {
+        for imp in all_impls() {
+            let shared = Workload::random(n, d, dv, 7001);
+            let tail = Workload::random(n, d, dv, 7002);
+            for split in [13usize, 32, 49] {
+                let arena = PageArena::new_quant(16, quant);
+                let mut base = imp.begin_decode_in(d, dv, &arena);
+                let mut sink = vec![0f32; dv];
+                for t in 0..split {
+                    base.step(shared.q.row(t), shared.k.row(t), shared.v.row(t), &mut sink);
+                }
+                let mut forked = base.fork();
+                assert_eq!(forked.pos(), split, "{} {quant:?} fork pos", imp.name());
+
+                // Fresh reference: same prefix + divergent tail, same arena
+                // codec, fed serially.
+                let mut fresh = imp.begin_decode_in(d, dv, &arena);
+                for t in 0..split {
+                    fresh.step(shared.q.row(t), shared.k.row(t), shared.v.row(t), &mut sink);
+                }
+                let mut got = vec![0f32; dv];
+                let mut want = vec![0f32; dv];
+                for i in 0..steps {
+                    let t = split + i;
+                    forked.step(tail.q.row(t), tail.k.row(t), tail.v.row(t), &mut got);
+                    fresh.step(tail.q.row(t), tail.k.row(t), tail.v.row(t), &mut want);
+                    assert_eq!(
+                        got,
+                        want,
+                        "{} {quant:?} split={split} step={i}: fork diverged from fresh prefill",
+                        imp.name()
+                    );
+                }
+
+                // The original must be unperturbed by its fork: it keeps
+                // matching a never-forked control on its own tail.
+                let mut control = imp.begin_decode_in(d, dv, &arena);
+                for t in 0..split {
+                    control.step(shared.q.row(t), shared.k.row(t), shared.v.row(t), &mut sink);
+                }
+                for t in split..split + steps {
+                    base.step(shared.q.row(t), shared.k.row(t), shared.v.row(t), &mut got);
+                    control.step(shared.q.row(t), shared.k.row(t), shared.v.row(t), &mut want);
+                    assert_eq!(
+                        got,
+                        want,
+                        "{} {quant:?} split={split} t={t}: fork perturbed the original",
+                        imp.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Drive `prompts` through a budgeted server with *staged* arrivals (one
+/// new session per sweep, so admission always sees the arena bytes the
+/// earlier sessions really hold, not the empty-arena instant before their
+/// prefill). Returns (streams, peak concurrently active sessions,
+/// evictions).
+fn staged_admission_run(
+    kv_quant: &str,
+    budget: usize,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> (Vec<Vec<i32>>, usize, u64) {
+    let model = NativeDecodeModel::new(NativeModelConfig {
+        kernel: "naive".into(),
+        kv_quant: kv_quant.into(),
+        ..Default::default()
+    })
+    .unwrap();
+    let mut serving = NativeServing::new(model, budget, 32);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let depth = Arc::new(AtomicUsize::new(prompts.len()));
+    let pool = Pool::serial();
+    let mut scratch = StepScratch::default();
+    let mut sessions: Vec<Session> = Vec::new();
+    let mut rxs = Vec::new();
+    let mut next = 0usize;
+    let mut sweeps = 0u32;
+    while next < prompts.len() || !sessions.is_empty() {
+        if next < prompts.len() {
+            let (tx, rx) = mpsc::channel();
+            rxs.push(rx);
+            sessions.push(Session::new(
+                prompts[next].clone(),
+                max_new,
+                Instant::now(),
+                tx,
+                None,
+                Arc::new(AtomicBool::new(false)),
+            ));
+            next += 1;
+        }
+        serving.sweep(&mut sessions, &metrics, &depth, &mut scratch, &pool, 0);
+        sweeps += 1;
+        assert!(sweeps < 100_000, "staged session drive did not converge");
+    }
+    let streams = rxs
+        .into_iter()
+        .map(|rx| {
+            let mut toks = Vec::new();
+            let mut done = false;
+            while let Ok(ev) = rx.try_recv() {
+                match ev.expect("no stream errors expected") {
+                    StreamEvent::Token { token, .. } => toks.push(token),
+                    StreamEvent::Done { .. } => done = true,
+                }
+            }
+            assert!(done, "stream must end with Done");
+            toks
+        })
+        .collect();
+    let m = metrics.lock().unwrap();
+    (streams, m.peak_active_sessions, m.evictions)
+}
+
+#[test]
+fn int8_budget_admits_at_least_twice_the_sessions_of_f32() {
+    // Eight ~100-token sessions against a budget of ~2 f32 session
+    // estimates: the f32 server can only keep a couple active at a time,
+    // the int8 server (whose pages and admission estimate are ~3x
+    // smaller) must sustain at least twice as many — and the budget
+    // squeeze must stay invisible in every token stream.
+    let prompts: Vec<Vec<i32>> = (0..8)
+        .map(|s| (0..100).map(|i| ((i * 13 + s * 29 + 7) % 31) as i32).collect())
+        .collect();
+    let f32_model = NativeDecodeModel::new(NativeModelConfig {
+        kernel: "naive".into(),
+        ..Default::default()
+    })
+    .unwrap();
+    let est = f32_model.estimate_state_bytes(prompts[0].len());
+    let budget = 2 * est + est / 8;
+
+    let (ref_f32, _, _) = staged_admission_run("f32", 0, &prompts, 12);
+    let (ref_i8, _, _) = staged_admission_run("int8", 0, &prompts, 12);
+    let (got_f32, peak_f32, _) = staged_admission_run("f32", budget, &prompts, 12);
+    let (got_i8, peak_i8, _) = staged_admission_run("int8", budget, &prompts, 12);
+
+    assert_eq!(got_f32, ref_f32, "f32: budget squeeze must not change the streams");
+    assert_eq!(got_i8, ref_i8, "int8: budget squeeze must not change the streams");
+    assert!(peak_f32 >= 1, "f32 run must have made progress");
+    assert!(
+        peak_f32 < prompts.len(),
+        "budget {budget} B never bit on f32 (peak_active={peak_f32}) — the gate is vacuous"
+    );
+    assert!(
+        peak_i8 >= 2 * peak_f32,
+        "int8 must admit >= 2x the f32 sessions at budget {budget} B \
+         (f32 peak_active={peak_f32}, int8 peak_active={peak_i8})"
+    );
+}
