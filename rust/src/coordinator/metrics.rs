@@ -16,6 +16,16 @@ pub struct Metrics {
     pub tokens: u64,
     /// Tokens generated whose stream send failed (cancelled sessions).
     pub dropped_tokens: u64,
+    /// Tokens *produced* by the backend (counted at the kernel output,
+    /// before the delivery attempt). Every stepped token is either
+    /// delivered (`tokens`) or dropped (`dropped_tokens`) — the invariant
+    /// [`Metrics::token_accounting_balanced`] checks and the scenario gate
+    /// pins, so a future scheduling path cannot silently miscount.
+    pub stepped_tokens: u64,
+    /// Time-to-first-token samples (µs), one per session whose first
+    /// generated token was delivered — the latency the ROADMAP's serving
+    /// scenarios score at p50/p99.
+    ttft_us: Vec<u64>,
     /// Prompt-prefix cache hits: sessions that started by forking a cached
     /// page-aligned prompt prefix instead of re-prefilling it.
     pub prefix_hits: u64,
@@ -60,13 +70,21 @@ impl Metrics {
         self.batched_requests += size as u64;
     }
 
-    /// Count one decode sweep's tokens: `delivered` sends that succeeded,
-    /// `dropped` sends that failed (client gone). Only delivered tokens
-    /// feed tokens/sec. `sweep_started` is when the sweep began, so the
-    /// observed span covers the work that produced the first tokens (a
-    /// single-sweep generation still reports a non-zero span and therefore
-    /// a real tok/s).
-    pub fn record_tokens(&mut self, delivered: u64, dropped: u64, sweep_started: Instant) {
+    /// Count one decode sweep's tokens: `stepped` tokens the backend
+    /// produced, of which `delivered` sends succeeded and `dropped` sends
+    /// failed (client gone). Only delivered tokens feed tokens/sec.
+    /// `sweep_started` is when the sweep began, so the observed span
+    /// covers the work that produced the first tokens (a single-sweep
+    /// generation still reports a non-zero span and therefore a real
+    /// tok/s).
+    pub fn record_tokens(
+        &mut self,
+        delivered: u64,
+        dropped: u64,
+        stepped: u64,
+        sweep_started: Instant,
+    ) {
+        self.stepped_tokens += stepped;
         self.dropped_tokens += dropped;
         if delivered == 0 {
             // A drop-only sweep must not stretch the observed span — that
@@ -81,6 +99,33 @@ impl Metrics {
         self.tokens += delivered;
     }
 
+    /// Every produced token was either delivered or dropped — the
+    /// conservation law of the token accounting.
+    pub fn token_accounting_balanced(&self) -> bool {
+        self.tokens + self.dropped_tokens == self.stepped_tokens
+    }
+
+    /// One session's time-to-first-token (first *delivered* token).
+    pub fn record_ttft(&mut self, ttft: Duration) {
+        self.ttft_us.push(ttft.as_micros() as u64);
+    }
+
+    /// TTFT percentile over the recorded per-session samples.
+    pub fn ttft_percentile(&self, p: f64) -> Option<Duration> {
+        percentile_us(&self.ttft_us, p)
+    }
+
+    pub fn ttft_samples(&self) -> usize {
+        self.ttft_us.len()
+    }
+
+    /// Fold one sweep's active-session count into the peak gauge. The
+    /// gauge is max-monotone within a run: it can only ratchet upward,
+    /// never regress when the fleet drains.
+    pub fn note_active_sessions(&mut self, active: usize) {
+        self.peak_active_sessions = self.peak_active_sessions.max(active);
+    }
+
     /// Generated tokens per second over the observed span.
     pub fn tokens_per_sec(&self) -> f64 {
         match (self.started, self.finished) {
@@ -90,13 +135,7 @@ impl Metrics {
     }
 
     pub fn percentile(&self, p: f64) -> Option<Duration> {
-        if self.latencies_us.is_empty() {
-            return None;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        Some(Duration::from_micros(v[idx.min(v.len() - 1)]))
+        percentile_us(&self.latencies_us, p)
     }
 
     pub fn mean(&self) -> Option<Duration> {
@@ -140,6 +179,13 @@ impl Metrics {
         if self.dropped_tokens > 0 {
             s.push_str(&format!(" dropped_tokens={}", self.dropped_tokens));
         }
+        if !self.ttft_us.is_empty() {
+            s.push_str(&format!(
+                " ttft_p50={:?} ttft_p99={:?}",
+                self.ttft_percentile(50.0).unwrap_or_default(),
+                self.ttft_percentile(99.0).unwrap_or_default()
+            ));
+        }
         if self.arena_high_water_bytes > 0 {
             s.push_str(&format!(
                 " kv_state={}B arena_live={}B arena_hw={}B arena_pages={}",
@@ -160,6 +206,17 @@ impl Metrics {
         }
         s
     }
+}
+
+/// Nearest-rank percentile over raw µs samples.
+fn percentile_us(samples: &[u64], p: f64) -> Option<Duration> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    Some(Duration::from_micros(v[idx.min(v.len() - 1)]))
 }
 
 #[cfg(test)]
@@ -213,17 +270,61 @@ mod tests {
     fn dropped_tokens_do_not_feed_throughput() {
         let mut m = Metrics::new();
         let t0 = Instant::now();
-        m.record_tokens(5, 3, t0);
+        m.record_tokens(5, 3, 8, t0);
         assert_eq!(m.tokens, 5);
         assert_eq!(m.dropped_tokens, 3);
         // A drop-only sweep must neither count tokens nor stretch the
         // observed span (which would deflate tokens/sec).
         let tps = m.tokens_per_sec();
         std::thread::sleep(Duration::from_millis(2));
-        m.record_tokens(0, 2, t0);
+        m.record_tokens(0, 2, 2, t0);
         assert_eq!(m.tokens, 5);
         assert_eq!(m.dropped_tokens, 5);
         assert_eq!(m.tokens_per_sec(), tps);
         assert!(m.summary().contains("dropped_tokens=5"));
+    }
+
+    #[test]
+    fn token_accounting_conservation_law() {
+        let mut m = Metrics::new();
+        assert!(m.token_accounting_balanced(), "empty metrics are balanced");
+        let t0 = Instant::now();
+        m.record_tokens(5, 3, 8, t0);
+        m.record_tokens(0, 2, 2, t0);
+        assert_eq!(m.stepped_tokens, 10);
+        assert!(m.token_accounting_balanced());
+        // A path that produced a token but neither delivered nor dropped
+        // it breaks conservation — exactly what the gate must catch.
+        m.record_tokens(0, 0, 1, t0);
+        assert!(!m.token_accounting_balanced());
+    }
+
+    #[test]
+    fn ttft_percentiles_ordered_and_reported() {
+        let mut m = Metrics::new();
+        assert!(m.ttft_percentile(50.0).is_none());
+        for i in 1..=50u64 {
+            m.record_ttft(Duration::from_micros(i * 100));
+        }
+        let p50 = m.ttft_percentile(50.0).unwrap();
+        let p99 = m.ttft_percentile(99.0).unwrap();
+        assert!(p50 < p99, "{p50:?} vs {p99:?}");
+        assert_eq!(m.ttft_samples(), 50);
+        let s = m.summary();
+        assert!(s.contains("ttft_p50="), "{s}");
+    }
+
+    #[test]
+    fn peak_active_sessions_is_monotone_within_a_run() {
+        let mut m = Metrics::new();
+        let mut prev = 0usize;
+        // A fleet ramping up then draining: the gauge must never regress.
+        for active in [1usize, 4, 9, 7, 2, 0, 5] {
+            m.note_active_sessions(active);
+            assert!(m.peak_active_sessions >= prev, "gauge regressed");
+            assert!(m.peak_active_sessions >= active);
+            prev = m.peak_active_sessions;
+        }
+        assert_eq!(m.peak_active_sessions, 9);
     }
 }

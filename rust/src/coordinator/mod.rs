@@ -56,12 +56,12 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::attention::DecodeState;
 use crate::runtime::{Engine, HostTensor};
-use crate::util::arena::KvQuant;
+use crate::util::arena::{KvQuant, PageArena};
 use crate::util::breakeven::{fan_out, PARALLEL_PAD_MIN_ELEMS};
 use crate::util::pool::{Pool, SharedSlice};
 use batcher::{Batcher, Decision};
 use metrics::Metrics;
-pub use session::{GenStream, NativeModelConfig, StreamEvent};
+pub use session::{GenStream, NativeModelConfig, RecvTimeout, StreamEvent};
 pub use session::{NativeDecodeModel, PrefixCache, Session};
 use session::{PrefillStep, SessionStep, StepScratch};
 
@@ -248,6 +248,12 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     worker: Option<std::thread::JoinHandle<Result<()>>>,
     pub metrics: Arc<Mutex<Metrics>>,
+    /// Native backend's page arena (shared with the scheduler thread).
+    /// `None` on the PJRT backend. After [`Server::shutdown`] the
+    /// scheduler's serving state is dropped, so a drained server must
+    /// report zero live pages here — the leak check the scenario gate's
+    /// cancellation storms pin.
+    kv_arena: Option<Arc<PageArena>>,
 }
 
 impl Server {
@@ -294,8 +300,9 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let depth = Arc::new(AtomicUsize::new(0));
-        // Report startup success/failure back before returning.
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        // Report startup success/failure back before returning (plus the
+        // native backend's arena handle for post-shutdown drain checks).
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Option<Arc<PageArena>>>>();
 
         let stop2 = stop.clone();
         let metrics2 = metrics.clone();
@@ -340,7 +347,11 @@ impl Server {
                 })();
                 let (_engine, mut backend, max_batch) = match setup {
                     Ok(v) => {
-                        let _ = ready_tx.send(Ok(()));
+                        let arena = match &v.1 {
+                            Backend::Native(serving) => Some(serving.model().arena().clone()),
+                            Backend::Engine { .. } => None,
+                        };
+                        let _ = ready_tx.send(Ok(arena));
                         v
                     }
                     Err(e) => {
@@ -480,7 +491,7 @@ impl Server {
             })
             .expect("spawn scheduler");
 
-        ready_rx
+        let kv_arena = ready_rx
             .recv()
             .map_err(|_| anyhow!("scheduler died during startup"))??;
 
@@ -489,11 +500,19 @@ impl Server {
             stop,
             worker: Some(worker),
             metrics,
+            kv_arena,
         })
     }
 
     pub fn client(&self) -> ClientHandle {
         self.handle.clone()
+    }
+
+    /// The native backend's KV page arena (`None` on the PJRT backend).
+    /// Clone the `Arc` to inspect page counts after [`Server::shutdown`]:
+    /// a drained server must have released every page.
+    pub fn kv_arena(&self) -> Option<&Arc<PageArena>> {
+        self.kv_arena.as_ref()
     }
 
     /// Stop the scheduler after draining queued work and live sessions.
@@ -629,32 +648,55 @@ fn retire_cancelled(sessions: &mut Vec<Session>, depth: &Arc<AtomicUsize>) {
     });
 }
 
+/// One sweep's token ledger: every token the backend produces is counted
+/// `stepped`, then either `emitted` (send succeeded) or `dropped` (client
+/// gone) — the conservation law `emitted + dropped == stepped` that
+/// [`Metrics::token_accounting_balanced`] and the scenario gate pin.
+/// First-token deliveries additionally log a TTFT sample.
+#[derive(Default)]
+struct SweepTally {
+    emitted: u64,
+    dropped: u64,
+    stepped: u64,
+    ttft: Vec<Duration>,
+    retire_done: Vec<usize>,
+    retire_silent: Vec<usize>,
+}
+
+impl SweepTally {
+    /// Fold the sweep's counters into the shared metrics (one lock).
+    fn publish(self, metrics: &Arc<Mutex<Metrics>>, sweep_t0: Instant) {
+        if self.stepped == 0 && self.ttft.is_empty() {
+            return;
+        }
+        let mut m = metrics.lock().unwrap();
+        m.record_tokens(self.emitted, self.dropped, self.stepped, sweep_t0);
+        for t in self.ttft {
+            m.record_ttft(t);
+        }
+    }
+}
+
 /// Stream one generated token to a session's client and decide its fate.
 /// Only a *delivered* token counts toward the tokens/sec metric — a failed
 /// send means the client hung up between the sweep's cancel check and now,
 /// and its token must not inflate throughput; the session retires silently.
-#[allow(clippy::too_many_arguments)]
-fn emit_token(
-    s: &mut Session,
-    idx: usize,
-    tok: i32,
-    max_context: usize,
-    emitted: &mut u64,
-    dropped: &mut u64,
-    retire_done: &mut Vec<usize>,
-    retire_silent: &mut Vec<usize>,
-) {
+fn emit_token(s: &mut Session, idx: usize, tok: i32, max_context: usize, tally: &mut SweepTally) {
     s.tokens.push(tok);
     s.generated += 1;
+    tally.stepped += 1;
     let pos = s.generated - 1;
     if s.reply.send(Ok(StreamEvent::Token { token: tok, pos })).is_err() {
-        *dropped += 1;
-        retire_silent.push(idx);
+        tally.dropped += 1;
+        tally.retire_silent.push(idx);
         return;
     }
-    *emitted += 1;
+    tally.emitted += 1;
+    if pos == 0 {
+        tally.ttft.push(s.submitted.elapsed());
+    }
     if s.generated >= s.max_new || (max_context > 0 && s.tokens.len() >= max_context) {
-        retire_done.push(idx);
+        tally.retire_done.push(idx);
     }
 }
 
@@ -870,7 +912,7 @@ impl NativeServing {
         m.arena_high_water_bytes = stats.high_water_bytes;
         m.arena_live_pages = stats.live_pages;
         m.prefix_hits = self.prefix.hits;
-        m.peak_active_sessions = m.peak_active_sessions.max(active);
+        m.note_active_sessions(active);
     }
 
     /// Continuous-batching sweep on the native backend, fused across
@@ -909,8 +951,7 @@ impl NativeServing {
     ) {
         let sweep_t0 = Instant::now();
         self.sweep_no += 1;
-        let mut emitted = 0u64;
-        let mut dropped = 0u64;
+        let mut tally = SweepTally::default();
 
         retire_cancelled(sessions, depth);
         if sessions.is_empty() {
@@ -974,8 +1015,6 @@ impl NativeServing {
         let prefill: Vec<(usize, usize)> =
             want.into_iter().filter(|w| w.2 > 0).map(|w| (w.0, w.2)).collect();
 
-        let mut retire_done: Vec<usize> = Vec::new();
-        let mut retire_silent: Vec<usize> = Vec::new();
         let max_context = self.model.max_context();
 
         // Prefill wave: move each state out, run the batched prefill, put
@@ -1025,16 +1064,7 @@ impl NativeServing {
                 if s.generated > 0 {
                     continue; // resumed: the decode wave re-feeds the tail
                 }
-                emit_token(
-                    s,
-                    idx,
-                    tok,
-                    max_context,
-                    &mut emitted,
-                    &mut dropped,
-                    &mut retire_done,
-                    &mut retire_silent,
-                );
+                emit_token(s, idx, tok, max_context, &mut tally);
             }
         }
 
@@ -1063,16 +1093,7 @@ impl NativeServing {
                 s.state = Some(st);
                 s.fed += 1;
                 s.last_step = self.sweep_no;
-                emit_token(
-                    s,
-                    idx,
-                    tok,
-                    max_context,
-                    &mut emitted,
-                    &mut dropped,
-                    &mut retire_done,
-                    &mut retire_silent,
-                );
+                emit_token(s, idx, tok, max_context, &mut tally);
             }
         }
 
@@ -1080,10 +1101,11 @@ impl NativeServing {
         // still-pending index; ordered `remove` keeps the survivors in
         // arrival order, which is what makes the prefill budget's "wait
         // your turn" fairness real across sweeps.
-        let mut retire: Vec<(usize, bool)> = retire_done
-            .into_iter()
+        let mut retire: Vec<(usize, bool)> = tally
+            .retire_done
+            .drain(..)
             .map(|i| (i, true))
-            .chain(retire_silent.into_iter().map(|i| (i, false)))
+            .chain(tally.retire_silent.drain(..).map(|i| (i, false)))
             .collect();
         retire.sort_unstable_by_key(|r| std::cmp::Reverse(r.0));
         for (idx, done) in retire {
@@ -1100,9 +1122,7 @@ impl NativeServing {
                 .reply
                 .send(Ok(StreamEvent::Done { generated: s.generated, latency }));
         }
-        if emitted > 0 || dropped > 0 {
-            metrics.lock().unwrap().record_tokens(emitted, dropped, sweep_t0);
-        }
+        tally.publish(metrics, sweep_t0);
         self.publish_memory_metrics(sessions, metrics);
     }
 }
@@ -1130,6 +1150,8 @@ fn engine_decode_sweep(
     let mut silent = vec![false; sessions.len()];
     let mut emitted = 0u64;
     let mut dropped = 0u64;
+    let mut stepped = 0u64;
+    let mut ttft: Vec<Duration> = Vec::new();
     let mut start = 0usize;
     while start < sessions.len() {
         let end = (start + max_batch).min(sessions.len());
@@ -1166,6 +1188,7 @@ fn engine_decode_sweep(
                         let tok = NativeDecodeModel::argmax(&logits[base..base + vocab]);
                         s.tokens.push(tok);
                         s.generated += 1;
+                        stepped += 1;
                         let pos = s.generated - 1;
                         let gone =
                             s.reply.send(Ok(StreamEvent::Token { token: tok, pos })).is_err();
@@ -1177,6 +1200,9 @@ fn engine_decode_sweep(
                             silent[start + r] = true;
                         } else {
                             emitted += 1;
+                            if pos == 0 {
+                                ttft.push(s.submitted.elapsed());
+                            }
                             if s.generated >= s.max_new || s.tokens.len() >= seq_len {
                                 done[start + r] = true;
                             }
@@ -1213,8 +1239,12 @@ fn engine_decode_sweep(
                 .send(Ok(StreamEvent::Done { generated: s.generated, latency }));
         }
     }
-    if emitted > 0 || dropped > 0 {
-        metrics.lock().unwrap().record_tokens(emitted, dropped, sweep_t0);
+    if stepped > 0 {
+        let mut m = metrics.lock().unwrap();
+        m.record_tokens(emitted, dropped, stepped, sweep_t0);
+        for t in ttft {
+            m.record_ttft(t);
+        }
     }
 }
 

@@ -479,10 +479,30 @@ impl Drop for GenStream {
     }
 }
 
+/// Outcome of a bounded wait on a [`GenStream`] — the scenario replayer's
+/// timed-cancellation hook distinguishes "nothing yet" from "stream over".
+pub enum RecvTimeout {
+    Event(Result<StreamEvent>),
+    /// The server closed the stream (scheduler gone).
+    Closed,
+    /// No event within the deadline; the stream is still live.
+    TimedOut,
+}
+
 impl GenStream {
     /// Next event, or `None` once the server is done with the stream.
     pub fn recv(&self) -> Option<Result<StreamEvent>> {
         self.rx.recv().ok()
+    }
+
+    /// Next event within `timeout` — lets a client bound its wait (e.g. a
+    /// replayed cancellation deadline) and then drop the stream.
+    pub fn recv_timeout(&self, timeout: Duration) -> RecvTimeout {
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => RecvTimeout::Event(ev),
+            Err(mpsc::RecvTimeoutError::Timeout) => RecvTimeout::TimedOut,
+            Err(mpsc::RecvTimeoutError::Disconnected) => RecvTimeout::Closed,
+        }
     }
 
     /// Drain the stream to completion and return the generated tokens.

@@ -60,17 +60,25 @@ impl Op {
         }
     }
 
-    fn apply(self, args: &[u8]) -> u8 {
-        match self {
-            Op::Max => *args.iter().max().unwrap(),
-            Op::Min => *args.iter().min().unwrap(),
+    /// Evaluate the op over its argument values. `None` on an empty
+    /// argument list — the generator never emits one (it draws 2..=4
+    /// args), but the evaluator also runs over *parsed* token streams,
+    /// where a malformed `[OP]` with no arguments must surface as a
+    /// parse failure instead of a panic.
+    fn apply(self, args: &[u8]) -> Option<u8> {
+        if args.is_empty() {
+            return None;
+        }
+        Some(match self {
+            Op::Max => *args.iter().max()?,
+            Op::Min => *args.iter().min()?,
             Op::Med => {
                 let mut s = args.to_vec();
                 s.sort_unstable();
                 s[s.len() / 2]
             }
             Op::Sm => (args.iter().map(|&a| a as u32).sum::<u32>() % 10) as u8,
-        }
+        })
     }
 }
 
@@ -98,7 +106,7 @@ impl ListOps {
             vals.push(self.gen_expr(out, per, depth - 1, rng));
         }
         out.push(16); // ']'
-        op.apply(&vals)
+        op.apply(&vals).expect("listops generator always emits >= 2 args")
     }
 }
 
@@ -149,7 +157,7 @@ pub fn eval_listops(tokens: &[i32]) -> Option<u8> {
                     args.push(parse(t, i)?);
                 }
                 *i += 1;
-                Some(op.apply(&args))
+                op.apply(&args)
             }
             _ => None,
         }
@@ -157,6 +165,15 @@ pub fn eval_listops(tokens: &[i32]) -> Option<u8> {
     let mut i = 0;
     let end: usize = tokens.iter().position(|&t| t == 0).unwrap_or(tokens.len());
     parse(&tokens[..end], &mut i)
+}
+
+/// Locate the planted 4-gram signature (four consecutive tokens >= 230)
+/// in a retrieval document. `None` when no signature is present — a
+/// malformed or truncated row reports absence instead of panicking in
+/// whoever indexes the match position.
+pub fn find_signature(doc: &[i32]) -> Option<&[i32]> {
+    let p = doc.windows(4).position(|w| w.iter().all(|&t| t >= 230))?;
+    Some(&doc[p..p + 4])
 }
 
 // ---------------------------------------------------------------------------
@@ -530,6 +547,44 @@ mod tests {
     }
 
     #[test]
+    fn eval_listops_rejects_malformed_streams_without_panicking() {
+        // An op with an empty argument list used to hit `.max().unwrap()` /
+        // `s[s.len()/2]`; malformed data must parse to None instead.
+        for op in [11, 12, 13, 14] {
+            assert_eq!(eval_listops(&[15, op, 16]), None, "empty-args op token {op}");
+        }
+        // Unterminated expression (input ends before ']').
+        assert_eq!(eval_listops(&[15, 11, 3, 4]), None);
+        // '[' followed by a non-op token.
+        assert_eq!(eval_listops(&[15, 16]), None);
+        assert_eq!(eval_listops(&[15, 9, 3, 16]), None);
+        // Empty / padding-only / stray-close streams.
+        assert_eq!(eval_listops(&[]), None);
+        assert_eq!(eval_listops(&[0, 0, 0]), None);
+        assert_eq!(eval_listops(&[16]), None);
+        // A malformed empty-args op nested inside a well-formed one
+        // poisons the whole expression.
+        assert_eq!(eval_listops(&[15, 11, 4, 15, 12, 16, 16]), None);
+        // Well-formed input still evaluates: [SM 9 9] = (9+9) % 10.
+        assert_eq!(eval_listops(&[15, 14, 10, 10, 16]), Some(8));
+        // [MED 0 5 9] = 5 (token d encodes digit d-1).
+        assert_eq!(eval_listops(&[15, 13, 1, 6, 10, 16]), Some(5));
+    }
+
+    #[test]
+    fn retrieval_signature_helper_reports_absence() {
+        // No 4-gram of signature-range tokens anywhere.
+        assert!(find_signature(&[1, 2, 3, 4, 5]).is_none());
+        // Shorter than a signature, including empty.
+        assert!(find_signature(&[]).is_none());
+        assert!(find_signature(&[230, 231, 232]).is_none());
+        // Broken run: only 3 consecutive signature tokens.
+        assert!(find_signature(&[230, 231, 232, 7, 233, 234]).is_none());
+        let doc = [7, 230, 231, 232, 233, 9];
+        assert_eq!(find_signature(&doc), Some(&doc[1..5]));
+    }
+
+    #[test]
     fn text_evidence_counts_decide_label() {
         let task = Text { seq_len: 256 };
         let b = task.sample(32, &mut Rng::new(2));
@@ -554,8 +609,8 @@ mod tests {
             let half = 64;
             // find signature = the 4-gram of tokens >= 230 in doc A
             let a = &row[..half];
-            let sig_pos = a.windows(4).position(|w| w.iter().all(|&t| t >= 230));
-            let sig = &a[sig_pos.unwrap()..sig_pos.unwrap() + 4];
+            let sig = find_signature(a)
+                .unwrap_or_else(|| panic!("row {r}: doc A carries no signature 4-gram"));
             let bdoc = &row[half + 1..];
             let found = bdoc.windows(4).any(|w| w == sig);
             assert_eq!(found, b.y[r] == 1, "row {r}");

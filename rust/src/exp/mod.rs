@@ -38,6 +38,14 @@ pub struct Opts {
     /// i.e. `ZETA_THREADS` / auto-detect). Tables 3/4 report each row at
     /// threads = 1 and threads = this value.
     pub threads: usize,
+    /// KV page codec (`--kv-quant f32|f16|int8`) for serving-path
+    /// experiments; also stamped into every `BENCH_*.json` provenance
+    /// header.
+    pub kv_quant: String,
+    /// `--kv-mem-budget` byte cap for serving-path experiments (0 =
+    /// unlimited; `exp scenarios` substitutes its own tight default for
+    /// the budget-constrained replay arm when unset).
+    pub kv_mem_budget: usize,
 }
 
 impl Default for Opts {
@@ -50,6 +58,8 @@ impl Default for Opts {
             out_dir: "results".into(),
             verbose: false,
             threads: 0,
+            kv_quant: "f32".into(),
+            kv_mem_budget: 0,
         }
     }
 }
@@ -71,13 +81,40 @@ fn record(opts: &Opts, name: &str, value: Json) -> Result<()> {
     Ok(())
 }
 
-/// Write the machine-readable `BENCH_<name>.json` perf trajectory. These
-/// live at a fixed top-level name (the comparison anchor future PRs diff
+/// Provenance header stamped into every `BENCH_*.json`: without it, two
+/// trajectory files from different PRs / thread counts / SIMD backends /
+/// KV codecs are not comparable (and silently diffing them is worse than
+/// not diffing).
+fn bench_provenance(opts: &Opts) -> Json {
+    let git_rev = std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into());
+    let threads = if opts.threads == 0 { Pool::global().threads() } else { opts.threads };
+    Json::obj(vec![
+        ("git_rev", Json::str(git_rev)),
+        ("threads", Json::num(threads as f64)),
+        ("zeta_simd", Json::str(simd::backend_name())),
+        ("kv_quant", Json::str(opts.kv_quant.clone())),
+    ])
+}
+
+/// Write the machine-readable `BENCH_<name>.json` perf trajectory: a
+/// `{provenance, rows}` envelope (see [`bench_provenance`]). These live at
+/// a fixed top-level name (the comparison anchor future PRs diff
 /// against), so an unwritable CWD only warns — the same numbers were
 /// already recorded under `--out-dir` by [`record`].
-fn write_bench(name: &str, rows: Vec<Json>) {
+fn write_bench(opts: &Opts, name: &str, rows: Vec<Json>) {
     let path = format!("BENCH_{name}.json");
-    match std::fs::write(&path, Json::Arr(rows).to_string()) {
+    let doc = Json::obj(vec![
+        ("provenance", bench_provenance(opts)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match std::fs::write(&path, doc.to_string()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("warning: could not write {path}: {e}"),
     }
@@ -422,7 +459,7 @@ pub fn table3(opts: &Opts) -> Result<()> {
     record(opts, "table3", Json::Obj(rec))?;
     // Machine-readable perf trajectory (per-kernel ms by N and threads) so
     // future PRs can diff against this run.
-    write_bench("table3", bench_rows);
+    write_bench(opts, "table3", bench_rows);
     Ok(())
 }
 
@@ -631,7 +668,7 @@ pub fn decode(opts: &Opts) -> Result<()> {
     }
     println!("(full = one forward per token; skip = impractical at this N, as in Table 3)");
     record(opts, "decode", Json::Obj(rec))?;
-    write_bench("decode", bench_rows);
+    write_bench(opts, "decode", bench_rows);
     decode_batch(opts)
 }
 
@@ -752,7 +789,7 @@ pub fn decode_batch(opts: &Opts) -> Result<()> {
         }
     }
     record(opts, "decode_batch", Json::Obj(rec))?;
-    write_bench("decode_batch", bench_rows);
+    write_bench(opts, "decode_batch", bench_rows);
     Ok(())
 }
 
@@ -896,7 +933,7 @@ pub fn prefill(opts: &Opts) -> Result<()> {
     }
     println!("(seq = prefill_batch on a 1-thread pool: the inline chunk-sequential step loop)");
     record(opts, "prefill", Json::Obj(rec))?;
-    write_bench("prefill", bench_rows);
+    write_bench(opts, "prefill", bench_rows);
     Ok(())
 }
 
@@ -1054,7 +1091,7 @@ pub fn pool(opts: &Opts) -> Result<()> {
         ]));
     }
     record(opts, "pool", Json::Obj(rec))?;
-    write_bench("pool", bench_rows);
+    write_bench(opts, "pool", bench_rows);
     Ok(())
 }
 
@@ -1425,7 +1462,7 @@ pub fn kernels(opts: &Opts) -> Result<()> {
     rec.insert("backend".into(), Json::str(be.name()));
     rec.insert("lanes".into(), Json::num(be.lanes() as f64));
     record(opts, "kernels", Json::Obj(rec))?;
-    write_bench("kernels", rows);
+    write_bench(opts, "kernels", rows);
     Ok(())
 }
 
@@ -1723,7 +1760,175 @@ pub fn mem(opts: &Opts) -> Result<()> {
     }
 
     record(opts, "mem", Json::Obj(rec))?;
-    write_bench("mem", bench_rows);
+    write_bench(opts, "mem", bench_rows);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Scenarios — seeded serving-trace record/replay suite
+// ---------------------------------------------------------------------------
+
+/// `exp scenarios`: the serving-scenario suite. Generates the four seeded
+/// workload traces (needle retrieval, agent fleet, bursty chat,
+/// cancellation storm), writes each as JSONL under `--out-dir`, then
+/// replays each three ways and scores every replay into
+/// `BENCH_scenarios.json`:
+///
+/// 1. **lockstep ×2** — the deterministic virtual-clock replay, run
+///    twice; the second run must reproduce the first's stream digest and
+///    counters bit-for-bit (the record/replay contract), and on the
+///    default `f32` codec every non-cancelled stream must equal the
+///    reference stream recorded into the trace at generation time.
+/// 2. **lockstep under a tight `--kv-mem-budget`** — eviction/re-prefill
+///    pressure must leave every token stream identical to the
+///    unconstrained replay.
+/// 3. **serve** — the same trace through the real coordinator
+///    ([`crate::coordinator::Server`]), where tokens/s and TTFT p50/p99
+///    are wall-clock-real; gated on invariants only (token accounting
+///    balances, the arena drains to zero pages after shutdown).
+pub fn scenarios(opts: &Opts) -> Result<()> {
+    use crate::scenario::replay::{lockstep, score, serve, ReplayCfg, Score};
+    use crate::scenario::{scenarios as registry, GenCfg};
+
+    let ctx = opts.max_len.clamp(64, 512);
+    let gen_cfg = GenCfg { seed: opts.seed, kernel: "zeta".into(), requests: 16, ctx };
+    let cfg = ReplayCfg {
+        threads: opts.threads,
+        kv_quant: opts.kv_quant.clone(),
+        ..ReplayCfg::default()
+    };
+    // Tight enough to force evictions at these context lengths, roomy
+    // enough that the largest single session still fits.
+    let tight_budget = if opts.kv_mem_budget > 0 { opts.kv_mem_budget } else { 256 * 1024 };
+    let exact = cfg.kv_quant == "f32"; // quantized codecs diverge from the
+                                       // f32-recorded reference streams
+    println!(
+        "\n== Scenarios: seeded serving traces — record/replay + regression scores \
+         (ctx {ctx}, {} requests/scenario base, budget arm {tight_budget} B) ==",
+        gen_cfg.requests
+    );
+    let mut rec = BTreeMap::new();
+    let mut bench_rows: Vec<Json> = Vec::new();
+    let push_row = |s: &Score, budget: usize, rows: &mut Vec<Json>| {
+        let mut j = s.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("kv_mem_budget".into(), Json::num(budget as f64));
+        }
+        rows.push(j);
+    };
+    std::fs::create_dir_all(&opts.out_dir)?;
+    for sc in registry() {
+        let trace = sc.generate(&gen_cfg)?;
+        let path = format!("{}/trace_{}.jsonl", opts.out_dir, trace.name);
+        trace.write(&path)?;
+        if opts.verbose {
+            eprintln!("  {}: {} — {} requests -> {path}", sc.name(), sc.description(),
+                trace.requests.len());
+        }
+
+        // (1) lockstep ×2: record/replay bit-reproducibility.
+        let a = lockstep(&trace, &cfg)?;
+        let b = lockstep(&trace, &cfg)?;
+        if a.stream_digest() != b.stream_digest() || a.counters != b.counters {
+            bail!(
+                "scenario {} lockstep replay is not reproducible: digest {:016x} vs {:016x}",
+                trace.name,
+                a.stream_digest(),
+                b.stream_digest()
+            );
+        }
+        if !a.counters.balanced() {
+            bail!(
+                "scenario {}: token accounting unbalanced ({} + {} != {})",
+                trace.name,
+                a.counters.delivered,
+                a.counters.dropped,
+                a.counters.stepped
+            );
+        }
+        if a.live_pages_after_teardown != 0 {
+            bail!(
+                "scenario {}: {} arena pages leaked after teardown",
+                trace.name,
+                a.live_pages_after_teardown
+            );
+        }
+        let sa = score(&trace, &a);
+        if exact && sa.expect_ok != sa.expect_total {
+            bail!(
+                "scenario {}: only {}/{} replayed streams match the recorded reference",
+                trace.name,
+                sa.expect_ok,
+                sa.expect_total
+            );
+        }
+        println!("{}", sa.line());
+        rec.insert(
+            format!("{}_lockstep_digest", trace.name),
+            Json::str(format!("{:016x}", sa.stream_digest)),
+        );
+        rec.insert(format!("{}_evictions", trace.name), Json::num(sa.counters.evictions as f64));
+        rec.insert(
+            format!("{}_prefix_hits", trace.name),
+            Json::num(sa.counters.prefix_hits as f64),
+        );
+        push_row(&sa, 0, &mut bench_rows);
+
+        // (2) budget-constrained lockstep: eviction pressure must not
+        // change a single output token.
+        let bcfg = ReplayCfg { kv_mem_budget: tight_budget, ..cfg.clone() };
+        let c = lockstep(&trace, &bcfg)?;
+        if c.stream_digest() != a.stream_digest() {
+            bail!(
+                "scenario {}: budget-constrained replay diverged from unconstrained \
+                 ({:016x} vs {:016x}, {} evictions)",
+                trace.name,
+                c.stream_digest(),
+                a.stream_digest(),
+                c.counters.evictions
+            );
+        }
+        let sb = score(&trace, &c);
+        println!("{}  [budget {tight_budget} B]", sb.line());
+        rec.insert(
+            format!("{}_budget_evictions", trace.name),
+            Json::num(sb.counters.evictions as f64),
+        );
+        push_row(&sb, tight_budget, &mut bench_rows);
+
+        // (3) serve: the real coordinator, wall-clock scores.
+        let d = serve(&trace, &cfg)?;
+        if !d.counters.balanced() {
+            bail!(
+                "scenario {} (serve): token accounting unbalanced ({} + {} != {})",
+                trace.name,
+                d.counters.delivered,
+                d.counters.dropped,
+                d.counters.stepped
+            );
+        }
+        if d.live_pages_after_teardown != 0 {
+            bail!(
+                "scenario {} (serve): {} arena pages leaked after shutdown",
+                trace.name,
+                d.live_pages_after_teardown
+            );
+        }
+        let sd = score(&trace, &d);
+        println!("{}", sd.line());
+        rec.insert(format!("{}_serve_tok_per_sec", trace.name), Json::num(sd.tok_per_sec));
+        rec.insert(
+            format!("{}_serve_ttft_p50_us", trace.name),
+            Json::num(sd.ttft_p50_us as f64),
+        );
+        push_row(&sd, 0, &mut bench_rows);
+    }
+    println!(
+        "(lockstep rows are bit-reproducible for a fixed seed at any thread count; \
+         serve rows carry real wall-clock timing)"
+    );
+    record(opts, "scenarios", Json::Obj(rec))?;
+    write_bench(opts, "scenarios", bench_rows);
     Ok(())
 }
 
@@ -1771,6 +1976,7 @@ pub fn all(engine: &Engine, opts: &Opts) -> Result<()> {
     prefill(opts)?;
     pool(opts)?;
     mem(opts)?;
+    scenarios(opts)?;
     table5(engine, opts)?;
     Ok(())
 }

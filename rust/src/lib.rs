@@ -108,6 +108,23 @@
 //! stay within 1e-4 of scalar (`rust/tests/simd_equivalence.rs`). `zeta
 //! exp kernels` prices each loop scalar-vs-SIMD (`BENCH_kernels.json`).
 //!
+//! ## Serving scenarios (record/replay)
+//!
+//! The [`scenario`] subsystem turns serving workloads into *seeded JSONL
+//! traces* — per-request arrival time, prompt, `max_new`, optional
+//! cancellation point, and the reference output stream recorded at
+//! generation time — with four generators: long-context needle retrieval,
+//! shared-system-prompt agent fleets (prefix-cache stress), bursty
+//! multi-turn chat (eviction/re-prefill stress under `--kv-mem-budget`),
+//! and cancellation storms. Two replay drivers share one outcome shape:
+//! [`scenario::replay::lockstep`] advances a virtual clock over direct
+//! [`coordinator::NativeServing`] sweeps, making token streams *and*
+//! counters bit-reproducible across thread counts (pinned by
+//! `rust/tests/scenario_gate.rs` at threads {1,4,8}, budget-constrained
+//! included), while [`scenario::replay::serve`] replays through the real
+//! [`coordinator::Server`] for wall-clock tokens/s and TTFT p50/p99.
+//! `zeta exp scenarios` scores all four into `BENCH_scenarios.json`.
+//!
 //! Substrates implemented in-tree (offline std-only build): JSON, PRNG,
 //! property tests, bench harness, worker pool ([`util`]), Morton codec +
 //! persistent sorted index ([`zorder`]), native CPU attention kernels for
@@ -118,6 +135,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod runtime;
+pub mod scenario;
 pub mod tensor;
 pub mod trainer;
 pub mod util;

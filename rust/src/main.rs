@@ -57,6 +57,10 @@ fn opts_from_flags(f: &HashMap<String, String>) -> Result<exp::Opts> {
     if let Some(out) = f.get("out") {
         o.out_dir = out.clone();
     }
+    if let Some(q) = f.get("kv-quant") {
+        o.kv_quant = q.clone();
+    }
+    o.kv_mem_budget = flag_usize(f, "kv-mem-budget", o.kv_mem_budget)?;
     o.verbose = f.contains_key("verbose");
     Ok(o)
 }
@@ -102,10 +106,10 @@ commands:
          [--max-context N] [--kv-page TOKENS] [--kv-mem-budget BYTES]
          [--kv-quant f32|f16|int8]
   exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--threads T]
-         [--verbose]
+         [--kv-quant f32|f16|int8] [--kv-mem-budget BYTES] [--verbose]
          NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3, table1, table2,
                  table3, table4, table5, table6, kernels, decode,
-                 decode_batch, prefill, pool, mem, all}
+                 decode_batch, prefill, pool, mem, scenarios, all}
 
 serving:
   `serve` runs one-shot batched inference by default. With --generate each
@@ -150,6 +154,22 @@ serving memory (native backend):
   stepping, prefix-cache speedup, eviction thrash and the per-codec
   step-cost / bytes-per-token / admission-headroom matrix
   (BENCH_mem.json).
+
+serving scenarios:
+  `exp scenarios` is the seeded serving-workload suite: four generators
+  — long-context needle retrieval, shared-system-prompt agent fleets
+  (prefix-cache stress), bursty multi-turn chat (eviction/re-prefill
+  stress under --kv-mem-budget), and cancellation storms — each emit a
+  JSONL trace (per-request arrival time, prompt, max-new, optional
+  cancel point, and the reference output stream recorded at generation
+  time) under --out. Every trace replays three ways: a deterministic
+  lockstep replay run twice (same seed ⇒ bit-identical token streams
+  and counters, at any --threads), the same lockstep under a tight
+  --kv-mem-budget (eviction pressure must not change one output token),
+  and a serve replay through the real coordinator (wall-clock tok/s and
+  TTFT p50/p99). Scores land in BENCH_scenarios.json; the tier-1 gate
+  rust/tests/scenario_gate.rs pins the deterministic properties across
+  threads {1,4,8}.
 
 parallelism:
   All attention kernels run on a shared worker pool sized by the
@@ -371,7 +391,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
 fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
     let opts = opts_from_flags(f)?;
     // fig3 / table3 / table4 / kernels / decode / decode_batch / prefill /
-    // pool / mem need no artifacts
+    // pool / mem / scenarios need no artifacts
     match which {
         "fig3" => return exp::fig3(&opts),
         "table3" => return exp::table3(&opts),
@@ -382,6 +402,7 @@ fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
         "prefill" => return exp::prefill(&opts),
         "pool" => return exp::pool(&opts),
         "mem" => return exp::mem(&opts),
+        "scenarios" => return exp::scenarios(&opts),
         _ => {}
     }
     let engine = Engine::new(zeta::ARTIFACTS_DIR)?;

@@ -1,0 +1,363 @@
+//! The four seeded trace generators.
+//!
+//! All prompts draw from the native model's default 32-token vocabulary:
+//! filler tokens occupy `1..=23`, needle/signature alphabets `24..=30`,
+//! and `31` is the query marker — so a planted needle is structurally
+//! distinct from filler, exactly like the S-NIAH signature 4-grams.
+//! Every generator records the reference answer stream (serial decode on
+//! the trace's model) for requests that run to completion, which is what
+//! lets replays score correctness, not just throughput.
+
+use anyhow::Result;
+
+use super::{reference_stream, GenCfg, Scenario, Trace, TraceRequest};
+use crate::coordinator::{NativeDecodeModel, NativeModelConfig};
+use crate::util::rng::Rng;
+
+/// Highest filler token (filler = `1..=FILLER_TOP`).
+const FILLER_TOP: u64 = 23;
+/// Needle/signature alphabet: `NEEDLE_BASE..NEEDLE_BASE+NEEDLE_SPAN`.
+const NEEDLE_BASE: u64 = 24;
+const NEEDLE_SPAN: u64 = 7;
+/// Query marker separating context from the re-stated needle.
+const QUERY_MARK: i32 = 31;
+
+fn filler(rng: &mut Rng, n: usize) -> Vec<i32> {
+    (0..n).map(|_| 1 + rng.below(FILLER_TOP) as i32).collect()
+}
+
+fn needle_gram(rng: &mut Rng, n: usize) -> Vec<i32> {
+    (0..n).map(|_| (NEEDLE_BASE + rng.below(NEEDLE_SPAN)) as i32).collect()
+}
+
+/// The model reference streams are recorded against: the same defaults
+/// the replay drivers use (`kv_quant` stays f32 — quantized replays are
+/// tolerance-gated elsewhere, not stream-pinned here).
+fn trace_model(kernel: &str) -> Result<NativeDecodeModel> {
+    NativeDecodeModel::new(NativeModelConfig { kernel: kernel.into(), ..Default::default() })
+}
+
+/// Fill in the reference streams for every request without a cancel
+/// point, in id order (generation-time record half of record/replay).
+fn record_expect(trace: &mut Trace) -> Result<()> {
+    let model = trace_model(&trace.kernel)?;
+    for r in trace.requests.iter_mut() {
+        if r.cancel_at_us.is_none() && r.cancel_after_tokens.is_none() {
+            r.expect = Some(reference_stream(&model, &r.prompt, r.max_new));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// needle — long-context retrieval (S-NIAH format)
+// ---------------------------------------------------------------------------
+
+pub struct Needle;
+
+impl Scenario for Needle {
+    fn name(&self) -> &'static str {
+        "needle"
+    }
+
+    fn description(&self) -> &'static str {
+        "long-context needle retrieval: a signature 4-gram planted at a \
+         seeded depth in filler, re-stated as the query suffix"
+    }
+
+    fn expected_requests(&self, cfg: &GenCfg) -> usize {
+        cfg.requests
+    }
+
+    fn generate(&self, cfg: &GenCfg) -> Result<Trace> {
+        let mut rng = Rng::new(cfg.seed ^ 0x5EED_0001);
+        let mut requests = Vec::with_capacity(cfg.requests);
+        let mut arrival = 0u64;
+        for i in 0..cfg.requests {
+            // Context lengths spread over [ctx/2, ctx] so replays exercise
+            // staggered prefill completion, not one synchronized wave.
+            let len = (cfg.ctx / 2).max(16) + rng.usize_below(cfg.ctx / 2 + 1);
+            let sig = needle_gram(&mut rng, 4);
+            let mut prompt = filler(&mut rng, len);
+            let depth = rng.usize_below(len.saturating_sub(4).max(1));
+            prompt[depth..depth + 4].copy_from_slice(&sig);
+            prompt.push(QUERY_MARK);
+            prompt.extend_from_slice(&sig);
+            arrival += 300 + rng.below(1200);
+            requests.push(TraceRequest {
+                id: format!("needle-{i:03}"),
+                arrival_us: arrival,
+                prompt,
+                max_new: 8,
+                cancel_at_us: None,
+                cancel_after_tokens: None,
+                needle: Some(sig),
+                expect: None,
+            });
+        }
+        let mut trace =
+            Trace { name: "needle".into(), seed: cfg.seed, kernel: cfg.kernel.clone(), requests };
+        record_expect(&mut trace)?;
+        Ok(trace)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fleet — shared-system-prompt agent fleet (prefix-cache stress)
+// ---------------------------------------------------------------------------
+
+pub struct Fleet;
+
+/// Agents per arrival wave.
+const FLEET_WAVE: usize = 4;
+
+impl Scenario for Fleet {
+    fn name(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn description(&self) -> &'static str {
+        "agent fleet sharing one long system prompt, arriving in waves: \
+         later waves must fork the cached prompt prefix, not re-prefill it"
+    }
+
+    fn expected_requests(&self, cfg: &GenCfg) -> usize {
+        cfg.requests
+    }
+
+    fn generate(&self, cfg: &GenCfg) -> Result<Trace> {
+        let mut rng = Rng::new(cfg.seed ^ 0x5EED_0002);
+        // Page-aligned system prompt (the prefix cache snapshots at whole
+        // pages), at least two pages so a hit skips real work.
+        let page = NativeModelConfig::default().kv_page;
+        let sys_len = (cfg.ctx.max(2 * page) / page) * page;
+        let sys = filler(&mut rng, sys_len);
+        let mut requests = Vec::with_capacity(cfg.requests);
+        for i in 0..cfg.requests {
+            let wave = i / FLEET_WAVE;
+            let mut prompt = sys.clone();
+            prompt.push(QUERY_MARK);
+            prompt.extend(filler(&mut rng, 8 + rng.usize_below(24)));
+            requests.push(TraceRequest {
+                id: format!("fleet-{i:03}"),
+                arrival_us: wave as u64 * 4_000,
+                prompt,
+                max_new: 8,
+                cancel_at_us: None,
+                cancel_after_tokens: None,
+                needle: None,
+                expect: None,
+            });
+        }
+        let mut trace =
+            Trace { name: "fleet".into(), seed: cfg.seed, kernel: cfg.kernel.clone(), requests };
+        record_expect(&mut trace)?;
+        Ok(trace)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// chat — bursty multi-turn conversations (eviction / re-prefill stress)
+// ---------------------------------------------------------------------------
+
+pub struct Chat;
+
+const CHAT_TURNS: usize = 3;
+
+impl Scenario for Chat {
+    fn name(&self) -> &'static str {
+        "chat"
+    }
+
+    fn description(&self) -> &'static str {
+        "bursty multi-turn chat: each follow-up prompt extends the prior \
+         turn's full context (prompt + recorded answer), so growing \
+         sessions contend for KV memory and re-prefill after eviction"
+    }
+
+    fn expected_requests(&self, cfg: &GenCfg) -> usize {
+        (cfg.requests / CHAT_TURNS).max(2) * CHAT_TURNS
+    }
+
+    fn generate(&self, cfg: &GenCfg) -> Result<Trace> {
+        let mut rng = Rng::new(cfg.seed ^ 0x5EED_0003);
+        let model = trace_model(&cfg.kernel)?;
+        let convs = (cfg.requests / CHAT_TURNS).max(2);
+        let max_new = 12;
+        let mut requests = Vec::with_capacity(convs * CHAT_TURNS);
+        // Conversation contexts: turn t+1's prompt = turn t's prompt + the
+        // recorded answer + fresh user tokens. Turns arrive in per-turn
+        // bursts (all conversations "reply at once"), with think-time gaps
+        // between turns — the bursty arrival pattern eviction hates.
+        let mut contexts: Vec<Vec<i32>> = (0..convs)
+            .map(|_| filler(&mut rng, cfg.ctx / 4 + rng.usize_below(cfg.ctx / 4 + 1)))
+            .collect();
+        for turn in 0..CHAT_TURNS {
+            let turn_t0 = turn as u64 * 25_000;
+            for (c, ctx) in contexts.iter_mut().enumerate() {
+                if turn > 0 {
+                    // The user's follow-up, appended to the prior full
+                    // context (which already ends with the model's answer).
+                    ctx.push(QUERY_MARK);
+                    ctx.extend((0..8 + rng.usize_below(8)).map(|_| 1 + rng.below(FILLER_TOP) as i32));
+                }
+                let prompt = ctx.clone();
+                let answer = reference_stream(&model, &prompt, max_new);
+                ctx.extend_from_slice(&answer);
+                // All conversations reply at once (no sub-sweep jitter):
+                // the whole turn burst parks before one admission pass, so
+                // a tight budget sees concurrent growth, not a serialized
+                // trickle it can admit one session at a time.
+                requests.push(TraceRequest {
+                    id: format!("chat-{c:02}-t{turn}"),
+                    arrival_us: turn_t0,
+                    prompt,
+                    max_new,
+                    cancel_at_us: None,
+                    cancel_after_tokens: None,
+                    needle: None,
+                    expect: Some(answer),
+                });
+            }
+        }
+        requests.sort_by(|a, b| a.arrival_us.cmp(&b.arrival_us).then(a.id.cmp(&b.id)));
+        Ok(Trace { name: "chat".into(), seed: cfg.seed, kernel: cfg.kernel.clone(), requests })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// storm — cancellation storms (mid-prefill + mid-decode drops)
+// ---------------------------------------------------------------------------
+
+pub struct Storm;
+
+/// Requests per arrival burst.
+const STORM_BURST: usize = 32;
+/// Request-count multiplier over the base `GenCfg::requests`.
+const STORM_SCALE: usize = 4;
+
+impl Scenario for Storm {
+    fn name(&self) -> &'static str {
+        "storm"
+    }
+
+    fn description(&self) -> &'static str {
+        "cancellation storm: tight request bursts where a third cancels \
+         mid-prefill (virtual-time drops), a third mid-decode (token-count \
+         drops), and a third runs to completion"
+    }
+
+    fn expected_requests(&self, cfg: &GenCfg) -> usize {
+        cfg.requests * STORM_SCALE
+    }
+
+    fn generate(&self, cfg: &GenCfg) -> Result<Trace> {
+        let mut rng = Rng::new(cfg.seed ^ 0x5EED_0004);
+        let total = cfg.requests * STORM_SCALE;
+        let max_new = 6;
+        let mut requests = Vec::with_capacity(total);
+        for i in 0..total {
+            let burst = (i / STORM_BURST) as u64;
+            let arrival = burst * 2_000;
+            let len = (cfg.ctx / 2).max(8) + rng.usize_below(cfg.ctx / 2 + 1);
+            let prompt = filler(&mut rng, len);
+            // rng draws happen for every branch so the request shapes stay
+            // stable if the kind split ever changes.
+            let prefill_delay = 1 + rng.below(3);
+            let decode_point = 1 + rng.usize_below(max_new - 1);
+            let (cancel_at_us, cancel_after_tokens) = match i % 3 {
+                0 => (Some(arrival + prefill_delay * 1_000), None),
+                1 => (None, Some(decode_point)),
+                _ => (None, None),
+            };
+            requests.push(TraceRequest {
+                id: format!("storm-{i:04}"),
+                arrival_us: arrival,
+                prompt,
+                max_new,
+                cancel_at_us,
+                cancel_after_tokens,
+                needle: None,
+                expect: None,
+            });
+        }
+        let mut trace =
+            Trace { name: "storm".into(), seed: cfg.seed, kernel: cfg.kernel.clone(), requests };
+        record_expect(&mut trace)?;
+        Ok(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{by_name, contains_subseq, scenarios};
+
+    fn small() -> GenCfg {
+        GenCfg { seed: 7, kernel: "zeta".into(), requests: 6, ctx: 64 }
+    }
+
+    #[test]
+    fn generators_are_seed_deterministic_and_sized() {
+        let cfg = small();
+        for s in scenarios() {
+            let a = s.generate(&cfg).unwrap();
+            let b = s.generate(&cfg).unwrap();
+            assert_eq!(a.to_jsonl(), b.to_jsonl(), "{} not reproducible", s.name());
+            assert_eq!(a.requests.len(), s.expected_requests(&cfg), "{}", s.name());
+            let other = s.generate(&GenCfg { seed: 8, ..cfg.clone() }).unwrap();
+            assert_ne!(a.to_jsonl(), other.to_jsonl(), "{} ignores the seed", s.name());
+            // Arrival order is the replay admission order.
+            assert!(
+                a.requests.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us),
+                "{} arrivals unsorted",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn needle_prompts_plant_and_restate_the_signature() {
+        let t = Needle.generate(&small()).unwrap();
+        for r in &t.requests {
+            let sig = r.needle.as_ref().unwrap();
+            let body = &r.prompt[..r.prompt.len() - 5];
+            assert!(contains_subseq(body, sig), "{}: needle not planted", r.id);
+            assert_eq!(&r.prompt[r.prompt.len() - 4..], &sig[..], "{}: query missing", r.id);
+            assert!(r.expect.as_ref().is_some_and(|e| e.len() == r.max_new), "{}", r.id);
+        }
+    }
+
+    #[test]
+    fn fleet_shares_a_page_aligned_system_prompt() {
+        let t = Fleet.generate(&small()).unwrap();
+        let page = NativeModelConfig::default().kv_page;
+        let sys_len = t.requests[0].prompt.iter().position(|&x| x == QUERY_MARK).unwrap();
+        assert_eq!(sys_len % page, 0, "system prompt must be page-aligned");
+        let sys = &t.requests[0].prompt[..sys_len];
+        for r in &t.requests {
+            assert_eq!(&r.prompt[..sys_len], sys, "{}: system prompt differs", r.id);
+        }
+    }
+
+    #[test]
+    fn chat_follow_ups_extend_the_prior_turn_context() {
+        let t = Chat.generate(&small()).unwrap();
+        let find = |id: &str| t.requests.iter().find(|r| r.id == id).unwrap();
+        let t0 = find("chat-00-t0");
+        let t1 = find("chat-00-t1");
+        let prior = [t0.prompt.clone(), t0.expect.clone().unwrap()].concat();
+        assert_eq!(&t1.prompt[..prior.len()], &prior[..], "turn 1 must extend turn 0 + answer");
+        assert!(t1.prompt.len() > prior.len(), "turn 1 adds user tokens");
+    }
+
+    #[test]
+    fn storm_mixes_prefill_decode_and_clean_requests() {
+        let t = Storm.generate(&small()).unwrap();
+        let prefill = t.requests.iter().filter(|r| r.cancel_at_us.is_some()).count();
+        let decode = t.requests.iter().filter(|r| r.cancel_after_tokens.is_some()).count();
+        let clean = t.requests.iter().filter(|r| r.expect.is_some()).count();
+        assert!(prefill > 0 && decode > 0 && clean > 0, "{prefill}/{decode}/{clean}");
+        assert_eq!(prefill + decode + clean, t.requests.len());
+    }
+}

@@ -1,0 +1,359 @@
+//! Serving scenario suite: seeded JSONL traces + record/replay scoring.
+//!
+//! Training has MQAR/LRA/WikiText; this module gives *serving* the same
+//! footing. A [`Trace`] is a seeded, fully static description of one
+//! serving workload — per-request arrival time (virtual microseconds),
+//! prompt tokens, `max_new`, optional cancellation point (wall-clock or
+//! token-count), and, where applicable, the planted needle and the
+//! reference answer stream recorded at generation time. Traces serialize
+//! to JSONL (one header line + one line per request, keys sorted), so a
+//! fixed seed always produces a byte-identical trace file.
+//!
+//! Four generators ([`gen`]) cover the regimes the ROADMAP north star
+//! names, following the `Dataset`-trait idiom of the S-NIAH needle suite:
+//!
+//! * **needle** — long-context retrieval: a signature 4-gram planted in
+//!   Zipf-ish filler, re-stated as the query suffix (S-NIAH format).
+//! * **fleet** — shared-system-prompt agent fleets arriving in waves
+//!   (stresses the prompt-prefix cache).
+//! * **chat** — bursty multi-turn conversations whose follow-up prompts
+//!   extend the previous turn's full context (stresses `--kv-mem-budget`
+//!   eviction and bit-identical re-prefill).
+//! * **storm** — cancellation storms: bursts of requests dropped
+//!   mid-prefill (virtual-time cancels) and mid-decode (token-count
+//!   cancels).
+//!
+//! The [`replay`] module drives a trace through the serving stack two
+//! ways: **lockstep** (the scheduler's [`crate::coordinator::NativeServing`]
+//! sweeps under a virtual clock — token streams *and* counters are
+//! bit-reproducible for a fixed seed at any thread count) and **serve**
+//! (the real [`crate::coordinator::Server`] via `ClientHandle::generate`,
+//! scoring wall-clock tokens/s and client-side TTFT). The tier-1 gate
+//! `rust/tests/scenario_gate.rs` pins the stream-equivalence invariants;
+//! `zeta exp scenarios` writes the scored trajectory to
+//! `BENCH_scenarios.json`.
+
+pub mod gen;
+pub mod replay;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::NativeDecodeModel;
+use crate::util::json::{self, Json};
+
+/// Trace schema version stamped into every header line.
+pub const TRACE_VERSION: u64 = 1;
+
+/// One request of a serving trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    /// Stable id (`needle-003`, `chat-2-t1`, …) — the unit scores key on.
+    pub id: String,
+    /// Arrival time in virtual microseconds from trace start.
+    pub arrival_us: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// Cancel (drop the stream) once the virtual clock reaches this —
+    /// arrivals deep in a burst cancel mid-prefill.
+    pub cancel_at_us: Option<u64>,
+    /// Cancel after this many received tokens (mid-decode cancellation).
+    pub cancel_after_tokens: Option<usize>,
+    /// Planted needle subsequence the answer should retrieve (S-NIAH).
+    pub needle: Option<Vec<i32>>,
+    /// Reference answer stream recorded at generation time by serial
+    /// decode on the trace's model — any correct replay must reproduce it
+    /// exactly (a prefix of it, for cancelled requests).
+    pub expect: Option<Vec<i32>>,
+}
+
+impl TraceRequest {
+    fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("id", Json::str(self.id.clone())),
+            ("arrival_us", Json::num(self.arrival_us as f64)),
+            ("prompt", tokens_json(&self.prompt)),
+            ("max_new", Json::num(self.max_new as f64)),
+        ];
+        if let Some(t) = self.cancel_at_us {
+            pairs.push(("cancel_at_us", Json::num(t as f64)));
+        }
+        if let Some(k) = self.cancel_after_tokens {
+            pairs.push(("cancel_after_tokens", Json::num(k as f64)));
+        }
+        if let Some(n) = &self.needle {
+            pairs.push(("needle", tokens_json(n)));
+        }
+        if let Some(e) = &self.expect {
+            pairs.push(("expect", tokens_json(e)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<TraceRequest> {
+        let id = j
+            .get("id")
+            .as_str()
+            .context("trace request missing string \"id\"")?
+            .to_string();
+        let arrival_us = j
+            .get("arrival_us")
+            .as_usize()
+            .with_context(|| format!("request {id:?}: missing \"arrival_us\""))?
+            as u64;
+        let prompt = tokens_from_json(j.get("prompt"))
+            .with_context(|| format!("request {id:?}: bad \"prompt\""))?;
+        if prompt.is_empty() {
+            bail!("request {id:?}: empty prompt");
+        }
+        let max_new = j
+            .get("max_new")
+            .as_usize()
+            .with_context(|| format!("request {id:?}: missing \"max_new\""))?;
+        let cancel_at_us = j.get("cancel_at_us").as_usize().map(|v| v as u64);
+        let cancel_after_tokens = j.get("cancel_after_tokens").as_usize();
+        let needle = match j.get("needle") {
+            Json::Null => None,
+            v => Some(tokens_from_json(v).with_context(|| format!("request {id:?}: bad needle"))?),
+        };
+        let expect = match j.get("expect") {
+            Json::Null => None,
+            v => Some(tokens_from_json(v).with_context(|| format!("request {id:?}: bad expect"))?),
+        };
+        Ok(TraceRequest {
+            id,
+            arrival_us,
+            prompt,
+            max_new,
+            cancel_at_us,
+            cancel_after_tokens,
+            needle,
+            expect,
+        })
+    }
+}
+
+fn tokens_json(toks: &[i32]) -> Json {
+    Json::Arr(toks.iter().map(|&t| Json::num(t as f64)).collect())
+}
+
+fn tokens_from_json(j: &Json) -> Result<Vec<i32>> {
+    let arr = j.as_arr().context("expected a token array")?;
+    arr.iter()
+        .map(|v| {
+            v.as_i64()
+                .and_then(|n| i32::try_from(n).ok())
+                .context("token must be an i32")
+        })
+        .collect()
+}
+
+/// A seeded serving workload: header metadata + requests sorted by arrival.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Scenario name (`needle` | `fleet` | `chat` | `storm`).
+    pub name: String,
+    /// Seed the generator ran with (provenance; replays re-derive nothing).
+    pub seed: u64,
+    /// Native kernel the reference `expect` streams were recorded against.
+    pub kernel: String,
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    /// Serialize to JSONL: a header object line, then one request per
+    /// line. Objects serialize with sorted keys, so the same trace always
+    /// produces byte-identical text (the record half of record/replay).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let header = Json::obj(vec![
+            ("trace", Json::str(self.name.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("kernel", Json::str(self.kernel.clone())),
+            ("version", Json::num(TRACE_VERSION as f64)),
+            ("requests", Json::num(self.requests.len() as f64)),
+        ]);
+        out.push_str(&header.to_string());
+        out.push('\n');
+        for r in &self.requests {
+            out.push_str(&r.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_jsonl(text: &str) -> Result<Trace> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header_line = lines.next().context("empty trace: no header line")?;
+        let header = json::parse(header_line)
+            .map_err(|e| anyhow::anyhow!("bad trace header: {e}"))?;
+        let name = header
+            .get("trace")
+            .as_str()
+            .context("trace header missing \"trace\" name")?
+            .to_string();
+        let version = header.get("version").as_usize().unwrap_or(0) as u64;
+        if version != TRACE_VERSION {
+            bail!("trace {name:?}: unsupported version {version} (want {TRACE_VERSION})");
+        }
+        let seed = header.get("seed").as_usize().context("trace header missing seed")? as u64;
+        let kernel =
+            header.get("kernel").as_str().context("trace header missing kernel")?.to_string();
+        let mut requests = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let j = json::parse(line)
+                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 2))?;
+            requests.push(TraceRequest::from_json(&j)?);
+        }
+        if let Some(n) = header.get("requests").as_usize() {
+            if n != requests.len() {
+                bail!("trace {name:?}: header says {n} requests, file holds {}", requests.len());
+            }
+        }
+        Ok(Trace { name, seed, kernel, requests })
+    }
+
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_jsonl())
+            .with_context(|| format!("writing trace to {path}"))
+    }
+
+    pub fn read(path: &str) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace from {path}"))?;
+        Trace::from_jsonl(&text)
+    }
+
+    /// Total virtual span of the trace (last arrival / cancel time).
+    pub fn span_us(&self) -> u64 {
+        self.requests
+            .iter()
+            .map(|r| r.arrival_us.max(r.cancel_at_us.unwrap_or(0)))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Generator knobs shared by every scenario. `requests` and `ctx` are
+/// *base* scales each scenario interprets (the storm multiplies the
+/// request count; chat divides it into conversations).
+#[derive(Debug, Clone)]
+pub struct GenCfg {
+    pub seed: u64,
+    /// Native kernel reference streams are recorded against.
+    pub kernel: String,
+    /// Base request count.
+    pub requests: usize,
+    /// Base context length in tokens.
+    pub ctx: usize,
+}
+
+impl Default for GenCfg {
+    fn default() -> Self {
+        GenCfg { seed: 0, kernel: "zeta".into(), requests: 16, ctx: 256 }
+    }
+}
+
+/// One serving scenario: a named, described, seeded trace generator (the
+/// `Dataset`-trait idiom of the S-NIAH suite applied to serving traffic).
+pub trait Scenario {
+    fn name(&self) -> &'static str;
+    fn description(&self) -> &'static str;
+    /// Requests the trace will contain at this config (pre-generation).
+    fn expected_requests(&self, cfg: &GenCfg) -> usize;
+    fn generate(&self, cfg: &GenCfg) -> Result<Trace>;
+}
+
+/// All scenarios, in canonical order.
+pub fn scenarios() -> Vec<Box<dyn Scenario>> {
+    vec![
+        Box::new(gen::Needle),
+        Box::new(gen::Fleet),
+        Box::new(gen::Chat),
+        Box::new(gen::Storm),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<Box<dyn Scenario>> {
+    scenarios().into_iter().find(|s| s.name() == name)
+}
+
+/// Serial reference decode: prompt through `step_token`, then greedy
+/// continuation — the stream any correct serving schedule must reproduce
+/// (honoring the model's context cap exactly like the coordinator does).
+pub fn reference_stream(model: &NativeDecodeModel, prompt: &[i32], max_new: usize) -> Vec<i32> {
+    let cap = model.max_context();
+    let mut st = model.begin();
+    let (mut orow, mut logits) = (Vec::new(), Vec::new());
+    for &t in prompt {
+        model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+    }
+    let mut context = prompt.len();
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let t = NativeDecodeModel::argmax(&logits);
+        out.push(t);
+        context += 1;
+        if cap > 0 && context >= cap {
+            break; // the server retires the session with an early Done
+        }
+        if out.len() < max_new {
+            model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+        }
+    }
+    out
+}
+
+/// Contiguous-subsequence search (needle scoring).
+pub fn contains_subseq(hay: &[i32], needle: &[i32]) -> bool {
+    !needle.is_empty() && hay.windows(needle.len()).any(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: &str) -> TraceRequest {
+        TraceRequest {
+            id: id.into(),
+            arrival_us: 42,
+            prompt: vec![1, 2, 3],
+            max_new: 4,
+            cancel_at_us: None,
+            cancel_after_tokens: Some(2),
+            needle: Some(vec![7, 8]),
+            expect: None,
+        }
+    }
+
+    #[test]
+    fn trace_jsonl_roundtrips_and_is_deterministic() {
+        let t = Trace {
+            name: "needle".into(),
+            seed: 9,
+            kernel: "zeta".into(),
+            requests: vec![req("a"), req("b")],
+        };
+        let text = t.to_jsonl();
+        assert_eq!(text, t.to_jsonl(), "serialization must be deterministic");
+        let back = Trace::from_jsonl(&text).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_jsonl(), text, "roundtrip must be byte-identical");
+    }
+
+    #[test]
+    fn malformed_traces_error_out() {
+        assert!(Trace::from_jsonl("").is_err(), "empty");
+        assert!(Trace::from_jsonl("{\"trace\":\"x\"}").is_err(), "no version");
+        let t = Trace { name: "n".into(), seed: 0, kernel: "zeta".into(), requests: vec![req("a")] };
+        let mut text = t.to_jsonl();
+        text.push_str("{\"id\":\"bad\"}\n"); // request missing required fields
+        assert!(Trace::from_jsonl(&text).is_err(), "bad request line + count mismatch");
+    }
+
+    #[test]
+    fn subseq_search_finds_planted_needles() {
+        assert!(contains_subseq(&[1, 2, 3, 4], &[2, 3]));
+        assert!(!contains_subseq(&[1, 2, 3, 4], &[3, 2]));
+        assert!(!contains_subseq(&[1, 2], &[]));
+    }
+}

@@ -1,0 +1,587 @@
+//! Trace replay drivers + scoring.
+//!
+//! Two drivers share one outcome shape:
+//!
+//! * [`lockstep`] — the deterministic replay. It owns a
+//!   [`NativeServing`] directly and advances a *virtual clock*: sweep
+//!   `t` is virtual time `t * sweep_us`, arrivals admit when the clock
+//!   passes them, timed cancellations flip their session's cancel flag
+//!   between sweeps, and token-count cancellations fire after the sweep
+//!   that delivered the k-th token. Every scheduling decision is a pure
+//!   function of the trace, so token streams *and* counters
+//!   (prefix hits, evictions, peak active, token accounting) are
+//!   bit-identical for a fixed trace at any thread count — the property
+//!   `rust/tests/scenario_gate.rs` pins across threads {1,4,8}.
+//! * [`serve`] — the end-to-end replay through the real [`Server`]:
+//!   requests are submitted via `ClientHandle::generate` at their
+//!   (wall-clock) arrival offsets, one collector thread per stream, and
+//!   cancellations *drop the `GenStream`* exactly like a vanished client.
+//!   This is where tokens/s and TTFT p50/p99 are real; cancellation
+//!   outcomes are racy by nature, so only invariants (all sessions
+//!   retire, token accounting balances, the arena drains after
+//!   shutdown) are gated, not exact streams.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::{contains_subseq, Trace};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::session::StepScratch;
+use crate::coordinator::{
+    NativeDecodeModel, NativeModelConfig, NativeServing, RecvTimeout, Server, ServerConfig,
+    Session, StreamEvent,
+};
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+
+/// Replay knobs (the serving configuration a trace runs against).
+#[derive(Debug, Clone)]
+pub struct ReplayCfg {
+    /// Worker-pool size (0 = the process-global pool).
+    pub threads: usize,
+    /// `--kv-mem-budget` byte cap over the page arena (0 = unlimited).
+    pub kv_mem_budget: usize,
+    /// Global per-sweep prefill-token budget (0 = unlimited).
+    pub prefill_budget: usize,
+    /// Round-robin prefill grant size, in prompt tokens.
+    pub prefill_chunk: usize,
+    /// KV page codec (`f32` keeps replays stream-pinned to the trace).
+    pub kv_quant: String,
+    /// Virtual microseconds one lockstep sweep represents (arrival and
+    /// cancel times quantize to this).
+    pub sweep_us: u64,
+}
+
+impl Default for ReplayCfg {
+    fn default() -> Self {
+        let s = ServerConfig::default();
+        ReplayCfg {
+            threads: 0,
+            kv_mem_budget: 0,
+            prefill_budget: s.prefill_budget,
+            prefill_chunk: s.prefill_chunk,
+            kv_quant: "f32".into(),
+            sweep_us: 1_000,
+        }
+    }
+}
+
+/// One request's replayed stream, in trace order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamOutcome {
+    pub id: String,
+    pub tokens: Vec<i32>,
+    /// Stream ended with a `Done` event.
+    pub done: bool,
+    /// The replay cancelled this request (dropped its stream).
+    pub cancelled: bool,
+}
+
+/// The deterministic counter tuple a lockstep replay must reproduce
+/// exactly across thread counts.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Counters {
+    pub completed: u64,
+    pub delivered: u64,
+    pub dropped: u64,
+    pub stepped: u64,
+    pub prefix_hits: u64,
+    pub evictions: u64,
+    pub peak_active: usize,
+}
+
+impl Counters {
+    pub fn from_metrics(m: &Metrics) -> Counters {
+        Counters {
+            completed: m.completed,
+            delivered: m.tokens,
+            dropped: m.dropped_tokens,
+            stepped: m.stepped_tokens,
+            prefix_hits: m.prefix_hits,
+            evictions: m.evictions,
+            peak_active: m.peak_active_sessions,
+        }
+    }
+
+    /// `emitted + dropped == stepped` — no token un-accounted for.
+    pub fn balanced(&self) -> bool {
+        self.delivered + self.dropped == self.stepped
+    }
+}
+
+/// Full result of one replay (either driver).
+pub struct ReplayOutcome {
+    pub mode: &'static str,
+    pub threads: usize,
+    /// Per-request streams, in trace request order.
+    pub streams: Vec<StreamOutcome>,
+    pub counters: Counters,
+    /// Lockstep sweeps executed (0 for `serve`).
+    pub sweeps: u64,
+    /// Arena pages live at end of replay, serving state still up (the
+    /// prefix cache legitimately holds pages here).
+    pub live_pages_end: usize,
+    /// Arena pages live after the serving state is torn down — must be 0
+    /// or pages leaked.
+    pub live_pages_after_teardown: usize,
+    pub ttft_p50: Option<Duration>,
+    pub ttft_p99: Option<Duration>,
+    pub tok_per_sec: f64,
+    pub wall: Duration,
+}
+
+impl ReplayOutcome {
+    /// FNV-1a digest over the non-cancelled streams (id + tokens, trace
+    /// order) — one u64 that pins every delivered token of a replay.
+    pub fn stream_digest(&self) -> u64 {
+        stream_digest(&self.streams)
+    }
+}
+
+pub fn stream_digest(streams: &[StreamOutcome]) -> u64 {
+    fn eat(h: &mut u64, b: u8) {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for s in streams.iter().filter(|s| !s.cancelled) {
+        for &b in s.id.as_bytes() {
+            eat(&mut h, b);
+        }
+        eat(&mut h, 0xff);
+        for &t in &s.tokens {
+            for b in t.to_le_bytes() {
+                eat(&mut h, b);
+            }
+        }
+        eat(&mut h, 0xfe);
+    }
+    h
+}
+
+fn native_cfg(trace: &Trace, cfg: &ReplayCfg) -> NativeModelConfig {
+    NativeModelConfig {
+        kernel: trace.kernel.clone(),
+        kv_quant: cfg.kv_quant.clone(),
+        ..Default::default()
+    }
+}
+
+/// Per-request receive state shared by the lockstep drain loop.
+struct Slot {
+    rx: mpsc::Receiver<Result<StreamEvent>>,
+    cancel: Arc<AtomicBool>,
+    tokens: Vec<i32>,
+    done: bool,
+    cancelled: bool,
+}
+
+/// Deterministic virtual-clock replay against [`NativeServing`] sweeps.
+pub fn lockstep(trace: &Trace, cfg: &ReplayCfg) -> Result<ReplayOutcome> {
+    let model = NativeDecodeModel::new(native_cfg(trace, cfg))?;
+    let arena = model.arena().clone();
+    let mut serving = NativeServing::new(model, cfg.kv_mem_budget, cfg.prefill_chunk.max(1));
+    let pool = if cfg.threads == 0 { *Pool::global() } else { Pool::new(cfg.threads) };
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let depth = Arc::new(AtomicUsize::new(0));
+    let mut scratch = StepScratch::default();
+    let wall_t0 = Instant::now();
+    let sweep_us = cfg.sweep_us.max(1);
+
+    // Admission order: by arrival, ties by trace position (generators
+    // already emit sorted traces; replays must not depend on it).
+    let mut order: Vec<usize> = (0..trace.requests.len()).collect();
+    order.sort_by_key(|&i| (trace.requests[i].arrival_us, i));
+
+    let mut slots: Vec<Option<Slot>> = (0..trace.requests.len()).map(|_| None).collect();
+    let mut sessions: Vec<Session> = Vec::new();
+    let mut next = 0usize;
+    let mut tick: u64 = 0;
+    let mut sweeps: u64 = 0;
+    loop {
+        let now_us = tick.saturating_mul(sweep_us);
+        // Admit everything whose arrival the virtual clock has passed.
+        while next < order.len() {
+            let ri = order[next];
+            let r = &trace.requests[ri];
+            if r.arrival_us > now_us {
+                break;
+            }
+            let (tx, rx) = mpsc::channel();
+            let cancel = Arc::new(AtomicBool::new(false));
+            depth.fetch_add(1, Ordering::Relaxed);
+            sessions.push(Session::new(
+                r.prompt.clone(),
+                r.max_new,
+                Instant::now(),
+                tx,
+                None,
+                cancel.clone(),
+            ));
+            slots[ri] =
+                Some(Slot { rx, cancel, tokens: Vec::new(), done: false, cancelled: false });
+            next += 1;
+        }
+        // Timed cancellations flip deterministically between sweeps, so
+        // the next sweep's `retire_cancelled` pass sees them first.
+        for (ri, r) in trace.requests.iter().enumerate() {
+            if let (Some(at), Some(slot)) = (r.cancel_at_us, slots[ri].as_mut()) {
+                if !slot.cancelled && !slot.done && now_us >= at {
+                    slot.cancel.store(true, Ordering::Relaxed);
+                    slot.cancelled = true;
+                }
+            }
+        }
+        if !sessions.is_empty() {
+            serving.sweep(&mut sessions, &metrics, &depth, &mut scratch, &pool, cfg.prefill_budget);
+            sweeps += 1;
+            if sweeps > 10_000_000 {
+                bail!("lockstep replay of {:?} did not converge", trace.name);
+            }
+        }
+        // Drain streams; token-count cancellations fire after the sweep
+        // that delivered the k-th token (deterministic: one decode token
+        // per session per sweep).
+        for (ri, r) in trace.requests.iter().enumerate() {
+            let Some(slot) = slots[ri].as_mut() else { continue };
+            while let Ok(ev) = slot.rx.try_recv() {
+                match ev {
+                    Ok(StreamEvent::Token { token, .. }) => {
+                        slot.tokens.push(token);
+                        if let Some(k) = r.cancel_after_tokens {
+                            if !slot.cancelled && slot.tokens.len() >= k {
+                                slot.cancel.store(true, Ordering::Relaxed);
+                                slot.cancelled = true;
+                            }
+                        }
+                    }
+                    Ok(StreamEvent::Done { .. }) => slot.done = true,
+                    Err(e) => bail!("request {:?} errored during lockstep replay: {e:#}", r.id),
+                }
+            }
+        }
+        if sessions.is_empty() {
+            if next >= order.len() {
+                break;
+            }
+            // Idle gap before the next arrival: fast-forward the clock
+            // instead of spinning empty sweeps (deterministic either way).
+            let na = trace.requests[order[next]].arrival_us;
+            tick = tick.max(na.div_ceil(sweep_us));
+            continue;
+        }
+        tick += 1;
+    }
+
+    let mut streams = Vec::with_capacity(trace.requests.len());
+    for (ri, r) in trace.requests.iter().enumerate() {
+        let slot = slots[ri]
+            .take()
+            .unwrap_or_else(|| panic!("request {:?} was never admitted", r.id));
+        if !slot.done && !slot.cancelled {
+            bail!("request {:?} finished neither Done nor cancelled", r.id);
+        }
+        streams.push(StreamOutcome {
+            id: r.id.clone(),
+            tokens: slot.tokens,
+            done: slot.done,
+            cancelled: slot.cancelled,
+        });
+    }
+    let (counters, ttft_p50, ttft_p99, tok_per_sec) = {
+        let m = metrics.lock().unwrap();
+        (
+            Counters::from_metrics(&m),
+            m.ttft_percentile(50.0),
+            m.ttft_percentile(99.0),
+            m.tokens_per_sec(),
+        )
+    };
+    let live_pages_end = arena.stats().live_pages;
+    drop(serving); // tears down the prefix cache + model state
+    let live_pages_after_teardown = arena.stats().live_pages;
+    Ok(ReplayOutcome {
+        mode: "lockstep",
+        threads: cfg.threads,
+        streams,
+        counters,
+        sweeps,
+        live_pages_end,
+        live_pages_after_teardown,
+        ttft_p50,
+        ttft_p99,
+        tok_per_sec,
+        wall: wall_t0.elapsed(),
+    })
+}
+
+/// End-to-end replay through the real coordinator: arrivals are
+/// wall-clock offsets, cancellations drop the client's [`GenStream`].
+pub fn serve(trace: &Trace, cfg: &ReplayCfg) -> Result<ReplayOutcome> {
+    let scfg = ServerConfig {
+        native: Some(native_cfg(trace, cfg)),
+        max_delay: Duration::from_millis(1),
+        queue_cap: trace.requests.len() + 8,
+        threads: cfg.threads,
+        prefill_budget: cfg.prefill_budget,
+        prefill_chunk: cfg.prefill_chunk.max(1),
+        kv_mem_budget: cfg.kv_mem_budget,
+        ..Default::default()
+    };
+    let srv = Server::start(scfg, None)?;
+    let metrics = srv.metrics.clone();
+    let arena = srv
+        .kv_arena()
+        .cloned()
+        .expect("native server always exposes its KV arena");
+    let client = srv.client();
+    let wall_t0 = Instant::now();
+
+    let mut order: Vec<usize> = (0..trace.requests.len()).collect();
+    order.sort_by_key(|&i| (trace.requests[i].arrival_us, i));
+
+    struct Collected {
+        tokens: Vec<i32>,
+        done: bool,
+        cancelled: bool,
+        err: Option<String>,
+    }
+    let mut joins: Vec<(usize, std::thread::JoinHandle<Collected>)> = Vec::new();
+    for &ri in &order {
+        let r = &trace.requests[ri];
+        let due = Duration::from_micros(r.arrival_us);
+        let elapsed = wall_t0.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        let stream = client.generate(r.prompt.clone(), r.max_new)?;
+        let deadline = r.cancel_at_us.map(|at| wall_t0 + Duration::from_micros(at));
+        let cancel_tokens = r.cancel_after_tokens;
+        joins.push((
+            ri,
+            std::thread::spawn(move || {
+                let mut c =
+                    Collected { tokens: Vec::new(), done: false, cancelled: false, err: None };
+                loop {
+                    let ev = match deadline {
+                        Some(dl) => {
+                            let now = Instant::now();
+                            if now >= dl {
+                                c.cancelled = true;
+                                break;
+                            }
+                            match stream.recv_timeout(dl - now) {
+                                RecvTimeout::Event(ev) => ev,
+                                RecvTimeout::TimedOut => {
+                                    c.cancelled = true;
+                                    break;
+                                }
+                                RecvTimeout::Closed => break,
+                            }
+                        }
+                        None => match stream.recv() {
+                            Some(ev) => ev,
+                            None => break,
+                        },
+                    };
+                    match ev {
+                        Ok(StreamEvent::Token { token, .. }) => {
+                            c.tokens.push(token);
+                            if let Some(k) = cancel_tokens {
+                                if c.tokens.len() >= k {
+                                    c.cancelled = true;
+                                    break;
+                                }
+                            }
+                        }
+                        Ok(StreamEvent::Done { .. }) => {
+                            c.done = true;
+                            break;
+                        }
+                        Err(e) => {
+                            c.err = Some(format!("{e:#}"));
+                            break;
+                        }
+                    }
+                }
+                // Dropping the stream is the cancellation (and the normal
+                // teardown): the scheduler's next sweep retires the session.
+                drop(stream);
+                c
+            }),
+        ));
+    }
+
+    let mut streams: Vec<Option<StreamOutcome>> = (0..trace.requests.len()).map(|_| None).collect();
+    for (ri, j) in joins {
+        let c = j.join().map_err(|_| anyhow::anyhow!("collector thread panicked"))?;
+        let r = &trace.requests[ri];
+        if let Some(e) = c.err {
+            bail!("request {:?} errored during serve replay: {e}", r.id);
+        }
+        streams[ri] = Some(StreamOutcome {
+            id: r.id.clone(),
+            tokens: c.tokens,
+            done: c.done,
+            cancelled: c.cancelled,
+        });
+    }
+    let streams: Vec<StreamOutcome> =
+        streams.into_iter().map(|s| s.expect("every request collected")).collect();
+    let wall = wall_t0.elapsed();
+    let live_pages_end = arena.stats().live_pages;
+    srv.shutdown();
+    let live_pages_after_teardown = arena.stats().live_pages;
+    let (counters, ttft_p50, ttft_p99, tok_per_sec) = {
+        let m = metrics.lock().unwrap();
+        (
+            Counters::from_metrics(&m),
+            m.ttft_percentile(50.0),
+            m.ttft_percentile(99.0),
+            m.tokens_per_sec(),
+        )
+    };
+    Ok(ReplayOutcome {
+        mode: "serve",
+        threads: cfg.threads,
+        streams,
+        counters,
+        sweeps: 0,
+        live_pages_end,
+        live_pages_after_teardown,
+        ttft_p50,
+        ttft_p99,
+        tok_per_sec,
+        wall,
+    })
+}
+
+/// Scenario score: the deterministic quality/counter fields plus the
+/// timing fields (`tok_per_sec`, TTFT, wall) that only `serve` replays
+/// report meaningfully.
+#[derive(Debug, Clone)]
+pub struct Score {
+    pub scenario: String,
+    pub mode: &'static str,
+    pub seed: u64,
+    pub threads: usize,
+    pub requests: usize,
+    pub completed: u64,
+    pub cancelled: usize,
+    pub counters: Counters,
+    /// Non-cancelled requests whose stream contains the planted needle.
+    pub needle_hits: usize,
+    pub needle_total: usize,
+    /// Non-cancelled requests whose stream equals the recorded reference
+    /// (`expect`); cancelled requests must match a prefix of it.
+    pub expect_ok: usize,
+    pub expect_total: usize,
+    pub stream_digest: u64,
+    pub tok_per_sec: f64,
+    pub ttft_p50_us: u64,
+    pub ttft_p99_us: u64,
+    pub wall_ms: f64,
+}
+
+/// Score one replay outcome against its trace.
+pub fn score(trace: &Trace, out: &ReplayOutcome) -> Score {
+    let mut needle_hits = 0;
+    let mut needle_total = 0;
+    let mut expect_ok = 0;
+    let mut expect_total = 0;
+    for (r, s) in trace.requests.iter().zip(&out.streams) {
+        if let Some(n) = &r.needle {
+            if !s.cancelled {
+                needle_total += 1;
+                if contains_subseq(&s.tokens, n) {
+                    needle_hits += 1;
+                }
+            }
+        }
+        if let Some(e) = &r.expect {
+            expect_total += 1;
+            let ok = if s.cancelled {
+                s.tokens.len() <= e.len() && s.tokens[..] == e[..s.tokens.len()]
+            } else {
+                s.tokens[..] == e[..]
+            };
+            if ok {
+                expect_ok += 1;
+            }
+        }
+    }
+    Score {
+        scenario: trace.name.clone(),
+        mode: out.mode,
+        seed: trace.seed,
+        threads: out.threads,
+        requests: trace.requests.len(),
+        completed: out.counters.completed,
+        cancelled: out.streams.iter().filter(|s| s.cancelled).count(),
+        counters: out.counters.clone(),
+        needle_hits,
+        needle_total,
+        expect_ok,
+        expect_total,
+        stream_digest: out.stream_digest(),
+        tok_per_sec: out.tok_per_sec,
+        ttft_p50_us: out.ttft_p50.map(|d| d.as_micros() as u64).unwrap_or(0),
+        ttft_p99_us: out.ttft_p99.map(|d| d.as_micros() as u64).unwrap_or(0),
+        wall_ms: out.wall.as_secs_f64() * 1e3,
+    }
+}
+
+impl Score {
+    /// One `BENCH_scenarios.json` row.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::str(self.scenario.clone())),
+            ("mode", Json::str(self.mode)),
+            ("seed", Json::num(self.seed as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("cancelled", Json::num(self.cancelled as f64)),
+            ("delivered_tokens", Json::num(self.counters.delivered as f64)),
+            ("dropped_tokens", Json::num(self.counters.dropped as f64)),
+            ("stepped_tokens", Json::num(self.counters.stepped as f64)),
+            ("prefix_hits", Json::num(self.counters.prefix_hits as f64)),
+            ("evictions", Json::num(self.counters.evictions as f64)),
+            ("peak_active", Json::num(self.counters.peak_active as f64)),
+            ("needle_hits", Json::num(self.needle_hits as f64)),
+            ("needle_total", Json::num(self.needle_total as f64)),
+            ("expect_ok", Json::num(self.expect_ok as f64)),
+            ("expect_total", Json::num(self.expect_total as f64)),
+            ("stream_digest", Json::str(format!("{:016x}", self.stream_digest))),
+            ("tok_per_sec", Json::num(self.tok_per_sec)),
+            ("ttft_p50_us", Json::num(self.ttft_p50_us as f64)),
+            ("ttft_p99_us", Json::num(self.ttft_p99_us as f64)),
+            ("wall_ms", Json::num(self.wall_ms)),
+        ])
+    }
+
+    /// Human summary line for the experiment log.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<7} {:<9} req={:<4} done={:<4} cancel={:<4} expect={}/{} needle={}/{} \
+             hits={} evict={} digest={:016x} tok/s={:.0} ttft_p50={}us",
+            self.scenario,
+            self.mode,
+            self.requests,
+            self.completed,
+            self.cancelled,
+            self.expect_ok,
+            self.expect_total,
+            self.needle_hits,
+            self.needle_total,
+            self.counters.prefix_hits,
+            self.counters.evictions,
+            self.stream_digest,
+            self.tok_per_sec,
+            self.ttft_p50_us,
+        )
+    }
+}

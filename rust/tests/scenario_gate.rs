@@ -1,0 +1,220 @@
+//! Scenario record/replay gate (tier-1): the serving-scenario suite's
+//! deterministic contract.
+//!
+//! 1. Every seeded trace regenerates byte-identically, and a lockstep
+//!    replay at pool sizes {1, 4, 8} produces *identical token streams
+//!    and identical counters* (prefix hits, evictions, peak active,
+//!    token accounting) — scheduling parallelism must be invisible.
+//! 2. Replayed non-cancelled streams equal the reference streams recorded
+//!    into the trace at generation time (`expect`), and cancelled streams
+//!    are exact prefixes of theirs.
+//! 3. A budget-constrained lockstep replay (tight `--kv-mem-budget`,
+//!    real evictions) reproduces the unconstrained replay's streams
+//!    bit-for-bit.
+//! 4. Cancellation storm through the *real* coordinator at threads
+//!    {2, 8}: hundreds of `GenStream`s dropped mid-prefill/mid-decode;
+//!    every session retires, token accounting balances
+//!    (emitted + dropped == stepped), and the page arena drains to zero
+//!    after shutdown.
+
+use zeta::scenario::replay::{lockstep, score, serve, ReplayCfg};
+use zeta::scenario::{by_name, scenarios, GenCfg, Trace, TraceRequest};
+
+fn small_cfg(kernel: &str, requests: usize, ctx: usize) -> GenCfg {
+    GenCfg { seed: 7, kernel: kernel.into(), requests, ctx }
+}
+
+#[test]
+fn traces_regenerate_byte_identically() {
+    for sc in scenarios() {
+        let cfg = small_cfg("zeta", 8, 96);
+        let a = sc.generate(&cfg).unwrap().to_jsonl();
+        let b = by_name(sc.name()).unwrap().generate(&cfg).unwrap().to_jsonl();
+        assert_eq!(a, b, "{}: same seed must emit identical JSONL", sc.name());
+        assert!(!a.is_empty());
+    }
+}
+
+#[test]
+fn lockstep_replay_is_thread_invariant_and_matches_recorded_streams() {
+    for sc in scenarios() {
+        let trace = sc.generate(&small_cfg("zeta", 8, 96)).unwrap();
+        let base = lockstep(&trace, &ReplayCfg { threads: 1, ..ReplayCfg::default() }).unwrap();
+        assert!(
+            base.counters.balanced(),
+            "{}: token accounting unbalanced: {:?}",
+            trace.name,
+            base.counters
+        );
+        assert_eq!(
+            base.live_pages_after_teardown, 0,
+            "{}: arena pages leaked after teardown",
+            trace.name
+        );
+        let s = score(&trace, &base);
+        assert_eq!(
+            s.expect_ok, s.expect_total,
+            "{}: replayed streams must match the recorded references ({}/{})",
+            trace.name, s.expect_ok, s.expect_total
+        );
+        if trace.name == "needle" {
+            assert!(s.needle_total > 0, "needle trace must carry needles");
+            assert_eq!(
+                s.needle_hits, s.needle_total,
+                "needle retrieval must restate every planted signature"
+            );
+        }
+        for threads in [4usize, 8] {
+            let other =
+                lockstep(&trace, &ReplayCfg { threads, ..ReplayCfg::default() }).unwrap();
+            assert_eq!(
+                base.streams, other.streams,
+                "{}: token streams diverged between 1 and {threads} threads",
+                trace.name
+            );
+            assert_eq!(
+                base.counters, other.counters,
+                "{}: counters diverged between 1 and {threads} threads",
+                trace.name
+            );
+        }
+    }
+}
+
+#[test]
+fn budget_constrained_replay_reproduces_unconstrained_streams() {
+    // The paged-state gate's proven eviction shape, as a trace: three
+    // 100-token prompts on the exact-KV (naive) kernel arriving together
+    // (all three are activated in one admission pass — live bytes lag
+    // allocation) under a ~1.6-sessions byte budget, so their combined
+    // growth is *guaranteed* to cross it mid-generation and force LRU
+    // preemption — no seed luck involved.
+    let trace = Trace {
+        name: "evict".into(),
+        seed: 0,
+        kernel: "naive".into(),
+        requests: (0..3)
+            .map(|s| TraceRequest {
+                id: format!("evict-{s}"),
+                arrival_us: 0,
+                prompt: (0..100).map(|i| ((i * 13 + s * 29 + 7) % 31) as i32).collect(),
+                max_new: 20,
+                cancel_at_us: None,
+                cancel_after_tokens: None,
+                needle: None,
+                expect: None,
+            })
+            .collect(),
+    };
+    let free = lockstep(&trace, &ReplayCfg { threads: 2, ..ReplayCfg::default() }).unwrap();
+    assert_eq!(free.counters.evictions, 0, "unlimited budget must never preempt");
+    let tight = lockstep(
+        &trace,
+        &ReplayCfg { threads: 2, kv_mem_budget: 26_000, ..ReplayCfg::default() },
+    )
+    .unwrap();
+    assert!(
+        tight.counters.evictions > 0,
+        "tight budget must actually preempt sessions (got {:?})",
+        tight.counters
+    );
+    assert_eq!(
+        free.streams, tight.streams,
+        "preemption/re-prefill must be invisible in the token streams"
+    );
+    assert_eq!(free.stream_digest(), tight.stream_digest());
+    assert!(tight.counters.balanced());
+    assert_eq!(tight.live_pages_after_teardown, 0);
+}
+
+#[test]
+fn fleet_lockstep_replay_hits_the_prefix_cache() {
+    // Every fleet wave shares one page-aligned system prompt: all
+    // followers must fork the cached prefix instead of re-prefilling it.
+    let trace = by_name("fleet").unwrap().generate(&small_cfg("zeta", 12, 128)).unwrap();
+    let out = lockstep(&trace, &ReplayCfg { threads: 2, ..ReplayCfg::default() }).unwrap();
+    assert!(
+        out.counters.prefix_hits > 0,
+        "shared-system-prompt fleet must hit the prefix cache: {:?}",
+        out.counters
+    );
+    let s = score(&trace, &out);
+    assert_eq!(s.expect_ok, s.expect_total);
+}
+
+#[test]
+fn serve_replay_of_needle_matches_recorded_streams() {
+    // Through the real coordinator (threads = 2): scheduling is racy but
+    // streams are pinned scheduling-invariant by the fused-sweep gates,
+    // so every completed stream must equal its recorded reference.
+    let trace = by_name("needle").unwrap().generate(&small_cfg("zeta", 6, 96)).unwrap();
+    let out = serve(&trace, &ReplayCfg { threads: 2, ..ReplayCfg::default() }).unwrap();
+    for s in &out.streams {
+        assert!(s.done && !s.cancelled, "{}: did not complete", s.id);
+    }
+    let sc = score(&trace, &out);
+    assert_eq!(
+        sc.expect_ok, sc.expect_total,
+        "serve replay must reproduce the recorded streams exactly"
+    );
+    assert!(out.counters.balanced());
+    assert_eq!(out.live_pages_after_teardown, 0, "arena must drain after shutdown");
+}
+
+#[test]
+fn cancellation_storm_drains_cleanly_at_threads_2_and_8() {
+    // 60 x STORM_SCALE(4) = 240 requests, two thirds carrying a cancel
+    // point: a storm of dropped GenStreams mid-prefill and mid-decode.
+    let trace = by_name("storm").unwrap().generate(&small_cfg("zeta", 60, 96)).unwrap();
+    assert!(trace.requests.len() >= 200, "storm must be hundreds of requests");
+    for threads in [2usize, 8] {
+        let out = serve(&trace, &ReplayCfg { threads, ..ReplayCfg::default() }).unwrap();
+        assert_eq!(out.streams.len(), trace.requests.len());
+        // Every request resolved: a finished stream or a dropped one.
+        for (r, s) in trace.requests.iter().zip(&out.streams) {
+            assert!(
+                s.done || s.cancelled,
+                "storm request {:?} neither finished nor cancelled at {threads} threads",
+                r.id
+            );
+        }
+        let cancelled = out.streams.iter().filter(|s| s.cancelled).count();
+        assert!(cancelled > 0, "a storm replay must actually cancel streams");
+        // The conservation law is the point of the storm: every stepped
+        // token was either delivered or counted dropped, even with
+        // hundreds of receivers vanishing mid-flight.
+        assert!(
+            out.counters.balanced(),
+            "token accounting unbalanced at {threads} threads: {:?}",
+            out.counters
+        );
+        assert_eq!(
+            out.live_pages_after_teardown, 0,
+            "storm leaked arena pages at {threads} threads"
+        );
+        // Cancelled streams must still be exact prefixes of their
+        // references (score() checks prefix for cancelled-with-expect).
+        let sc = score(&trace, &out);
+        assert_eq!(
+            sc.expect_ok, sc.expect_total,
+            "storm streams (incl. cancelled prefixes) diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn lockstep_storm_is_deterministic_including_cancellations() {
+    // In lockstep the virtual clock makes even the cancellation points
+    // deterministic: two replays at different pool sizes must agree on
+    // *which* requests were cancelled and on every delivered token.
+    let trace = by_name("storm").unwrap().generate(&small_cfg("zeta", 12, 96)).unwrap();
+    let a = lockstep(&trace, &ReplayCfg { threads: 1, ..ReplayCfg::default() }).unwrap();
+    let b = lockstep(&trace, &ReplayCfg { threads: 8, ..ReplayCfg::default() }).unwrap();
+    assert_eq!(a.streams, b.streams);
+    assert_eq!(a.counters, b.counters);
+    let cancelled = a.streams.iter().filter(|s| s.cancelled).count();
+    let done = a.streams.iter().filter(|s| s.done).count();
+    assert!(cancelled > 0 && done > 0, "storm must mix cancelled and completed requests");
+    let s = score(&trace, &a);
+    assert_eq!(s.expect_ok, s.expect_total);
+}
