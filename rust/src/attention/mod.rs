@@ -46,6 +46,7 @@
 pub mod flash;
 pub mod mamba;
 pub mod naive;
+pub mod speculate;
 pub mod zeta;
 
 use std::sync::Arc;
@@ -222,6 +223,20 @@ pub trait DecodeState: Send {
     /// too, so `release` is about *when*, not *whether*. A released state
     /// must be re-prefilled from scratch before further `step`s.
     fn release(&mut self);
+
+    /// Self-speculation fork: a state over the *same* ingested stream
+    /// whose future `step`s run a deliberately narrowed (cheaper,
+    /// approximate) configuration of the kernel — the draft side of
+    /// speculative decoding. Like [`DecodeState::fork`] it shares the
+    /// arena pages copy-on-write and never perturbs the original; unlike
+    /// `fork` its outputs are *proposals*, not the kernel's answer, so
+    /// every token it suggests must be re-scored by the full state before
+    /// it may be emitted. `None` when the kernel has no cheaper
+    /// configuration to offer (the exact-softmax kernels and mamba);
+    /// ZETA narrows its windowed top-k.
+    fn fork_draft(&self) -> Option<Box<dyn DecodeState>> {
+        None
+    }
 
     /// Rough scalar-op estimate of the *next* [`DecodeState::step`] call,
     /// used by [`AttentionImpl::step_batch`] to decide whether a fused

@@ -1,0 +1,296 @@
+//! Speculative-decode draft sources.
+//!
+//! Speculative decoding splits each emitted token's cost in two: a cheap
+//! **drafter** proposes a short continuation, and the full target kernel
+//! **verifies** all proposed positions in one fused wave, committing the
+//! longest prefix whose argmax matches plus the bonus token the verify
+//! wave computed at the first divergence. Because the verify side runs the
+//! exact per-token `step` arithmetic of non-speculative decoding, accepted
+//! streams are bit-identical to plain decode no matter how bad the
+//! drafter is — a weak drafter only costs speed, never correctness (the
+//! tier-1 gate `rust/tests/spec_decode.rs` pins this).
+//!
+//! Two draft sources, selected by `--speculate`:
+//!
+//! * **mamba** — a constant-state selective-SSM stream
+//!   ([`super::mamba::MambaLite`]) fed the same embedded rows as the
+//!   target. Its recurrence is O(dv·n_state) per token with O(1) state in
+//!   the context length — the *Transformers are RNNs* framing: a
+//!   recurrent model drafts, the full attention kernel verifies.
+//! * **self** — self-speculation via [`DecodeState::fork_draft`]: a
+//!   copy-on-write fork of the target's own state (shared `ZIndex` runs
+//!   and KV pages) whose selection is narrowed — for ZETA, `k` and the
+//!   candidate window shrink by [`super::zeta::DRAFT_NARROWING`] — so a
+//!   draft step prices a fraction of a full step while reading the exact
+//!   same history.
+//!
+//! The drafter owns *no* model weights: embedding and readout live in the
+//! model layer ([`crate::coordinator::session::NativeDecodeModel`]), which
+//! drives both context catch-up and proposal stepping through the
+//! [`DecodeState`] interface below.
+
+use std::sync::Arc;
+
+use super::mamba::MambaLite;
+use super::{AttentionImpl, DecodeState};
+use crate::util::arena::PageArena;
+
+/// Which draft source serving sessions speculate with (`--speculate`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftSource {
+    /// Speculation disabled — every token is one plain full-kernel step.
+    Off,
+    /// Constant-state mamba RNN drafter, verified by the target kernel.
+    Mamba,
+    /// Low-`k` self-speculation over the target's own forked state.
+    SelfSpec,
+}
+
+impl DraftSource {
+    /// The accepted `--speculate` values, for startup error messages.
+    pub const ACCEPTED: &'static str = "off, mamba, self";
+
+    pub fn parse(s: &str) -> Option<DraftSource> {
+        Some(match s {
+            "off" => DraftSource::Off,
+            "mamba" => DraftSource::Mamba,
+            "self" => DraftSource::SelfSpec,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DraftSource::Off => "off",
+            DraftSource::Mamba => "mamba",
+            DraftSource::SelfSpec => "self",
+        }
+    }
+}
+
+/// A cheap token-proposal source attached to one serving session.
+///
+/// The model layer drives it in three phases per decode wave: catch the
+/// persistent [`Drafter::context`] state up to the committed stream (a
+/// drafter is *never* rolled back — rejected proposals simply aren't fed
+/// to it), [`Drafter::begin`] a scratch fork to step proposals on, and
+/// drop the fork after the verify wave. All persistent state lives on the
+/// session arena, so drafts count against `--kv-mem-budget` like any
+/// other per-session bytes and [`Drafter::shed`] frees them first under
+/// pressure.
+pub trait Drafter: Send {
+    /// Draft-source name (matches [`DraftSource::name`]).
+    fn name(&self) -> &'static str;
+
+    /// The persistent context state that must track the committed token
+    /// stream, creating it (empty) on first call. The model layer feeds
+    /// it every committed token before drafting. `None`: this drafter
+    /// re-forks the target each wave and needs no feeding.
+    fn context(&mut self) -> Option<&mut dyn DecodeState>;
+
+    /// Fork the scratch state this wave's proposals are stepped on,
+    /// positioned at the drafter's current context. `None`: the drafter
+    /// cannot propose this wave (no context yet, or the target kernel
+    /// offers no draft configuration) — the session falls back to a
+    /// plain single-token step.
+    fn begin(&mut self, target: &dyn DecodeState) -> Option<Box<dyn DecodeState>>;
+
+    /// Arena bytes the drafter's *persistent* state pins (scratch forks
+    /// are transient within one sweep and not counted here).
+    fn state_bytes(&self) -> usize;
+
+    /// Return all persistent drafter pages to the arena (budget
+    /// shedding). The context re-grows lazily from the committed stream
+    /// on a later wave; shedding never perturbs the target state.
+    fn shed(&mut self);
+}
+
+/// The mamba constant-state RNN drafter: one private
+/// [`super::mamba::MambaDecode`] stream per session, fed the same
+/// embedded q/k/v rows as the target so its proposals share the model's
+/// embedding/readout geometry while its state stays O(1) in the context.
+pub struct MambaDrafter {
+    imp: MambaLite,
+    d: usize,
+    dv: usize,
+    arena: Arc<PageArena>,
+    state: Option<Box<dyn DecodeState>>,
+}
+
+impl MambaDrafter {
+    pub fn new(d: usize, dv: usize, arena: &Arc<PageArena>) -> MambaDrafter {
+        MambaDrafter { imp: MambaLite::default(), d, dv, arena: arena.clone(), state: None }
+    }
+}
+
+impl Drafter for MambaDrafter {
+    fn name(&self) -> &'static str {
+        "mamba"
+    }
+
+    fn context(&mut self) -> Option<&mut dyn DecodeState> {
+        if self.state.is_none() {
+            self.state = Some(self.imp.begin_decode_in(self.d, self.dv, &self.arena));
+        }
+        Some(self.state.as_mut().unwrap().as_mut())
+    }
+
+    fn begin(&mut self, _target: &dyn DecodeState) -> Option<Box<dyn DecodeState>> {
+        self.state.as_ref().map(|s| s.fork())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state.as_ref().map(|s| s.state_bytes()).unwrap_or(0)
+    }
+
+    fn shed(&mut self) {
+        if let Some(mut s) = self.state.take() {
+            s.release();
+        }
+    }
+}
+
+/// Self-speculation: no state of its own — every wave forks the target
+/// through [`DecodeState::fork_draft`] (copy-on-write, shared pages and
+/// `ZIndex` runs), so the draft context is the committed stream by
+/// construction and there is nothing to catch up or shed.
+pub struct SelfDrafter;
+
+impl Drafter for SelfDrafter {
+    fn name(&self) -> &'static str {
+        "self"
+    }
+
+    fn context(&mut self) -> Option<&mut dyn DecodeState> {
+        None
+    }
+
+    fn begin(&mut self, target: &dyn DecodeState) -> Option<Box<dyn DecodeState>> {
+        target.fork_draft()
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    fn shed(&mut self) {}
+}
+
+/// The one `DraftSource → Drafter` factory (`Off` yields `None`). `d` /
+/// `dv` and the arena size the mamba drafter's private stream; the self
+/// drafter ignores them.
+pub fn drafter_for(
+    source: DraftSource,
+    d: usize,
+    dv: usize,
+    arena: &Arc<PageArena>,
+) -> Option<Box<dyn Drafter>> {
+    match source {
+        DraftSource::Off => None,
+        DraftSource::Mamba => Some(Box::new(MambaDrafter::new(d, dv, arena))),
+        DraftSource::SelfSpec => Some(Box::new(SelfDrafter)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::kernel_by_name;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn draft_source_parses_exactly_the_cli_names() {
+        assert_eq!(DraftSource::parse("off"), Some(DraftSource::Off));
+        assert_eq!(DraftSource::parse("mamba"), Some(DraftSource::Mamba));
+        assert_eq!(DraftSource::parse("self"), Some(DraftSource::SelfSpec));
+        assert_eq!(DraftSource::parse("selfspec"), None);
+        assert_eq!(DraftSource::parse(""), None);
+        for s in [DraftSource::Off, DraftSource::Mamba, DraftSource::SelfSpec] {
+            assert_eq!(DraftSource::parse(s.name()), Some(s));
+        }
+    }
+
+    fn rows(rng: &mut Rng, n: usize, w: usize) -> Vec<f32> {
+        (0..n * w).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn mamba_drafter_context_grows_forks_and_sheds() {
+        let arena = PageArena::new(16);
+        let (d, dv) = (8, 8);
+        let mut drafter = MambaDrafter::new(d, dv, &arena);
+        assert_eq!(drafter.state_bytes(), 0);
+        let target = kernel_by_name("naive").unwrap().begin_decode_in(d, dv, &arena);
+        // No context yet: nothing to fork proposals from.
+        assert!(drafter.begin(target.as_ref()).is_none());
+
+        let mut rng = Rng::new(0x5bec_0001);
+        let (q, k, v) = (rows(&mut rng, 6, d), rows(&mut rng, 6, d), rows(&mut rng, 6, dv));
+        let mut out = vec![0f32; dv];
+        let ctx = drafter.context().expect("mamba drafter keeps persistent context");
+        for t in 0..6 {
+            let (qr, kr) = (&q[t * d..(t + 1) * d], &k[t * d..(t + 1) * d]);
+            ctx.step(qr, kr, &v[t * dv..(t + 1) * dv], &mut out);
+        }
+        assert!(drafter.state_bytes() > 0, "fed context must pin arena bytes");
+
+        // A scratch fork steps independently without perturbing the context.
+        let mut fork = drafter.begin(target.as_ref()).expect("fed context forks");
+        assert_eq!(fork.pos(), 6);
+        fork.step(&q[..d], &k[..d], &v[..dv], &mut out);
+        assert_eq!(fork.pos(), 7);
+        assert_eq!(drafter.context().unwrap().pos(), 6);
+        drop(fork);
+
+        drafter.shed();
+        assert_eq!(drafter.state_bytes(), 0, "shed must drop every persistent byte");
+        assert!(drafter.begin(target.as_ref()).is_none(), "shed drafter re-grows lazily");
+        assert_eq!(drafter.context().unwrap().pos(), 0, "context restarts empty after shed");
+    }
+
+    #[test]
+    fn self_drafter_forks_zeta_without_perturbing_the_target() {
+        let arena = PageArena::new(16);
+        let (d, dv) = (8, 8);
+        let imp = kernel_by_name("zeta").unwrap();
+        let mut target = imp.begin_decode_in(d, dv, &arena);
+        let mut rng = Rng::new(0x5bec_0002);
+        let n = 48;
+        let (q, k, v) = (rows(&mut rng, n, d), rows(&mut rng, n, d), rows(&mut rng, n, dv));
+        let mut out = vec![0f32; dv];
+        for t in 0..n {
+            let (qr, kr) = (&q[t * d..(t + 1) * d], &k[t * d..(t + 1) * d]);
+            target.step(qr, kr, &v[t * dv..(t + 1) * dv], &mut out);
+        }
+        let control = target.fork();
+
+        let mut drafter = SelfDrafter;
+        assert!(drafter.context().is_none(), "self drafter carries no context");
+        assert_eq!(drafter.state_bytes(), 0);
+        let mut draft = drafter.begin(target.as_ref()).expect("zeta offers a draft fork");
+        assert_eq!(draft.pos(), target.pos(), "draft fork sits at the target's position");
+        // Stepping the narrowed draft must not perturb the target: the
+        // target's next step stays bit-identical to an untouched fork's.
+        let mut draft_out = vec![0f32; dv];
+        draft.step(&q[..d], &k[..d], &v[..dv], &mut draft_out);
+        drop(draft);
+        let mut a = vec![0f32; dv];
+        let mut b = vec![0f32; dv];
+        target.step(&q[..d], &k[..d], &v[..dv], &mut a);
+        let mut control = control;
+        control.step(&q[..d], &k[..d], &v[..dv], &mut b);
+        assert_eq!(a, b, "draft stepping leaked into the target state");
+    }
+
+    #[test]
+    fn exact_softmax_kernels_offer_no_self_draft() {
+        let arena = PageArena::new(16);
+        for name in ["naive", "flash", "mamba"] {
+            let st = kernel_by_name(name).unwrap().begin_decode_in(4, 4, &arena);
+            assert!(
+                st.fork_draft().is_none(),
+                "{name} has no narrowed configuration; SelfDrafter must fall back"
+            );
+        }
+    }
+}

@@ -77,6 +77,16 @@ impl Default for ZetaNative {
     }
 }
 
+/// How much a [`DecodeState::fork_draft`] self-speculation fork narrows
+/// the selection: draft forks attend `k / DRAFT_NARROWING` candidates out
+/// of a `window / DRAFT_NARROWING` window (floored at 1 candidate). At the
+/// serving defaults (k 32, window 64) a draft step scores 4 candidates
+/// from an 8-entry window — cheap enough to propose several tokens per
+/// full-kernel verify wave, close enough that concentrated attention
+/// (repetitive/templated traffic) keeps the proposals' argmax aligned
+/// with the full kernel's.
+pub const DRAFT_NARROWING: usize = 8;
+
 /// Candidate sets for all queries: indices + count per query.
 struct Candidates {
     idx: Vec<u32>, // (N, k) padded with u32::MAX
@@ -974,6 +984,44 @@ impl DecodeState for ZetaDecode {
             scores: self.scores.clone(),
             t: self.t,
         })
+    }
+
+    /// Low-`k` self-speculation fork: the same ingested stream — sorted
+    /// index runs, Morton codes and paged key/value caches all shared
+    /// copy-on-write exactly as [`DecodeState::fork`] — but future
+    /// selection runs a narrowed configuration: `k / DRAFT_NARROWING`
+    /// candidates over a `window / DRAFT_NARROWING` window. Projection,
+    /// encoding, chunk limits and the Cauchy arithmetic are untouched, so
+    /// every cached code/row stays valid for both configurations; only
+    /// the candidate set (and hence the proposals) narrows, which is what
+    /// makes a draft step cost a fraction of a full step.
+    fn fork_draft(&self) -> Option<Box<dyn DecodeState>> {
+        let k = (self.cfg.k / DRAFT_NARROWING).max(1);
+        let window = (self.cfg.window / DRAFT_NARROWING).max(k);
+        let cfg = ZetaNative { k, window, ..self.cfg.clone() };
+        Some(Box::new(ZetaDecode {
+            cfg,
+            bits: self.bits,
+            d: self.d,
+            dv: self.dv,
+            index: self.index.fork(),
+            indexed: self.indexed,
+            codes: self.codes.fork(),
+            kl: self.kl.fork(),
+            vcache: self.vcache.fork(),
+            ksum: self.ksum.clone(),
+            vsum: self.vsum.clone(),
+            km_t: self.km_t.clone(),
+            vm_t: self.vm_t.clone(),
+            qlow: self.qlow.clone(),
+            klow: self.klow.clone(),
+            scratch: WindowScratch::default(),
+            win: Vec::new(),
+            cand: Vec::new(),
+            irow: vec![u32::MAX; k],
+            scores: vec![0f32; k],
+            t: self.t,
+        }))
     }
 
     fn release(&mut self) {

@@ -47,6 +47,20 @@ pub struct Metrics {
     /// Most sessions ever simultaneously active (admitted, unparked) — how
     /// far the `--kv-mem-budget` admission gate actually stretched.
     pub peak_active_sessions: usize,
+    /// Tokens proposed by speculative-decode drafters (`--speculate`).
+    /// Every drafted token is either accepted (its verify-wave argmax
+    /// matched the proposal) or rejected — the speculation conservation
+    /// law [`Metrics::speculation_balanced`] checks. Bonus tokens the
+    /// verify wave emits at a divergence are *not* drafted tokens; they
+    /// flow through the ordinary `stepped`/`tokens` accounting only.
+    pub drafted_tokens: u64,
+    /// Drafted tokens whose full-kernel verification matched (committed).
+    pub accepted_tokens: u64,
+    /// Drafted tokens the verify wave refuted (state rolled back).
+    pub rejected_tokens: u64,
+    /// Drafter contexts shed by the KV byte budget (drafts go first,
+    /// before the prefix cache and live-session preemption).
+    pub draft_sheds: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -103,6 +117,37 @@ impl Metrics {
     /// conservation law of the token accounting.
     pub fn token_accounting_balanced(&self) -> bool {
         self.tokens + self.dropped_tokens == self.stepped_tokens
+    }
+
+    /// Count one speculative verify wave: `drafted` proposals of which
+    /// `accepted` matched the target kernel's argmax. The remainder is
+    /// rejected — callers never report rejections separately, so the
+    /// speculation ledger balances by construction and a drifted caller
+    /// shows up as a failed [`Metrics::speculation_balanced`] instead of
+    /// silently skewing the accept rate.
+    pub fn record_speculation(&mut self, drafted: u64, accepted: u64) {
+        debug_assert!(accepted <= drafted);
+        self.drafted_tokens += drafted;
+        self.accepted_tokens += accepted;
+        self.rejected_tokens += drafted - accepted;
+    }
+
+    /// Every drafted token was either accepted or rejected — the
+    /// speculation side's conservation law. (Committed tokens, drafted or
+    /// not, still flow through `record_tokens`, so
+    /// [`Metrics::token_accounting_balanced`] is unaffected by drafting.)
+    pub fn speculation_balanced(&self) -> bool {
+        self.accepted_tokens + self.rejected_tokens == self.drafted_tokens
+    }
+
+    /// Fraction of drafted tokens the verify wave committed (0 when
+    /// nothing was drafted).
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted_tokens == 0 {
+            0.0
+        } else {
+            self.accepted_tokens as f64 / self.drafted_tokens as f64
+        }
     }
 
     /// One session's time-to-first-token (first *delivered* token).
@@ -197,6 +242,18 @@ impl Metrics {
         }
         if self.peak_active_sessions > 0 {
             s.push_str(&format!(" peak_active={}", self.peak_active_sessions));
+        }
+        if self.drafted_tokens > 0 {
+            s.push_str(&format!(
+                " drafted={} accepted={} rejected={} accept_rate={:.2}",
+                self.drafted_tokens,
+                self.accepted_tokens,
+                self.rejected_tokens,
+                self.accept_rate()
+            ));
+        }
+        if self.draft_sheds > 0 {
+            s.push_str(&format!(" draft_sheds={}", self.draft_sheds));
         }
         if self.prefix_hits > 0 {
             s.push_str(&format!(" prefix_hits={}", self.prefix_hits));
@@ -312,6 +369,45 @@ mod tests {
         assert_eq!(m.ttft_samples(), 50);
         let s = m.summary();
         assert!(s.contains("ttft_p50="), "{s}");
+    }
+
+    #[test]
+    fn speculation_conservation_law() {
+        let mut m = Metrics::new();
+        assert!(m.speculation_balanced(), "empty metrics are balanced");
+        assert_eq!(m.accept_rate(), 0.0);
+        // Three verify waves: full acceptance, partial, total rejection.
+        m.record_speculation(4, 4);
+        m.record_speculation(4, 1);
+        m.record_speculation(2, 0);
+        assert_eq!(m.drafted_tokens, 10);
+        assert_eq!(m.accepted_tokens, 5);
+        assert_eq!(m.rejected_tokens, 5);
+        assert!(m.speculation_balanced());
+        assert_eq!(m.accept_rate(), 0.5);
+        let s = m.summary();
+        assert!(s.contains("drafted=10"), "{s}");
+        assert!(s.contains("accept_rate=0.50"), "{s}");
+        // A skewed ledger (e.g. a caller bumping the counters by hand)
+        // must trip the invariant.
+        m.rejected_tokens += 1;
+        assert!(!m.speculation_balanced());
+    }
+
+    #[test]
+    fn speculation_does_not_touch_token_accounting() {
+        // Drafted/accepted counters are a parallel ledger: the delivered/
+        // dropped/stepped conservation law must hold regardless of how
+        // much speculation happened, because committed tokens (accepted
+        // drafts and bonus tokens alike) all flow through record_tokens.
+        let mut m = Metrics::new();
+        let t0 = Instant::now();
+        m.record_speculation(8, 5);
+        m.record_tokens(6, 0, 6, t0); // 5 accepted + 1 bonus, all delivered
+        assert!(m.token_accounting_balanced());
+        assert!(m.speculation_balanced());
+        assert_eq!(m.tokens, 6);
+        assert_eq!(m.stepped_tokens, 6);
     }
 
     #[test]

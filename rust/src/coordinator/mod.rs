@@ -54,6 +54,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::attention::speculate::DraftSource;
 use crate::attention::DecodeState;
 use crate::runtime::{Engine, HostTensor};
 use crate::util::arena::{KvQuant, PageArena};
@@ -63,7 +64,7 @@ use batcher::{Batcher, Decision};
 use metrics::Metrics;
 pub use session::{GenStream, NativeModelConfig, RecvTimeout, StreamEvent};
 pub use session::{NativeDecodeModel, PrefixCache, Session};
-use session::{PrefillStep, SessionStep, StepScratch};
+use session::{PrefillStep, SessionStep, StepScratch, VerifyStep};
 
 /// Model output for one request.
 #[derive(Debug, Clone)]
@@ -113,6 +114,10 @@ const DEFAULT_PREFILL_BUDGET: usize = 256;
 /// arena pages, so the cap bounds cache memory alongside the byte budget.
 const PREFIX_CACHE_CAP: usize = 32;
 
+/// Default speculative draft length (`--draft-len`): tokens proposed per
+/// draft-then-verify wave when `--speculate` is on.
+pub const DEFAULT_DRAFT_LEN: usize = 4;
+
 #[derive(Clone)]
 pub struct ServerConfig {
     pub artifacts_dir: String,
@@ -146,6 +151,18 @@ pub struct ServerConfig {
     /// pages drop, and it transparently re-prefills later with identical
     /// output tokens). 0 = unlimited. Must be at least one KV page.
     pub kv_mem_budget: usize,
+    /// Speculative decoding draft source (`--speculate`): `"off"` (plain
+    /// one-step decode), `"mamba"` (constant-state RNN drafter) or
+    /// `"self"` (low-`k` self-speculation on kernels that offer a
+    /// narrowed configuration — ZETA). Accepted token streams are
+    /// bit-identical to `"off"` for every source, kernel and thread
+    /// count (the `rust/tests/spec_decode.rs` gate); speculation only
+    /// changes how many full-kernel waves those tokens cost. Native
+    /// backend only.
+    pub speculate: String,
+    /// Tokens proposed per draft-then-verify wave (`--draft-len`, >= 1).
+    /// Ignored when `speculate` is `"off"`.
+    pub draft_len: usize,
     /// Serve with the in-process native decode engine instead of PJRT:
     /// runs without artifacts and decodes incrementally. `preset` /
     /// `artifacts_dir` are ignored when set.
@@ -164,6 +181,8 @@ impl Default for ServerConfig {
             prefill_budget: DEFAULT_PREFILL_BUDGET,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             kv_mem_budget: 0,
+            speculate: "off".into(),
+            draft_len: DEFAULT_DRAFT_LEN,
             native: None,
         }
     }
@@ -267,6 +286,19 @@ impl Server {
         if cfg.prefill_chunk == 0 {
             bail!("--prefill-chunk must be at least 1 token per grant");
         }
+        // Speculation flags are validated even when speculation is off, so
+        // a typo'd --speculate fails loudly instead of silently serving
+        // without drafts.
+        if DraftSource::parse(&cfg.speculate).is_none() {
+            bail!(
+                "unknown draft source {:?} for --speculate (want {})",
+                cfg.speculate,
+                DraftSource::ACCEPTED
+            );
+        }
+        if cfg.draft_len == 0 {
+            bail!("--draft-len must be at least 1 drafted token per wave");
+        }
         // Budget sanity up front: a budget smaller than a single KV page
         // would admit sessions that can never allocate their first page.
         if let Some(ncfg) = &cfg.native {
@@ -317,11 +349,14 @@ impl Server {
                     match &cfg2.native {
                         Some(ncfg) => {
                             let model = NativeDecodeModel::new(ncfg.clone())?;
-                            let serving = NativeServing::new(
+                            let mut serving = NativeServing::new(
                                 model,
                                 cfg2.kv_mem_budget,
                                 cfg2.prefill_chunk,
                             );
+                            let source = DraftSource::parse(&cfg2.speculate)
+                                .expect("--speculate validated at startup");
+                            serving.set_speculation(source, cfg2.draft_len);
                             Ok((None, Backend::Native(serving), NATIVE_MAX_BATCH))
                         }
                         None => {
@@ -729,12 +764,35 @@ pub struct NativeServing {
     /// Monotonic sweep counter; stamps [`Session::last_step`] so the
     /// budget preemption can evict the least-recently-stepped session.
     sweep_no: u64,
+    /// Speculative-decode draft source ([`ServerConfig::speculate`]);
+    /// `Off` keeps the plain one-step fused decode wave.
+    spec: DraftSource,
+    /// Tokens proposed per draft-then-verify wave (>= 1).
+    draft_len: usize,
 }
 
 impl NativeServing {
     pub fn new(model: NativeDecodeModel, budget: usize, prefill_chunk: usize) -> NativeServing {
         let prefix = PrefixCache::new(model.page_tokens(), PREFIX_CACHE_CAP);
-        NativeServing { model, prefix, budget, prefill_chunk: prefill_chunk.max(1), sweep_no: 0 }
+        NativeServing {
+            model,
+            prefix,
+            budget,
+            prefill_chunk: prefill_chunk.max(1),
+            sweep_no: 0,
+            spec: DraftSource::Off,
+            draft_len: DEFAULT_DRAFT_LEN,
+        }
+    }
+
+    /// Turn speculative decoding on (`--speculate` / `--draft-len`). The
+    /// decode wave then drafts up to `draft_len` tokens per active
+    /// session and verifies them in one fused wave; accepted streams stay
+    /// bit-identical to plain decode, so flipping this can change only
+    /// throughput, never tokens.
+    pub fn set_speculation(&mut self, source: DraftSource, draft_len: usize) {
+        self.spec = source;
+        self.draft_len = draft_len.max(1);
     }
 
     pub fn model(&self) -> &NativeDecodeModel {
@@ -808,6 +866,28 @@ impl NativeServing {
     fn enforce_budget(&mut self, sessions: &mut [Session], metrics: &Arc<Mutex<Metrics>>) {
         if self.budget == 0 {
             return;
+        }
+        // Drafter contexts go first: they are pure speed accelerators —
+        // shedding one can never change a stream (the context re-grows
+        // lazily from the committed tokens, or the session simply decodes
+        // without drafts) — so they are cheaper to lose than the prefix
+        // cache, let alone a live session's pages.
+        if self.model.arena().stats().live_bytes > self.budget {
+            let mut sheds = 0u64;
+            for s in sessions.iter_mut() {
+                if self.model.arena().stats().live_bytes <= self.budget {
+                    break;
+                }
+                if let Some(dr) = s.drafter.as_mut() {
+                    if dr.state_bytes() > 0 {
+                        dr.shed();
+                        sheds += 1;
+                    }
+                }
+            }
+            if sheds > 0 {
+                metrics.lock().unwrap().draft_sheds += sheds;
+            }
         }
         // Cache shedding stops the moment an eviction frees nothing: such
         // an entry's pages are pinned by live sessions (fork-shared), and
@@ -1069,8 +1149,13 @@ impl NativeServing {
         }
 
         // Fused decode wave: one pool-parallel kernel call across all
-        // ready sessions (each feeds its last emitted token).
-        if !decode.is_empty() {
+        // ready sessions (each feeds its last emitted token). With
+        // `--speculate` on and byte headroom for the transient draft /
+        // snapshot forks, the wave instead drafts a chain per session and
+        // verifies it fused — same per-token arithmetic, fewer waves.
+        if !decode.is_empty() && self.speculation_headroom(decode.len()) {
+            self.speculative_decode_wave(sessions, &decode, metrics, pool, max_context, &mut tally);
+        } else if !decode.is_empty() {
             let mut staged: Vec<(usize, Box<dyn DecodeState>)> =
                 Vec::with_capacity(decode.len());
             for &idx in &decode {
@@ -1124,6 +1209,159 @@ impl NativeServing {
         }
         tally.publish(metrics, sweep_t0);
         self.publish_memory_metrics(sessions, metrics);
+    }
+
+    /// Whether this sweep's decode wave speculates: speculation must be
+    /// on, and the byte budget must leave room for the wave's transient
+    /// forks (one draft fork and one rollback snapshot per session —
+    /// copy-on-write, so roughly one fresh tail-page pair each). The rule
+    /// reads only deterministic state (live arena bytes), so the decision
+    /// — and therefore the whole schedule — is identical across thread
+    /// counts, which is what keeps lockstep replays bit-reproducible.
+    /// Under sustained pressure drafting simply stays off and the wave
+    /// takes the plain one-step path: streams are unchanged either way.
+    fn speculation_headroom(&self, wave_sessions: usize) -> bool {
+        if self.spec == DraftSource::Off {
+            return false;
+        }
+        if self.budget == 0 {
+            return true;
+        }
+        let transient = 2 * self.model.estimate_state_bytes(0) * wave_sessions;
+        self.model.arena().stats().live_bytes + transient <= self.budget
+    }
+
+    /// Draft-then-verify decode wave. Per session: catch the drafter's
+    /// context up to the committed stream, draft up to `draft_len` greedy
+    /// proposals on a scratch fork, snapshot the real state (CoW fork),
+    /// then feed `[last token, d_1..d_L]` through the real state in one
+    /// fused [`NativeDecodeModel::verify_batch`] across sessions. The
+    /// longest matched prefix plus the verify wave's bonus token at the
+    /// first divergence commit through [`emit_token`]; on any rejection
+    /// the advanced state is dropped and the snapshot restored — an O(1)
+    /// page-drop rollback — leaving `fed` behind `tokens`, so the proven
+    /// re-prefill machinery (bit-identical to stepping) absorbs the
+    /// accepted tokens next sweep. `preds[0]` is by construction the
+    /// token non-speculative decode would emit, and each later
+    /// prediction follows a matched prefix, so committed streams are
+    /// bit-identical to `--speculate off`.
+    fn speculative_decode_wave(
+        &mut self,
+        sessions: &mut [Session],
+        decode: &[usize],
+        metrics: &Arc<Mutex<Metrics>>,
+        pool: &Pool,
+        max_context: usize,
+        tally: &mut SweepTally,
+    ) {
+        let model = &self.model;
+        // Draft phase: serial per session (chains are short and the
+        // drafter is priced to make these steps negligible).
+        let (mut orow, mut logits) = (Vec::new(), Vec::new());
+        let mut chains: Vec<Vec<i32>> = Vec::with_capacity(decode.len());
+        for &idx in decode {
+            let s = &mut sessions[idx];
+            if s.drafter.is_none() {
+                s.drafter = model.make_drafter(self.spec);
+            }
+            let seed_tok = *s.tokens.last().expect("prompt is non-empty");
+            // Cap the chain so the accepted prefix plus the bonus token
+            // can never overrun max_new or the context cap: emission must
+            // stop exactly where plain decode would.
+            let remaining = s.max_new.saturating_sub(s.generated);
+            let mut l_eff = self.draft_len.min(remaining.saturating_sub(1));
+            if max_context > 0 {
+                let room = max_context.saturating_sub(s.tokens.len());
+                l_eff = l_eff.min(room.saturating_sub(1));
+            }
+            let mut chain = Vec::with_capacity(l_eff + 1);
+            chain.push(seed_tok);
+            if l_eff > 0 {
+                if let Some(dr) = s.drafter.as_mut() {
+                    model.drafter_catch_up(dr, &s.tokens, pool);
+                    let target = s.state.as_deref().expect("active session carries decode state");
+                    if let Some(mut draft) = dr.begin(target) {
+                        let prop = model.draft_chain(
+                            draft.as_mut(),
+                            seed_tok,
+                            l_eff,
+                            &mut orow,
+                            &mut logits,
+                        );
+                        chain.extend(prop);
+                        draft.release();
+                    }
+                }
+            }
+            // An empty draft (no context yet, kernel offers none, L
+            // capped to 0) degrades to a plain one-token verify step.
+            chains.push(chain);
+        }
+
+        // Snapshot + fused verify: the snapshot fork is the rollback
+        // point; CoW pages make it a tail-page copy, not a state copy.
+        let mut staged: Vec<(usize, Box<dyn DecodeState>, Box<dyn DecodeState>)> =
+            Vec::with_capacity(decode.len());
+        for &idx in decode {
+            let st = sessions[idx].state.take().expect("active session carries decode state");
+            let snap = st.fork();
+            staged.push((idx, st, snap));
+        }
+        let preds_all: Vec<Vec<i32>> = {
+            let mut items: Vec<VerifyStep> = staged
+                .iter_mut()
+                .zip(&chains)
+                .map(|((_, st, _), chain)| VerifyStep {
+                    state: st.as_mut(),
+                    chain,
+                    preds: Vec::new(),
+                })
+                .collect();
+            self.model.verify_batch(&mut items, pool);
+            items.iter_mut().map(|it| std::mem::take(&mut it.preds)).collect()
+        };
+
+        // Acceptance: commit the longest matched prefix + bonus, roll
+        // back on the first divergence.
+        let (mut drafted, mut accepted) = (0u64, 0u64);
+        for (((idx, mut st, mut snap), chain), preds) in
+            staged.into_iter().zip(&chains).zip(preds_all)
+        {
+            let s = &mut sessions[idx];
+            let l = chain.len() - 1;
+            debug_assert_eq!(preds.len(), chain.len());
+            let mut m = 0usize;
+            while m < l && preds[m] == chain[m + 1] {
+                m += 1;
+            }
+            drafted += l as u64;
+            accepted += m as u64;
+            if m == l {
+                // Full acceptance (and the undrafted l == 0 step): the
+                // advanced state is exactly where plain decode would be.
+                snap.release();
+                s.state = Some(st);
+                s.fed += l + 1;
+            } else {
+                // Rollback: drop the advanced pages, restore the
+                // snapshot. `fed` stays behind the committed tokens, so
+                // the next sweep's prefill wave replays the accepted
+                // tokens into the state (emit=false: they streamed here).
+                st.release();
+                s.state = Some(snap);
+            }
+            s.last_step = self.sweep_no;
+            for &tok in preds.iter().take(m + 1) {
+                let (done0, silent0) = (tally.retire_done.len(), tally.retire_silent.len());
+                emit_token(s, idx, tok, max_context, tally);
+                if tally.retire_done.len() > done0 || tally.retire_silent.len() > silent0 {
+                    break; // retired (limits hit or client gone): stop emitting
+                }
+            }
+        }
+        if drafted > 0 {
+            metrics.lock().unwrap().record_speculation(drafted, accepted);
+        }
     }
 }
 
@@ -1746,6 +1984,59 @@ mod tests {
         assert!(m.summary().contains("prefix_hits"), "{}", m.summary());
         drop(m);
         srv.shutdown();
+    }
+
+    #[test]
+    fn invalid_speculate_flags_are_rejected_with_listings() {
+        // A typo'd draft source fails at startup with the accepted
+        // spellings, mirroring the --kv-quant rejection.
+        let mut cfg = native_cfg("zeta");
+        cfg.speculate = "medusa".into();
+        let err = Server::start(cfg, None).unwrap_err().to_string();
+        assert!(err.contains("--speculate"), "{err}");
+        assert!(err.contains(DraftSource::ACCEPTED), "must list accepted sources: {err}");
+        // A zero draft length could only ever verify nothing.
+        let mut cfg = native_cfg("zeta");
+        cfg.speculate = "mamba".into();
+        cfg.draft_len = 0;
+        let err = Server::start(cfg, None).unwrap_err().to_string();
+        assert!(err.contains("--draft-len"), "{err}");
+        // Every accepted source starts.
+        for good in ["off", "mamba", "self"] {
+            let mut cfg = native_cfg("zeta");
+            cfg.speculate = good.into();
+            let srv = Server::start(cfg, None).unwrap();
+            srv.shutdown();
+        }
+    }
+
+    #[test]
+    fn speculative_streams_match_plain_decode_end_to_end() {
+        // Serve-level smoke of the acceptance contract — the tier-1 gate
+        // in rust/tests/spec_decode.rs covers the full source x kernel x
+        // thread matrix; this pins the in-process server plumbing.
+        let prompt: Vec<i32> = (0..20).map(|i| (i * 11 + 3) % 32).collect();
+        let base = {
+            let srv = Server::start(native_cfg("zeta"), None).unwrap();
+            let t = srv.client().generate(prompt.clone(), 16).unwrap().collect_tokens().unwrap();
+            srv.shutdown();
+            t
+        };
+        assert_eq!(base.len(), 16);
+        for source in ["mamba", "self"] {
+            let mut cfg = native_cfg("zeta");
+            cfg.speculate = source.into();
+            cfg.draft_len = 4;
+            let srv = Server::start(cfg, None).unwrap();
+            let t = srv.client().generate(prompt.clone(), 16).unwrap().collect_tokens().unwrap();
+            let m = srv.metrics.lock().unwrap();
+            assert!(m.drafted_tokens > 0, "{source} must actually draft");
+            assert!(m.speculation_balanced(), "{source}: {}", m.summary());
+            assert!(m.token_accounting_balanced(), "{source}: {}", m.summary());
+            drop(m);
+            srv.shutdown();
+            assert_eq!(t, base, "{source} streams must be bit-identical to off");
+        }
     }
 
     #[test]

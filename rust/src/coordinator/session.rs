@@ -23,6 +23,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::attention::speculate::{drafter_for, Drafter, DraftSource};
 use crate::attention::{kernel_by_name, AttentionImpl, DecodeState, DecodeStep, Workload};
 use crate::tensor::{dot, Tensor};
 use crate::util::arena::{KvQuant, PageArena, DEFAULT_PAGE_TOKENS};
@@ -409,6 +410,114 @@ impl NativeDecodeModel {
             -1
         }
     }
+
+    /// Build a session's drafter for the configured `--speculate` source
+    /// (`None` for `off`). The mamba drafter's private stream lives on the
+    /// server arena, so its bytes count against `--kv-mem-budget` exactly
+    /// like session KV state.
+    pub fn make_drafter(&self, source: DraftSource) -> Option<SessionDrafter> {
+        drafter_for(source, self.cfg.d, self.cfg.dv, &self.arena).map(SessionDrafter::new)
+    }
+
+    /// Feed the drafter's persistent context every committed token it has
+    /// not seen yet — all of `tokens` *except* the last, which seeds the
+    /// draft chain itself. Lazy catch-up makes one code path absorb the
+    /// prompt, partial acceptances, budget sheds (context restarts from
+    /// zero) and preemptions: the drafter is never rolled back, it only
+    /// ever ingests the committed stream.
+    pub fn drafter_catch_up(&self, dr: &mut SessionDrafter, tokens: &[i32], pool: &Pool) {
+        let want = tokens.len().saturating_sub(1);
+        debug_assert!(dr.fed <= want, "drafter context ahead of the committed stream");
+        if dr.fed >= want {
+            return;
+        }
+        let pending = &tokens[dr.fed..want];
+        if let Some(ctx) = dr.inner.context() {
+            let (d, dv) = (self.cfg.d, self.cfg.dv);
+            let mut emb = PrefillEmbed::default();
+            emb.orow.resize(dv, 0.0);
+            for &tok in pending {
+                let (q, k, v) = self.embed_rows(tok);
+                emb.qs.extend_from_slice(q);
+                emb.ks.extend_from_slice(k);
+                emb.vs.extend_from_slice(v);
+            }
+            debug_assert_eq!(emb.qs.len(), pending.len() * d);
+            ctx.prefill_run(pending.len(), &emb.qs, &emb.ks, &emb.vs, &mut emb.orow, pool);
+        }
+        dr.fed = want;
+    }
+
+    /// Step a scratch draft state `len` greedy tokens past `seed_tok` (the
+    /// session's last committed token) and return the proposals. Serial by
+    /// design: the chain is sequentially dependent and the drafter is
+    /// priced to make these steps negligible next to one full-kernel step.
+    pub fn draft_chain(
+        &self,
+        draft: &mut dyn DecodeState,
+        seed_tok: i32,
+        len: usize,
+        orow: &mut Vec<f32>,
+        logits: &mut Vec<f32>,
+    ) -> Vec<i32> {
+        let mut chain = Vec::with_capacity(len);
+        let mut tok = seed_tok;
+        for _ in 0..len {
+            self.step_token(draft, tok, orow, logits);
+            tok = Self::argmax(logits);
+            chain.push(tok);
+        }
+        chain
+    }
+
+    /// Fused speculative verify wave: every slot feeds its whole draft
+    /// chain — `[last committed token, d_1, .., d_L]` — through its *real*
+    /// state, recording the argmax after each position into
+    /// [`VerifyStep::preds`]. Each position runs exactly the
+    /// [`NativeDecodeModel::step_token`] arithmetic, so `preds[0]` is the
+    /// token non-speculative decode would have produced, and by induction
+    /// every prediction after a matched prefix is too — which is what
+    /// makes acceptance bit-exact. Within a slot the loop is serial
+    /// (token i+1's step depends on token i's state mutation); across
+    /// slots the wave fans out on the pool like a prefill wave.
+    pub fn verify_batch(&self, items: &mut [VerifyStep<'_>], pool: &Pool) {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let per_tok = self.cfg.d + self.cfg.dv + self.cfg.vocab * self.cfg.dv;
+        let total: usize = items
+            .iter()
+            .map(|it| it.chain.len() * (it.state.step_cost_hint() + per_tok))
+            .sum();
+        if fan_out(n, total, pool.threads(), PARALLEL_PREFILL_MIN_OPS) {
+            let ish = SharedSlice::new(items);
+            pool.run_chunked(n, 1, |queue| {
+                let (mut orow, mut logits) = (Vec::new(), Vec::new());
+                while let Some(slots) = queue.next_chunk() {
+                    for i in slots {
+                        // Safety: slot i is claimed by exactly one chunk,
+                        // and every slot owns a distinct state.
+                        let it = unsafe { &mut ish.range_mut(i..i + 1)[0] };
+                        self.verify_slot(it, &mut orow, &mut logits);
+                    }
+                }
+            });
+        } else {
+            let (mut orow, mut logits) = (Vec::new(), Vec::new());
+            for it in items.iter_mut() {
+                self.verify_slot(it, &mut orow, &mut logits);
+            }
+        }
+    }
+
+    fn verify_slot(&self, it: &mut VerifyStep<'_>, orow: &mut Vec<f32>, logits: &mut Vec<f32>) {
+        it.preds.clear();
+        for &tok in it.chain {
+            self.step_token(&mut *it.state, tok, orow, logits);
+            it.preds.push(Self::argmax(logits));
+        }
+    }
 }
 
 /// One session's slot in a fused decode sweep: its live kernel state plus
@@ -426,6 +535,61 @@ pub struct PrefillStep<'a> {
     pub state: &'a mut dyn DecodeState,
     pub tokens: &'a [i32],
     pub emit: bool,
+}
+
+/// One session's slot in a fused speculative verify wave: the state the
+/// chain is scored on (the session's real state, pre-forked by the caller
+/// for rollback), the chain `[last committed token, d_1..d_L]`, and the
+/// per-position argmax predictions [`NativeDecodeModel::verify_batch`]
+/// fills in.
+pub struct VerifyStep<'a> {
+    pub state: &'a mut dyn DecodeState,
+    pub chain: &'a [i32],
+    pub preds: Vec<i32>,
+}
+
+/// A session's speculative-decode drafter plus its catch-up cursor: how
+/// many committed tokens the drafter's persistent context has ingested.
+/// The cursor lives *outside* the [`Drafter`] so shedding can reset both
+/// together — a shed context restarts empty and the next
+/// [`NativeDecodeModel::drafter_catch_up`] re-feeds the committed stream
+/// from zero.
+pub struct SessionDrafter {
+    inner: Box<dyn Drafter>,
+    /// Committed tokens fed into the drafter context so far (always at
+    /// most `session.tokens.len() - 1`: the last token seeds the chain).
+    fed: usize,
+}
+
+impl SessionDrafter {
+    pub fn new(inner: Box<dyn Drafter>) -> SessionDrafter {
+        SessionDrafter { inner, fed: 0 }
+    }
+
+    /// Draft-source name (for logs/summaries).
+    pub fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    /// Fork the scratch state proposals are stepped on; `None` when the
+    /// drafter cannot propose this wave (context shed / not grown yet, or
+    /// the kernel offers no narrowed configuration).
+    pub fn begin(&mut self, target: &dyn DecodeState) -> Option<Box<dyn DecodeState>> {
+        self.inner.begin(target)
+    }
+
+    /// Arena bytes the drafter's persistent context pins.
+    pub fn state_bytes(&self) -> usize {
+        self.inner.state_bytes()
+    }
+
+    /// Drop the persistent context's pages (budget shedding) and rewind
+    /// the catch-up cursor so a later wave rebuilds the context from the
+    /// committed stream.
+    pub fn shed(&mut self) {
+        self.inner.shed();
+        self.fed = 0;
+    }
 }
 
 /// Reusable buffers for the fused sweep entry points
@@ -540,6 +704,10 @@ pub struct Session {
     /// Whether this session's page-aligned prompt prefix has already been
     /// offered to the prompt-prefix cache (insert once per session).
     pub prefix_cached: bool,
+    /// Speculative-decode drafter (`--speculate mamba|self`), attached by
+    /// the scheduler when the session activates. `None` when speculation
+    /// is off — the decode sweep then takes the plain fused-step path.
+    pub drafter: Option<SessionDrafter>,
     /// Set when the client dropped its [`GenStream`] — checked every sweep
     /// so cancelled sessions retire before consuming any further compute,
     /// including mid-prefill.
@@ -567,6 +735,7 @@ impl Session {
             reply,
             last_step: 0,
             prefix_cached: false,
+            drafter: None,
             cancel,
         }
     }
@@ -978,6 +1147,95 @@ mod tests {
         assert_eq!(model.estimate_state_bytes(1), 2 * per_page);
         assert_eq!(model.estimate_state_bytes(page), 2 * per_page);
         assert_eq!(model.estimate_state_bytes(page + 1), 3 * per_page);
+    }
+
+    #[test]
+    fn verify_batch_predictions_match_serial_step_token() {
+        // The speculative verify wave feeds a whole chain per slot; its
+        // per-position predictions must equal a serial step_token loop
+        // bit-for-bit, for every kernel, at 1 and 4 threads — this is the
+        // arithmetic identity the acceptance contract rests on.
+        for kernel in ["zeta", "naive", "flash", "mamba"] {
+            let model = NativeDecodeModel::new(NativeModelConfig {
+                kernel: kernel.into(),
+                ..Default::default()
+            })
+            .unwrap();
+            let prompts: Vec<Vec<i32>> = vec![vec![3, 9, 1], vec![14; 10], vec![27, 2]];
+            let chains: Vec<Vec<i32>> = vec![vec![5, 6, 7, 8], vec![1, 1], vec![30, 0, 12]];
+            let (mut orow, mut logits) = (Vec::new(), Vec::new());
+            let mut want: Vec<Vec<i32>> = Vec::new();
+            for (p, c) in prompts.iter().zip(&chains) {
+                let mut st = model.begin();
+                for &t in p {
+                    model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+                }
+                let mut preds = Vec::new();
+                for &t in c {
+                    model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+                    preds.push(NativeDecodeModel::argmax(&logits));
+                }
+                want.push(preds);
+            }
+            for threads in [1usize, 4] {
+                let pool = Pool::new(threads);
+                let mut states: Vec<_> = prompts
+                    .iter()
+                    .map(|p| {
+                        let mut st = model.begin();
+                        for &t in p {
+                            model.step_token(st.as_mut(), t, &mut orow, &mut logits);
+                        }
+                        st
+                    })
+                    .collect();
+                let mut items: Vec<VerifyStep> = states
+                    .iter_mut()
+                    .zip(&chains)
+                    .map(|(st, c)| VerifyStep {
+                        state: st.as_mut(),
+                        chain: c.as_slice(),
+                        preds: Vec::new(),
+                    })
+                    .collect();
+                model.verify_batch(&mut items, &pool);
+                let got: Vec<Vec<i32>> = items.iter().map(|it| it.preds.clone()).collect();
+                assert_eq!(got, want, "{kernel} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn drafter_catch_up_feeds_all_but_the_last_token_and_survives_shed() {
+        let model = NativeDecodeModel::new(NativeModelConfig::default()).unwrap();
+        let pool = Pool::serial();
+        let mut dr = model.make_drafter(DraftSource::Mamba).expect("mamba drafter");
+        assert!(model.make_drafter(DraftSource::Off).is_none());
+        let tokens: Vec<i32> = (0..12).map(|i| (i * 5 + 2) % 32).collect();
+        model.drafter_catch_up(&mut dr, &tokens, &pool);
+        assert_eq!(dr.fed, 11, "catch-up stops one short of the committed stream");
+        // Idempotent until the stream grows.
+        model.drafter_catch_up(&mut dr, &tokens, &pool);
+        assert_eq!(dr.fed, 11);
+        let bytes = dr.state_bytes();
+        assert!(bytes > 0, "mamba context pins arena bytes");
+        // Draft a chain; proposals are deterministic for a fixed context.
+        let (mut orow, mut logits) = (Vec::new(), Vec::new());
+        let last = *tokens.last().unwrap();
+        let mut fork = dr.begin(model.begin().as_ref()).expect("context forks");
+        let a = model.draft_chain(fork.as_mut(), last, 4, &mut orow, &mut logits);
+        assert_eq!(a.len(), 4);
+        fork.release();
+        // Shed, re-catch-up from zero: the rebuilt context drafts the
+        // same chain (lazy catch-up is a pure function of the stream).
+        dr.shed();
+        assert_eq!(dr.fed, 0);
+        assert_eq!(dr.state_bytes(), 0);
+        model.drafter_catch_up(&mut dr, &tokens, &pool);
+        let mut fork2 = dr.begin(model.begin().as_ref()).expect("re-grown context forks");
+        let b = model.draft_chain(fork2.as_mut(), last, 4, &mut orow, &mut logits);
+        fork2.release();
+        assert_eq!(a, b, "shed + rebuild must not change proposals");
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! `zeta bench diff` — regression triage between two `BENCH_*.json`
+//! perf-trajectory envelopes.
+//!
+//! Every [`super::write_bench`] file carries a provenance header precisely
+//! so two trajectories can be compared honestly: `diff` refuses files
+//! recorded at different thread counts, SIMD backends, or KV codecs
+//! (`git_rev` is *expected* to differ — that is the point of a diff).
+//! Rows pair up by their identity fields (every string field such as
+//! `scenario` / `kernel` / `bench` / `source`, plus the configuration
+//! numerics in [`ID_NUMS`]); shared metric fields then diff directionally
+//! — throughput-like metrics regress when they *fall*, latency-like
+//! metrics when they *rise* — and `--fail-above <pct>` turns the worst
+//! regression into a non-zero exit for CI.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Numeric row fields that are configuration axes, not measurements —
+/// they join the string fields in a row's identity key.
+const ID_NUMS: &[&str] = &[
+    "n", "threads", "seed", "lanes", "draft_len", "kv_mem_budget", "requests", "d", "dv", "page",
+    "chunk", "batch", "k", "window", "ctx", "sessions", "prompt_len",
+];
+
+/// How a numeric field diffs. Identity-key fields never reach this.
+enum Direction {
+    /// Throughput-like: a drop is a regression.
+    HigherBetter,
+    /// Latency/size-like: a rise is a regression.
+    LowerBetter,
+    /// Deterministic counter (tokens, hits, evictions…): changes are
+    /// reported but never gate `--fail-above`.
+    Counter,
+}
+
+fn direction(key: &str) -> Direction {
+    const HIGHER: &[&str] = &["per_sec", "speedup", "accept_rate", "gbps", "throughput"];
+    const LOWER: &[&str] = &["_ns", "_us", "_ms", "ns_per", "us_per", "ms_per", "wall", "_mb"];
+    if HIGHER.iter().any(|m| key.contains(m)) {
+        Direction::HigherBetter
+    } else if LOWER.iter().any(|m| key.contains(m)) {
+        Direction::LowerBetter
+    } else {
+        Direction::Counter
+    }
+}
+
+struct Bench {
+    provenance: Json,
+    rows: Vec<Json>,
+}
+
+fn load(path: &str) -> Result<Bench> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    if doc.get("provenance").as_obj().is_none() {
+        bail!("{path}: no provenance header — not a BENCH_*.json envelope");
+    }
+    let rows = doc
+        .get("rows")
+        .as_arr()
+        .with_context(|| format!("{path}: no rows array"))?
+        .to_vec();
+    Ok(Bench { provenance: doc.get("provenance").clone(), rows })
+}
+
+/// The row-matching key: every string field plus the [`ID_NUMS`]
+/// numerics, in sorted-key order. Digest fields are skipped entirely so
+/// an intentional stream change still diffs the row's timing.
+fn identity(row: &Json) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    if let Some(obj) = row.as_obj() {
+        for (k, v) in obj {
+            if k.contains("digest") {
+                continue;
+            }
+            match v {
+                Json::Str(s) => parts.push(format!("{k}={s}")),
+                Json::Num(n) if ID_NUMS.contains(&k.as_str()) => parts.push(format!("{k}={n}")),
+                _ => {}
+            }
+        }
+    }
+    parts.join(" ")
+}
+
+/// Diff `new_path` against `old_path`. Returns `Ok(true)` when the worst
+/// directional regression stays within `fail_above` percent (always true
+/// when no threshold is given); the caller maps `false` to exit code 1.
+pub fn bench_diff(old_path: &str, new_path: &str, fail_above: Option<f64>) -> Result<bool> {
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    for key in ["threads", "zeta_simd", "kv_quant"] {
+        let (a, b) = (old.provenance.get(key), new.provenance.get(key));
+        if a != b {
+            bail!(
+                "refusing to diff: provenance {key} differs ({a} vs {b}) — trajectories \
+                 from different {key} settings are not comparable"
+            );
+        }
+    }
+    println!(
+        "bench diff: {old_path} (rev {}) -> {new_path} (rev {})",
+        old.provenance.get("git_rev").as_str().unwrap_or("unknown"),
+        new.provenance.get("git_rev").as_str().unwrap_or("unknown")
+    );
+
+    let mut old_rows: BTreeMap<String, &Json> = BTreeMap::new();
+    for r in &old.rows {
+        old_rows.insert(identity(r), r);
+    }
+    let mut matched = 0usize;
+    let mut added: Vec<String> = Vec::new();
+    // Worst directional regression in percent (positive = got worse).
+    let mut worst: Option<(f64, String)> = None;
+    for r in &new.rows {
+        let id = identity(r);
+        let Some(o) = old_rows.remove(&id) else {
+            added.push(id);
+            continue;
+        };
+        matched += 1;
+        let (Some(nobj), Some(oobj)) = (r.as_obj(), o.as_obj()) else {
+            continue;
+        };
+        for (key, nval) in nobj {
+            let (Some(nv), Some(ov)) = (nval.as_f64(), oobj.get(key).and_then(Json::as_f64))
+            else {
+                continue;
+            };
+            if ov.abs() < 1e-12 {
+                continue; // no baseline to take a percentage of
+            }
+            let delta_pct = (nv - ov) / ov * 100.0;
+            match direction(key) {
+                Direction::Counter => {
+                    if nv != ov {
+                        println!("  {id} :: {key}: {ov} -> {nv}");
+                    }
+                }
+                dir => {
+                    let regress = match dir {
+                        Direction::HigherBetter => -delta_pct,
+                        _ => delta_pct,
+                    };
+                    let verdict = if regress > 0.0 { "worse" } else { "better" };
+                    println!("  {id} :: {key}: {ov:.3} -> {nv:.3} ({delta_pct:+.1}%, {verdict})");
+                    let is_worst = match &worst {
+                        Some((w, _)) => regress > *w,
+                        None => true,
+                    };
+                    if is_worst {
+                        worst = Some((regress, format!("{id} :: {key}")));
+                    }
+                }
+            }
+        }
+    }
+    for id in old_rows.keys() {
+        println!("  only in {old_path}: {id}");
+    }
+    for id in &added {
+        println!("  only in {new_path}: {id}");
+    }
+    if matched == 0 {
+        bail!("no comparable rows between {old_path} and {new_path}");
+    }
+    match &worst {
+        Some((r, at)) if *r > 0.0 => println!("worst regression: {r:+.1}% at {at}"),
+        _ => println!("no metric regressed across {matched} matched rows"),
+    }
+    if let Some(limit) = fail_above {
+        if let Some((r, at)) = &worst {
+            if *r > limit {
+                println!("FAIL: {r:+.1}% exceeds --fail-above {limit}% ({at})");
+                return Ok(false);
+            }
+        }
+        println!("OK: worst regression within --fail-above {limit}%");
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn envelope(threads: f64, rows: Vec<Json>) -> Json {
+        Json::obj(vec![
+            (
+                "provenance",
+                Json::obj(vec![
+                    ("git_rev", Json::str("abc")),
+                    ("threads", Json::num(threads)),
+                    ("zeta_simd", Json::str("scalar")),
+                    ("kv_quant", Json::str("f32")),
+                ]),
+            ),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    fn row(scenario: &str, tps: f64, wall: f64) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::str(scenario)),
+            ("threads", Json::num(8.0)),
+            ("tok_per_sec", Json::num(tps)),
+            ("wall_ms", Json::num(wall)),
+            ("stepped_tokens", Json::num(100.0)),
+        ])
+    }
+
+    fn write_tmp(tag: &str, doc: &Json) -> String {
+        let path = std::env::temp_dir()
+            .join(format!("zeta_bdiff_{}_{tag}.json", std::process::id()));
+        std::fs::write(&path, doc.to_string()).unwrap();
+        path.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn directions_classify_known_bench_fields() {
+        assert!(matches!(direction("tok_per_sec"), Direction::HigherBetter));
+        assert!(matches!(direction("incr_toks_per_sec"), Direction::HigherBetter));
+        assert!(matches!(direction("speedup_vs_off"), Direction::HigherBetter));
+        assert!(matches!(direction("scalar_ns_per_elem"), Direction::LowerBetter));
+        assert!(matches!(direction("ttft_p50_us"), Direction::LowerBetter));
+        assert!(matches!(direction("wall_ms"), Direction::LowerBetter));
+        assert!(matches!(direction("state_mb"), Direction::LowerBetter));
+        assert!(matches!(direction("stepped_tokens"), Direction::Counter));
+        assert!(matches!(direction("expect_ok"), Direction::Counter));
+    }
+
+    #[test]
+    fn identity_uses_strings_and_config_numerics_only() {
+        let a = row("spec", 100.0, 5.0);
+        let b = row("spec", 250.0, 2.0); // metrics differ, identity equal
+        assert_eq!(identity(&a), identity(&b));
+        assert!(identity(&a).contains("scenario=spec"));
+        assert!(identity(&a).contains("threads=8"));
+        assert!(!identity(&a).contains("tok_per_sec"));
+        let c = row("storm", 100.0, 5.0);
+        assert_ne!(identity(&a), identity(&c));
+    }
+
+    #[test]
+    fn diff_gates_on_the_worst_directional_regression() {
+        let old = write_tmp("old", &envelope(8.0, vec![row("spec", 100.0, 5.0)]));
+        // tok/s fell 20% — a regression even though wall_ms also fell.
+        let new = write_tmp("new", &envelope(8.0, vec![row("spec", 80.0, 4.0)]));
+        assert!(bench_diff(&old, &new, None).unwrap(), "no threshold: always ok");
+        assert!(!bench_diff(&old, &new, Some(10.0)).unwrap(), "20% > 10% must fail");
+        assert!(bench_diff(&old, &new, Some(25.0)).unwrap(), "20% < 25% passes");
+        // Improvement in both metrics passes any threshold.
+        let better = write_tmp("better", &envelope(8.0, vec![row("spec", 140.0, 3.0)]));
+        assert!(bench_diff(&old, &better, Some(0.5)).unwrap());
+        for p in [old, new, better] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn diff_refuses_mismatched_provenance_and_garbage() {
+        let old = write_tmp("p_old", &envelope(8.0, vec![row("spec", 100.0, 5.0)]));
+        let new = write_tmp("p_new", &envelope(4.0, vec![row("spec", 100.0, 5.0)]));
+        let err = bench_diff(&old, &new, None).unwrap_err().to_string();
+        assert!(err.contains("threads"), "must name the mismatched field: {err}");
+        let bare = write_tmp("p_bare", &Json::obj(vec![("rows", Json::Arr(vec![]))]));
+        assert!(bench_diff(&old, &bare, None).is_err(), "no provenance header");
+        let disjoint = write_tmp("p_disj", &envelope(8.0, vec![row("storm", 1.0, 1.0)]));
+        assert!(bench_diff(&old, &disjoint, None).is_err(), "zero matched rows");
+        for p in [old, new, bare, disjoint] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}

@@ -7,6 +7,8 @@
 //! substrates. See DESIGN.md §4 for the experiment index and §5 for the
 //! scale substitutions.
 
+pub mod diff;
+
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
@@ -1933,6 +1935,118 @@ pub fn scenarios(opts: &Opts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Speculative decoding — accept-rate × speedup matrix (BENCH_spec.json)
+// ---------------------------------------------------------------------------
+
+/// `exp spec`: the speculative-decoding matrix on the `spec` trace —
+/// draft source × draft length {2,4,8} × threads {1,4,8}. A lockstep
+/// pre-gate first proves both draft sources leave the token streams
+/// bit-identical to `--speculate off` (else the timing is meaningless);
+/// the timing arms then run serve replays and report tok/s, speedup over
+/// the same-thread-count non-speculative baseline, and accept rate.
+pub fn spec(opts: &Opts) -> Result<()> {
+    use crate::scenario::replay::{lockstep, serve, ReplayCfg};
+    use crate::scenario::{GenCfg, Scenario};
+
+    let ctx = opts.max_len.clamp(64, 512);
+    let gen_cfg = GenCfg { seed: opts.seed, kernel: "zeta".into(), requests: 16, ctx };
+    let trace = crate::scenario::gen::Spec.generate(&gen_cfg)?;
+    std::fs::create_dir_all(&opts.out_dir)?;
+    trace.write(&format!("{}/trace_spec.jsonl", opts.out_dir))?;
+    println!(
+        "\n== Speculative decoding: draft source × draft length × threads on the spec \
+         trace (ctx {ctx}, {} requests) ==",
+        trace.requests.len()
+    );
+    let base = ReplayCfg {
+        threads: opts.threads,
+        kv_quant: opts.kv_quant.clone(),
+        ..ReplayCfg::default()
+    };
+
+    // Correctness pre-gate: a speculative lockstep replay must be
+    // bit-identical to the plain one before any of its timing counts.
+    let off_lock = lockstep(&trace, &base)?;
+    for source in ["mamba", "self"] {
+        let cfg = ReplayCfg { speculate: source.into(), draft_len: 4, ..base.clone() };
+        let out = lockstep(&trace, &cfg)?;
+        if out.stream_digest() != off_lock.stream_digest() {
+            bail!(
+                "--speculate {source} changed the token streams ({:016x} vs {:016x})",
+                out.stream_digest(),
+                off_lock.stream_digest()
+            );
+        }
+        if out.counters.drafted == 0 {
+            bail!("--speculate {source} never drafted a token on the spec trace");
+        }
+    }
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rec = BTreeMap::new();
+    println!(
+        "{:<7}{:>4}{:>9}{:>12}{:>10}{:>9}",
+        "source", "L", "threads", "tok/s", "speedup", "accept"
+    );
+    for &threads in &[1usize, 4, 8] {
+        let off_run = serve(&trace, &ReplayCfg { threads, ..base.clone() })?;
+        let off_tps = off_run.tok_per_sec;
+        println!("{:<7}{:>4}{threads:>9}{off_tps:>12.0}{:>9.2}x{:>9}", "off", "-", 1.0, "-");
+        rows.push(Json::obj(vec![
+            ("scenario", Json::str("spec")),
+            ("source", Json::str("off")),
+            ("draft_len", Json::num(0.0)),
+            ("threads", Json::num(threads as f64)),
+            ("tok_per_sec", Json::num(off_tps)),
+            ("speedup_vs_off", Json::num(1.0)),
+            ("accept_rate", Json::num(0.0)),
+            ("drafted_tokens", Json::num(0.0)),
+            ("accepted_tokens", Json::num(0.0)),
+        ]));
+        for source in ["mamba", "self"] {
+            for &l in &[2usize, 4, 8] {
+                let cfg = ReplayCfg {
+                    threads,
+                    speculate: source.into(),
+                    draft_len: l,
+                    ..base.clone()
+                };
+                let run = serve(&trace, &cfg)?;
+                let c = &run.counters;
+                let accept =
+                    if c.drafted == 0 { 0.0 } else { c.accepted as f64 / c.drafted as f64 };
+                let speedup = if off_tps > 0.0 { run.tok_per_sec / off_tps } else { 0.0 };
+                println!(
+                    "{source:<7}{l:>4}{threads:>9}{:>12.0}{speedup:>9.2}x{accept:>9.2}",
+                    run.tok_per_sec
+                );
+                rec.insert(format!("{source}_l{l}_t{threads}_speedup"), Json::num(speedup));
+                rec.insert(format!("{source}_l{l}_t{threads}_accept"), Json::num(accept));
+                rows.push(Json::obj(vec![
+                    ("scenario", Json::str("spec")),
+                    ("source", Json::str(source)),
+                    ("draft_len", Json::num(l as f64)),
+                    ("threads", Json::num(threads as f64)),
+                    ("tok_per_sec", Json::num(run.tok_per_sec)),
+                    ("speedup_vs_off", Json::num(speedup)),
+                    ("accept_rate", Json::num(accept)),
+                    ("drafted_tokens", Json::num(c.drafted as f64)),
+                    ("accepted_tokens", Json::num(c.accepted as f64)),
+                ]));
+            }
+        }
+    }
+    println!(
+        "(accepted streams are bit-identical to --speculate off — the pre-gate and \
+         rust/tests/spec_decode.rs pin it; speedup is serve-replay wall-clock against \
+         the same-thread-count baseline)"
+    );
+    record(opts, "spec", Json::Obj(rec))?;
+    write_bench(opts, "spec", rows);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Table 5 — d_K ablation on ListOps / Image
 // ---------------------------------------------------------------------------
 
@@ -1977,6 +2091,7 @@ pub fn all(engine: &Engine, opts: &Opts) -> Result<()> {
     pool(opts)?;
     mem(opts)?;
     scenarios(opts)?;
+    spec(opts)?;
     table5(engine, opts)?;
     Ok(())
 }

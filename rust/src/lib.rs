@@ -108,22 +108,44 @@
 //! stay within 1e-4 of scalar (`rust/tests/simd_equivalence.rs`). `zeta
 //! exp kernels` prices each loop scalar-vs-SIMD (`BENCH_kernels.json`).
 //!
+//! ## Speculative decoding (session layer)
+//!
+//! Decode-sweep overhead is per *sweep*, not per token, so with
+//! `--speculate` on each decode wave runs draft-then-verify per session:
+//! a cheap [`attention::speculate::Drafter`] proposes up to `--draft-len`
+//! greedy tokens — `mamba` drives a private constant-state RNN stream,
+//! `self` narrows a copy-on-write [`attention::DecodeState::fork_draft`]
+//! of the target's own ZETA state (`k` and window ÷ 8, shared pages and
+//! index runs) — and one fused verify wave feeds `[last token, drafts…]`
+//! through the real state with the exact per-token `step` arithmetic.
+//! The longest matched prefix plus the wave's bonus prediction commit;
+//! any rejection drops the advanced state and restores a pre-wave CoW
+//! snapshot (O(1) page-drop rollback). Committed streams are therefore
+//! **bit-identical to `--speculate off`** for every kernel and thread
+//! count — tier-1 gate `rust/tests/spec_decode.rs`. Drafter contexts
+//! live on the page arena, count against `--kv-mem-budget`, and are shed
+//! first under pressure; `zeta exp spec` records the accept-rate ×
+//! speedup matrix (`BENCH_spec.json`) and `zeta bench diff` compares two
+//! provenance-stamped trajectories.
+//!
 //! ## Serving scenarios (record/replay)
 //!
 //! The [`scenario`] subsystem turns serving workloads into *seeded JSONL
 //! traces* — per-request arrival time, prompt, `max_new`, optional
 //! cancellation point, and the reference output stream recorded at
-//! generation time — with four generators: long-context needle retrieval,
+//! generation time — with five generators: long-context needle retrieval,
 //! shared-system-prompt agent fleets (prefix-cache stress), bursty
 //! multi-turn chat (eviction/re-prefill stress under `--kv-mem-budget`),
-//! and cancellation storms. Two replay drivers share one outcome shape:
-//! [`scenario::replay::lockstep`] advances a virtual clock over direct
-//! [`coordinator::NativeServing`] sweeps, making token streams *and*
-//! counters bit-reproducible across thread counts (pinned by
-//! `rust/tests/scenario_gate.rs` at threads {1,4,8}, budget-constrained
-//! included), while [`scenario::replay::serve`] replays through the real
-//! [`coordinator::Server`] for wall-clock tokens/s and TTFT p50/p99.
-//! `zeta exp scenarios` scores all four into `BENCH_scenarios.json`.
+//! cancellation storms, and templated repetitive `spec` traffic (the
+//! regime speculative drafters profit from). Two replay drivers share one
+//! outcome shape: [`scenario::replay::lockstep`] advances a virtual clock
+//! over direct [`coordinator::NativeServing`] sweeps, making token
+//! streams *and* counters bit-reproducible across thread counts (pinned
+//! by `rust/tests/scenario_gate.rs` at threads {1,4,8},
+//! budget-constrained included), while [`scenario::replay::serve`]
+//! replays through the real [`coordinator::Server`] for wall-clock
+//! tokens/s and TTFT p50/p99. `zeta exp scenarios` scores all five into
+//! `BENCH_scenarios.json`.
 //!
 //! Substrates implemented in-tree (offline std-only build): JSON, PRNG,
 //! property tests, bench harness, worker pool ([`util`]), Morton codec +

@@ -80,6 +80,7 @@ fn run() -> Result<()> {
         "info" => cmd_info(),
         "train" => cmd_train(&parse_flags(&args[1..])?),
         "serve" => cmd_serve(&parse_flags(&args[1..])?),
+        "bench" => cmd_bench(&args[1..]),
         "exp" => {
             let which = args.get(1).map(String::as_str).unwrap_or("all");
             let flags = parse_flags(&args[2..])?;
@@ -104,12 +105,14 @@ commands:
          [--generate] [--max-new N] [--native] [--native-kernel K]
          [--prefill-budget T] [--prefill-chunk T] [--prompt-len N]
          [--max-context N] [--kv-page TOKENS] [--kv-mem-budget BYTES]
-         [--kv-quant f32|f16|int8]
+         [--kv-quant f32|f16|int8] [--speculate off|mamba|self]
+         [--draft-len L]
+  bench  diff OLD.json NEW.json [--fail-above PCT]
   exp    NAME [--steps N] [--seed S] [--max-len L] [--out DIR] [--threads T]
          [--kv-quant f32|f16|int8] [--kv-mem-budget BYTES] [--verbose]
          NAME ∈ {fig2a, fig2b, fig2c, fig2d, fig3, table1, table2,
                  table3, table4, table5, table6, kernels, decode,
-                 decode_batch, prefill, pool, mem, scenarios, all}
+                 decode_batch, prefill, pool, mem, scenarios, spec, all}
 
 serving:
   `serve` runs one-shot batched inference by default. With --generate each
@@ -156,11 +159,12 @@ serving memory (native backend):
   (BENCH_mem.json).
 
 serving scenarios:
-  `exp scenarios` is the seeded serving-workload suite: four generators
+  `exp scenarios` is the seeded serving-workload suite: five generators
   — long-context needle retrieval, shared-system-prompt agent fleets
   (prefix-cache stress), bursty multi-turn chat (eviction/re-prefill
-  stress under --kv-mem-budget), and cancellation storms — each emit a
-  JSONL trace (per-request arrival time, prompt, max-new, optional
+  stress under --kv-mem-budget), cancellation storms, and templated
+  repetitive spec traffic (speculative-decoding acceptance) — each emit
+  a JSONL trace (per-request arrival time, prompt, max-new, optional
   cancel point, and the reference output stream recorded at generation
   time) under --out. Every trace replays three ways: a deterministic
   lockstep replay run twice (same seed ⇒ bit-identical token streams
@@ -170,6 +174,29 @@ serving scenarios:
   TTFT p50/p99). Scores land in BENCH_scenarios.json; the tier-1 gate
   rust/tests/scenario_gate.rs pins the deterministic properties across
   threads {1,4,8}.
+
+speculative decoding:
+  --speculate turns on speculative decoding for native generation
+  sessions: a cheap drafter proposes --draft-len tokens (default 4) and
+  the target kernel verifies all of them in ONE fused pool wave — the
+  longest matching prefix (plus the bonus token computed at the first
+  divergence) commits, and on a partial match the session's paged KV
+  state rolls back to a copy-on-write snapshot (O(1) page drops, no
+  recompute). Two draft sources: `mamba` steps a constant-state RNN
+  drafter beside the session (O(1) state, serially cheap), `self`
+  forks the session's own ZETA state copy-on-write and searches a k/8
+  top-k window (self-speculation; exact-softmax kernels fall back to
+  plain decode). Accepted streams are BIT-IDENTICAL to --speculate off
+  for every kernel and thread count — speculation buys speed, never
+  changes tokens (rust/tests/spec_decode.rs pins this, including under
+  cancellation and tight --kv-mem-budget, where drafter state is shed
+  first and drafts simply pause). Drafter state counts against
+  --kv-mem-budget; the serve summary reports drafted/accepted/rejected
+  and the accept rate. `exp spec` writes BENCH_spec.json: the accept
+  rate × speedup matrix over draft source × draft length {2,4,8} ×
+  threads {1,4,8} on the repetitive spec trace, and `zeta bench diff
+  old.json new.json [--fail-above PCT]` compares any two BENCH_*.json
+  trajectories (refusing mismatched threads/simd/kv-quant provenance).
 
 parallelism:
   All attention kernels run on a shared worker pool sized by the
@@ -255,6 +282,34 @@ fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `zeta bench diff <old.json> <new.json> [--fail-above PCT]` — compare
+/// two `BENCH_*.json` perf trajectories by their provenance envelopes.
+/// Exits 1 when the worst directional regression exceeds the threshold.
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let sub = args.first().map(String::as_str).unwrap_or("");
+    if sub != "diff" {
+        bail!("unknown bench subcommand {sub:?}; usage: zeta bench diff OLD.json NEW.json");
+    }
+    let (old, new) = match (args.get(1), args.get(2)) {
+        (Some(o), Some(n)) if !o.starts_with("--") && !n.starts_with("--") => {
+            (o.clone(), n.clone())
+        }
+        _ => bail!("usage: zeta bench diff OLD.json NEW.json [--fail-above PCT]"),
+    };
+    let flags = parse_flags(&args[3..])?;
+    let fail_above = match flags.get("fail-above") {
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| anyhow!("--fail-above must be a number, got {v:?}"))?,
+        ),
+        None => None,
+    };
+    if !exp::diff::bench_diff(&old, &new, fail_above)? {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     let preset = f.get("preset").cloned().unwrap_or_else(|| "serve_cls".into());
     let requests = flag_usize(f, "requests", 64)?;
@@ -284,6 +339,11 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     // KV page element codec: f32 (bit-exact default) | f16 | int8.
     // Validated at Server::start, which lists the accepted codecs.
     let kv_quant = f.get("kv-quant").cloned().unwrap_or_else(|| "f32".into());
+    // Speculative decoding (native backend): draft source and tokens
+    // proposed per draft-then-verify wave. Validated at Server::start,
+    // which lists the accepted sources.
+    let speculate = f.get("speculate").cloned().unwrap_or_else(|| "off".into());
+    let draft_len = flag_usize(f, "draft-len", ServerConfig::default().draft_len)?;
     // Native decode engine: forced with --native / --native-kernel, and the
     // fallback whenever the AOT artifacts are absent.
     let native_kernel = f.get("native-kernel").cloned();
@@ -313,6 +373,8 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
                 prefill_budget,
                 prefill_chunk,
                 kv_mem_budget,
+                speculate,
+                draft_len,
                 ..Default::default()
             },
             seq,
@@ -391,7 +453,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
 fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
     let opts = opts_from_flags(f)?;
     // fig3 / table3 / table4 / kernels / decode / decode_batch / prefill /
-    // pool / mem / scenarios need no artifacts
+    // pool / mem / scenarios / spec need no artifacts
     match which {
         "fig3" => return exp::fig3(&opts),
         "table3" => return exp::table3(&opts),
@@ -403,6 +465,7 @@ fn cmd_exp(which: &str, f: &HashMap<String, String>) -> Result<()> {
         "pool" => return exp::pool(&opts),
         "mem" => return exp::mem(&opts),
         "scenarios" => return exp::scenarios(&opts),
+        "spec" => return exp::spec(&opts),
         _ => {}
     }
     let engine = Engine::new(zeta::ARTIFACTS_DIR)?;

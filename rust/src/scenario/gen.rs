@@ -1,4 +1,4 @@
-//! The four seeded trace generators.
+//! The five seeded trace generators.
 //!
 //! All prompts draw from the native model's default 32-token vocabulary:
 //! filler tokens occupy `1..=23`, needle/signature alphabets `24..=30`,
@@ -288,6 +288,63 @@ impl Scenario for Storm {
     }
 }
 
+// ---------------------------------------------------------------------------
+// spec — templated repetitive traffic (speculative-decode acceptance)
+// ---------------------------------------------------------------------------
+
+pub struct Spec;
+
+/// Tiling period of every spec prompt, in tokens.
+pub const SPEC_PERIOD: usize = 8;
+
+impl Scenario for Spec {
+    fn name(&self) -> &'static str {
+        "spec"
+    }
+
+    fn description(&self) -> &'static str {
+        "templated repetitive traffic: each prompt tiles one seeded \
+         8-token template, so greedy continuations are locally predictable \
+         and speculative drafters see high acceptance"
+    }
+
+    fn expected_requests(&self, cfg: &GenCfg) -> usize {
+        cfg.requests
+    }
+
+    fn generate(&self, cfg: &GenCfg) -> Result<Trace> {
+        let mut rng = Rng::new(cfg.seed ^ 0x5EED_0005);
+        let max_new = 16;
+        let mut requests = Vec::with_capacity(cfg.requests);
+        let mut arrival = 0u64;
+        for i in 0..cfg.requests {
+            // One template per request: repetition *inside* a prompt is
+            // what makes its continuation predictable; across requests the
+            // templates differ so a drafter cannot overfit one stream.
+            let template = filler(&mut rng, SPEC_PERIOD);
+            let len = (cfg.ctx / 2).max(2 * SPEC_PERIOD) + rng.usize_below(cfg.ctx / 2 + 1);
+            let prompt: Vec<i32> = template.iter().copied().cycle().take(len).collect();
+            // Tight stagger: the fleet reaches steady-state decode quickly,
+            // which is the regime the speculative verify waves batch over.
+            arrival += 200 + rng.below(400);
+            requests.push(TraceRequest {
+                id: format!("spec-{i:03}"),
+                arrival_us: arrival,
+                prompt,
+                max_new,
+                cancel_at_us: None,
+                cancel_after_tokens: None,
+                needle: None,
+                expect: None,
+            });
+        }
+        let mut trace =
+            Trace { name: "spec".into(), seed: cfg.seed, kernel: cfg.kernel.clone(), requests };
+        record_expect(&mut trace)?;
+        Ok(trace)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -349,6 +406,23 @@ mod tests {
         let prior = [t0.prompt.clone(), t0.expect.clone().unwrap()].concat();
         assert_eq!(&t1.prompt[..prior.len()], &prior[..], "turn 1 must extend turn 0 + answer");
         assert!(t1.prompt.len() > prior.len(), "turn 1 adds user tokens");
+    }
+
+    #[test]
+    fn spec_prompts_tile_one_template_per_request() {
+        let t = Spec.generate(&small()).unwrap();
+        for r in &t.requests {
+            assert!(r.prompt.len() >= 2 * SPEC_PERIOD, "{}: too short to repeat", r.id);
+            for (i, &tok) in r.prompt.iter().enumerate().skip(SPEC_PERIOD) {
+                assert_eq!(tok, r.prompt[i - SPEC_PERIOD], "{}: tiling broken at {i}", r.id);
+            }
+            assert!(
+                r.cancel_at_us.is_none() && r.cancel_after_tokens.is_none(),
+                "{}: spec traffic never cancels",
+                r.id
+            );
+            assert!(r.expect.as_ref().is_some_and(|e| e.len() == r.max_new), "{}", r.id);
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! to JSONL (one header line + one line per request, keys sorted), so a
 //! fixed seed always produces a byte-identical trace file.
 //!
-//! Four generators ([`gen`]) cover the regimes the ROADMAP north star
+//! Five generators ([`gen`]) cover the regimes the ROADMAP north star
 //! names, following the `Dataset`-trait idiom of the S-NIAH needle suite:
 //!
 //! * **needle** — long-context retrieval: a signature 4-gram planted in
@@ -22,6 +22,9 @@
 //! * **storm** — cancellation storms: bursts of requests dropped
 //!   mid-prefill (virtual-time cancels) and mid-decode (token-count
 //!   cancels).
+//! * **spec** — templated repetitive traffic whose greedy continuations
+//!   are locally predictable (the regime speculative decoding profits
+//!   from; see `--speculate` and `zeta exp spec`).
 //!
 //! The [`replay`] module drives a trace through the serving stack two
 //! ways: **lockstep** (the scheduler's [`crate::coordinator::NativeServing`]
@@ -150,7 +153,7 @@ fn tokens_from_json(j: &Json) -> Result<Vec<i32>> {
 /// A seeded serving workload: header metadata + requests sorted by arrival.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Trace {
-    /// Scenario name (`needle` | `fleet` | `chat` | `storm`).
+    /// Scenario name (`needle` | `fleet` | `chat` | `storm` | `spec`).
     pub name: String,
     /// Seed the generator ran with (provenance; replays re-derive nothing).
     pub seed: u64,
@@ -270,6 +273,7 @@ pub fn scenarios() -> Vec<Box<dyn Scenario>> {
         Box::new(gen::Fleet),
         Box::new(gen::Chat),
         Box::new(gen::Storm),
+        Box::new(gen::Spec),
     ]
 }
 

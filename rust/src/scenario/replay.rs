@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::{contains_subseq, Trace};
+use crate::attention::speculate::DraftSource;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::session::StepScratch;
 use crate::coordinator::{
@@ -53,6 +54,12 @@ pub struct ReplayCfg {
     /// Virtual microseconds one lockstep sweep represents (arrival and
     /// cancel times quantize to this).
     pub sweep_us: u64,
+    /// Speculative-decode draft source (`--speculate`: off | mamba |
+    /// self). Accepted streams are bit-identical to `"off"`, so a trace's
+    /// recorded `expect` streams stay valid under any source.
+    pub speculate: String,
+    /// Tokens proposed per draft-then-verify wave (`--draft-len`, >= 1).
+    pub draft_len: usize,
 }
 
 impl Default for ReplayCfg {
@@ -65,6 +72,8 @@ impl Default for ReplayCfg {
             prefill_chunk: s.prefill_chunk,
             kv_quant: "f32".into(),
             sweep_us: 1_000,
+            speculate: s.speculate,
+            draft_len: s.draft_len,
         }
     }
 }
@@ -91,6 +100,12 @@ pub struct Counters {
     pub prefix_hits: u64,
     pub evictions: u64,
     pub peak_active: usize,
+    /// Tokens proposed by the draft source (0 when `--speculate off`).
+    pub drafted: u64,
+    /// Drafted tokens the verify wave accepted.
+    pub accepted: u64,
+    /// Persistent drafter contexts dropped by budget pressure.
+    pub draft_sheds: u64,
 }
 
 impl Counters {
@@ -103,6 +118,9 @@ impl Counters {
             prefix_hits: m.prefix_hits,
             evictions: m.evictions,
             peak_active: m.peak_active_sessions,
+            drafted: m.drafted_tokens,
+            accepted: m.accepted_tokens,
+            draft_sheds: m.draft_sheds,
         }
     }
 
@@ -184,6 +202,10 @@ pub fn lockstep(trace: &Trace, cfg: &ReplayCfg) -> Result<ReplayOutcome> {
     let model = NativeDecodeModel::new(native_cfg(trace, cfg))?;
     let arena = model.arena().clone();
     let mut serving = NativeServing::new(model, cfg.kv_mem_budget, cfg.prefill_chunk.max(1));
+    let Some(source) = DraftSource::parse(&cfg.speculate) else {
+        bail!("unknown draft source {:?} (want {})", cfg.speculate, DraftSource::ACCEPTED);
+    };
+    serving.set_speculation(source, cfg.draft_len.max(1));
     let pool = if cfg.threads == 0 { *Pool::global() } else { Pool::new(cfg.threads) };
     let metrics = Arc::new(Mutex::new(Metrics::new()));
     let depth = Arc::new(AtomicUsize::new(0));
@@ -329,6 +351,8 @@ pub fn serve(trace: &Trace, cfg: &ReplayCfg) -> Result<ReplayOutcome> {
         prefill_budget: cfg.prefill_budget,
         prefill_chunk: cfg.prefill_chunk.max(1),
         kv_mem_budget: cfg.kv_mem_budget,
+        speculate: cfg.speculate.clone(),
+        draft_len: cfg.draft_len.max(1),
         ..Default::default()
     };
     let srv = Server::start(scfg, None)?;
@@ -551,6 +575,8 @@ impl Score {
             ("prefix_hits", Json::num(self.counters.prefix_hits as f64)),
             ("evictions", Json::num(self.counters.evictions as f64)),
             ("peak_active", Json::num(self.counters.peak_active as f64)),
+            ("drafted_tokens", Json::num(self.counters.drafted as f64)),
+            ("accepted_tokens", Json::num(self.counters.accepted as f64)),
             ("needle_hits", Json::num(self.needle_hits as f64)),
             ("needle_total", Json::num(self.needle_total as f64)),
             ("expect_ok", Json::num(self.expect_ok as f64)),

@@ -435,6 +435,64 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_draft_forks_share_runs_safely_under_append_storm() {
+        use crate::util::rng::Rng;
+        // Speculative decoding's aliasing pattern: the target session's
+        // index keeps appending on one thread while many draft forks,
+        // snapshotted from it, append divergent tails and answer windows
+        // on other threads — every side reading (and merging out of) the
+        // same Arc'd runs concurrently. Each side must stay bit-identical
+        // to a fresh rebuild of its own sequence: immutable runs +
+        // refcounts make this safe, and this test storms that claim.
+        let mut rng = Rng::new(0x21DE6);
+        let base_n = 300 + rng.usize_below(200);
+        let base: Vec<u32> = (0..base_n).map(|_| rng.next_u32() % 257).collect();
+        let target = ZIndex::from_codes(&base);
+        std::thread::scope(|scope| {
+            let mut joins = Vec::new();
+            for t in 0..8u64 {
+                let fork = target.fork();
+                let base = &base;
+                joins.push(scope.spawn(move || {
+                    let mut rng = Rng::new(0x21DE6 ^ (t + 1));
+                    let mut ix = fork;
+                    let mut seq: Vec<u32> = base.clone();
+                    let mut scratch = WindowScratch::default();
+                    let mut got = Vec::new();
+                    for _ in 0..400 {
+                        // Per-thread disjoint code bands force deep merges
+                        // against the shared sorted prefix runs.
+                        let c = rng.next_u32() % 257 + (t as u32 + 1) * 1000;
+                        ix.append(c);
+                        seq.push(c);
+                        // Interleave queries so reads alias the shared
+                        // runs while sibling threads merge around them.
+                        let probe = seq[rng.usize_below(seq.len())];
+                        ix.window_with(probe, 16, &mut scratch, &mut got);
+                        let want = ref_window(&ref_sorted(&seq), probe, 16);
+                        assert_eq!(got, want, "thread {t}: window diverged mid-storm");
+                    }
+                    (ix.sorted_entries(), seq)
+                }));
+            }
+            // The target keeps appending concurrently with all its forks.
+            let mut target = target;
+            let mut seq = base.clone();
+            let mut trng = Rng::new(0x21DE6 ^ 0xFF);
+            for _ in 0..400 {
+                let c = trng.next_u32() % 257;
+                target.append(c);
+                seq.push(c);
+            }
+            assert_eq!(target.sorted_entries(), ref_sorted(&seq), "target perturbed by forks");
+            for j in joins {
+                let (entries, seq) = j.join().expect("fork thread panicked");
+                assert_eq!(entries, ref_sorted(&seq), "fork diverged from its own rebuild");
+            }
+        });
+    }
+
+    #[test]
     fn rank_matches_partition_point() {
         prop::check(30, 0x21DE3, |rng| {
             let n = 1 + rng.usize_below(200);

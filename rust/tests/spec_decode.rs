@@ -1,0 +1,214 @@
+//! Speculative-decoding gate (tier-1): the draft-then-verify contract.
+//!
+//! 1. With `--speculate mamba` or `--speculate self`, the committed token
+//!    streams are *bit-identical* to `--speculate off` — for every kernel
+//!    and at pool sizes {1, 2, 4, 8}. Speculation is a pure wall-clock
+//!    optimisation; it must be invisible in the streams.
+//! 2. The speculation schedule itself is deterministic: lockstep replays
+//!    at different pool sizes agree on drafted / accepted counts, not
+//!    just on streams.
+//! 3. Kernels that cannot fork a narrowed draft state (exact softmax)
+//!    fall back to plain decode under `--speculate self` — zero drafts,
+//!    identical streams — instead of failing.
+//! 4. Mid-draft cancellation: a storm of dropped `GenStream`s while
+//!    verify waves are in flight still retires every session, balances
+//!    the token ledger, and drains the arena.
+//! 5. Under a tight `--kv-mem-budget`, drafter contexts are shed *first*
+//!    (before any session preemption) and the streams still match the
+//!    unconstrained non-speculative replay bit-for-bit.
+
+use zeta::scenario::replay::{lockstep, score, serve, ReplayCfg};
+use zeta::scenario::{by_name, GenCfg, Trace, TraceRequest};
+
+fn small_cfg(kernel: &str, requests: usize, ctx: usize) -> GenCfg {
+    GenCfg { seed: 7, kernel: kernel.into(), requests, ctx }
+}
+
+fn spec_cfg(source: &str, threads: usize) -> ReplayCfg {
+    ReplayCfg { threads, speculate: source.into(), draft_len: 4, ..ReplayCfg::default() }
+}
+
+#[test]
+fn speculative_streams_are_bit_identical_across_sources_and_threads() {
+    let trace = by_name("spec").unwrap().generate(&small_cfg("zeta", 8, 96)).unwrap();
+    let off = lockstep(&trace, &ReplayCfg { threads: 1, ..ReplayCfg::default() }).unwrap();
+    let s = score(&trace, &off);
+    assert_eq!(s.expect_ok, s.expect_total, "plain replay must match the recorded streams");
+    assert_eq!(off.counters.drafted, 0, "--speculate off must never draft");
+    for source in ["mamba", "self"] {
+        let base = lockstep(&trace, &spec_cfg(source, 1)).unwrap();
+        assert_eq!(
+            off.streams, base.streams,
+            "--speculate {source}: committed streams diverged from plain decode"
+        );
+        assert_eq!(off.stream_digest(), base.stream_digest());
+        assert!(
+            base.counters.drafted > 0,
+            "--speculate {source} never drafted on the spec trace: {:?}",
+            base.counters
+        );
+        assert!(
+            base.counters.accepted <= base.counters.drafted,
+            "{source}: accepted tokens exceed drafted: {:?}",
+            base.counters
+        );
+        assert!(
+            base.counters.balanced(),
+            "{source}: token accounting unbalanced: {:?}",
+            base.counters
+        );
+        assert_eq!(base.live_pages_after_teardown, 0, "{source}: arena pages leaked");
+        for threads in [2usize, 4, 8] {
+            let other = lockstep(&trace, &spec_cfg(source, threads)).unwrap();
+            assert_eq!(
+                base.streams, other.streams,
+                "{source}: streams diverged between 1 and {threads} threads"
+            );
+            assert_eq!(
+                base.counters, other.counters,
+                "{source}: speculation schedule diverged between 1 and {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn mamba_drafts_verify_bit_identically_on_every_kernel() {
+    // The mamba drafter runs its own constant-state RNN, so it drafts for
+    // any target kernel; the verify wave must reproduce the plain streams
+    // on each of them.
+    for kernel in ["zeta", "naive", "flash", "mamba"] {
+        let trace = by_name("spec").unwrap().generate(&small_cfg(kernel, 5, 64)).unwrap();
+        let off = lockstep(&trace, &ReplayCfg { threads: 2, ..ReplayCfg::default() }).unwrap();
+        let spec = lockstep(&trace, &spec_cfg("mamba", 2)).unwrap();
+        assert_eq!(off.streams, spec.streams, "{kernel}: mamba-drafted decode diverged");
+        assert!(
+            spec.counters.drafted > 0,
+            "{kernel}: mamba drafter never proposed: {:?}",
+            spec.counters
+        );
+    }
+}
+
+#[test]
+fn self_speculation_falls_back_to_plain_decode_on_exact_softmax_kernels() {
+    // `--speculate self` needs a narrowed ZETA fork; naive attention has
+    // none, so every wave must take the plain one-step path untouched.
+    let trace = by_name("spec").unwrap().generate(&small_cfg("naive", 4, 64)).unwrap();
+    let off = lockstep(&trace, &ReplayCfg { threads: 2, ..ReplayCfg::default() }).unwrap();
+    let spec = lockstep(&trace, &spec_cfg("self", 2)).unwrap();
+    assert_eq!(off.streams, spec.streams);
+    assert_eq!(spec.counters.drafted, 0, "no draft fork exists; self must fall back");
+    assert!(spec.counters.balanced());
+}
+
+#[test]
+fn speculative_storm_cancellation_is_deterministic_and_prefix_exact() {
+    // Cancels land between sweeps of multi-token verify waves, so the
+    // cancelled set can differ from a non-speculative run — but within a
+    // source the lockstep replay must be fully deterministic, every
+    // stream a prefix of its reference, and the ledger balanced.
+    let trace = by_name("storm").unwrap().generate(&small_cfg("zeta", 12, 96)).unwrap();
+    for source in ["mamba", "self"] {
+        let a = lockstep(&trace, &spec_cfg(source, 1)).unwrap();
+        let b = lockstep(&trace, &spec_cfg(source, 8)).unwrap();
+        assert_eq!(a.streams, b.streams, "{source}: storm streams diverged across pool sizes");
+        assert_eq!(a.counters, b.counters, "{source}: storm counters diverged");
+        let cancelled = a.streams.iter().filter(|s| s.cancelled).count();
+        let done = a.streams.iter().filter(|s| s.done).count();
+        assert!(cancelled > 0 && done > 0, "{source}: storm must mix cancelled and completed");
+        assert!(a.counters.balanced(), "{source}: unbalanced after storm: {:?}", a.counters);
+        assert_eq!(a.live_pages_after_teardown, 0, "{source}: storm leaked arena pages");
+        let s = score(&trace, &a);
+        assert_eq!(
+            s.expect_ok, s.expect_total,
+            "{source}: storm streams (incl. cancelled prefixes) diverged from references"
+        );
+    }
+}
+
+#[test]
+fn speculative_serve_storm_drains_cleanly() {
+    // Through the real coordinator: hundreds of GenStreams dropped
+    // mid-prefill and mid-verify-wave. Every request must resolve, every
+    // stepped token must be accounted, and the arena must drain.
+    let trace = by_name("storm").unwrap().generate(&small_cfg("zeta", 30, 96)).unwrap();
+    for (source, threads) in [("self", 2usize), ("mamba", 8)] {
+        let out = serve(&trace, &spec_cfg(source, threads)).unwrap();
+        assert_eq!(out.streams.len(), trace.requests.len());
+        for (r, s) in trace.requests.iter().zip(&out.streams) {
+            assert!(
+                s.done || s.cancelled,
+                "request {:?} neither finished nor cancelled ({source} @ {threads} threads)",
+                r.id
+            );
+        }
+        assert!(
+            out.streams.iter().any(|s| s.cancelled),
+            "a storm replay must actually cancel streams"
+        );
+        assert!(
+            out.counters.balanced(),
+            "unbalanced ledger ({source} @ {threads} threads): {:?}",
+            out.counters
+        );
+        assert_eq!(
+            out.live_pages_after_teardown, 0,
+            "leaked arena pages ({source} @ {threads} threads)"
+        );
+        let sc = score(&trace, &out);
+        assert_eq!(
+            sc.expect_ok, sc.expect_total,
+            "storm streams diverged ({source} @ {threads} threads)"
+        );
+    }
+}
+
+#[test]
+fn tight_budget_sheds_drafters_without_touching_streams() {
+    // One 50-token prompt decoding 80 tokens on the exact-KV (naive)
+    // kernel under a 26 KB budget. The byte timeline is deterministic:
+    // at the first decode wave one live k+v page pair (8 KB) plus the
+    // two-page transient reserve (16.4 KB) fits, so a mamba drafter
+    // context (one 4 KB page) is built and proposals flow; the session's
+    // growth across the 128-token page boundary (to 24.6 KB of KV, plus
+    // the drafter's page = 28.7 KB) then pushes live bytes over the
+    // budget, and `enforce_budget` must reclaim the drafter *before*
+    // resorting to session preemption — with the committed stream
+    // identical to an unconstrained plain replay.
+    let trace = Trace {
+        name: "shed".into(),
+        seed: 0,
+        kernel: "naive".into(),
+        requests: vec![TraceRequest {
+            id: "shed-0".into(),
+            arrival_us: 0,
+            prompt: (0..50).map(|i| (i * 13 + 7) % 31).collect(),
+            max_new: 80,
+            cancel_at_us: None,
+            cancel_after_tokens: None,
+            needle: None,
+            expect: None,
+        }],
+    };
+    let plain = lockstep(&trace, &ReplayCfg { threads: 2, ..ReplayCfg::default() }).unwrap();
+    let tight =
+        lockstep(&trace, &ReplayCfg { kv_mem_budget: 26_000, ..spec_cfg("mamba", 2) }).unwrap();
+    assert!(
+        tight.counters.drafted > 0,
+        "early sweeps must have speculation headroom: {:?}",
+        tight.counters
+    );
+    assert!(
+        tight.counters.draft_sheds > 0,
+        "crossing the page boundary must shed the drafter context: {:?}",
+        tight.counters
+    );
+    assert_eq!(
+        plain.streams, tight.streams,
+        "shedding drafts must not change a single committed token"
+    );
+    assert_eq!(tight.counters.evictions, 0, "drafters shed before any session preemption");
+    assert!(tight.counters.balanced());
+    assert_eq!(tight.live_pages_after_teardown, 0);
+}
